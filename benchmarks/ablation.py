@@ -1,0 +1,35 @@
+"""Fig. 8 ablation: remove Priority / Pathfinder / Cost-Min one at a time.
+
+Paper claims (vs full BACE-Pipe):
+  * w/o Pathfinder: +52.5% JCT, +20.5% cost (the most critical component);
+  * w/o Priority:   +41.9% JCT, +5.0% cost;
+  * w/o Cost-Min:   +4.6% JCT, +13.9% cost.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import ABLATION_FACTORIES, check_claim, emit_rows, run_policy_suite
+
+
+def run() -> List[str]:
+    suite = run_policy_suite(ABLATION_FACTORIES)
+    rows = emit_rows("fig8", suite)
+    base_j = suite["bace-pipe"]["avg_jct_s"]
+    base_c = suite["bace-pipe"]["total_cost"]
+
+    def over(name, field, base):
+        return 100.0 * (suite[name][field] / base - 1.0)
+
+    rows.append(check_claim("w/o Pathfinder JCT", over("wo-pathfinder", "avg_jct_s", base_j), 52.5, 52.5))
+    rows.append(check_claim("w/o Pathfinder cost", over("wo-pathfinder", "total_cost", base_c), 20.5, 20.5))
+    rows.append(check_claim("w/o Priority JCT", over("wo-priority", "avg_jct_s", base_j), 41.9, 41.9))
+    rows.append(check_claim("w/o Priority cost", over("wo-priority", "total_cost", base_c), 5.0, 5.0))
+    rows.append(check_claim("w/o Cost-Min JCT", over("wo-costmin", "avg_jct_s", base_j), 4.6, 4.6))
+    rows.append(check_claim("w/o Cost-Min cost", over("wo-costmin", "total_cost", base_c), 13.9, 13.9))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,44 @@
+"""Fig. 4 main results: 8 jobs, 6 regions, BACE-Pipe vs 4 baselines.
+
+Paper claims (normalized to BACE-Pipe):
+  * baselines incur 27.9%–64.7% longer average JCT;
+  * baselines incur 12.6%–30.6% higher total electricity cost;
+  * cross-region paradox: CR-LDF/CR-LCF slower than LDF (+28.8% / +13.1%).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import POLICY_FACTORIES, check_claim, emit_rows, run_policy_suite
+
+
+def run() -> List[str]:
+    suite = run_policy_suite(POLICY_FACTORIES)
+    rows = emit_rows("fig4", suite)
+    base = suite["bace-pipe"]["avg_jct_s"]
+    base_c = suite["bace-pipe"]["total_cost"]
+    over_j = {
+        n: 100.0 * (m["avg_jct_s"] / base - 1.0)
+        for n, m in suite.items()
+        if n != "bace-pipe"
+    }
+    over_c = {
+        n: 100.0 * (m["total_cost"] / base_c - 1.0)
+        for n, m in suite.items()
+        if n != "bace-pipe"
+    }
+    rows.append(check_claim("baseline JCT overhead (min)", min(over_j.values()), 27.9, 64.7))
+    rows.append(check_claim("baseline JCT overhead (max)", max(over_j.values()), 27.9, 64.7))
+    rows.append(check_claim("baseline cost overhead (min)", min(over_c.values()), 12.6, 30.6))
+    rows.append(check_claim("baseline cost overhead (max)", max(over_c.values()), 12.6, 30.6))
+    # Cross-region paradox: CR-* slower than LDF.
+    par_ldf = 100.0 * (suite["cr-ldf"]["avg_jct_s"] / suite["ldf"]["avg_jct_s"] - 1.0)
+    par_lcf = 100.0 * (suite["cr-lcf"]["avg_jct_s"] / suite["ldf"]["avg_jct_s"] - 1.0)
+    rows.append(check_claim("paradox CR-LDF vs LDF", par_ldf, 28.8, 28.8))
+    rows.append(check_claim("paradox CR-LCF vs LDF", par_lcf, 13.1, 13.1))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,129 @@
+"""Roofline analysis from the dry-run's compiled artifacts.
+
+Per (arch x shape x mesh) cell:
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs          (197 TF bf16)
+  memory term     = HLO_bytes_per_device / HBM_bw              (819 GB/s)
+  collective term = collective_bytes_per_device / link_bw      (50 GB/s ICI)
+
+plus MODEL_FLOPS = 6·N·D (dense) / 6·N_active·D (MoE) per device and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs (remat/redundancy waste).
+
+Reads artifacts/dryrun/*.json written by launch/dryrun.py.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+from repro.configs import SHAPES_BY_NAME, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+ART_DIR = os.environ.get("DRYRUN_DIR", "artifacts/dryrun")
+
+
+def model_flops_per_device(arch: str, shape: str, n_chips: int) -> float:
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    n = cfg.active_param_count() if cfg.family == "moe" else cfg.param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        total = 6.0 * n * tokens
+    elif cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        total = 2.0 * n * tokens
+    else:  # decode: one token per sequence
+        total = 2.0 * n * cell.global_batch
+    if cfg.family == "encdec" and cell.kind != "decode":
+        total *= 1.0  # enc+dec both counted in param_count already
+    return total / n_chips
+
+
+def analyse_record(rec: Dict) -> Optional[Dict]:
+    if rec.get("status") != "ok" or rec.get("flops") is None:
+        return None
+    n_chips = {"16x16": 256, "2x16x16": 512, "2x2": 4, "2x2x2": 8}.get(
+        rec["mesh"], 256
+    )
+    coll = sum(rec.get("collective_bytes", {}).values())
+    t_comp = rec["flops"] / PEAK_FLOPS
+    t_mem = (rec.get("bytes_accessed") or 0.0) / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec["arch"], rec["shape"], n_chips)
+    useful = mf / rec["flops"] if rec["flops"] else 0.0
+    # roofline fraction: useful compute time over the modeled step time
+    bound = max(terms.values())
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    suggestions = {
+        "compute": "cut redundant FLOPs (remat policy, fused attention, "
+                   "avoid replicated compute)",
+        "memory": "reduce bytes touched (fuse elementwise chains, lower-"
+                  "precision caches/activations, larger tiles)",
+        "collective": "reshard to cut collective volume (sharding axis "
+                      "choice, overlap or compress transfers)",
+    }
+    return {
+        **{k: rec.get(k) for k in ("arch", "shape", "mesh", "multi_pod")},
+        "flops": rec["flops"],
+        "bytes": rec.get("bytes_accessed"),
+        "coll_bytes": coll,
+        "t_compute_s": t_comp,
+        "t_memory_s": t_mem,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_frac": frac,
+        "next_lever": suggestions[dominant],
+        "temp_bytes": rec.get("temp_size_in_bytes"),
+        "arg_bytes": rec.get("argument_size_in_bytes"),
+    }
+
+
+def load_all(art_dir: str = ART_DIR) -> List[Dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        a = analyse_record(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    cells = load_all()
+    if not cells:
+        return [f"# roofline: no dry-run artifacts under {ART_DIR} "
+                "(run: python -m repro.launch.dryrun --all --both-meshes)"]
+    for c in cells:
+        tag = "mp" if c["multi_pod"] else "sp"
+        rows.append(
+            f"roofline/{c['arch']}/{c['shape']}/{tag},0.0,"
+            f"t_comp={c['t_compute_s']:.4f}s;t_mem={c['t_memory_s']:.4f}s;"
+            f"t_coll={c['t_collective_s']:.4f}s;dominant={c['dominant']};"
+            f"useful={c['useful_ratio']:.3f};frac={c['roofline_frac']:.3f}"
+        )
+    sp = [c for c in cells if not c["multi_pod"]]
+    if sp:
+        worst = min(sp, key=lambda c: c["roofline_frac"])
+        coll_bound = [c for c in sp if c["dominant"] == "collective"]
+        rows.append(
+            f"# worst roofline fraction: {worst['arch']}/{worst['shape']} "
+            f"({worst['roofline_frac']:.3f})"
+        )
+        rows.append(f"# collective-bound cells: "
+                    f"{[(c['arch'], c['shape']) for c in coll_bound]}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,52 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [figure ...]
+
+Prints ``name,us_per_call,derived`` CSV rows plus ``# claim`` verdict lines
+comparing observed ratios against the paper's published numbers.  The
+roofline benchmark additionally reads the dry-run artifact directory when
+present (see launch/dryrun.py).
+"""
+
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from . import (
+        ablation,
+        main_results,
+        motivation,
+        sensitivity_bandwidth,
+        sensitivity_capacity,
+        workload_intensity,
+    )
+
+    figures = {
+        "motivation": motivation.run,        # Fig. 1
+        "main_results": main_results.run,    # Fig. 4
+        "sensitivity_bandwidth": sensitivity_bandwidth.run,  # Fig. 5
+        "sensitivity_capacity": sensitivity_capacity.run,    # Fig. 6
+        "workload_intensity": workload_intensity.run,        # Fig. 7
+        "ablation": ablation.run,            # Fig. 8
+    }
+    try:
+        from . import roofline
+
+        figures["roofline"] = roofline.run
+    except ImportError:
+        pass
+
+    wanted = sys.argv[1:] or list(figures)
+    print("name,us_per_call,derived")
+    for key in wanted:
+        if key not in figures:
+            print(f"# unknown figure '{key}' (have: {', '.join(figures)})")
+            continue
+        for row in figures[key]():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Fig. 5 bandwidth sensitivity: scale inter-region links by 0.3/0.9/1.5x.
+
+Paper claims:
+  * 0.3x: LDF/CR-LDF JCT overheads ~+10.7%/+26.2%; cost advantage 29.2–34.9%;
+  * 1.5x: baselines 42.9–240.3% longer JCT (CR-LDF collapse), cost +14.3–28.5%.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import POLICY_FACTORIES, check_claim, emit_rows, run_policy_suite
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    for factor in (0.3, 0.9, 1.5):
+        suite = run_policy_suite(POLICY_FACTORIES, bandwidth_factor=factor)
+        rows.extend(emit_rows(f"fig5/bw{factor:g}x", suite))
+        base_j = suite["bace-pipe"]["avg_jct_s"]
+        base_c = suite["bace-pipe"]["total_cost"]
+        over_j = [
+            100.0 * (m["avg_jct_s"] / base_j - 1.0)
+            for n, m in suite.items()
+            if n != "bace-pipe"
+        ]
+        over_c = [
+            100.0 * (m["total_cost"] / base_c - 1.0)
+            for n, m in suite.items()
+            if n != "bace-pipe"
+        ]
+        if factor == 0.3:
+            rows.append(check_claim("0.3x JCT overheads", max(over_j), 10.7, 26.2))
+            rows.append(check_claim("0.3x cost overheads", max(over_c), 29.2, 34.9))
+        if factor == 1.5:
+            rows.append(check_claim("1.5x JCT overheads", max(over_j), 42.9, 240.3))
+            rows.append(check_claim("1.5x cost overheads", max(over_c), 14.3, 28.5))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

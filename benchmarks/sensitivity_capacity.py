@@ -1,0 +1,42 @@
+"""Fig. 6 GPU-capacity sensitivity: scale regional pools by 0.5/0.75/1.25x.
+
+Paper claims:
+  * 0.5x: baseline JCT inflation 32.2–69.9% (CR worst ~70%); cost +24.1–42.5%;
+  * 1.25x: gaps narrow — JCT +5.5–20.7%, cost +0.2–9.4%.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from .common import POLICY_FACTORIES, check_claim, emit_rows, run_policy_suite
+
+
+def run() -> List[str]:
+    rows: List[str] = []
+    for factor in (0.5, 0.75, 1.25):
+        suite = run_policy_suite(POLICY_FACTORIES, capacity_factor=factor)
+        rows.extend(emit_rows(f"fig6/cap{factor:g}x", suite))
+        base_j = suite["bace-pipe"]["avg_jct_s"]
+        base_c = suite["bace-pipe"]["total_cost"]
+        over_j = [
+            100.0 * (m["avg_jct_s"] / base_j - 1.0)
+            for n, m in suite.items()
+            if n != "bace-pipe"
+        ]
+        over_c = [
+            100.0 * (m["total_cost"] / base_c - 1.0)
+            for n, m in suite.items()
+            if n != "bace-pipe"
+        ]
+        if factor == 0.5:
+            rows.append(check_claim("0.5x JCT inflation", max(over_j), 32.2, 69.9))
+            rows.append(check_claim("0.5x cost inflation", max(over_c), 24.1, 42.5))
+        if factor == 1.25:
+            rows.append(check_claim("1.25x JCT inflation", max(over_j), 5.5, 20.7))
+            rows.append(check_claim("1.25x cost inflation", max(over_c), 0.2, 9.4))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

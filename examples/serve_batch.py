@@ -1,0 +1,18 @@
+"""Serve a small model with batched requests through the decode path.
+
+    PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import main as serve_main
+
+
+def main() -> None:
+    for arch in ("gemma2-2b", "mamba2-2.7b"):
+        serve_main([
+            "--arch", arch, "--reduced",
+            "--batch", "4", "--prompt-len", "8", "--new-tokens", "16",
+        ])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""End-to-end driver: train a ~100M-parameter qwen-family model for a few
+hundred steps on synthetic data, with checkpointing and an injected region
+failure mid-run (the geo-failover path, executed for real).
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+"""
+
+import argparse
+import dataclasses
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data import SyntheticLM, make_batch_iterator
+from repro.ft import FailureInjector, resilient_train_loop
+from repro.launch import steps as S
+from repro.launch.train import build_everything
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_100m_ckpt")
+    args = ap.parse_args()
+
+    # ~100M decoder: qwen1.5 family wiring, scaled dims.
+    cfg = dataclasses.replace(
+        get_config("qwen1.5-32b"),
+        n_layers=8, d_model=512, n_heads=8, n_kv_heads=8, head_dim=64,
+        d_ff=2048, vocab=8192, model_axis="tp", pp_stages=0,
+    )
+    n_analytic = cfg.param_count()
+    print(f"[100m] analytic params: {n_analytic / 1e6:.1f}M")
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    state, jit_step, _ = build_everything(
+        cfg, mesh, batch=args.batch, seq=args.seq, multi_pod=False,
+        dtype=jnp.float32,
+    )
+    n_real = sum(x.size for x in jax.tree.leaves(state.params))
+    print(f"[100m] actual params: {n_real / 1e6:.1f}M")
+
+    source = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq, batch=args.batch)
+    batches = make_batch_iterator(
+        source, cfg, mesh, S.batch_axis_spec(mesh, False, args.batch)
+    )
+    if os.path.isdir(args.ckpt_dir):
+        shutil.rmtree(args.ckpt_dir)
+
+    def wrapped(state_, batch_):
+        with jax.set_mesh(mesh):
+            return jit_step(state_, batch_)
+
+    out = resilient_train_loop(
+        train_step=wrapped,
+        state=state,
+        batches=batches,
+        n_steps=args.steps,
+        ckpt_dir=args.ckpt_dir,
+        ckpt_every=100,
+        injector=FailureInjector({args.steps // 2: "eu-central"}),
+        log_every=20,
+    )
+    losses = out["losses"]
+    first = float(np.mean(losses[:10]))
+    last = float(np.mean(losses[-10:]))
+    print(f"[100m] loss {first:.4f} -> {last:.4f} over {len(losses)} steps "
+          f"(restarts={out['restarts']})")
+    assert last < first, "loss did not improve"
+    print("[100m] OK: loss improved through a mid-run region failure.")
+
+
+if __name__ == "__main__":
+    main()

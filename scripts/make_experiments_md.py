@@ -1,0 +1,151 @@
+"""Regenerates the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+artifacts/dryrun/*.json.  Static sections (§Benchmarks, §Perf) live in
+EXPERIMENTS.header.md / EXPERIMENTS.perf.md and are concatenated.
+
+    PYTHONPATH=src python scripts/make_experiments_md.py
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.roofline import analyse_record  # noqa: E402
+from repro.configs import ARCH_IDS, LONG_CONTEXT_ARCHS, SHAPES  # noqa: E402
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+OUT = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.md")
+HEADER = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.header.md")
+PERF = os.path.join(os.path.dirname(__file__), "..", "EXPERIMENTS.perf.md")
+
+
+def gb(x):
+    return f"{x / 1e9:.2f}" if x is not None else "-"
+
+
+def main() -> None:
+    recs = []
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    by_key = {(r["arch"], r["shape"], r["multi_pod"]): r for r in recs}
+
+    lines = []
+    if os.path.exists(HEADER):
+        lines.append(open(HEADER).read().rstrip())
+
+    # ------------------------------------------------------------ dry-run
+    lines.append("\n\n## §Dry-run\n")
+    n_ok = sum(1 for r in recs if r.get("status") == "ok")
+    n_fail = sum(1 for r in recs if r.get("status") != "ok")
+    lines.append(
+        f"`launch/dryrun.py` lowered + compiled **{n_ok} cells OK, "
+        f"{n_fail} failed** across the single-pod (16x16 = 256 chips) and "
+        "multi-pod (2x16x16 = 512 chips) meshes.  Cells marked `skip` are "
+        "the documented long_500k skips for pure full-attention archs "
+        "(DESIGN.md §long_500k).\n"
+    )
+    lines.append(
+        "| arch | shape | mesh | status | FLOPs/dev | bytes/dev (GB) | "
+        "collective bytes/dev (GB) | args/dev (GB) | temp/dev (GB) | "
+        "compile (s) |"
+    )
+    lines.append("|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for cell in SHAPES:
+            skip = cell.name == "long_500k" and arch not in LONG_CONTEXT_ARCHS
+            for mp in (False, True):
+                mesh = "2x16x16" if mp else "16x16"
+                if skip:
+                    if not mp:
+                        lines.append(
+                            f"| {arch} | {cell.name} | both | skip "
+                            f"(full-attention, see DESIGN.md) | | | | | | |"
+                        )
+                    continue
+                r = by_key.get((arch, cell.name, mp))
+                if r is None:
+                    lines.append(
+                        f"| {arch} | {cell.name} | {mesh} | missing | | | | | | |"
+                    )
+                    continue
+                if r.get("status") != "ok":
+                    err = r.get("error", "?")[:60].replace("|", "/")
+                    lines.append(
+                        f"| {arch} | {cell.name} | {mesh} | FAIL: {err} | | | | | | |"
+                    )
+                    continue
+                coll = sum(r.get("collective_bytes", {}).values())
+                lines.append(
+                    f"| {arch} | {cell.name} | {mesh} | ok "
+                    f"| {r.get('flops', 0):.3e} | {gb(r.get('bytes_accessed'))} "
+                    f"| {gb(coll)} | {gb(r.get('argument_size_in_bytes'))} "
+                    f"| {gb(r.get('temp_size_in_bytes'))} "
+                    f"| {r.get('compile_s', '-')} |"
+                )
+
+    # collective schedule summary
+    lines.append("\n**Collective mix per cell (bytes by op, single-pod):**\n")
+    lines.append("| arch | shape | all-reduce | all-gather | reduce-scatter | all-to-all | collective-permute |")
+    lines.append("|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for cell in SHAPES:
+            r = by_key.get((arch, cell.name, False))
+            if not r or r.get("status") != "ok":
+                continue
+            cb = r.get("collective_bytes", {})
+            lines.append(
+                f"| {arch} | {cell.name} | "
+                + " | ".join(
+                    gb(cb.get(k, 0.0))
+                    for k in ("all-reduce", "all-gather", "reduce-scatter",
+                              "all-to-all", "collective-permute")
+                )
+                + " |"
+            )
+
+    # ------------------------------------------------------------ roofline
+    lines.append("\n\n## §Roofline\n")
+    lines.append(
+        "Hardware model: TPU v5e-class — 197 TFLOP/s bf16, 819 GB/s HBM, "
+        "50 GB/s/link ICI.  Terms are seconds per step per device from the "
+        "compiled artifact; `useful` = MODEL_FLOPS / HLO_FLOPs "
+        "(6·N·D for train, 2·N·D prefill, 2·N·B decode; N_active for MoE); "
+        "`frac` = useful-compute-time / dominant-term (the roofline "
+        "fraction).\n"
+    )
+    for mp in (False, True):
+        lines.append(f"\n### {'Multi-pod 2x16x16' if mp else 'Single-pod 16x16'}\n")
+        lines.append(
+            "| arch | shape | t_compute (s) | t_memory (s) | t_collective (s) "
+            "| dominant | useful | frac | next lever |"
+        )
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for arch in ARCH_IDS:
+            for cell in SHAPES:
+                r = by_key.get((arch, cell.name, mp))
+                if not r or r.get("status") != "ok":
+                    continue
+                a = analyse_record(r)
+                if a is None:
+                    continue
+                lines.append(
+                    f"| {arch} | {cell.name} | {a['t_compute_s']:.4f} "
+                    f"| {a['t_memory_s']:.4f} | {a['t_collective_s']:.4f} "
+                    f"| **{a['dominant']}** | {a['useful_ratio']:.3f} "
+                    f"| {a['roofline_frac']:.3f} | {a['next_lever']} |"
+                )
+
+    if os.path.exists(PERF):
+        lines.append("\n\n" + open(PERF).read().rstrip())
+
+    with open(OUT, "w") as f:
+        f.write("\n".join(lines) + "\n")
+    print(f"wrote {OUT} ({n_ok} ok / {n_fail} fail)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from .hlo_cost import loop_aware_cost  # noqa: F401

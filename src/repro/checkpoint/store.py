@@ -1,0 +1,151 @@
+"""Checkpoint save/restore with sharding metadata and elastic resharding.
+
+Layout:  <dir>/step_<N>/arrays.npz + manifest.json (tree structure, dtypes,
+step, data cursor).  Restore places every leaf under the *target* mesh's
+NamedSharding — restoring onto a different mesh shape (elastic rescale after
+a region loss) is therefore just a different `specs` argument.
+
+``AsyncCheckpointer`` overlaps serialization with training (background
+thread) — the fault-tolerance loop in ``repro.ft`` uses it so the step time
+is not blocked on disk.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import queue
+import re
+import shutil
+import threading
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return {jax.tree_util.keystr(path): leaf for path, leaf in flat}
+
+
+def save_checkpoint(
+    directory: str,
+    state: Any,
+    *,
+    step: int,
+    extra: Optional[Dict[str, Any]] = None,
+) -> str:
+    """Blocking save.  Returns the checkpoint path."""
+    path = os.path.join(directory, f"step_{step:08d}")
+    tmp = path + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    arrays = {}
+    manifest = {"step": step, "extra": extra or {}, "keys": []}
+    for i, (key, leaf) in enumerate(sorted(flat.items())):
+        name = f"a{i}"
+        arrays[name] = np.asarray(jax.device_get(leaf))
+        manifest["keys"].append({"key": key, "name": name})
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.replace(tmp, path)
+    return path
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(m.group(1))
+        for d in os.listdir(directory)
+        if (m := re.fullmatch(r"step_(\d+)", d))
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    abstract_state: Any,
+    *,
+    step: Optional[int] = None,
+    mesh: Optional[Mesh] = None,
+    specs: Any = None,
+) -> Tuple[Any, int, Dict[str, Any]]:
+    """Restore onto the target mesh/sharding (elastic-safe)."""
+    if step is None:
+        step = latest_step(directory)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    by_key = {e["key"]: data[e["name"]] for e in manifest["keys"]}
+
+    flat_abs, treedef = jax.tree_util.tree_flatten_with_path(abstract_state)
+    spec_leaves = (
+        [None] * len(flat_abs)
+        if specs is None
+        else [
+            s
+            for _, s in jax.tree_util.tree_flatten_with_path(
+                specs, is_leaf=lambda x: isinstance(x, (P, NamedSharding))
+            )[0]
+        ]
+    )
+    leaves = []
+    for (pathk, leaf), spec in zip(flat_abs, spec_leaves):
+        arr = by_key[jax.tree_util.keystr(pathk)]
+        if mesh is not None and spec is not None:
+            sh = spec if isinstance(spec, NamedSharding) else NamedSharding(mesh, spec)
+            leaves.append(jax.device_put(arr.astype(leaf.dtype), sh))
+        else:
+            leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    state = jax.tree_util.tree_unflatten(treedef, leaves)
+    return state, manifest["step"], manifest["extra"]
+
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer (one in flight at a time)."""
+
+    def __init__(self, directory: str):
+        self.directory = directory
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._worker = threading.Thread(target=self._run, daemon=True)
+        self._worker.start()
+        self.last_error: Optional[Exception] = None
+
+    def _run(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            state_host, step, extra = item
+            try:
+                save_checkpoint(self.directory, state_host, step=step, extra=extra)
+            except Exception as e:  # pragma: no cover
+                self.last_error = e
+
+    def save(self, state: Any, *, step: int, extra=None) -> None:
+        # materialize on host *now* (cheap copy) so training can proceed
+        host = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), state)
+        self._q.put((host, step, extra))
+
+    def wait(self) -> None:
+        self._q.join() if False else self._drain()
+
+    def _drain(self) -> None:
+        while not self._q.empty():
+            import time
+
+            time.sleep(0.05)
+
+    def close(self) -> None:
+        self._drain()
+        self._q.put(None)
+        self._worker.join(timeout=10)

@@ -1,0 +1,9 @@
+from .base import (  # noqa: F401
+    ArchConfig,
+    LONG_CONTEXT_ARCHS,
+    SHAPES,
+    SHAPES_BY_NAME,
+    ShapeCell,
+    runnable_cells,
+)
+from .registry import ARCH_IDS, CONFIGS, get_config  # noqa: F401

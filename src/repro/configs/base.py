@@ -1,0 +1,187 @@
+"""Architecture configs: one dataclass drives models, sharding, and dry-run.
+
+Each assigned architecture gets a module in this package exporting ``CONFIG``
+(the exact published shape) — the registry maps ``--arch <id>`` to it.  Every
+config can produce a ``reduced()`` twin: same family/wiring, tiny dims, for
+CPU smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+Family = str  # 'dense' | 'moe' | 'hybrid' | 'ssm' | 'encdec' | 'vlm'
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    # ------------------------------------------------------------- identity
+    arch_id: str
+    family: Family
+    # ------------------------------------------------------------ transformer
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None          # default d_model // n_heads
+    qkv_bias: bool = False                  # qwen1.5
+    rope_theta: float = 10_000.0
+    rms_eps: float = 1e-6
+    act: str = "silu"                       # 'silu' (swiglu) | 'gelu' (geglu)
+    tie_embeddings: bool = False
+    # ----------------------------------------------------- gemma2-style extras
+    sliding_window: Optional[int] = None    # local-attention window
+    alternate_local_global: bool = False    # odd layers local, even global
+    attn_logit_softcap: Optional[float] = None
+    final_logit_softcap: Optional[float] = None
+    # ------------------------------------------------------------------- moe
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    expert_d_ff: int = 0
+    # ------------------------------------------------------------------- ssm
+    ssm_state: int = 0
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+    # ---------------------------------------------------------------- hybrid
+    attn_every: int = 0                     # zamba2: shared attn block period
+    # ---------------------------------------------------------------- encdec
+    n_enc_layers: int = 0                   # seamless: encoder depth
+    # ------------------------------------------------------------------- vlm
+    mrope: bool = False
+    mrope_sections: Tuple[int, int, int] = (16, 24, 24)  # t/h/w head_dim split
+    vision_frac: float = 0.25               # stub frontend: fraction of seq
+    # -------------------------------------------------- distribution strategy
+    #: how the 'model' mesh axis is used on the single-pod mesh:
+    #:   'pp' — pipeline stages; 'tp' — tensor parallel; 'ep' — expert
+    #:   parallel; 'dp' — pure extra data parallelism
+    model_axis: str = "tp"
+    pp_stages: int = 0                      # for 'pp': stages on model axis
+
+    # ---------------------------------------------------------------- helpers
+    @property
+    def padded_vocab(self) -> int:
+        """Embedding rows padded so the vocab dim shards over 16-way meshes
+        (padded logit columns are masked to -inf in lm_logits)."""
+        return ((self.vocab + 15) // 16) * 16
+
+    @property
+    def head_dim_(self) -> int:
+        if self.head_dim:
+            return self.head_dim
+        return self.d_model // self.n_heads if self.n_heads else 0
+
+    @property
+    def ssm_heads(self) -> int:
+        return (self.ssm_expand * self.d_model) // self.ssm_head_dim
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    def param_count(self) -> float:
+        """Analytic parameter count (drives MODEL_FLOPS and the scheduler)."""
+        d, f, v = self.d_model, self.d_ff, self.vocab
+        hq = self.n_heads * self.head_dim_
+        hkv = self.n_kv_heads * self.head_dim_
+        attn = d * hq + 2 * d * hkv + hq * d
+        mlp = 3 * d * f
+        if self.family == "moe":
+            mlp = 3 * d * self.expert_d_ff * (
+                self.n_experts + self.n_shared_experts
+            ) + d * self.n_experts  # router
+        ssm = 0.0
+        if self.family in ("ssm", "hybrid"):
+            di = self.d_inner
+            # in_proj (z,x,B,C,dt), conv, A/D/dt_bias, norm, out_proj
+            ssm = d * (2 * di + 2 * self.ssm_state + self.ssm_heads) + di * d + 4 * di
+        per_layer = {
+            "dense": attn + mlp,
+            "moe": attn + mlp,
+            "vlm": attn + mlp,
+            "encdec": attn + mlp,
+            "ssm": ssm,
+            "hybrid": ssm,
+        }[self.family]
+        n = self.n_layers * per_layer
+        if self.family == "encdec":
+            # n_layers = decoder depth; encoder adds self-attn-only layers and
+            # decoder adds cross-attention.
+            n += self.n_enc_layers * (attn + mlp) + self.n_layers * attn
+        if self.family == "hybrid" and self.attn_every:
+            shared_blocks = 1
+            n += shared_blocks * (attn + mlp)
+        n += v * d * (1 if self.tie_embeddings else 2)
+        n += self.n_layers * 2 * d  # norms
+        return float(n)
+
+    def active_param_count(self) -> float:
+        """MoE: parameters touched per token (for 6·N_active·D)."""
+        if self.family != "moe":
+            return self.param_count()
+        d = self.d_model
+        dense = self.param_count() - self.n_layers * 3 * d * self.expert_d_ff * (
+            self.n_experts + self.n_shared_experts
+        )
+        active_mlp = 3 * d * self.expert_d_ff * (self.top_k + self.n_shared_experts)
+        return float(dense + self.n_layers * active_mlp)
+
+    def reduced(self) -> "ArchConfig":
+        """Tiny same-family twin for CPU smoke tests."""
+        scale = {
+            "n_layers": min(self.n_layers, 4 if self.family != "hybrid" else 4),
+            "d_model": 64,
+            "n_heads": min(self.n_heads, 4),
+            "n_kv_heads": min(self.n_kv_heads, 2),
+            "head_dim": 16,
+            "d_ff": 128,
+            "vocab": 256,
+            "n_experts": min(self.n_experts, 4),
+            "n_shared_experts": min(self.n_shared_experts, 1),
+            "top_k": min(self.top_k, 2),
+            "expert_d_ff": 64 if self.expert_d_ff else 0,
+            "ssm_state": min(self.ssm_state, 16),
+            "ssm_head_dim": 16,
+            "ssm_chunk": 16,
+            "sliding_window": 32 if self.sliding_window else None,
+            "attn_every": min(self.attn_every, 2) if self.attn_every else 0,
+            "n_enc_layers": min(self.n_enc_layers, 2),
+            "pp_stages": min(self.pp_stages, 2) if self.pp_stages else 0,
+            "mrope_sections": (2, 3, 3),  # sums to reduced head_dim // 2
+        }
+        return dataclasses.replace(self, **scale)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCell:
+    """One assigned input-shape cell."""
+
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = (
+    ShapeCell("train_4k", 4_096, 256, "train"),
+    ShapeCell("prefill_32k", 32_768, 32, "prefill"),
+    ShapeCell("decode_32k", 32_768, 128, "decode"),
+    ShapeCell("long_500k", 524_288, 1, "decode"),
+)
+
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+#: archs that run the sub-quadratic long_500k cell (see DESIGN.md)
+LONG_CONTEXT_ARCHS = ("mamba2-2.7b", "zamba2-2.7b", "gemma2-2b")
+
+
+def runnable_cells(cfg: ArchConfig):
+    for s in SHAPES:
+        if s.name == "long_500k" and cfg.arch_id not in LONG_CONTEXT_ARCHS:
+            continue
+        yield s

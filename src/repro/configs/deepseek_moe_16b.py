@@ -1,0 +1,29 @@
+"""DeepSeekMoE-16B [moe]: 28L, d_model 2048, 16 heads (kv=16), expert
+d_ff 1408, vocab 102400 — 2 shared + 64 routed experts, top-6, fine-grained.
+[arXiv:2401.06066]
+
+Parallelism: EP=16 over `model`; shared experts replicated (computed by all
+devices on their token shard).  Deviation noted in DESIGN.md: the published
+model's layer 0 uses a dense FFN; we keep a uniform MoE stack for the
+scanned-layer representation.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="deepseek-moe-16b",
+    family="moe",
+    n_layers=28,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab=102400,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    expert_d_ff=1408,
+    act="silu",
+    model_axis="ep",
+)

@@ -1,0 +1,31 @@
+"""Gemma2-2B [dense]: 26L, d_model 2304, 8 heads (GQA kv=4, head_dim 256),
+d_ff 9216, vocab 256000 — alternating local(4096)/global attention, logit
+softcaps, GeGLU, tied embeddings.  [arXiv:2408.00118]
+
+Parallelism: TP over `model` (d_ff 9216/16, vocab 256000/16); attention
+heads (8) don't divide 16 — attention runs batch-sharded over `model` for
+train and seq-sharded (distributed flash decode) for decode.  Runs the
+long_500k cell: local layers are sliding-window (sub-quadratic); global
+layers sequence-shard their KV.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256000,
+    act="gelu",
+    tie_embeddings=True,
+    sliding_window=4096,
+    alternate_local_global=True,
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    model_axis="tp",
+)

@@ -1,0 +1,23 @@
+"""InternLM2-20B [dense]: 48L, d_model 6144, 48 heads (GQA kv=8),
+d_ff 16384, vocab 92544.  [arXiv:2403.17297]
+
+Parallelism: PP=16 over `model` (48 layers -> 3 per stage).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="internlm2-20b",
+    family="dense",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=92544,
+    rope_theta=1_000_000.0,
+    act="silu",
+    model_axis="pp",
+    pp_stages=16,
+)

@@ -1,0 +1,27 @@
+"""Mamba2-2.7B [ssm]: 64L, d_model 2560 (attn-free), ssm_state 128,
+vocab 50280 — SSD (state-space duality) blocks.  [arXiv:2405.21060]
+
+Parallelism: PP=16 over `model` (64 layers -> 4 per stage); decode carries
+the recurrent state (80 heads x 64 head_dim x 128 state) instead of a KV
+cache, so long_500k runs natively.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=0,
+    n_kv_heads=0,
+    head_dim=0,
+    d_ff=0,
+    vocab=50280,
+    ssm_state=128,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    model_axis="pp",
+    pp_stages=16,
+)

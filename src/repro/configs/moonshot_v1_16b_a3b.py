@@ -1,0 +1,27 @@
+"""Moonlight-16B-A3B (moonshot-v1-16b-a3b) [moe]: 48L, d_model 2048,
+16 heads (kv=16), expert d_ff 1408, vocab 163840, 64 experts top-6.
+[hf:moonshotai/Moonlight-16B-A3B]
+
+Parallelism: EP=16 over `model` (64 experts -> 4 per device), GShard-style
+dispatch/combine einsums.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="moonshot-v1-16b-a3b",
+    family="moe",
+    n_layers=48,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,
+    vocab=163840,
+    n_experts=64,
+    n_shared_experts=2,
+    top_k=6,
+    expert_d_ff=1408,
+    act="silu",
+    model_axis="ep",
+)

@@ -1,0 +1,25 @@
+"""Qwen1.5-32B [dense]: 64L, d_model 5120, 40 heads (GQA kv=40, i.e. MHA),
+d_ff 27392, vocab 152064, QKV bias.  [hf:Qwen/Qwen1.5-32B]
+
+Parallelism: flagship pipeline arch — PP=16 over the `model` axis
+(64 layers -> 4 per stage), DP over `data`, geo-PP over `pod`.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen1.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=40,
+    head_dim=128,
+    d_ff=27392,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+    model_axis="pp",
+    pp_stages=16,
+)

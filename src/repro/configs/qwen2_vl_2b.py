@@ -1,0 +1,33 @@
+"""Qwen2-VL-2B backbone [vlm]: 28L, d_model 1536, 12 heads (GQA kv=2),
+d_ff 8960, vocab 151936 — M-RoPE (t/h/w sections), dynamic resolution.
+[arXiv:2409.12191]
+
+The vision frontend is a STUB: ``input_specs()`` supplies precomputed patch
+embeddings [B, T_vis, d_model] and 3D M-RoPE position ids; the backbone is
+the text decoder consuming the multimodal sequence.
+
+Parallelism: TP over `model` (d_ff 8960/16 = 560); 12 heads don't divide 16
+— attention batch/seq-sharded.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="qwen2-vl-2b",
+    family="vlm",
+    n_layers=28,
+    d_model=1536,
+    n_heads=12,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=8960,
+    vocab=151936,
+    qkv_bias=True,
+    rope_theta=1_000_000.0,
+    act="silu",
+    tie_embeddings=True,
+    mrope=True,
+    mrope_sections=(16, 24, 24),
+    vision_frac=0.25,
+    model_axis="tp",
+)

@@ -1,0 +1,45 @@
+"""--arch <id> registry for all assigned architectures."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from .base import ArchConfig
+from . import (
+    deepseek_moe_16b,
+    gemma2_2b,
+    internlm2_20b,
+    mamba2_2_7b,
+    moonshot_v1_16b_a3b,
+    qwen1_5_32b,
+    qwen2_vl_2b,
+    seamless_m4t_medium,
+    starcoder2_3b,
+    zamba2_2_7b,
+)
+
+_MODULES = (
+    qwen1_5_32b,
+    gemma2_2b,
+    internlm2_20b,
+    starcoder2_3b,
+    moonshot_v1_16b_a3b,
+    deepseek_moe_16b,
+    zamba2_2_7b,
+    seamless_m4t_medium,
+    mamba2_2_7b,
+    qwen2_vl_2b,
+)
+
+CONFIGS: Dict[str, ArchConfig] = {m.CONFIG.arch_id: m.CONFIG for m in _MODULES}
+
+ARCH_IDS = tuple(CONFIGS)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    try:
+        return CONFIGS[arch_id]
+    except KeyError:
+        raise KeyError(
+            f"unknown arch '{arch_id}'; available: {', '.join(ARCH_IDS)}"
+        ) from None

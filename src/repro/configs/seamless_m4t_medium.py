@@ -1,0 +1,26 @@
+"""SeamlessM4T-medium backbone [audio enc-dec]: 12L encoder + 12L decoder,
+d_model 1024, 16 heads (kv=16), d_ff 4096, vocab 256206.  [arXiv:2308.11596]
+
+The speech frontend is a STUB: ``input_specs()`` supplies precomputed frame
+embeddings [B, T_src, d_model]; the backbone is the transformer enc-dec.
+
+Parallelism: full TP over `model` (16 heads/16, d_ff 4096/16 = 256,
+vocab 256206 -> padded 256256/16).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="seamless-m4t-medium",
+    family="encdec",
+    n_layers=12,          # decoder depth
+    n_enc_layers=12,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=64,
+    d_ff=4096,
+    vocab=256206,
+    act="gelu_plain",
+    model_axis="tp",
+)

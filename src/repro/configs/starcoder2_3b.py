@@ -1,0 +1,24 @@
+"""StarCoder2-3B [dense]: 30L, d_model 3072, 24 heads (GQA kv=2),
+d_ff 12288, vocab 49152, RoPE, plain-GELU MLP, biases.  [arXiv:2402.19173]
+
+Parallelism: TP over `model` (d_ff 12288/16 = 768); 24 heads don't divide
+16 — attention batch/seq-sharded like gemma2.
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="starcoder2-3b",
+    family="dense",
+    n_layers=30,
+    d_model=3072,
+    n_heads=24,
+    n_kv_heads=2,
+    head_dim=128,
+    d_ff=12288,
+    vocab=49152,
+    qkv_bias=True,
+    rope_theta=999_999.4,
+    act="gelu_plain",
+    model_axis="tp",
+)

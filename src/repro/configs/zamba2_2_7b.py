@@ -1,0 +1,29 @@
+"""Zamba2-2.7B [hybrid]: 54 Mamba2 blocks, d_model 2560, ssm_state 64,
+plus a SHARED attention+MLP block (32 heads, d_ff 10240, vocab 32000)
+invoked every 6 mamba blocks.  [arXiv:2411.15242]
+
+Parallelism: TP over `model` — mamba heads (80/16=5), shared-attn heads
+(32/16=2), d_ff (10240/16).  Runs long_500k (recurrent state decode; the
+shared block's KV cache is sequence-sharded).
+"""
+
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    arch_id="zamba2-2.7b",
+    family="hybrid",
+    n_layers=54,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=32,
+    head_dim=80,
+    d_ff=10240,
+    vocab=32000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    ssm_chunk=256,
+    attn_every=6,
+    act="gelu",
+    model_axis="tp",
+)

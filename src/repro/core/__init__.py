@@ -1,0 +1,62 @@
+"""BACE-Pipe control plane: the paper's scheduling contribution.
+
+Public API:
+    ClusterState / Region          — geo-distributed infrastructure model
+    ModelSpec / JobSpec / JobProfile — job + analytic timing profile
+    Placement                      — a scheduling decision ``S_j``
+    find_placement                 — Alg. 1 Pathfinder (+ Alg. 2 allocator)
+    cost_min_allocate              — Alg. 2
+    priority_scores                — Eqs. (9)–(12)
+    BACEPipePolicy / baselines / ablations — pluggable policies
+    simulate                       — event-driven multi-job simulator
+"""
+
+from .ablations import (  # noqa: F401
+    ALL_ABLATIONS,
+    WithoutCostMin,
+    WithoutPathfinder,
+    WithoutPriority,
+)
+from .allocator import allocation_cost_rate, cost_min_allocate, uniform_allocate  # noqa: F401
+from .baselines import (  # noqa: F401
+    ALL_BASELINES,
+    CRLCFPolicy,
+    CRLDFPolicy,
+    LCFPolicy,
+    LDFPolicy,
+)
+from .cluster import GBPS, ClusterState, Region  # noqa: F401
+from .job import JobProfile, JobSpec, ModelSpec  # noqa: F401
+from .pathfinder import find_placement  # noqa: F401
+from .placement import Placement, build_placement  # noqa: F401
+from .priority import (  # noqa: F401
+    bandwidth_sensitivity,
+    computation_intensity,
+    order_by_priority,
+    priority_scores,
+)
+from .scheduler import (  # noqa: F401
+    BACEPipePolicy,
+    JobRecord,
+    SchedulingPolicy,
+    SimulationResult,
+    Simulator,
+    simulate,
+)
+from .timing import (  # noqa: F401
+    average_price,
+    bottleneck_delta,
+    electricity_cost,
+    execution_time,
+    iteration_time,
+)
+from .workloads import (  # noqa: F401
+    DATASETS,
+    TABLE_II_REGIONS,
+    TABLE_III_MODELS,
+    motivation_cluster,
+    motivation_profiles,
+    paper_cluster,
+    paper_jobs,
+    paper_profiles,
+)

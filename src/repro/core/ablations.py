@@ -1,0 +1,48 @@
+"""Ablation variants of BACE-Pipe (paper §IV-E, Fig. 8).
+
+- **w/o Priority**:   FCFS ordering, full Pathfinder + Cost-Min placement.
+- **w/o Pathfinder**: dynamic priority ordering, CR-LDF placement.
+- **w/o Cost-Min**:   dynamic priority + Pathfinder, uniform GPU spreading.
+"""
+
+from __future__ import annotations
+
+from .allocator import uniform_allocate
+from .baselines import CRLDFPolicy
+from .pathfinder import find_placement
+from .priority import order_by_priority
+from .scheduler import BACEPipePolicy, SchedulingPolicy, fcfs_order
+
+
+class WithoutPriority(BACEPipePolicy):
+    name = "bace-pipe-wo-priority"
+    strict_fcfs = True  # FCFS without re-ordering blocks at the head
+
+    def __init__(self) -> None:
+        super().__init__(use_priority=False)
+
+
+class WithoutPathfinder(SchedulingPolicy):
+    name = "bace-pipe-wo-pathfinder"
+
+    def __init__(self) -> None:
+        self._placer = CRLDFPolicy()
+
+    def order(self, pending, cluster, now):
+        return order_by_priority(pending, cluster)
+
+    def place(self, profile, cluster):
+        return self._placer.place(profile, cluster)
+
+
+class WithoutCostMin(SchedulingPolicy):
+    name = "bace-pipe-wo-costmin"
+
+    def order(self, pending, cluster, now):
+        return order_by_priority(pending, cluster)
+
+    def place(self, profile, cluster):
+        return find_placement(profile, cluster, allocator=uniform_allocate)
+
+
+ALL_ABLATIONS = (WithoutPriority, WithoutPathfinder, WithoutCostMin)

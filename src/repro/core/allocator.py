@@ -1,0 +1,77 @@
+"""Cost-Min Allocator — paper Alg. 2.
+
+Given an ordered region path and a target GPU count ``g``: first pin one GPU
+per path region (pipeline continuity), then pour the surplus into the
+cheapest regions first, capped by each region's *free* capacity.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Mapping
+
+from .cluster import ClusterState
+
+
+def cost_min_allocate(
+    cluster: ClusterState, path: List[str], g: int
+) -> Dict[str, int]:
+    """Alg. 2.  Raises if the path cannot host ``g`` GPUs."""
+    if len(set(path)) != len(path):
+        raise ValueError("path revisits a region")
+    if g < len(path):
+        raise ValueError(f"need >= {len(path)} GPUs for a {len(path)}-region path")
+    free = {r: cluster.free_gpus[r] for r in path}
+    for r in path:
+        if free[r] < 1:
+            raise ValueError(f"region {r} has no free GPU for its stage")
+    if sum(free.values()) < g:
+        raise ValueError("path capacity below target g")
+
+    # Step 1: pipeline continuity — one GPU per traversed region.
+    alloc = {r: 1 for r in path}
+    remaining = g - len(path)
+
+    # Step 2: surplus to the cheapest regions first.
+    for r in sorted(path, key=lambda r: (cluster.price(r), r)):
+        if remaining == 0:
+            break
+        add = min(free[r] - alloc[r], remaining)
+        alloc[r] += add
+        remaining -= add
+    if remaining != 0:  # unreachable given the capacity pre-check
+        raise ValueError("allocator failed to place all GPUs")
+    return alloc
+
+
+def uniform_allocate(
+    cluster: ClusterState, path: List[str], g: int
+) -> Dict[str, int]:
+    """Ablation "w/o Cost-Min" (paper §IV-E): spread GPUs evenly over the
+    path, ignoring prices; overflow beyond a region's free capacity spills to
+    the next region in path order."""
+    if g < len(path):
+        raise ValueError("need at least one GPU per path region")
+    free = {r: cluster.free_gpus[r] for r in path}
+    if any(free[r] < 1 for r in path) or sum(free.values()) < g:
+        raise ValueError("path cannot host g GPUs")
+    base, extra = divmod(g, len(path))
+    alloc = {r: min(free[r], base + (1 if i < extra else 0))
+             for i, r in enumerate(path)}
+    alloc = {r: max(1, n) for r, n in alloc.items()}
+    spill = g - sum(alloc.values())
+    for r in path:  # resolve rounding/capacity spill deterministically
+        if spill <= 0:
+            break
+        add = min(free[r] - alloc[r], spill)
+        alloc[r] += add
+        spill -= add
+    if spill > 0:
+        raise ValueError("uniform allocator spill failure")
+    return alloc
+
+
+def allocation_cost_rate(
+    cluster: ClusterState, alloc: Mapping[str, int]
+) -> float:
+    """Σ_r n_r · P_r (the Eq. 4 price integrand, in $/kWh·GPU units)."""
+    return sum(cluster.price(r) * n for r, n in alloc.items())

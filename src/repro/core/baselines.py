@@ -1,0 +1,189 @@
+"""Baseline schedulers from the paper's evaluation (§IV-A).
+
+- **LCF**   (industrial, cost-first):  FCFS; whole job in the single cheapest
+  region with enough free GPUs (capped at ``K*``).
+- **LDF**   (industrial, delay-first): FCFS; whole job in the region with the
+  most free GPUs.
+- **CR-LCF** (cross-region cost-first, TanGo-style): FCFS; chains regions in
+  ascending-price order, filling each before moving on, until ``K*``.
+- **CR-LDF** (cross-region delay-first, decentralized-training-style): FCFS;
+  seeds at the largest free region and greedily follows the
+  highest-residual-bandwidth link, filling regions along the way.
+
+The CR baselines honour the hard bandwidth ledger (Eq. 6) — an edge with no
+residual bandwidth is unusable, and an edge whose residual cannot even reach
+``bubble_tolerance × t_comp`` worth of transfer rate is rejected — but unlike
+BACE-Pipe's Pathfinder they do *not* insist on ``t_comm ≤ t_comp``, so their
+pipelines can come out communication-bound ("throttled by suboptimal
+inter-region links", §IV-B).
+
+The cross-region baselines model the *rigid* job abstraction the paper
+ascribes to them (§II-A, on TanGo-style schedulers: "fixed resource
+requirements per job... prevents schedulers from dynamically leveraging
+additional available resources"): a CR job demands its full ``K*`` GPUs and
+waits otherwise.  The industrial single-region baselines are
+capacity-flexible but region-bound (Fig. 1 semantics).  BACE-Pipe's flexible
+``[min, K*]`` multi-region allocation is part of the paper's contribution.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+from .cluster import ClusterState
+from .job import JobProfile
+from .placement import Placement, build_placement
+from .scheduler import SchedulingPolicy, fcfs_order
+
+#: A naive scheduler still refuses edges slower than this many compute slots.
+DEFAULT_BUBBLE_TOLERANCE = 8.0
+
+
+def _single_region(
+    profile: JobProfile,
+    cluster: ClusterState,
+    *,
+    by_price: bool,
+) -> Optional[Placement]:
+    k = max(
+        profile.optimal_gpus(cluster.total_gpus()),
+        profile.min_gpus,
+    )
+    # Industrial single-region policies are capacity-flexible (Fig. 1: LCF
+    # hands job P whatever the cheapest region holds) but *region-bound*:
+    # parallelism is capped by one region's free pool.
+    feasible = [
+        r for r, free in cluster.free_gpus.items() if free >= profile.min_gpus
+    ]
+    if not feasible:
+        return None
+    if by_price:
+        region = min(feasible, key=lambda r: (cluster.price(r), r))
+    else:
+        region = max(feasible, key=lambda r: (cluster.free_gpus[r], r))
+    n = min(cluster.free_gpus[region], k)
+    return build_placement(profile, cluster, [region], {region: n})
+
+
+class LCFPolicy(SchedulingPolicy):
+    name = "lcf"
+    strict_fcfs = True
+
+    def order(self, pending, cluster, now):
+        return fcfs_order(pending, cluster, now)
+
+    def place(self, profile, cluster):
+        return _single_region(profile, cluster, by_price=True)
+
+
+class LDFPolicy(SchedulingPolicy):
+    name = "ldf"
+    strict_fcfs = True
+
+    def order(self, pending, cluster, now):
+        return fcfs_order(pending, cluster, now)
+
+    def place(self, profile, cluster):
+        return _single_region(profile, cluster, by_price=False)
+
+
+def _chain_placement(
+    profile: JobProfile,
+    cluster: ClusterState,
+    ordered_regions: List[str],
+    *,
+    bubble_tolerance: float = DEFAULT_BUBBLE_TOLERANCE,
+) -> Optional[Placement]:
+    """Greedy fill along a fixed region order; edges must carry *some* usable
+    bandwidth but need not keep communication off the critical path."""
+    k = max(profile.optimal_gpus(cluster.total_gpus()), profile.min_gpus)
+    k = min(k, cluster.total_gpus())  # rigid sizing at submission
+    act = profile.spec.model.activation_bytes
+    path: List[str] = []
+    alloc: Dict[str, int] = {}
+    g = 0
+    for r in ordered_regions:
+        if g >= k:
+            break
+        free = cluster.free_gpus.get(r, 0)
+        if free < 1:
+            continue
+        if path:
+            avail = cluster.available_bandwidth(path[-1], r)
+            # usable iff the edge can move one activation within the
+            # tolerance window (a naive-but-not-insane scheduler's check).
+            if avail <= 0.0 or act / avail > bubble_tolerance * profile.t_comp(
+                min(k, g + free)
+            ):
+                continue
+        take = min(free, k - g)
+        path.append(r)
+        alloc[r] = take
+        g += take
+    if g < k:
+        return None  # rigid demand: the chain must reach the full K*
+    try:
+        return build_placement(profile, cluster, path, alloc)
+    except ValueError:
+        return None
+
+
+class CRLCFPolicy(SchedulingPolicy):
+    """Cross-region LCF: ascending electricity price defines the chain."""
+
+    name = "cr-lcf"
+    strict_fcfs = True
+
+    def __init__(self, bubble_tolerance: float = DEFAULT_BUBBLE_TOLERANCE):
+        self.bubble_tolerance = bubble_tolerance
+
+    def order(self, pending, cluster, now):
+        return fcfs_order(pending, cluster, now)
+
+    def place(self, profile, cluster):
+        by_price = sorted(
+            cluster.region_names(), key=lambda r: (cluster.price(r), r)
+        )
+        return _chain_placement(
+            profile, cluster, by_price, bubble_tolerance=self.bubble_tolerance
+        )
+
+
+class CRLDFPolicy(SchedulingPolicy):
+    """Cross-region LDF: largest region seeds, highest-bandwidth expansion."""
+
+    name = "cr-ldf"
+    strict_fcfs = True
+
+    def __init__(self, bubble_tolerance: float = DEFAULT_BUBBLE_TOLERANCE):
+        self.bubble_tolerance = bubble_tolerance
+
+    def order(self, pending, cluster, now):
+        return fcfs_order(pending, cluster, now)
+
+    def place(self, profile, cluster):
+        names = [r for r in cluster.region_names() if cluster.free_gpus[r] > 0]
+        if not names:
+            return None
+        seed = max(names, key=lambda r: (cluster.free_gpus[r], r))
+        order = [seed]
+        tail = seed
+        while len(order) < len(names):
+            rest = [
+                r
+                for r in names
+                if r not in order and cluster.available_bandwidth(tail, r) > 0.0
+            ]
+            if not rest:
+                break
+            nxt = max(
+                rest, key=lambda r: (cluster.available_bandwidth(tail, r), r)
+            )
+            order.append(nxt)
+            tail = nxt
+        return _chain_placement(
+            profile, cluster, order, bubble_tolerance=self.bubble_tolerance
+        )
+
+
+ALL_BASELINES = (LCFPolicy, LDFPolicy, CRLCFPolicy, CRLDFPolicy)

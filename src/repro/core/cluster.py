@@ -1,0 +1,194 @@
+"""Geo-distributed cluster model: regions, links, and live resource ledgers.
+
+This is the control-plane view of the world (paper §III-A "System Model"):
+``K`` regions, each with a GPU capacity ``G_r`` and electricity price ``P_r``,
+joined by directed inter-region links with bandwidth ``B_{u,v}`` (asymmetry
+supported).  ``ClusterState`` additionally keeps *live* ledgers — free GPUs
+per region and reserved bandwidth per link — which Eq. (5)/(6) constrain and
+Eq. (11)'s congestion factor ``alpha`` reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+
+GBPS = 1e9 / 8.0  # bytes/sec per Gbit/s
+
+#: Effective intra-region bandwidth (NVLink/NVSwitch class, bytes/s). Adjacent
+#: pipeline stages placed in the same region communicate at this rate, so
+#: intra-region hops are never the pipeline bottleneck.
+INTRA_REGION_BANDWIDTH = 600.0 * GBPS
+
+
+@dataclasses.dataclass(frozen=True)
+class Region:
+    """A cloud region: GPU pool + electricity price.
+
+    ``price_kwh`` is the regional electricity price in $/kWh (paper Table II);
+    the $/GPU-hour rate is ``price_kwh * gpu_kw`` with ``gpu_kw`` owned by the
+    simulation config (one value per accelerator generation).
+    """
+
+    name: str
+    gpu_capacity: int
+    price_kwh: float
+
+    def __post_init__(self) -> None:
+        if self.gpu_capacity < 0:
+            raise ValueError(f"negative GPU capacity for region {self.name}")
+        if self.price_kwh < 0:
+            raise ValueError(f"negative electricity price for region {self.name}")
+
+
+Link = Tuple[str, str]
+
+
+@dataclasses.dataclass
+class ClusterState:
+    """Mutable cluster: capacities, prices, bandwidth, and live reservations."""
+
+    regions: Dict[str, Region]
+    bandwidth: Dict[Link, float]  # bytes/s, directed
+    free_gpus: Dict[str, int] = dataclasses.field(default_factory=dict)
+    reserved_bw: Dict[Link, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if not self.free_gpus:
+            self.free_gpus = {r: reg.gpu_capacity for r, reg in self.regions.items()}
+        for link in self.bandwidth:
+            self.reserved_bw.setdefault(link, 0.0)
+
+    # ------------------------------------------------------------------ build
+    @classmethod
+    def build(
+        cls,
+        regions: Iterable[Region],
+        bandwidth_gbps: Mapping[Link, float],
+        *,
+        symmetric: bool = True,
+    ) -> "ClusterState":
+        regs = {r.name: r for r in regions}
+        bw: Dict[Link, float] = {}
+        for (u, v), gbps in bandwidth_gbps.items():
+            if u not in regs or v not in regs:
+                raise KeyError(f"link ({u},{v}) references unknown region")
+            bw[(u, v)] = gbps * GBPS
+            if symmetric:
+                bw.setdefault((v, u), gbps * GBPS)
+        return cls(regions=regs, bandwidth=bw)
+
+    @classmethod
+    def from_region_bandwidths(
+        cls, regions: Iterable[Region], region_gbps: Mapping[str, float]
+    ) -> "ClusterState":
+        """Paper Table II convention: ``B_{i,j} = (B_i + B_j) / 2``."""
+        regs = list(regions)
+        bw: Dict[Link, float] = {}
+        for a in regs:
+            for b in regs:
+                if a.name == b.name:
+                    continue
+                bw[(a.name, b.name)] = (
+                    (region_gbps[a.name] + region_gbps[b.name]) / 2.0
+                )
+        return cls.build(regs, bw, symmetric=False)
+
+    # ------------------------------------------------------------------- gpus
+    def total_gpus(self) -> int:
+        return sum(r.gpu_capacity for r in self.regions.values())
+
+    def total_free_gpus(self) -> int:
+        return sum(self.free_gpus.values())
+
+    def price(self, region: str) -> float:
+        return self.regions[region].price_kwh
+
+    def reserve_gpus(self, alloc: Mapping[str, int]) -> None:
+        for r, n in alloc.items():
+            if n < 0 or n > self.free_gpus.get(r, 0):
+                raise ValueError(
+                    f"cannot reserve {n} GPUs in {r} (free={self.free_gpus.get(r, 0)})"
+                )
+        for r, n in alloc.items():
+            self.free_gpus[r] -= n
+
+    def release_gpus(self, alloc: Mapping[str, int]) -> None:
+        for r, n in alloc.items():
+            self.free_gpus[r] += n
+            if self.free_gpus[r] > self.regions[r].gpu_capacity:
+                raise ValueError(f"GPU over-release in {r}")
+
+    # ---------------------------------------------------------------- network
+    def link_bandwidth(self, u: str, v: str) -> float:
+        """Installed bandwidth of the directed link (u, v); intra-region hops
+        use the constant fast fabric."""
+        if u == v:
+            return INTRA_REGION_BANDWIDTH
+        return self.bandwidth.get((u, v), 0.0)
+
+    def available_bandwidth(self, u: str, v: str) -> float:
+        if u == v:
+            return INTRA_REGION_BANDWIDTH
+        cap = self.bandwidth.get((u, v), 0.0)
+        return max(0.0, cap - self.reserved_bw.get((u, v), 0.0))
+
+    def reserve_bandwidth(self, edges: Mapping[Link, float]) -> None:
+        """Eq. (6): reservations on a link may never exceed its capacity."""
+        for (u, v), b in edges.items():
+            if u == v:
+                continue
+            if b > self.available_bandwidth(u, v) + 1e-6:
+                raise ValueError(
+                    f"bandwidth over-subscription on {u}->{v}: "
+                    f"want {b:.3e}, have {self.available_bandwidth(u, v):.3e}"
+                )
+        for (u, v), b in edges.items():
+            if u == v:
+                continue
+            self.reserved_bw[(u, v)] = self.reserved_bw.get((u, v), 0.0) + b
+
+    def release_bandwidth(self, edges: Mapping[Link, float]) -> None:
+        for (u, v), b in edges.items():
+            if u == v:
+                continue
+            self.reserved_bw[(u, v)] = max(0.0, self.reserved_bw.get((u, v), 0.0) - b)
+
+    def congestion_alpha(self) -> float:
+        """Eq. (11): ratio of reserved inter-region bandwidth to aggregate
+        installed inter-region capacity, clamped to [0, 1]."""
+        total = sum(self.bandwidth.values())
+        if total <= 0.0:
+            return 0.0
+        used = sum(self.reserved_bw.get(l, 0.0) for l in self.bandwidth)
+        return min(1.0, max(0.0, used / total))
+
+    # ------------------------------------------------------------------ misc
+    def region_names(self) -> List[str]:
+        return list(self.regions)
+
+    def scaled(
+        self,
+        *,
+        bandwidth_factor: float = 1.0,
+        capacity_factor: float = 1.0,
+    ) -> "ClusterState":
+        """Fresh cluster with scaled links / GPU pools (paper Figs. 5–6)."""
+        regs = [
+            Region(
+                name=r.name,
+                gpu_capacity=max(1, int(round(r.gpu_capacity * capacity_factor))),
+                price_kwh=r.price_kwh,
+            )
+            for r in self.regions.values()
+        ]
+        bw = {l: b * bandwidth_factor / GBPS for l, b in self.bandwidth.items()}
+        return ClusterState.build(regs, bw, symmetric=False)
+
+    def snapshot(self) -> "ClusterState":
+        return ClusterState(
+            regions=dict(self.regions),
+            bandwidth=dict(self.bandwidth),
+            free_gpus=dict(self.free_gpus),
+            reserved_bw=dict(self.reserved_bw),
+        )

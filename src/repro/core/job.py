@@ -1,0 +1,230 @@
+"""Job model: LLM training job specs and analytic execution profiles.
+
+The scheduler consumes a job as the paper does (§III-A): stage compute time
+``t_comp^j(k)`` under ``k`` pipeline stages, micro-batch count ``M_j``,
+inter-stage activation size ``A_j``, iteration count ``I_j`` and the derived
+minimum bandwidth requirement ``b_j = A_j / t_comp^j(L_j)``.
+
+Profiles are *analytic* (no hardware in the loop): FLOPs per micro-batch are
+``2 · N_params · tokens`` for the forward pass, stage time divides by the
+stage count with a linear efficiency-decay term modelling the diminishing
+returns the paper attributes to skinny stages (§III-B2), plus a fixed
+per-stage overhead.  The same model powers ``K* = argmin_k t_iter(k)``
+(Eq. 13).  The data-plane cross-check of this analytic model against XLA's
+``cost_analysis()`` lives in ``repro.models.profile``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Optional
+
+#: Effective per-GPU throughput (FLOP/s) used by the simulator's timing model.
+#: The paper's Fig. 1 arithmetic (50 ms/μbatch for Llama-70B stages) implies
+#: A100-class effective throughput; see DESIGN.md "assumptions changed".
+DEFAULT_GPU_FLOPS = 140e12
+#: Per-stage fixed overhead per micro-batch (s): launch/norm/pipeline glue.
+DEFAULT_STAGE_OVERHEAD = 4e-3
+#: Linear efficiency decay per extra stage (skinnier stages run less
+#: efficiently on the MXU/SM — the paper's "diminishing returns").
+DEFAULT_EFFICIENCY_DECAY = 0.003
+#: Slowdown at memory-starved allocations: as k approaches the memory floor,
+#: activation recomputation / offloading inflates stage time by up to this
+#: fraction (k = min_gpus => 1 + penalty; k >= comfort => 1).  At the floor
+#: the optimizer states barely fit, so full remat + host offload ~ 2.5x.
+DEFAULT_REMAT_PENALTY = 1.5
+#: Memory comfort multiple: allocations above ``comfort * min_gpus`` hold all
+#: activations resident (no remat penalty).
+DEFAULT_MEMORY_COMFORT = 3.0
+#: Hybrid PP x TP: a pipeline stage may span up to this many GPUs
+#: (tensor-parallel within the stage), so a job can use up to
+#: ``tp_max * n_layers`` GPUs — the regime where large jobs outgrow any
+#: single region and must pipeline across the WAN (the paper's premise).
+DEFAULT_TP_MAX = 2
+#: Per-GPU efficiency loss per extra tensor-parallel way (all-reduce tax).
+DEFAULT_TP_PENALTY = 0.10
+#: Accelerator board power draw (kW) for electricity-cost accounting.
+DEFAULT_GPU_KW = 0.30
+#: Usable accelerator memory (bytes) for the minimum-stage-count bound.
+DEFAULT_GPU_MEMORY = 44e9
+#: Bytes of state per parameter: bf16 weights+grads (4) + fp32 Adam m/v (8)
+#: + fp32 master copy (4).
+BYTES_PER_PARAM = 16.0
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelSpec:
+    """Minimal architecture descriptor the timing model needs (Table III)."""
+
+    name: str
+    n_params: float
+    n_layers: int
+    hidden: int
+    batch_size: int
+    seq_len: int = 2048
+    microbatch_seqs: int = 1  # sequences per micro-batch (GPipe grain)
+
+    @property
+    def microbatches(self) -> int:
+        """``M_j``: micro-batches per iteration."""
+        return max(1, self.batch_size // self.microbatch_seqs)
+
+    @property
+    def tokens_per_microbatch(self) -> int:
+        return self.microbatch_seqs * self.seq_len
+
+    @property
+    def activation_bytes(self) -> float:
+        """``A_j``: bf16 activation tensor crossing a stage boundary."""
+        return float(self.microbatch_seqs * self.seq_len * self.hidden * 2)
+
+
+@dataclasses.dataclass(frozen=True)
+class JobSpec:
+    """A training job: model + dataset scale (+ submission time)."""
+
+    job_id: int
+    model: ModelSpec
+    iterations: int
+    submit_time: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.iterations <= 0:
+            raise ValueError("iterations must be positive")
+
+
+class JobProfile:
+    """Analytic ``t_comp``/``t_iter`` model for one job (Eqs. 1, 13).
+
+    Parameters
+    ----------
+    gpu_flops: effective sustained FLOP/s of one GPU.
+    stage_overhead: fixed seconds per stage per micro-batch.
+    efficiency_decay: fractional slowdown per extra stage.
+    """
+
+    def __init__(
+        self,
+        spec: JobSpec,
+        *,
+        gpu_flops: float = DEFAULT_GPU_FLOPS,
+        stage_overhead: float = DEFAULT_STAGE_OVERHEAD,
+        efficiency_decay: float = DEFAULT_EFFICIENCY_DECAY,
+        remat_penalty: float = DEFAULT_REMAT_PENALTY,
+        memory_comfort: float = DEFAULT_MEMORY_COMFORT,
+        tp_max: int = DEFAULT_TP_MAX,
+        tp_penalty: float = DEFAULT_TP_PENALTY,
+        gpu_memory: float = DEFAULT_GPU_MEMORY,
+        gpu_kw: float = DEFAULT_GPU_KW,
+    ) -> None:
+        self.spec = spec
+        self.gpu_flops = gpu_flops
+        self.stage_overhead = stage_overhead
+        self.efficiency_decay = efficiency_decay
+        self.remat_penalty = remat_penalty
+        self.memory_comfort = memory_comfort
+        self.tp_max = tp_max
+        self.tp_penalty = tp_penalty
+        self.gpu_memory = gpu_memory
+        self.gpu_kw = gpu_kw
+
+    # ------------------------------------------------------------- primitives
+    @property
+    def fwd_flops_per_microbatch(self) -> float:
+        m = self.spec.model
+        return 2.0 * m.n_params * m.tokens_per_microbatch
+
+    def _memory_pressure(self, k: int) -> float:
+        """Remat/offload slowdown for memory-tight allocations.  Ramps from
+        ``1 + remat_penalty`` at the memory floor down to 1.0 once the job has
+        twice the floor (comfortable activation headroom)."""
+        floor = self.min_gpus
+        comfort = min(
+            max(floor + 1, int(round(self.memory_comfort * floor))),
+            self.max_stages,
+        )
+        if k >= comfort or comfort == floor:
+            return 1.0
+        frac = (comfort - k) / (comfort - floor)
+        return 1.0 + self.remat_penalty * max(0.0, min(1.0, frac))
+
+    def pipeline_depth(self, k: int) -> int:
+        """Stages used by ``k`` GPUs: capped at one layer per stage; beyond
+        that extra GPUs widen stages tensor-parallel-wise."""
+        return min(k, self.max_stages)
+
+    def t_comp(self, k: int) -> float:
+        """Per-stage forward time of one micro-batch with ``k`` GPUs total.
+
+        The trailing ``·2`` of Eq. (1) accounts for the (symmetric) backward
+        pass, so ``t_comp`` here is forward-only, as in the paper.  Three
+        efficiency terms bracket the useful regime: a linear decay for many
+        skinny stages (diminishing returns, §III-B2), a memory-pressure ramp
+        near the floor (remat/offload), and a tensor-parallel tax once stages
+        widen past one GPU.
+        """
+        if k < 1:
+            raise ValueError("GPU count must be >= 1")
+        depth = self.pipeline_depth(k)
+        decay = 1.0 + self.efficiency_decay * (depth - 1)
+        decay *= self._memory_pressure(k)
+        if k > depth:  # tensor-parallel widening
+            decay *= 1.0 + self.tp_penalty * (k / depth - 1.0)
+        return (
+            self.fwd_flops_per_microbatch / (k * self.gpu_flops)
+        ) * decay + self.stage_overhead
+
+    def t_iter_ideal(self, k: int) -> float:
+        """Eq. (1) with zero inter-stage communication (placement-agnostic)."""
+        m = self.spec.model
+        tc = self.t_comp(k)
+        return (self.pipeline_depth(k) * tc + (m.microbatches - 1) * tc) * 2.0
+
+    @property
+    def max_stages(self) -> int:
+        """At most one transformer layer per pipeline stage."""
+        return self.spec.model.n_layers
+
+    @property
+    def max_gpus(self) -> int:
+        """Widest useful allocation (tp_max-way stages on every layer)."""
+        return self.tp_max * self.max_stages
+
+    @property
+    def min_gpus(self) -> int:
+        """Memory floor: the model state must fit across the stages."""
+        need = self.spec.model.n_params * BYTES_PER_PARAM
+        return max(1, min(self.max_stages, math.ceil(need / self.gpu_memory)))
+
+    @lru_cache(maxsize=None)
+    def optimal_gpus(self, cluster_cap: Optional[int] = None) -> int:
+        """``K* = argmin_k t_iter(k)`` (Eq. 13), capped by ``max_gpus`` and,
+        optionally, total cluster size."""
+        hi = self.max_gpus if cluster_cap is None else min(
+            self.max_gpus, max(1, cluster_cap)
+        )
+        lo = self.min_gpus
+        if lo >= hi:
+            return hi
+        best_k, best_t = lo, self.t_iter_ideal(lo)
+        for k in range(lo + 1, hi + 1):
+            t = self.t_iter_ideal(k)
+            if t < best_t:
+                best_k, best_t = k, t
+        return best_k
+
+    def bandwidth_requirement(self, k: int) -> float:
+        """``b_j = A_j / t_comp^j(k)`` (bytes/s) — the minimum per-link rate at
+        which inter-stage traffic keeps up with compute (§III-A)."""
+        return self.spec.model.activation_bytes / self.t_comp(k)
+
+    # -------------------------------------------------------------- estimates
+    def single_gpu_execution(self) -> float:
+        """``E_j(1)`` for the computation-intensity metric (Eq. 9)."""
+        return self.spec.iterations * self.t_iter_ideal(1)
+
+    def power_cost_rate(self, price_kwh: float, n_gpus: int) -> float:
+        """$/second of ``n_gpus`` drawing board power at ``price_kwh``."""
+        return price_kwh * self.gpu_kw * n_gpus / 3600.0

@@ -1,0 +1,123 @@
+"""Bandwidth-Aware Multi-Region Pathfinder — paper Alg. 1.
+
+Phase 1: if any single region can host all ``K*`` GPUs, take the cheapest
+such region (JCT- and cost-optimal: zero WAN traffic).
+
+Phase 2: otherwise grow a path from every seed region, Prim-style, always
+following the highest-bandwidth outgoing link to an unvisited region with
+free GPUs, admitting an edge only while the would-be communication time
+``A / b_tmp`` stays within the compute time ``t_comp(g')`` (the inequality
+that keeps communication off the pipeline's critical path).  Each candidate
+path is priced by the Cost-Min Allocator; the path aggregating the most GPUs
+wins, ties broken by mean electricity price.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .allocator import cost_min_allocate
+from .cluster import ClusterState
+from .job import JobProfile
+from .placement import Placement, build_placement
+from .timing import average_price
+
+AllocatorFn = Callable[[ClusterState, List[str], int], Dict[str, int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class PathCandidate:
+    path: Tuple[str, ...]
+    gpus: int
+    avg_price: float
+    alloc: Dict[str, int]
+
+
+def find_placement(
+    profile: JobProfile,
+    cluster: ClusterState,
+    *,
+    k_star: Optional[int] = None,
+    allocator: AllocatorFn = cost_min_allocate,
+) -> Optional[Placement]:
+    """Alg. 1 end to end.  Returns None when even the best path cannot reach
+    the job's memory floor (``min_gpus``) — the job must wait."""
+    k = k_star if k_star is not None else profile.optimal_gpus(cluster.total_gpus())
+    k = max(k, profile.min_gpus)
+
+    # ---------------------------------------------- Phase 1: single region
+    singles = [r for r, free in cluster.free_gpus.items() if free >= k]
+    if singles:
+        best = min(singles, key=lambda r: (cluster.price(r), r))
+        return build_placement(
+            profile, cluster, [best], {best: k}, require_comm_fits_comp=True
+        )
+
+    # ------------------------------------------ Phase 2: greedy expansion
+    act = profile.spec.model.activation_bytes
+    best_cand: Optional[PathCandidate] = None
+    for seed in cluster.region_names():
+        if cluster.free_gpus[seed] < 1:
+            continue
+        path: List[str] = [seed]
+        tail = seed
+        g = min(cluster.free_gpus[seed], k)
+        b_min = float("inf")
+        while len(path) < len(cluster.regions) and g < k:
+            # Highest-bandwidth (residual) outgoing link to a fresh region.
+            cands = [
+                u
+                for u in cluster.region_names()
+                if u not in path
+                and cluster.free_gpus[u] > 0
+                and cluster.available_bandwidth(tail, u) > 0.0
+            ]
+            if not cands:
+                break
+            nxt = max(
+                cands, key=lambda u: (cluster.available_bandwidth(tail, u), u)
+            )
+            b_tmp = min(b_min, cluster.available_bandwidth(tail, nxt))
+            g_new = min(g + cluster.free_gpus[nxt], k)
+            # Alg. 1 line 13: communication must keep up with compute.
+            if act / b_tmp > profile.t_comp(g_new):
+                break
+            path.append(nxt)
+            tail = nxt
+            b_min, g = b_tmp, g_new
+
+        if g < profile.min_gpus or g < len(path):
+            continue
+        try:
+            alloc = allocator(cluster, path, g)
+        except ValueError:
+            continue
+        try:
+            placement = build_placement(
+                profile, cluster, path, alloc, require_comm_fits_comp=True
+            )
+        except ValueError:
+            continue
+        cand = PathCandidate(
+            path=tuple(path),
+            gpus=g,
+            avg_price=average_price(placement, cluster),
+            alloc=alloc,
+        )
+        if (
+            best_cand is None
+            or cand.gpus > best_cand.gpus
+            or (cand.gpus == best_cand.gpus and cand.avg_price < best_cand.avg_price)
+        ):
+            best_cand = cand
+
+    if best_cand is None:
+        return None
+    return build_placement(
+        profile,
+        cluster,
+        list(best_cand.path),
+        best_cand.alloc,
+        require_comm_fits_comp=True,
+    )

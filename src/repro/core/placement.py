@@ -1,0 +1,107 @@
+"""Placement: the scheduler's output for one job (``S_j`` in the paper).
+
+A placement fixes (1) the ordered cross-region pipeline path and (2) the GPU
+allocation ``n_{j,r}`` along it.  From these plus the cluster's link state we
+derive the per-boundary communication times ``t_comm^j(s)`` and the bandwidth
+reservations that Eq. (6) accounts for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Tuple
+
+from .cluster import ClusterState
+from .job import JobProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class Placement:
+    """Ordered pipeline path + per-region GPU counts for one job."""
+
+    path: Tuple[str, ...]           # ordered regions hosting the stages
+    alloc: Mapping[str, int]        # n_{j,r} for r in path (>=1 each)
+    comm_times: Tuple[float, ...]   # t_comm(s) for each of the g-1 boundaries
+    reserved_bw: Mapping[Tuple[str, str], float]  # per crossing edge, bytes/s
+
+    @property
+    def total_gpus(self) -> int:
+        return sum(self.alloc.values())
+
+    @property
+    def n_regions(self) -> int:
+        return len(self.path)
+
+    @property
+    def crossing_edges(self) -> List[Tuple[str, str]]:
+        return [
+            (self.path[i], self.path[i + 1])
+            for i in range(len(self.path) - 1)
+        ]
+
+    def stage_regions(self) -> List[str]:
+        """Region of each pipeline stage, in stage order (contiguous split)."""
+        out: List[str] = []
+        for r in self.path:
+            out.extend([r] * self.alloc[r])
+        return out
+
+    def describe(self) -> str:
+        return " -> ".join(f"{r}({self.alloc[r]})" for r in self.path)
+
+
+def build_placement(
+    profile: JobProfile,
+    cluster: ClusterState,
+    path: List[str],
+    alloc: Mapping[str, int],
+    *,
+    require_comm_fits_comp: bool = False,
+) -> Placement:
+    """Materialize a placement: derive comm times + bandwidth reservations.
+
+    The job reserves ``min(b_j, available)`` on every crossing edge, where
+    ``b_j = A_j / t_comp(g)`` (the paper's minimum requirement).  Its actual
+    per-boundary transfer time is ``A_j / reserved`` — equal to ``t_comp`` when
+    the full ``b_j`` is available, *longer* when a baseline squeezed the job
+    onto a thin link.  With ``require_comm_fits_comp`` (BACE-Pipe's Alg. 1
+    line 13 invariant) a thin edge raises instead.
+    """
+    g = sum(alloc[r] for r in path)
+    if g < 1:
+        raise ValueError("empty allocation")
+    for r in path:
+        if alloc[r] < 1:
+            raise ValueError(f"pipeline continuity violated: {r} has no GPU")
+    b_need = profile.bandwidth_requirement(g)
+    t_comp = profile.t_comp(g)
+    act = profile.spec.model.activation_bytes
+
+    comm_times: List[float] = []
+    reserved: Dict[Tuple[str, str], float] = {}
+    # Stage boundaries: within a region they ride the intra-region fabric;
+    # between consecutive path regions they ride the WAN link once.
+    for r in path:
+        for _ in range(alloc[r] - 1):
+            comm_times.append(act / cluster.link_bandwidth(r, r))
+    for u, v in zip(path[:-1], path[1:]):
+        avail = cluster.available_bandwidth(u, v)
+        if avail <= 0.0:
+            raise ValueError(f"no residual bandwidth on {u}->{v}")
+        share = min(b_need, avail)
+        t = act / share
+        if require_comm_fits_comp and t > t_comp * (1.0 + 1e-9):
+            raise ValueError(
+                f"edge {u}->{v} cannot sustain b_j: t_comm={t:.4f} > "
+                f"t_comp={t_comp:.4f}"
+            )
+        reserved[(u, v)] = share
+        comm_times.append(t)
+    # comm_times is per stage boundary but unordered between intra hops of
+    # different regions; Eq. (1) only needs the multiset (sum and max).
+    return Placement(
+        path=tuple(path),
+        alloc=dict(alloc),
+        comm_times=tuple(comm_times),
+        reserved_bw=reserved,
+    )

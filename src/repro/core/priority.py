@@ -1,0 +1,71 @@
+"""Dynamic job prioritization — paper §III-B1, Eqs. (9)–(12).
+
+    I_j        = E_j(1) / max_k E_k(1)                  (computation intensity)
+    D_j        = b_j / max_k b_k                        (bandwidth sensitivity)
+    alpha      = reserved WAN bw / installed WAN bw     (Eq. 11, from ledger)
+    Priority_j = (1 − alpha)·(1 − I_j) + alpha·(1 − D_j)   (Eq. 12)
+
+Both metrics are normalized over the *current pending queue* so the score
+adapts as jobs drain.  ``b_j`` is evaluated at the job's ``K*`` (the PP degree
+the scheduler would ideally grant — fixed at the scheduling boundary).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from .cluster import ClusterState
+from .job import JobProfile
+
+
+def computation_intensity(pending: Sequence[JobProfile]) -> Dict[int, float]:
+    """Eq. (9) over the pending queue."""
+    singles = {p.spec.job_id: p.single_gpu_execution() for p in pending}
+    top = max(singles.values(), default=0.0)
+    if top <= 0.0:
+        return {j: 0.0 for j in singles}
+    return {j: v / top for j, v in singles.items()}
+
+
+def bandwidth_sensitivity(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> Dict[int, float]:
+    """Eq. (10) over the pending queue, with b_j at K*(cluster size)."""
+    cap = cluster.total_gpus()
+    demands = {
+        p.spec.job_id: p.bandwidth_requirement(p.optimal_gpus(cap))
+        for p in pending
+    }
+    top = max(demands.values(), default=0.0)
+    if top <= 0.0:
+        return {j: 0.0 for j in demands}
+    return {j: v / top for j, v in demands.items()}
+
+
+def priority_scores(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> Dict[int, float]:
+    """Eq. (12) with alpha read live from the cluster's bandwidth ledger."""
+    alpha = cluster.congestion_alpha()
+    intensity = computation_intensity(pending)
+    sensitivity = bandwidth_sensitivity(pending, cluster)
+    return {
+        p.spec.job_id: (1.0 - alpha) * (1.0 - intensity[p.spec.job_id])
+        + alpha * (1.0 - sensitivity[p.spec.job_id])
+        for p in pending
+    }
+
+
+def order_by_priority(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> List[JobProfile]:
+    """Descending priority; FCFS (submit time, then id) breaks ties."""
+    scores = priority_scores(pending, cluster)
+    return sorted(
+        pending,
+        key=lambda p: (
+            -scores[p.spec.job_id],
+            p.spec.submit_time,
+            p.spec.job_id,
+        ),
+    )

@@ -1,0 +1,71 @@
+"""Pipeline timing + electricity-cost model — Eqs. (1)–(4) of the paper.
+
+    Δ_j      = max( t_comp, max_s t_comm(s) )                      (bottleneck)
+    t_iter   = ( Σ_s t_comm(s) + L·t_comp + (M−1)·Δ_j ) · 2        (Eq. 1)
+    E_j      = I_j · t_iter                                        (Eq. 2)
+    T_j      = W_j + E_j                                           (Eq. 3)
+    C_j      = E_j · Σ_r n_{j,r} · P_r                             (Eq. 4)
+
+GPipe fill-drain semantics (Fig. 3): the fill term pays every stage-boundary
+transfer once plus one compute slot per stage; steady state pays (M−1)
+bottleneck slots; the trailing ·2 is the symmetric backward pass.
+"""
+
+from __future__ import annotations
+
+from typing import Mapping
+
+from .cluster import ClusterState
+from .job import JobProfile
+from .placement import Placement
+
+
+def bottleneck_delta(profile: JobProfile, placement: Placement) -> float:
+    """Δ_j: the slowest pipeline slot (compute or communication)."""
+    t_comp = profile.t_comp(placement.total_gpus)
+    t_comm_max = max(placement.comm_times, default=0.0)
+    return max(t_comp, t_comm_max)
+
+
+def iteration_time(profile: JobProfile, placement: Placement) -> float:
+    """Eq. (1) under a concrete placement.  The fill term pays one compute
+    slot per pipeline *stage* (GPUs beyond one-per-layer widen stages rather
+    than deepening the pipeline)."""
+    g = placement.total_gpus
+    t_comp = profile.t_comp(g)
+    m = profile.spec.model.microbatches
+    fill_comm = sum(placement.comm_times)
+    delta = bottleneck_delta(profile, placement)
+    return (fill_comm + profile.pipeline_depth(g) * t_comp + (m - 1) * delta) * 2.0
+
+
+def execution_time(profile: JobProfile, placement: Placement) -> float:
+    """Eq. (2): E_j = I_j · t_iter."""
+    return profile.spec.iterations * iteration_time(profile, placement)
+
+
+def electricity_cost(
+    profile: JobProfile,
+    placement: Placement,
+    cluster: ClusterState,
+    *,
+    execution_seconds: float | None = None,
+) -> float:
+    """Eq. (4): cost accrues for the whole active duration (bubbles included),
+    never while queued."""
+    e = (
+        execution_time(profile, placement)
+        if execution_seconds is None
+        else execution_seconds
+    )
+    dollars_per_sec = sum(
+        profile.power_cost_rate(cluster.price(r), n)
+        for r, n in placement.alloc.items()
+    )
+    return e * dollars_per_sec
+
+
+def average_price(placement: Placement, cluster: ClusterState) -> float:
+    """Per-GPU mean electricity price of a placement (Alg. 1 line 19)."""
+    g = placement.total_gpus
+    return sum(cluster.price(r) * n for r, n in placement.alloc.items()) / g

@@ -1,0 +1,165 @@
+"""Paper workloads: Table II regions, Table III jobs, Fig. 1 motivation setup.
+
+Iteration counts derive from the paper's dataset assignment (Alpaca-52k,
+WikiText-103, OpenWebText) as one pass over the dataset at the job's global
+batch size, capped by ``max_iterations`` so simulated JCTs land in the paper's
+"hours" scale (the paper reports normalized metrics only; relative claims are
+what we validate).
+"""
+
+from __future__ import annotations
+
+import math
+import random
+from typing import Dict, List, Optional, Sequence
+
+from .cluster import ClusterState, Region
+from .job import JobProfile, JobSpec, ModelSpec
+
+# ------------------------------------------------------------------- Table II
+TABLE_II_REGIONS = [
+    Region("eu-west", 64, 0.251),
+    Region("us-east-2", 64, 0.156),
+    Region("eu-central", 16, 0.288),
+    Region("ea-east", 128, 0.191),
+    Region("sea-south", 32, 0.222),
+    Region("oc-east", 32, 0.295),
+]
+
+TABLE_II_REGION_GBPS = {
+    "eu-west": 50.0,
+    "us-east-2": 90.0,
+    "eu-central": 30.0,
+    "ea-east": 70.0,
+    "sea-south": 50.0,
+    "oc-east": 70.0,
+}
+
+
+def paper_cluster(
+    *, bandwidth_factor: float = 1.0, capacity_factor: float = 1.0
+) -> ClusterState:
+    """Table II cluster with ``B_{i,j} = (B_i + B_j)/2`` links."""
+    cluster = ClusterState.from_region_bandwidths(
+        TABLE_II_REGIONS, TABLE_II_REGION_GBPS
+    )
+    if bandwidth_factor != 1.0 or capacity_factor != 1.0:
+        cluster = cluster.scaled(
+            bandwidth_factor=bandwidth_factor, capacity_factor=capacity_factor
+        )
+    return cluster
+
+
+# ------------------------------------------------------------------ Table III
+#: (name, params, layers, hidden, global batch size)
+TABLE_III_MODELS = [
+    ("flm-101b", 101e9, 80, 10240, 128),
+    ("solar-open-100b", 100e9, 48, 4096, 128),
+    ("llama-3.1-70b", 70e9, 80, 8192, 128),
+    ("falcon-40b", 40e9, 60, 8192, 256),
+    ("qwen2.5-32b", 32e9, 64, 5120, 256),
+    ("gemma-3-27b", 27e9, 62, 5376, 256),
+    ("ministral-3-14b", 14e9, 40, 5120, 512),
+    ("qwen2.5-14b", 14e9, 48, 5120, 512),
+]
+
+#: dataset -> (samples, simulated epoch fraction).  The fraction is a pure
+#: simulation knob: one full OpenWebText epoch on a 101B model is weeks of
+#: simulated time, which only rescales every policy identically; trimming the
+#: larger corpora keeps JCTs in the paper's "hours" regime while preserving
+#: the heavy-tailed job-duration mix that drives the HoL analysis.
+DATASETS = {
+    "alpaca-52k": (52_002, 1.0),
+    "wikitext-103": (1_810_000, 0.20),
+    "openwebtext": (8_010_000, 0.06),
+}
+
+
+def paper_jobs(
+    *,
+    n_jobs: int = 8,
+    seed: int = 0,
+    submit_times: Optional[Sequence[float]] = None,
+) -> List[JobSpec]:
+    """Table III jobs with the paper's random dataset assignment.  For
+    ``n_jobs > 8`` (Fig. 7 workload-intensity study) the model list cycles."""
+    rng = random.Random(seed)
+    jobs: List[JobSpec] = []
+    datasets = list(DATASETS.items())
+    for i in range(n_jobs):
+        name, params, layers, hidden, batch = TABLE_III_MODELS[
+            i % len(TABLE_III_MODELS)
+        ]
+        ds_name, (ds_samples, ds_frac) = datasets[rng.randrange(len(datasets))]
+        iters = max(1, math.ceil(ds_samples * ds_frac / batch))
+        spec = ModelSpec(
+            name=f"{name}#{i}" if i >= len(TABLE_III_MODELS) else name,
+            n_params=params,
+            n_layers=layers,
+            hidden=hidden,
+            batch_size=batch,
+        )
+        jobs.append(
+            JobSpec(
+                job_id=i,
+                model=spec,
+                iterations=iters,
+                submit_time=0.0 if submit_times is None else submit_times[i],
+            )
+        )
+    return jobs
+
+
+def paper_profiles(
+    jobs: Optional[Sequence[JobSpec]] = None, **profile_kwargs
+) -> List[JobProfile]:
+    if jobs is None:
+        jobs = paper_jobs()
+    return [JobProfile(j, **profile_kwargs) for j in jobs]
+
+
+# ---------------------------------------------------------------- Fig. 1 demo
+def motivation_cluster() -> ClusterState:
+    """Fig. 1: four regions A–D; A–C share a fat 1000 Mbps link, B–D a thin
+    200 Mbps link, everything else middling."""
+    regions = [
+        Region("A", 4, 0.230),
+        Region("B", 3, 0.222),
+        Region("C", 2, 0.191),
+        Region("D", 2, 0.291),
+    ]
+    gbps = {
+        ("A", "C"): 1.0,     # 1000 Mbps (the fat pair in Fig. 1)
+        ("B", "D"): 0.2,     # 200 Mbps (the thin pair)
+        ("A", "B"): 0.1,
+        ("A", "D"): 0.05,
+        ("B", "C"): 0.1,
+        ("C", "D"): 0.05,
+    }
+    return ClusterState.build(regions, gbps, symmetric=True)
+
+
+def motivation_jobs() -> List[JobSpec]:
+    """Job P (Qwen2.5-14B) before Job Q (Llama-3.1-70B), Alpaca-52k, scaled to
+    the Fig. 1 toy cluster (single-digit GPUs => trimmed iteration counts)."""
+    p = ModelSpec(
+        "qwen2.5-14b", 14e9, 48, 5120, batch_size=16, seq_len=2048
+    )
+    q = ModelSpec(
+        "llama-3.1-70b", 70e9, 80, 8192, batch_size=16, seq_len=2048
+    )
+    return [
+        JobSpec(job_id=0, model=p, iterations=6),
+        JobSpec(job_id=1, model=q, iterations=6),
+    ]
+
+
+def motivation_profiles(**kwargs) -> List[JobProfile]:
+    # The toy cluster has 2–4 GPUs per region: relax the memory floor so the
+    # 14B/70B stand-ins fit (the paper's figure allocates 4–6 stages total).
+    # Fig. 1's own arithmetic (50 ms/μbatch, 30 MB activations, 0.2–1 Gbps
+    # links) implies true-A6000 effective throughput, unlike the Table II
+    # regime — so the toy uses ~20 TF/GPU (see DESIGN.md).
+    kwargs.setdefault("gpu_memory", 400e9)
+    kwargs.setdefault("gpu_flops", 20e12)
+    return [JobProfile(j, **kwargs) for j in motivation_jobs()]

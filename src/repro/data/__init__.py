@@ -1,0 +1,1 @@
+from .pipeline import ByteDataset, SyntheticLM, make_batch_iterator  # noqa: F401

@@ -1,0 +1,60 @@
+"""Cross-pod gradient compression (the WAN-analogue link is the pod axis).
+
+``compressed_pmean``: int8 quantization with per-slice fp32 scales around a
+reduce-scatter / all-gather pair over the pod axis — 2 pods exchange int8
+shards instead of bf16 full tensors (~4x fewer WAN bytes).  Runs inside a
+shard_map whose manual axes include ``axis``.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def _quantize(x: jax.Array):
+    scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_pmean_leaf(g: jax.Array, axis: str, size: int) -> jax.Array:
+    """Mean-reduce one gradient leaf across ``axis`` with int8 transport."""
+    if size <= 1:
+        return g
+    flat = g.reshape(-1).astype(jnp.float32)
+    pad = (-flat.shape[0]) % size
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    shards = flat.reshape(size, -1)
+
+    # reduce-scatter with int8 payload: quantize my contribution per shard,
+    # all_to_all so shard i lands on pod i, dequantize + sum locally.
+    q, scale = _quantize(shards)                       # [size, n]
+    scales = jnp.broadcast_to(scale, (size, 1))
+    q_recv = jax.lax.all_to_all(q, axis, split_axis=0, concat_axis=0, tiled=True)
+    s_recv = jax.lax.all_to_all(
+        scales, axis, split_axis=0, concat_axis=0, tiled=True
+    )
+    local_sum = jnp.sum(
+        _dequantize(q_recv.reshape(size, -1), s_recv), axis=0
+    ) / size                                            # [n] my shard's mean
+
+    # all-gather the reduced shards back, int8 again.
+    q2, scale2 = _quantize(local_sum[None, :])
+    q_all = jax.lax.all_gather(q2[0], axis, tiled=False)       # [size, n]
+    s_all = jax.lax.all_gather(scale2[None], axis, tiled=False)
+    out = _dequantize(q_all, s_all.reshape(size, 1)).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(g.shape).astype(g.dtype)
+
+
+def compressed_pmean(grads: Any, axis: str, size: int) -> Any:
+    return jax.tree.map(lambda g: compressed_pmean_leaf(g, axis, size), grads)

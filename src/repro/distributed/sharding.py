@@ -1,0 +1,241 @@
+"""Named-axis sharding rules per architecture and mesh.
+
+Axes: ``data`` (batch DP + ZeRO-1 shards), ``model`` (TP / EP / PP stages),
+``pod`` (multi-pod: geo pipeline stage or compressed-DP replica).
+
+``param_specs(cfg, mesh)`` returns a PartitionSpec pytree matching the model
+parameter tree; ``make_shard_act`` returns the activation-constraint hook the
+models call.  PP-strategy stage stacking is handled by ``repro.pipeline``;
+here PP-arch params outside the pipeline (embed, ln_f) are replicated.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape.get(name, 1)
+
+
+def heads_shardable(cfg: ArchConfig, mesh: Mesh) -> bool:
+    m = axis_size(mesh, "model")
+    return (
+        cfg.n_heads > 0
+        and cfg.n_heads % m == 0
+        and cfg.n_kv_heads % m == 0
+    )
+
+
+def ssm_heads_shardable(cfg: ArchConfig, mesh: Mesh) -> bool:
+    m = axis_size(mesh, "model")
+    return cfg.ssm_state > 0 and cfg.ssm_heads % m == 0 and cfg.d_inner % m == 0
+
+
+def vocab_shardable(cfg: ArchConfig, mesh: Mesh) -> bool:
+    return cfg.padded_vocab % axis_size(mesh, "model") == 0
+
+
+# ------------------------------------------------------------- param rules
+def _attn_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, P]:
+    m = "model" if tp and heads_shardable(cfg, mesh) else None
+    s: Dict[str, P] = {
+        "wq": P(None, m),
+        "wk": P(None, m),
+        "wv": P(None, m),
+        "wo": P(m, None),
+    }
+    if cfg.qkv_bias:
+        s.update({"bq": P(m), "bk": P(m), "bv": P(m)})
+    return s
+
+
+def _mlp_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, P]:
+    m = "model" if tp and cfg.d_ff % max(1, axis_size(mesh, "model")) == 0 else None
+    s = {"w_up": P(None, m), "w_down": P(m, None)}
+    if cfg.act != "gelu_plain":
+        s["w_gate"] = P(None, m)
+    return s
+
+
+def _moe_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, Any]:
+    e = "model" if tp and cfg.n_experts % max(1, axis_size(mesh, "model")) == 0 else None
+    s: Dict[str, Any] = {
+        "router": P(None, None),
+        "w_gate": P(e, None, None),
+        "w_up": P(e, None, None),
+        "w_down": P(e, None, None),
+    }
+    if cfg.n_shared_experts:
+        s["shared"] = _mlp_specs(cfg, mesh, tp)
+    return s
+
+
+def _ssm_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, Any]:
+    ok = tp and ssm_heads_shardable(cfg, mesh)
+    m = "model" if ok else None
+    return {
+        "ln": {"scale": P(None)},
+        "w_z": P(None, m),
+        "w_x": P(None, m),
+        "w_b": P(None, None),
+        "w_c": P(None, None),
+        "w_dt": P(None, m),
+        "conv_x": P(None, m),
+        "conv_b": P(None, None),
+        "conv_c": P(None, None),
+        "conv_x_bias": P(m),
+        "conv_b_bias": P(None),
+        "conv_c_bias": P(None),
+        "a_log": P(m),
+        "d_skip": P(m),
+        "dt_bias": P(m),
+        "norm": {"scale": P(m)},
+        "out_proj": P(m, None),
+    }
+
+
+def _dense_block_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, Any]:
+    return {
+        "ln_attn": {"scale": P(None)},
+        "attn": _attn_specs(cfg, mesh, tp),
+        "ln_mlp": {"scale": P(None)},
+        "mlp": _mlp_specs(cfg, mesh, tp),
+    }
+
+
+def _embed_specs(cfg: ArchConfig, mesh: Mesh, tp: bool) -> Dict[str, P]:
+    # vocab-parallel embedding for ALL strategies (PP included): the loss
+    # head computes under GSPMD auto, so sharded-vocab logits avoid the
+    # logits-sized loss all-reduce (measured 4.4 TB/step on qwen train_4k).
+    v = "model" if vocab_shardable(cfg, mesh) else None
+    s = {"table": P(v, None)}
+    if not cfg.tie_embeddings:
+        s["head"] = P(None, v)
+    return s
+
+
+def _prepend(spec_tree, n: int):
+    """Stacked (scanned) leaves get ``n`` leading None dims."""
+    def fix(s: P) -> P:
+        return P(*([None] * n + list(s)))
+
+    return jax.tree.map(fix, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ArchConfig, mesh: Mesh) -> Any:
+    """PartitionSpec tree matching build_model(cfg).init(...)'s structure.
+
+    For ``model_axis='pp'`` archs the per-block params are replicated here —
+    the pipeline runtime re-shards them over stages (see pipeline/gpipe.py);
+    this function still drives embed / final-norm placement.
+    """
+    tp = cfg.model_axis in ("tp", "ep")
+    if cfg.family == "encdec":
+        return {
+            "embed": _embed_specs(cfg, mesh, tp),
+            "enc_blocks": _prepend(_dense_block_specs(cfg, mesh, tp), 1),
+            "dec_blocks": _prepend(
+                {
+                    "ln_self": {"scale": P(None)},
+                    "self": _attn_specs(cfg, mesh, tp),
+                    "ln_cross": {"scale": P(None)},
+                    "cross": _attn_specs(cfg, mesh, tp),
+                    "ln_mlp": {"scale": P(None)},
+                    "mlp": _mlp_specs(cfg, mesh, tp),
+                },
+                1,
+            ),
+            "ln_enc": {"scale": P(None)},
+            "ln_f": {"scale": P(None)},
+        }
+
+    out: Dict[str, Any] = {
+        "embed": _embed_specs(cfg, mesh, tp),
+        "ln_f": {"scale": P(None)},
+    }
+    if cfg.family in ("dense", "vlm"):
+        blk = _dense_block_specs(cfg, mesh, tp)
+        if cfg.alternate_local_global:
+            blk = {"local": blk, "global": _dense_block_specs(cfg, mesh, tp)}
+        out["blocks"] = _prepend(blk, 1)
+    elif cfg.family == "moe":
+        out["blocks"] = _prepend(
+            {
+                "ln_attn": {"scale": P(None)},
+                "attn": _attn_specs(cfg, mesh, tp),
+                "ln_mlp": {"scale": P(None)},
+                "moe": _moe_specs(cfg, mesh, tp),
+            },
+            1,
+        )
+    elif cfg.family == "ssm":
+        out["blocks"] = _prepend(_ssm_specs(cfg, mesh, tp), 1)
+    elif cfg.family == "hybrid":
+        out["blocks"] = _prepend(_ssm_specs(cfg, mesh, tp), 2)
+        out["shared_attn"] = _dense_block_specs(cfg, mesh, tp)
+    else:
+        raise ValueError(cfg.family)
+    return out
+
+
+# -------------------------------------------------------- activation rules
+def make_shard_act(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    *,
+    batch: int,
+    enable: bool = True,
+) -> Optional[Callable[[jax.Array, str], jax.Array]]:
+    """Activation-constraint hook.
+
+    Attention activations: heads sharded over `model` when divisible;
+    otherwise batch is co-sharded over (data, model) when it divides, else
+    the sequence dim is sharded over `model` (KV gets gathered by GSPMD).
+    """
+    if not enable or mesh is None:
+        return None
+    d = axis_size(mesh, "data")
+    m = axis_size(mesh, "model")
+    heads_ok = heads_shardable(cfg, mesh)
+    ssm_ok = ssm_heads_shardable(cfg, mesh)
+    batch_ok = batch % (d * m) == 0
+
+    ff_ok = cfg.d_ff > 0 and cfg.d_ff % m == 0
+
+    def spec_for(name: str, ndim: int) -> Optional[P]:
+        if name == "residual":
+            return P("data", *([None] * (ndim - 1)))
+        if name == "mlp_hidden":
+            return P("data", None, "model") if ff_ok else None
+        if name in ("attn_q", "attn_kv"):
+            if heads_ok:
+                return P("data", None, "model", None)
+            if batch_ok:
+                return P(("data", "model"), None, None, None)
+            return P("data", "model", None, None)  # seq-sharded
+        if name == "ssm_x":
+            if ssm_ok:
+                return P("data", None, "model", None)
+            return P("data", *([None] * (ndim - 1)))
+        if name == "logits":
+            v = "model" if vocab_shardable(cfg, mesh) else None
+            return P("data", None, v)
+        return None
+
+    def shard(x: jax.Array, name: str) -> jax.Array:
+        s = spec_for(name, x.ndim)
+        if s is None:
+            return x
+        # bare PartitionSpec: resolves against the context mesh, so the same
+        # hook works inside pod-manual shard_map regions (abstract mesh with
+        # Manual pod axis) and in plain auto regions alike.
+        return jax.lax.with_sharding_constraint(x, s)
+
+    return shard

@@ -1,0 +1,2 @@
+from .monitor import FailureInjector, HeartbeatMonitor, StragglerDetector  # noqa: F401
+from .loop import resilient_train_loop  # noqa: F401

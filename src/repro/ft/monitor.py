@@ -1,0 +1,72 @@
+"""Fault-tolerance primitives: heartbeats, failure injection, stragglers.
+
+On real hardware these wrap the runtime's device-health API; in this
+container they are driven by the simulator/injector so the *control flow*
+(detect -> checkpoint-restore -> reschedule) is fully exercised in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+
+@dataclasses.dataclass
+class HeartbeatMonitor:
+    """Tracks per-worker heartbeats; a worker is dead after ``timeout_s``."""
+
+    timeout_s: float = 30.0
+    _last: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    def beat(self, worker: str, now: Optional[float] = None) -> None:
+        self._last[worker] = time.monotonic() if now is None else now
+
+    def dead_workers(self, now: Optional[float] = None) -> List[str]:
+        t = time.monotonic() if now is None else now
+        return [w for w, last in self._last.items() if t - last > self.timeout_s]
+
+    def healthy(self, now: Optional[float] = None) -> bool:
+        return not self.dead_workers(now)
+
+
+class FailureInjector:
+    """Deterministic failure schedule for tests/examples: fail at given
+    steps; each failure 'kills' a named region/pod."""
+
+    def __init__(self, fail_at: Dict[int, str]):
+        self.fail_at = dict(fail_at)
+        self.log: List[str] = []
+
+    def check(self, step: int) -> Optional[str]:
+        victim = self.fail_at.pop(step, None)
+        if victim is not None:
+            self.log.append(f"step {step}: injected failure of {victim}")
+        return victim
+
+
+class StragglerDetector:
+    """EMA-based step-time monitor.  A step slower than ``factor`` x EMA
+    flags a straggler; the runtime's mitigation (pipeline stage re-balance,
+    or data re-shard) is invoked via callback."""
+
+    def __init__(self, factor: float = 2.5, alpha: float = 0.2,
+                 on_straggler: Optional[Callable[[int, float, float], None]] = None):
+        self.factor, self.alpha = factor, alpha
+        self.ema: Optional[float] = None
+        self.events: List[int] = []
+        self.on_straggler = on_straggler
+
+    def observe(self, step: int, dt: float) -> bool:
+        if self.ema is None:
+            self.ema = dt
+            return False
+        is_straggler = dt > self.factor * self.ema
+        if is_straggler:
+            self.events.append(step)
+            if self.on_straggler:
+                self.on_straggler(step, dt, self.ema)
+        # EMA excludes straggler spikes so one hiccup doesn't mask the next
+        if not is_straggler:
+            self.ema = (1 - self.alpha) * self.ema + self.alpha * dt
+        return is_straggler

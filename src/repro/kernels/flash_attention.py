@@ -1,0 +1,163 @@
+"""Fused flash attention for TPU (Pallas).
+
+TPU-native tiling: the grid's innermost axis walks KV blocks *sequentially*
+(TPU grids execute in order), carrying the online-softmax statistics and the
+output accumulator in VMEM scratch.  Block shapes are MXU-aligned
+(block_q x head_dim and block_k x head_dim tiles, multiples of 128 on the
+lane dimension).  Supports GQA (kv-head broadcast via index_map), causal
+masking, sliding windows (gemma2 local layers), and logit soft-capping.
+
+Layout contract (see ops.py): q [B, Hq, T, D], k/v [B, Hkv, S, D].
+Validated on CPU with interpret=True against kernels.ref.attention_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref,      # VMEM tiles
+    o_ref,                    # output tile
+    acc_ref, m_ref, l_ref,    # VMEM scratch: [bq, D], [bq, 1], [bq, 1]
+    *,
+    block_q: int,
+    block_k: int,
+    seq_k: int,
+    causal: bool,
+    window: Optional[int],
+    softcap: Optional[float],
+    scale: float,
+):
+    qi = pl.program_id(2)      # query-block index
+    ki = pl.program_id(3)      # kv-block index (sequential innermost)
+    n_k = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)           # [bq, D]
+    k = k_ref[0, 0].astype(jnp.float32)           # [bk, D]
+    v = v_ref[0, 0].astype(jnp.float32)           # [bk, D]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                      # [bq, bk]
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_k
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [bq, 1]
+    m_cur = jnp.max(s, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # [bq, bk]
+    alpha = jnp.exp(m_prev - m_new)                # [bq, 1]
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_k - 1)
+    def _finish():
+        o_ref[0, 0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "interpret"
+    ),
+)
+def flash_attention_bhtd(
+    q: jax.Array,  # [B, Hq, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+) -> jax.Array:
+    b, hq, tq, d = q.shape
+    _, hkv, tk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    rep = hq // hkv
+    block_q = min(block_q, tq)
+    block_k = min(block_k, tk)
+    pad_q = (-tq) % block_q
+    pad_k = (-tk) % block_k
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    tq_p, tk_p = tq + pad_q, tk + pad_k
+
+    grid = (b, hq, tq_p // block_q, tk_p // block_k)
+    kernel = functools.partial(
+        _flash_kernel,
+        block_q=block_q,
+        block_k=block_k,
+        seq_k=tk,
+        causal=causal,
+        window=window,
+        softcap=softcap,
+        scale=d**-0.5,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(
+                (1, 1, block_q, d), lambda bb, h, qq, kk: (bb, h, qq, 0)
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda bb, h, qq, kk, rep=rep: (bb, h // rep, kk, 0),
+            ),
+            pl.BlockSpec(
+                (1, 1, block_k, d),
+                lambda bb, h, qq, kk, rep=rep: (bb, h // rep, kk, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, 1, block_q, d), lambda bb, h, qq, kk: (bb, h, qq, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, hq, tq_p, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, d), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :tq, :]

@@ -1,0 +1,103 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On TPU the fused kernels run natively; on CPU (this container) they execute
+under ``interpret=True``.  Training gradients flow through a ``custom_vjp``
+whose backward pass recomputes with the pure-jnp oracle — identical numerics,
+and the forward hot path still uses the fused kernel.  (A fused backward
+kernel is a recorded follow-up in EXPERIMENTS.md §Perf.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_bhtd
+from .ssd_scan import ssd_scan_pallas
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+# ------------------------------------------------------------ flash attention
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _flash_core(q, k, v, causal, window, softcap):
+    return flash_attention_bhtd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        interpret=_on_cpu(),
+    )
+
+
+def _flash_fwd(q, k, v, causal, window, softcap):
+    return _flash_core(q, k, v, causal, window, softcap), (q, k, v)
+
+
+def _flash_bwd(causal, window, softcap, res, g):
+    q, k, v = res
+
+    def f(q, k, v):
+        return ref.attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+
+    _, vjp = jax.vjp(f, q, k, v)
+    return vjp(g)
+
+
+_flash_core.defvjp(_flash_fwd, _flash_bwd)
+
+
+def flash_attention(
+    q: jax.Array,  # [B, T, Hq, D]  (model layout)
+    k: jax.Array,  # [B, S, Hkv, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    out = _flash_core(
+        q.swapaxes(1, 2), k.swapaxes(1, 2), v.swapaxes(1, 2),
+        causal, window, softcap,
+    )
+    return out.swapaxes(1, 2)
+
+
+# ------------------------------------------------------------------- SSD scan
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _ssd_core(x, dt, a, b_, c_, chunk):
+    return ssd_scan_pallas(x, dt, a, b_, c_, chunk=chunk, interpret=_on_cpu())
+
+
+def _ssd_fwd(x, dt, a, b_, c_, chunk):
+    return _ssd_core(x, dt, a, b_, c_, chunk), (x, dt, a, b_, c_)
+
+
+def _ssd_bwd(chunk, res, g):
+    x, dt, a, b_, c_ = res
+
+    def f(x, dt, a, b_, c_):
+        return ref.ssd_ref(x, dt, a, b_, c_, chunk=chunk)
+
+    _, vjp = jax.vjp(f, x, dt, a, b_, c_)
+    return vjp(g)
+
+
+_ssd_core.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+def ssd_scan(
+    x: jax.Array,
+    dt: jax.Array,
+    a: jax.Array,
+    b_: jax.Array,
+    c_: jax.Array,
+    *,
+    chunk: int = 256,
+) -> Tuple[jax.Array, jax.Array]:
+    return _ssd_core(x, dt, a, b_, c_, chunk)

@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Kernel tests sweep shapes/dtypes and assert_allclose against these.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_ref as _attention_btHD
+from repro.models.ssm import ssd_chunked_ref as _ssd_chunked
+
+
+def attention_ref(
+    q: jax.Array,  # [B, Hq, Tq, D]
+    k: jax.Array,  # [B, Hkv, Tk, D]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+) -> jax.Array:
+    """Oracle in the kernel's [B, H, T, D] layout."""
+    out = _attention_btHD(
+        q.swapaxes(1, 2),
+        k.swapaxes(1, 2),
+        v.swapaxes(1, 2),
+        causal=causal,
+        window=window,
+        softcap=softcap,
+    )
+    return out.swapaxes(1, 2)
+
+
+def ssd_ref(
+    x: jax.Array,   # [B, T, H, P]
+    dt: jax.Array,  # [B, T, H]
+    a: jax.Array,   # [H]
+    b_: jax.Array,  # [B, T, N]
+    c_: jax.Array,  # [B, T, N]
+    *,
+    chunk: int,
+) -> Tuple[jax.Array, jax.Array]:
+    return _ssd_chunked(x, dt, a, b_, c_, chunk=chunk)

@@ -1,0 +1,132 @@
+"""Mamba2 SSD chunked scan for TPU (Pallas).
+
+The grid walks (batch, head-block, chunk) with the chunk axis innermost and
+sequential; the inter-chunk recurrent state lives in VMEM scratch and is
+carried across chunk steps — exactly the SSD decomposition: MXU-friendly
+within-chunk matmuls + an O(T/Q) recurrence.  All matmuls are expressed as
+2-operand ``dot_general`` so Mosaic can map them onto the MXU.
+
+Layout contract (see ops.py): x [B, T, H, P], dt [B, T, H], a [H],
+b/c [B, T, N].  Validated with interpret=True against kernels.ref.ssd_ref.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_HEAD_BLOCK = 8
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref,   # inputs
+    y_ref, s_out_ref,                     # outputs
+    state_ref,                            # scratch: [bh, P, N] carried state
+    *,
+    chunk: int,
+):
+    ci = pl.program_id(2)
+    n_chunks = pl.num_programs(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0].astype(jnp.float32)        # [Q, bh, P]
+    dt = dt_ref[0].astype(jnp.float32)      # [Q, bh]
+    a = a_ref[...].astype(jnp.float32)      # [bh]
+    bmat = b_ref[0].astype(jnp.float32)     # [Q, N]
+    cmat = c_ref[0].astype(jnp.float32)     # [Q, N]
+
+    da = dt * a[None, :]                    # [Q, bh]
+    da_cs = jnp.cumsum(da, axis=0)          # [Q, bh]
+
+    # ---- within-chunk (quadratic) part
+    seg = da_cs.T[:, :, None] - da_cs.T[:, None, :]          # [bh, Q, K]
+    q_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    lmat = jnp.where(q_idx >= k_idx, jnp.exp(seg), 0.0)      # [bh, Q, K]
+    cb = jax.lax.dot_general(                                # [Q, K]
+        cmat, bmat, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    w = cb[None, :, :] * lmat                                # [bh, Q, K]
+    xdt = x * dt[:, :, None]                                 # [Q, bh, P]
+    xdt_h = jnp.swapaxes(xdt, 0, 1)                          # [bh, K, P]
+    y_diag = jax.lax.dot_general(                            # [bh, Q, P]
+        w, xdt_h, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32,
+    )
+
+    # ---- contribution from the carried state
+    in_decay = jnp.exp(da_cs)                                # [Q, bh]
+    y_off = jax.lax.dot_general(                             # [Q, bh, P]
+        cmat, state_ref[...], (((1,), (2,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                        # [Q, bh, P]
+    y = jnp.swapaxes(y_diag, 0, 1) + y_off * in_decay[:, :, None]
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    # ---- state update for the next chunk
+    decay_last = jnp.exp(da_cs[-1:, :] - da_cs)              # [Q, bh]
+    xdt_w = xdt * decay_last[:, :, None]                     # [K, bh, P]
+    states_new = jax.lax.dot_general(                        # [bh, P, N]
+        jnp.swapaxes(xdt_w, 0, 1), bmat, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    chunk_decay = jnp.exp(jnp.sum(da, axis=0))               # [bh]
+    state_ref[...] = state_ref[...] * chunk_decay[:, None, None] + states_new
+
+    @pl.when(ci == n_chunks - 1)
+    def _emit_state():
+        s_out_ref[0] = state_ref[...].astype(s_out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "head_block", "interpret")
+)
+def ssd_scan_pallas(
+    x: jax.Array,   # [B, T, H, P]
+    dt: jax.Array,  # [B, T, H]
+    a: jax.Array,   # [H]
+    b_: jax.Array,  # [B, T, N]
+    c_: jax.Array,  # [B, T, N]
+    *,
+    chunk: int = 256,
+    head_block: int = DEFAULT_HEAD_BLOCK,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, t, h, p = x.shape
+    n = b_.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    bh = min(head_block, h)
+    assert h % bh == 0, (h, bh)
+    grid = (bsz, h // bh, t // chunk)
+
+    y, s_final = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda b, hb, c: (b, c, hb, 0)),
+            pl.BlockSpec((1, chunk, bh), lambda b, hb, c: (b, c, hb)),
+            pl.BlockSpec((bh,), lambda b, hb, c: (hb,)),
+            pl.BlockSpec((1, chunk, n), lambda b, hb, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, n), lambda b, hb, c: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, bh, p), lambda b, hb, c: (b, c, hb, 0)),
+            pl.BlockSpec((1, bh, p, n), lambda b, hb, c: (b, hb, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, t, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bh, p, n), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, a, b_, c_)
+    return y, s_final

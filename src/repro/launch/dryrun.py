@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this driver builds the real train/prefill/serve step with its
+production shardings, lowers it against ShapeDtypeStruct stand-ins (no
+allocation), compiles it AOT, and records:
+  * memory_analysis()  — per-device bytes (proves the placement fits),
+  * cost_analysis()    — per-device FLOPs / bytes for the roofline,
+  * collective bytes   — parsed from the optimized HLO per collective kind.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-32b \
+      --shape train_4k [--multi-pod] [--debug-mesh] [--out artifacts/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES_BY_NAME, get_config, runnable_cells, ARCH_IDS
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.launch import steps as S
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.analysis import loop_aware_cost
+from repro.models.model import build_model
+from repro.optim import adamw_init
+
+
+# ----------------------------------------------------------- HLO collectives
+_COLL_RE = re.compile(
+    r"=\s+(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Sum result-shape bytes of every collective op in optimized HLO."""
+    out: Dict[str, float] = {}
+    seen_done = set()
+    for m in _COLL_RE.finditer(hlo_text):
+        shape_str, kind = m.group(1), m.group(2)
+        total = 0
+        for dm in _SHAPE_RE.finditer(shape_str):
+            dt, dims = dm.group(1), dm.group(2)
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            total += n * _DTYPE_BYTES[dt]
+        out[kind] = out.get(kind, 0.0) + float(total)
+    return out
+
+
+# ------------------------------------------------------------- cell builders
+def lower_cell(
+    cfg: ArchConfig,
+    cell: ShapeCell,
+    mesh,
+    *,
+    multi_pod: bool,
+    cache_dtype=jnp.bfloat16,
+):
+    """Returns (lowered, meta) for one (arch, shape, mesh) cell."""
+    b, t = cell.global_batch, cell.seq_len
+    batch_abs, batch_specs = S.make_batch_specs(cfg, mesh, cell, multi_pod=multi_pod)
+    batch_ns = S.ns(mesh, batch_specs)
+    pipe_axes = S.pp_layout(cfg, mesh, multi_pod)[1] if cfg.model_axis == "pp" else ()
+    bspec = S.batch_axis_spec(mesh, multi_pod, b, pipe_axes=pipe_axes)
+    meta: Dict[str, Any] = {}
+
+    if cfg.model_axis == "pp":
+        lay_probe = S.pp_layout(cfg, mesh, multi_pod)
+        meta["pipeline"] = {"stages": lay_probe[0], "axes": lay_probe[1]}
+        params_abs = S.pp_abstract_params(cfg, lay_probe[0])
+        pspecs = S.pp_param_specs(cfg, mesh, lay_probe[1])
+        if cell.kind == "train":
+            step, _, lay = S.build_pp_train(
+                cfg, mesh, multi_pod=multi_pod, batch=b, seq=t
+            )
+            state_abs = S.abstract_state(params_abs)
+            sspecs = S.state_specs(cfg, mesh, params_abs, pspecs)
+            fn = jax.jit(
+                step,
+                in_shardings=(S.ns(mesh, sspecs), batch_ns),
+                out_shardings=(S.ns(mesh, sspecs), None),
+                donate_argnums=(0,),
+            )
+            return fn.lower(state_abs, batch_abs), meta
+        if cell.kind == "prefill":
+            step, _, lay = S.build_pp_prefill(
+                cfg, mesh, multi_pod=multi_pod, batch=b, seq=t
+            )
+            fn = jax.jit(step, in_shardings=(S.ns(mesh, pspecs), batch_ns))
+            return fn.lower(params_abs, batch_abs), meta
+        # decode
+        step, _, lay = S.build_pp_serve(
+            cfg, mesh, multi_pod=multi_pod, batch=b, cache_len=t,
+            cache_dtype=cache_dtype,
+        )
+        cache_abs = S.pp_make_cache_shapes(cfg, lay, t, cache_dtype)
+        cspecs = S.pp_cache_specs(cfg, mesh, lay, cache_abs, bspec=bspec)
+        fn = jax.jit(
+            step,
+            in_shardings=(S.ns(mesh, pspecs), S.ns(mesh, cspecs), batch_ns),
+            out_shardings=(None, S.ns(mesh, cspecs)),
+            donate_argnums=(1,),
+        )
+        return fn.lower(params_abs, cache_abs, batch_abs), meta
+
+    # ------------------------------------------------------------ tp/ep
+    from repro.distributed.sharding import param_specs
+
+    params_abs = S.abstract_params(cfg)
+    pspecs = param_specs(cfg, mesh)
+    if cell.kind == "train":
+        step, _, _ = S.build_auto_train(cfg, mesh, multi_pod=multi_pod, batch=b)
+        state_abs = S.abstract_state(params_abs)
+        sspecs = S.state_specs(cfg, mesh, params_abs, pspecs)
+        fn = jax.jit(
+            step,
+            in_shardings=(S.ns(mesh, sspecs), batch_ns),
+            out_shardings=(S.ns(mesh, sspecs), None),
+            donate_argnums=(0,),
+        )
+        return fn.lower(state_abs, batch_abs), meta
+    if cell.kind == "prefill":
+        step, _, _ = S.build_auto_prefill(cfg, mesh, batch=b, multi_pod=multi_pod)
+        fn = jax.jit(step, in_shardings=(S.ns(mesh, pspecs), batch_ns))
+        return fn.lower(params_abs, batch_abs), meta
+
+    api = build_model(cfg)
+    step, _, _ = S.build_auto_serve(cfg, mesh, batch=b)
+    cache_abs = jax.eval_shape(lambda: api.init_cache(b, t, cache_dtype))
+    cspecs = S.auto_cache_specs(cfg, mesh, cache_abs, bspec=bspec)
+    fn = jax.jit(
+        step,
+        in_shardings=(S.ns(mesh, pspecs), S.ns(mesh, cspecs), batch_ns),
+        out_shardings=(None, S.ns(mesh, cspecs)),
+        donate_argnums=(1,),
+    )
+    return fn.lower(params_abs, cache_abs, batch_abs), meta
+
+
+def run_cell(
+    arch: str,
+    shape: str,
+    *,
+    multi_pod: bool,
+    debug: bool = False,
+    out_dir: Optional[str] = None,
+    cache_dtype: str = "bf16",
+) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    cell = SHAPES_BY_NAME[shape]
+    mesh = make_debug_mesh(multi_pod=multi_pod) if debug else make_production_mesh(
+        multi_pod=multi_pod
+    )
+    record: Dict[str, Any] = {
+        "arch": arch, "shape": shape,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "multi_pod": multi_pod, "cache_dtype": cache_dtype,
+    }
+    t0 = time.time()
+    try:
+        with jax.set_mesh(mesh):
+            lowered, meta = lower_cell(
+                cfg, cell, mesh, multi_pod=multi_pod,
+                cache_dtype={"bf16": jnp.bfloat16, "int8": jnp.int8}[cache_dtype],
+            )
+        record.update(meta)
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes",
+            ):
+                record[k] = getattr(mem, k, None)
+        cost = compiled.cost_analysis()
+        if cost:
+            # raw XLA numbers (while bodies counted once — kept for reference)
+            record["flops_xla"] = cost.get("flops")
+            record["bytes_accessed_xla"] = cost.get("bytes accessed")
+        hlo = compiled.as_text()
+        # loop-aware re-derivation: dot FLOPs / fusion-boundary bytes /
+        # collective bytes scaled by while trip counts (analysis/hlo_cost.py)
+        la = loop_aware_cost(hlo)
+        record["flops"] = la["flops"]
+        record["bytes_accessed"] = la["hbm_bytes"]
+        record["collective_bytes"] = la["collective_bytes"]
+        record["cost_warnings"] = la["n_warnings"]
+        record["hlo_bytes"] = len(hlo)
+        record["status"] = "ok"
+        print(
+            f"[dryrun] {arch:22s} {shape:12s} mesh={record['mesh']:9s} OK  "
+            f"flops/dev={record.get('flops', 0):.3e}  "
+            f"coll={sum(record['collective_bytes'].values()):.3e}B  "
+            f"(lower {record['lower_s']}s, compile {record['compile_s']}s)"
+        )
+        print(f"  memory_analysis: { {k: record.get(k) for k in ('argument_size_in_bytes','output_size_in_bytes','temp_size_in_bytes')} }")
+        print(f"  cost_analysis: flops={record.get('flops')}, bytes_accessed={record.get('bytes_accessed')}")
+    except Exception as e:  # noqa: BLE001 — record and continue
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+        print(f"[dryrun] {arch:22s} {shape:12s} FAIL: {record['error'][:200]}")
+
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        tag = "mp" if multi_pod else "sp"
+        path = os.path.join(out_dir, f"{arch}__{shape}__{tag}.json")
+        slim = {k: v for k, v in record.items() if k != "traceback"}
+        with open(path, "w") as f:
+            json.dump(slim, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES_BY_NAME))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--debug-mesh", action="store_true")
+    ap.add_argument("--cache-dtype", default="bf16", choices=["bf16", "int8"])
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    jobs = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for cell in runnable_cells(get_config(arch)):
+                jobs.append((arch, cell.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        jobs = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    n_fail = 0
+    for arch, shape in jobs:
+        for mp in meshes:
+            rec = run_cell(
+                arch, shape, multi_pod=mp, debug=args.debug_mesh,
+                out_dir=args.out, cache_dtype=args.cache_dtype,
+            )
+            n_fail += rec["status"] != "ok"
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

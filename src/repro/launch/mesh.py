@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (importing this module never touches
+jax device state): single-pod (16, 16) = 256 chips, multi-pod (2, 16, 16) =
+512 chips.  The ``pod`` axis is the WAN/cross-region link of the paper; the
+``data``/``model`` axes are the intra-pod fabric.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(*, multi_pod: bool = False):
+    """Tiny mesh for CI-sized device counts (8 host devices)."""
+    shape = (2, 2, 2) if multi_pod else (2, 2)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+#: TPU v5e-class hardware constants for the roofline analysis.
+PEAK_FLOPS_BF16 = 197e12       # per chip
+HBM_BANDWIDTH = 819e9          # bytes/s per chip
+ICI_BANDWIDTH = 50e9           # bytes/s per link

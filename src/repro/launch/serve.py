@@ -1,0 +1,85 @@
+"""Batched serving driver: prefill-free decode loop over a request batch.
+
+Runs for real on CPU with reduced configs:
+  PYTHONPATH=src python -m repro.launch.serve --arch gemma2-2b --reduced \
+      --batch 4 --prompt-len 16 --new-tokens 24
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.launch import steps as S
+from repro.models.model import ModelCtx, build_model
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--new-tokens", type=int, default=32)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    if cfg.model_axis == "pp":  # single-device serving path
+        cfg = dataclasses.replace(cfg, model_axis="tp")
+    api = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = api.init(key)
+    ctx = ModelCtx()
+
+    cache_len = args.prompt_len + args.new_tokens
+    cache = api.init_cache(args.batch, cache_len)
+    if cfg.family == "encdec":
+        cache["memory"] = (
+            jax.random.normal(key, (args.batch, cache_len, cfg.d_model)) * 0.02
+        )
+
+    decode = jax.jit(
+        lambda p, c, b: api.decode_step(p, c, b, cfg, ctx)
+    )
+
+    # "prefill" by feeding prompt tokens through the decode path one by one
+    # (keeps one compiled program; bulk prefill is the prefill_32k cell).
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (args.batch, args.prompt_len))
+    tok = jnp.asarray(prompt[:, :1], jnp.int32)
+    t0 = time.perf_counter()
+    for i in range(args.prompt_len - 1):
+        _, cache = decode(params, cache, {"token": tok, "pos": jnp.int32(i)})
+        tok = jnp.asarray(prompt[:, i + 1 : i + 2], jnp.int32)
+
+    generated = []
+    for i in range(args.new_tokens):
+        pos = jnp.int32(args.prompt_len - 1 + i)
+        logits, cache = decode(params, cache, {"token": tok, "pos": pos})
+        if args.temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, 0, :] / args.temperature)
+        else:
+            nxt = jnp.argmax(logits[:, 0, :], axis=-1)
+        tok = nxt[:, None].astype(jnp.int32)
+        generated.append(np.asarray(nxt))
+    dt = time.perf_counter() - t0
+    toks = np.stack(generated, 1)
+    total = args.batch * (args.prompt_len + args.new_tokens - 1)
+    print(f"[serve] {cfg.arch_id}: generated {toks.shape} tokens; "
+          f"{total / dt:.1f} tok/s (batch {args.batch})")
+    print("[serve] sample:", toks[0][:16].tolist())
+    assert np.all(toks >= 0) and np.all(toks < cfg.padded_vocab)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,611 @@
+"""Builds jittable train / prefill / serve steps for every (arch x mesh).
+
+Strategy dispatch (cfg.model_axis):
+  'tp' / 'ep'  — GSPMD auto-sharding with named-axis constraints; MoE FFN
+                 runs its own manual all_to_all shard_map over `model`.
+                 Multi-pod: per-pod DDP inside a shard_map over `pod` with
+                 int8-compressed gradient exchange ('tp'), or GSPMD pod-DP
+                 ('ep': the MoE shard_map cannot nest).
+  'pp'         — GPipe pipeline over `model` (16 stages) inside a
+                 partial-manual shard_map.  Multi-pod: when the layer count
+                 divides 32, the pipeline extends over ('pod','model') — the
+                 stage-15->16 hop is the cross-region WAN edge, exactly the
+                 paper's geo-PP placement; otherwise the pod axis is plain
+                 (auto) data parallelism.
+
+The builders return step functions plus everything needed to jit/lower them
+(abstract state, sharding specs, batch specs) so dryrun.py and train.py
+share one code path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.compression import compressed_pmean
+from repro.distributed.sharding import (
+    axis_size,
+    make_shard_act,
+    param_specs,
+)
+from repro.models import ssm as ssm_lib
+from repro.models.layers import (
+    chunked_xent,
+    dense_block_apply,
+    embed,
+    lm_logits,
+    rms_norm,
+    rope_angles,
+)
+from repro.models.model import ModelCtx, build_model
+from repro.optim import adamw_init, adamw_update, cosine_schedule, opt_state_specs
+from repro.pipeline import pipeline_decode, pipeline_forward, stack_pipeline_params
+
+AUX_WEIGHT = 0.01
+
+
+# ---------------------------------------------------------------- TrainState
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+
+
+jax.tree_util.register_pytree_node(
+    TrainState,
+    lambda s: ((s.params, s.opt), None),
+    lambda _, c: TrainState(*c),
+)
+
+
+def ns(mesh: Mesh, tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def pp_layout(cfg: ArchConfig, mesh: Mesh, multi_pod: bool) -> Tuple[int, Tuple[str, ...]]:
+    """(n_stages, pipeline axes).  Multi-pod extends the pipeline across the
+    pod axis when the layer count divides 2*model; otherwise the pod axis
+    stays auto data-parallel."""
+    m = axis_size(mesh, "model")
+    if multi_pod and cfg.n_layers % (2 * m) == 0:
+        return 2 * m, ("pod", "model")
+    return m, ("model",)
+
+
+def dp_shards(mesh: Mesh, multi_pod: bool, pipe_axes=()) -> int:
+    d = axis_size(mesh, "data")
+    if multi_pod and "pod" not in pipe_axes:
+        d *= axis_size(mesh, "pod")
+    return d
+
+
+def microbatch_count(batch: int, dp: int, cap: int = 32) -> int:
+    per_shard = max(1, batch // max(1, dp))
+    m = min(per_shard, cap)
+    while batch % m:
+        m -= 1
+    return max(1, m)
+
+
+def batch_axis_spec(mesh: Mesh, multi_pod: bool, batch: int, *, pipe_axes=()):
+    """Batch-dim sharding.  When the pod axis carries pipeline stages it
+    cannot also shard the batch."""
+    if batch == 1:
+        return None
+    pod_free = multi_pod and "pod" not in pipe_axes
+    if pod_free and batch % (axis_size(mesh, "pod") * axis_size(mesh, "data")) == 0:
+        return ("pod", "data")
+    if batch % axis_size(mesh, "data") == 0:
+        return "data"
+    return None
+
+
+# ============================================================ input builders
+def make_batch_specs(
+    cfg: ArchConfig, mesh: Mesh, cell: ShapeCell, *, multi_pod: bool
+) -> Tuple[Dict[str, jax.ShapeDtypeStruct], Dict[str, P]]:
+    """ShapeDtypeStruct stand-ins + PartitionSpecs for one input-shape cell.
+    The modality frontends are stubs: vlm gets precomputed patch embeddings,
+    audio enc-dec gets precomputed frame embeddings.  Never allocates."""
+    b, t = cell.global_batch, cell.seq_len
+    pipe_axes = pp_layout(cfg, mesh, multi_pod)[1] if cfg.model_axis == "pp" else ()
+    bspec = batch_axis_spec(mesh, multi_pod, b, pipe_axes=pipe_axes)
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+
+    if cell.kind in ("train", "prefill"):
+        if cfg.family == "encdec":
+            batch = {
+                "src_embeds": sd((b, t, cfg.d_model), bf16),
+                "tgt_tokens": sd((b, t), i32),
+                "labels": sd((b, t), i32),
+            }
+            specs = {
+                "src_embeds": P(bspec, None, None),
+                "tgt_tokens": P(bspec, None),
+                "labels": P(bspec, None),
+            }
+        elif cfg.family == "vlm":
+            tv = int(t * cfg.vision_frac)
+            tt = t - tv
+            batch = {
+                "tokens": sd((b, tt), i32),
+                "vision_embeds": sd((b, tv, cfg.d_model), bf16),
+                "positions3": sd((3, b, t), i32),
+                "labels": sd((b, tt), i32),
+            }
+            specs = {
+                "tokens": P(bspec, None),
+                "vision_embeds": P(bspec, None, None),
+                "positions3": P(None, bspec, None),
+                "labels": P(bspec, None),
+            }
+        else:
+            batch = {"tokens": sd((b, t), i32), "labels": sd((b, t), i32)}
+            specs = {"tokens": P(bspec, None), "labels": P(bspec, None)}
+        if cell.kind == "prefill":
+            batch.pop("labels")
+            specs.pop("labels")
+        return batch, specs
+
+    batch = {"token": sd((b, 1), i32), "pos": sd((), i32)}
+    specs = {"token": P(bspec, None), "pos": P()}
+    return batch, specs
+
+
+# ================================================================= TP/EP path
+def build_auto_train(
+    cfg: ArchConfig,
+    mesh: Mesh,
+    *,
+    multi_pod: bool,
+    batch: int,
+    compress_pod_grads: bool = True,
+    use_kernel: bool = False,
+    total_steps: int = 10_000,
+):
+    """train_step for 'tp'/'ep' archs."""
+    api = build_model(cfg)
+    shard_act = make_shard_act(cfg, mesh, batch=batch)
+    ep = cfg.model_axis == "ep" and axis_size(mesh, "model") > 1
+    ctx = ModelCtx(
+        shard_act=shard_act,
+        use_kernel=use_kernel,
+        ep_axis="model" if ep else None,
+        ep_size=axis_size(mesh, "model"),
+        mesh=mesh,
+    )
+
+    def loss_fn(params, batch_):
+        return api.loss(params, batch_, ctx, aux_weight=AUX_WEIGHT)
+
+    # tp-archs across pods: manual DDP with int8-compressed WAN exchange.
+    use_pod_ddp = (
+        multi_pod and not ep and compress_pod_grads and batch % 2 == 0
+    )
+
+    def grads_fn(params, batch_):
+        if not use_pod_ddp:
+            return jax.value_and_grad(loss_fn)(params, batch_)
+
+        def pod_fn(params_, batch__):
+            loss, grads = jax.value_and_grad(loss_fn)(params_, batch__)
+            grads = compressed_pmean(grads, "pod", axis_size(mesh, "pod"))
+            return jax.lax.pmean(loss, "pod"), grads
+
+        in_batch_specs = {
+            k: (P(None, "pod") if k == "positions3" else P("pod"))
+            for k in batch_
+        }
+        return jax.shard_map(
+            pod_fn,
+            mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: P(), params), in_batch_specs),
+            out_specs=(P(), jax.tree.map(lambda _: P(), params)),
+            axis_names={"pod"},
+            check_vma=False,
+        )(params, batch_)
+
+    def train_step(state: TrainState, batch_):
+        loss, grads = grads_fn(state.params, batch_)
+        lr = cosine_schedule(
+            state.opt.count, base_lr=3e-4, warmup=200, total=total_steps
+        )
+        new_params, new_opt = adamw_update(grads, state.opt, state.params, lr=lr)
+        return TrainState(new_params, new_opt), loss
+
+    return train_step, api, ctx
+
+
+def build_auto_prefill(cfg: ArchConfig, mesh: Mesh, *, batch: int, multi_pod: bool):
+    api = build_model(cfg)
+    shard_act = make_shard_act(cfg, mesh, batch=batch)
+    ep = cfg.model_axis == "ep" and axis_size(mesh, "model") > 1
+    ctx = ModelCtx(
+        shard_act=shard_act, ep_axis="model" if ep else None,
+        ep_size=axis_size(mesh, "model"), mesh=mesh,
+    )
+
+    def prefill_step(params, batch_):
+        h, _ = api.hidden(params, batch_, cfg, ctx)
+        return lm_logits(params["embed"], h[:, -1:, :], cfg)
+
+    return prefill_step, api, ctx
+
+
+def build_auto_serve(cfg: ArchConfig, mesh: Mesh, *, batch: int):
+    api = build_model(cfg)
+    shard_act = make_shard_act(cfg, mesh, batch=batch)
+    ctx = ModelCtx(shard_act=shard_act, mesh=mesh)
+
+    def serve_step(params, cache, batch_):
+        return api.decode_step(params, cache, batch_, cfg, ctx)
+
+    return serve_step, api, ctx
+
+
+def auto_cache_specs(cfg: ArchConfig, mesh: Mesh, cache_shapes, *, bspec):
+    """Cache specs for the auto (tp/ep) path.  KV leaves [L, B, S, H, D]:
+    batch over data(+pod); kv heads over model when divisible, else the
+    sequence dim over model (GSPMD handles the distributed softmax)."""
+    m = axis_size(mesh, "model")
+    kv_ok = cfg.n_kv_heads > 0 and cfg.n_kv_heads % m == 0
+
+    def leaf_spec(x):
+        nd = len(x.shape)
+        if nd == 5:  # [L, B, S, H, D] kv cache
+            if kv_ok:
+                return P(None, bspec, None, "model", None)
+            return P(None, bspec, "model", None, None)
+        if nd == 6:  # gemma pairs [Lp, B, S, H, D] inside dict-of-2? no: [L,2?..]
+            return P(None, None, bspec, None, None, None)
+        if nd == 5 - 1:  # [L, B, K, C] conv history
+            return P(None, bspec, None, None)
+        if nd == 5 and False:
+            pass
+        if nd == 5 + 0:
+            pass
+        if nd == 5:
+            pass
+        if nd == 4:
+            return P(None, bspec, None, None)
+        if nd == 3:
+            return P(None, bspec, None)
+        return P(*([None] * nd))
+
+    def ssm_leaf(x):
+        nd = len(x.shape)
+        ssm_ok = cfg.ssm_state and cfg.ssm_heads % m == 0
+        if nd == 5:  # [L, B, H, P, N] state
+            return P(None, bspec, "model" if ssm_ok else None, None, None)
+        if nd == 4:  # [L, B, K-1, C] conv
+            return P(None, bspec, None, None)
+        return P(*([None] * nd))
+
+    if cfg.family in ("ssm",):
+        return jax.tree.map(ssm_leaf, cache_shapes)
+    if cfg.family == "hybrid":
+        def hybrid_leaf(x):
+            nd = len(x.shape)
+            # mamba leaves have 2 leading stack dims [G, A, B, ...]
+            if nd == 6:  # [G, A, B, H, P, N]
+                ssm_ok = cfg.ssm_heads % m == 0
+                return P(None, None, bspec, "model" if ssm_ok else None, None, None)
+            if nd == 5 and x.shape[-1] == cfg.head_dim_:  # shared kv [G,B,S,H,D]
+                kvh_ok = cfg.n_kv_heads % m == 0
+                if kvh_ok:
+                    return P(None, bspec, None, "model", None)
+                return P(None, bspec, "model", None, None)
+            if nd == 5:  # [G, A, B, K, C] conv
+                return P(None, None, bspec, None, None)
+            return P(*([None] * nd))
+
+        return jax.tree.map(hybrid_leaf, cache_shapes)
+    if cfg.family == "encdec":
+        def ed_leaf(x):
+            nd = len(x.shape)
+            if nd == 5:
+                if kv_ok:
+                    return P(None, bspec, None, "model", None)
+                return P(None, bspec, "model", None, None)
+            if nd == 3:  # memory [B, S, D]
+                return P(bspec, None, None)
+            return P(*([None] * nd))
+
+        return jax.tree.map(ed_leaf, cache_shapes)
+    return jax.tree.map(leaf_spec, cache_shapes)
+
+
+# =================================================================== PP path
+def _pp_batch_shard(x: jax.Array, name: str) -> jax.Array:
+    """Inside the manual-model pipeline, pin every activation to stay
+    batch-sharded over the (auto) data axis.  Without this GSPMD sometimes
+    gathers activation-sized tensors over `data` to compute replicated
+    weight grads — measured 1.8 TB/step per dot on qwen train_4k (SSPerf)."""
+    return jax.lax.with_sharding_constraint(
+        x, P("data", *([None] * (x.ndim - 1)))
+    )
+
+
+def _pp_stage_fn(cfg: ArchConfig, t: int, use_kernel: bool):
+    cos, sin = (
+        rope_angles(jnp.arange(t), cfg.head_dim_, cfg.rope_theta)
+        if cfg.family != "ssm"
+        else (None, None)
+    )
+
+    def stage_fn(blocks, x):
+        dt = x.dtype
+
+        if cfg.family == "ssm":
+            def body(h, bp):
+                h, _ = ssm_lib.mamba_block_apply(
+                    bp, h, cfg, use_kernel=use_kernel,
+                    shard_act=_pp_batch_shard,
+                )
+                return h.astype(dt), None
+        else:
+            def body(h, bp):
+                h, _ = dense_block_apply(
+                    bp, h, cos, sin, cfg, shard_act=_pp_batch_shard
+                )
+                return h.astype(dt), None
+
+        # full block remat (see models/model.py)
+        x, _ = jax.lax.scan(jax.checkpoint(body), x, blocks)
+        return x
+
+    return stage_fn
+
+
+def _pp_decode_stage_fn(cfg: ArchConfig):
+    def stage_fn(blocks, cache_mb, x, pos):
+        if cfg.family == "ssm":
+            def body(h, xs):
+                bp, c = xs
+                h, c2 = ssm_lib.mamba_block_apply(bp, h, cfg, cache=c)
+                return h, c2
+        else:
+            cos, sin = rope_angles(pos[None], cfg.head_dim_, cfg.rope_theta)
+
+            def body(h, xs):
+                bp, c = xs
+                h, c2 = dense_block_apply(
+                    bp, h, cos, sin, cfg, cache=c, cache_pos=pos
+                )
+                return h, c2
+
+        x, cache2 = jax.lax.scan(body, x, (blocks, cache_mb))
+        return x, cache2
+
+    return stage_fn
+
+
+@dataclasses.dataclass(frozen=True)
+class PPLayout:
+    n_stages: int
+    pipe_axes: Tuple[str, ...]
+    m_ub: int
+    mb: int
+
+
+def _pp_common(cfg, mesh, multi_pod, batch):
+    n_stages, pipe_axes = pp_layout(cfg, mesh, multi_pod)
+    dp = dp_shards(mesh, multi_pod, pipe_axes)
+    m_ub = microbatch_count(batch, dp)
+    mb = batch // m_ub
+    return PPLayout(n_stages, pipe_axes, m_ub, mb)
+
+
+def _pp_forward_hidden(cfg, params, tokens, lay: PPLayout, mesh, seq,
+                       use_kernel, dtype):
+    """shard_map'd pipeline forward -> [B, T, D] hidden after ln_f."""
+
+    def inner(blocks, emb_table, tokens_):
+        mbs = tokens_.reshape(lay.m_ub, lay.mb, seq)
+        first_fn = lambda tok: embed({"table": emb_table}, tok, cfg)
+        stage_fn = _pp_stage_fn(cfg, seq, use_kernel)
+        ys = pipeline_forward(
+            blocks, mbs, axis=lay.pipe_axes, n_stages=lay.n_stages,
+            first_fn=first_fn, stage_fn=stage_fn,
+            act_shape=(lay.mb, seq, cfg.d_model), act_dtype=dtype,
+        )
+        return ys[None]
+
+    blocks_spec = P(lay.pipe_axes)
+    # NB: the table crosses the manual boundary in f32 so its gradient psum
+    # (transpose of a replicated input) is a 32-bit all-reduce — XLA's CPU
+    # AllReducePromotion pass crashes cloning 16-bit reducers that carry a
+    # Shardy sharding_constraint (see DESIGN.md "hardware adaptation").
+    hidden = jax.shard_map(
+        inner,
+        mesh=mesh,
+        in_specs=(
+            jax.tree.map(lambda _: blocks_spec, params["blocks"]),
+            P(), P(),
+        ),
+        out_specs=P(lay.pipe_axes),
+        axis_names=set(lay.pipe_axes),
+        check_vma=False,
+    )(params["blocks"], params["embed"]["table"].astype(jnp.float32), tokens)
+    h = hidden[-1].reshape(-1, seq, cfg.d_model)
+    h = jax.lax.with_sharding_constraint(
+        h, NamedSharding(mesh, P("data", None, None))
+    )
+    return rms_norm(h, params["ln_f"], cfg.rms_eps)
+
+
+def build_pp_train(
+    cfg: ArchConfig, mesh: Mesh, *, multi_pod: bool, batch: int, seq: int,
+    use_kernel: bool = False, total_steps: int = 10_000, dtype=jnp.bfloat16,
+):
+    api = build_model(cfg)
+    lay = _pp_common(cfg, mesh, multi_pod, batch)
+
+    def loss_fn(params, batch_):
+        h = _pp_forward_hidden(
+            cfg, params, batch_["tokens"], lay, mesh, seq, use_kernel, dtype
+        )
+        # microbatch-major row order: [M, mb] -> flat
+        lbl = batch_["labels"].reshape(lay.m_ub, lay.mb, seq).reshape(-1, seq)
+        return chunked_xent(params["embed"], h, lbl, cfg)
+
+    def train_step(state: TrainState, batch_):
+        loss, grads = jax.value_and_grad(loss_fn)(state.params, batch_)
+        lr = cosine_schedule(
+            state.opt.count, base_lr=3e-4, warmup=200, total=total_steps
+        )
+        new_params, new_opt = adamw_update(grads, state.opt, state.params, lr=lr)
+        return TrainState(new_params, new_opt), loss
+
+    return train_step, api, lay
+
+
+def build_pp_prefill(cfg, mesh, *, multi_pod, batch, seq, use_kernel=False,
+                     dtype=jnp.bfloat16):
+    api = build_model(cfg)
+    lay = _pp_common(cfg, mesh, multi_pod, batch)
+
+    def prefill_step(params, batch_):
+        h = _pp_forward_hidden(
+            cfg, params, batch_["tokens"], lay, mesh, seq, use_kernel, dtype
+        )
+        return lm_logits(params["embed"], h[:, -1:, :], cfg)
+
+    return prefill_step, api, lay
+
+
+def pp_make_cache_shapes(cfg, lay: PPLayout, cache_len, cache_dtype=jnp.bfloat16):
+    """Abstract stage-major decode cache: leaves [S, L/S, M, mb, ...]."""
+    lps = cfg.n_layers // lay.n_stages
+
+    def stacked(shape, dtype):
+        return jax.ShapeDtypeStruct(
+            (lay.n_stages, lps, lay.m_ub, lay.mb) + shape, dtype
+        )
+
+    if cfg.family == "ssm":
+        return {
+            "conv_x": stacked((cfg.ssm_conv - 1, cfg.d_inner), cache_dtype),
+            "conv_b": stacked((cfg.ssm_conv - 1, cfg.ssm_state), cache_dtype),
+            "conv_c": stacked((cfg.ssm_conv - 1, cfg.ssm_state), cache_dtype),
+            "state": stacked(
+                (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), cache_dtype
+            ),
+        }
+    return {
+        "k": stacked((cache_len, cfg.n_kv_heads, cfg.head_dim_), cache_dtype),
+        "v": stacked((cache_len, cfg.n_kv_heads, cfg.head_dim_), cache_dtype),
+    }
+
+
+def build_pp_serve(cfg, mesh, *, multi_pod, batch, cache_len,
+                   dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16):
+    """Pipelined one-token decode.  Cache leaves [S, L/S, M, mb, ...]; the
+    per-stage cache row for a microbatch is dynamically indexed as the
+    microbatch wavefront passes through."""
+    api = build_model(cfg)
+    lay = _pp_common(cfg, mesh, multi_pod, batch)
+
+    def serve_step(params, cache, batch_):
+        pos = batch_["pos"]
+
+        def inner(blocks, emb_table, cache_, token_):
+            toks = token_.reshape(lay.m_ub, lay.mb, 1)
+            first_fn = lambda tok: embed({"table": emb_table}, tok, cfg)
+            base_stage = _pp_decode_stage_fn(cfg)
+
+            def stage_cached(params_, cache_mb, x, pos_):
+                if cfg.family == "ssm":
+                    # mamba cache dict: leaves [L/S, mb, ...]
+                    return base_stage(params_, cache_mb, x, pos_)
+                return base_stage(params_, cache_mb, x, pos_)
+
+            ys, cache_new = pipeline_decode(
+                blocks, cache_, toks, pos,
+                axis=lay.pipe_axes, n_stages=lay.n_stages,
+                first_fn=first_fn, stage_fn=stage_cached,
+                act_shape=(lay.mb, 1, cfg.d_model), act_dtype=dtype,
+            )
+            return ys[None], cache_new
+
+        blocks_spec = P(lay.pipe_axes)
+        cache_tree_spec = jax.tree.map(lambda _: P(lay.pipe_axes), cache)
+        hidden, cache_new = jax.shard_map(
+            inner,
+            mesh=mesh,
+            in_specs=(
+                jax.tree.map(lambda _: blocks_spec, params["blocks"]),
+                P(),
+                cache_tree_spec,
+                P(),
+            ),
+            out_specs=(P(lay.pipe_axes), cache_tree_spec),
+            axis_names=set(lay.pipe_axes),
+        check_vma=False,
+        )(params["blocks"], params["embed"]["table"], cache, batch_["token"])
+        h = hidden[-1].reshape(-1, 1, cfg.d_model)
+        h = jax.lax.with_sharding_constraint(
+            h, NamedSharding(mesh, P("data", None, None))
+        )
+        h = rms_norm(h, params["ln_f"], cfg.rms_eps)
+        return lm_logits(params["embed"], h, cfg), cache_new
+
+    return serve_step, api, lay
+
+
+def pp_cache_specs(cfg, mesh, lay: PPLayout, cache_shapes, *, bspec):
+    """Stage dim over the pipe axes; microbatch row dim over data(+pod when
+    the pod axis isn't part of the pipeline)."""
+    def leaf(x):
+        rest = [None] * (len(x.shape) - 4)
+        return P(lay.pipe_axes, None, None, bspec, *rest)
+
+    return jax.tree.map(leaf, cache_shapes)
+
+
+# ====================================================== state/spec assembly
+def pp_abstract_params(cfg: ArchConfig, n_stages: int, dtype=jnp.bfloat16):
+    api = build_model(cfg)
+
+    def build():
+        p = api.init(jax.random.PRNGKey(0), dtype)
+        out = dict(p)
+        out["blocks"] = stack_pipeline_params(p["blocks"], n_stages)
+        return out
+
+    return jax.eval_shape(build)
+
+
+def pp_param_specs(cfg: ArchConfig, mesh: Mesh, pipe_axes) -> Any:
+    base = param_specs(cfg, mesh)
+    out = dict(base)
+    out["blocks"] = jax.tree.map(
+        lambda s: P(tuple(pipe_axes), *list(s)),
+        base["blocks"],
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    return out
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    api = build_model(cfg)
+    return jax.eval_shape(lambda: api.init(jax.random.PRNGKey(0), dtype))
+
+
+def abstract_state(params_shapes) -> TrainState:
+    opt = jax.eval_shape(adamw_init, params_shapes)
+    return TrainState(params=params_shapes, opt=opt)
+
+
+def state_specs(cfg: ArchConfig, mesh: Mesh, params_shapes, pspecs) -> TrainState:
+    opt_specs = opt_state_specs(pspecs, params_shapes, mesh)
+    return TrainState(params=pspecs, opt=opt_specs)

@@ -1,0 +1,422 @@
+"""Model primitives shared by all architecture families.
+
+Everything is a pure function over explicit parameter pytrees (no framework):
+``init_*`` builds params, ``*_apply`` consumes them.  Attention has a
+reference jnp path (used by smoke tests, the AOT dry-run, and as the oracle
+for the Pallas flash kernel) and an optional fused-kernel path selected via
+``repro.kernels.ops``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+
+Params = Dict[str, Any]
+
+
+# ---------------------------------------------------------------------- norms
+def init_rms_norm(d: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.zeros((d,), dtype)}
+
+
+def rms_norm(x: jax.Array, p: Params, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ----------------------------------------------------------------------- rope
+def rope_angles(
+    positions: jax.Array, head_dim: int, theta: float
+) -> Tuple[jax.Array, jax.Array]:
+    """cos/sin tables for rotary embedding.  positions: [..., T] int32."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., T, half]
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def mrope_angles(
+    positions3: jax.Array,
+    sections: Tuple[int, int, int],
+    head_dim: int,
+    theta: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Qwen2-VL M-RoPE: the rotary half-dim is partitioned into (t, h, w)
+    sections, each rotated by its own position stream.
+    positions3: [3, ..., T]."""
+    half = head_dim // 2
+    assert sum(sections) == half, (sections, half)
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    # angles per stream: [3, ..., T, half]
+    ang = positions3[..., None].astype(jnp.float32) * freq
+    sec_id = jnp.repeat(
+        jnp.arange(3), jnp.array(sections), total_repeat_length=half
+    )  # [half] -> which stream each frequency uses
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)  # [half, 3]
+    ang = jnp.einsum("s...h,hs->...h", ang, onehot)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., T, H, Dh]; cos/sin: [..., T, Dh/2] (broadcast over heads)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :].astype(x.dtype)  # [..., T, 1, half]
+    s = sin[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ------------------------------------------------------------------ attention
+#: full-sequence attention switches to the chunked (flash-structured) jnp
+#: path above this many query positions — the [B,H,T,T] score tensor is
+#: never materialized, which is what keeps the 32k/500k cells' memory sane.
+CHUNKED_ATTN_THRESHOLD = 2048
+ATTN_CHUNK = 1024
+
+
+def repeat_kv(x: jax.Array, n_rep: int) -> jax.Array:
+    """[B, T, Hkv, Dh] -> [B, T, Hkv*n_rep, Dh] (GQA broadcast)."""
+    if n_rep == 1:
+        return x
+    b, t, h, d = x.shape
+    return jnp.broadcast_to(
+        x[:, :, :, None, :], (b, t, h, n_rep, d)
+    ).reshape(b, t, h * n_rep, d)
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_offset: int | jax.Array = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Reference attention.  q: [B, Tq, Hq, Dh]; k/v: [B, Tk, Hkv, Dh].
+
+    ``q_offset``: absolute position of q[0] (decode); ``kv_len``: number of
+    valid cache entries (rest masked).  Also the oracle for kernels/flash.
+    """
+    b, tq, hq, dh = q.shape
+    hkv = k.shape[2]
+    k = repeat_kv(k, hq // hkv)
+    v = repeat_kv(v, hq // hkv)
+    scale = dh ** -0.5
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32)
+    ) * scale
+    if softcap is not None:
+        scores = jnp.tanh(scores / softcap) * softcap
+    qpos = jnp.arange(tq) + q_offset  # [Tq]
+    kpos = jnp.arange(k.shape[1])     # [Tk]
+    mask = jnp.ones((tq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(v.dtype), v)
+    return out
+
+
+def attention_chunked(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    softcap: Optional[float] = None,
+    q_chunk: int = ATTN_CHUNK,
+    kv_chunk: int = ATTN_CHUNK,
+) -> jax.Array:
+    """Flash-structured attention in pure jnp: scan over query chunks, inner
+    scan over KV chunks with online-softmax statistics.  Numerically equal to
+    ``attention_ref`` but XLA never materializes the [B,H,T,T] scores — the
+    fallback path on non-TPU backends (the Pallas kernel is the TPU path).
+
+    q: [B, Tq, Hq, Dh]; k/v: [B, Tk, Hkv, Dh].
+    """
+    b, tq, hq, dh = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    rep = hq // hkv
+    scale = dh ** -0.5
+    q_chunk = min(q_chunk, tq)
+    kv_chunk = min(kv_chunk, tk)
+    pad_q = (-tq) % q_chunk
+    pad_k = (-tk) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else k
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0))) if pad_k else v
+    nq, nk = (tq + pad_q) // q_chunk, (tk + pad_k) // kv_chunk
+    # [nq, B, qc, Hq, Dh] / [nk, B, kc, Hkv, Dh]
+    qs = jnp.moveaxis(qp.reshape(b, nq, q_chunk, hq, dh), 1, 0)
+    ks = jnp.moveaxis(kp.reshape(b, nk, kv_chunk, hkv, dh), 1, 0)
+    vs = jnp.moveaxis(vp.reshape(b, nk, kv_chunk, hkv, dh), 1, 0)
+
+    def q_block(carry, qi_and_chunk):
+        qi, qc = qi_and_chunk  # qc: [B, qcs, Hq, Dh]
+        qf = qc.astype(jnp.float32)
+
+        def kv_block(state, ki_and_chunk):
+            m, l, acc = state
+            ki, kc, vc = ki_and_chunk
+            kf = repeat_kv(kc, rep).astype(jnp.float32)
+            vf = repeat_kv(vc, rep).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf) * scale
+            if softcap is not None:
+                s = jnp.tanh(s / softcap) * softcap
+            qpos = qi * q_chunk + jnp.arange(q_chunk)
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = (kpos[None, :] < tk) & (qpos[:, None] < tq)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(mask[None, None], s, -1e30)
+            m_cur = jnp.max(s, axis=-1, keepdims=True)
+            m_new = jnp.maximum(m, m_cur)
+            p = jnp.exp(s - m_new)
+            alpha = jnp.exp(m - m_new)
+            l_new = alpha * l + jnp.sum(p, axis=-1, keepdims=True)
+            acc_new = acc * alpha[..., 0][..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vf
+            )
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, hq, q_chunk, 1), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, hq, q_chunk, 1), jnp.float32)
+        a0 = jnp.zeros((b, hq, q_chunk, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l, 1e-30)
+        return carry, jnp.moveaxis(out, 1, 2).astype(q.dtype)  # [B,qcs,Hq,Dh]
+
+    _, outs = jax.lax.scan(jax.checkpoint(q_block), (), (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, tq + pad_q, hq, dh)
+    return out[:, :tq]
+
+
+def attention_full(
+    q, k, v, *, causal=True, window=None, softcap=None
+) -> jax.Array:
+    """Dispatch: exact reference for short sequences (and the kernel oracle),
+    chunked flash-structured path for long ones."""
+    if q.shape[1] <= CHUNKED_ATTN_THRESHOLD:
+        return attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap
+        )
+    return attention_chunked(
+        q, k, v, causal=causal, window=window, softcap=softcap
+    )
+
+
+def init_attention(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, hq, hkv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    scale = d ** -0.5
+    p = {
+        "wq": (jax.random.normal(k1, (d, hq * dh)) * scale).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hkv * dh)) * scale).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hkv * dh)) * scale).astype(dtype),
+        "wo": (jax.random.normal(k4, (hq * dh, d)) * (hq * dh) ** -0.5).astype(dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((hq * dh,), dtype)
+        p["bk"] = jnp.zeros((hkv * dh,), dtype)
+        p["bv"] = jnp.zeros((hkv * dh,), dtype)
+    return p
+
+
+def attention_apply(
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_pos: Optional[jax.Array] = None,
+    shard_act=None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Self-attention with optional KV cache.
+
+    Training/prefill: cache=None, full-sequence causal attention.
+    Decode: x is [B, 1, D]; cache holds [B, S, Hkv, Dh]; the new KV is
+    written at ``cache_pos`` and attention spans positions < cache_pos+1.
+    """
+    b, t, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, t, hq, dh)
+    k = k.reshape(b, t, hkv, dh)
+    v = v.reshape(b, t, hkv, dh)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if shard_act is not None:
+        q, k, v = shard_act(q, "attn_q"), shard_act(k, "attn_kv"), shard_act(v, "attn_kv")
+
+    if cache is None:
+        out = attention_full(
+            q, k, v, causal=True, window=window,
+            softcap=cfg.attn_logit_softcap,
+        )
+        new_cache = None
+    else:
+        pos = cache_pos  # scalar int32: index of the new token
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), pos, axis=1
+        )
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), pos, axis=1
+        )
+        out = attention_ref(
+            q, kc.astype(q.dtype), vc.astype(q.dtype),
+            causal=False, window=window,
+            softcap=cfg.attn_logit_softcap,
+            q_offset=pos, kv_len=pos + 1,
+        )
+        new_cache = {"k": kc, "v": vc}
+    out = out.reshape(b, t, hq * dh)
+    return out @ p["wo"], new_cache
+
+
+# ------------------------------------------------------------------------ mlp
+def init_mlp(key, d: int, f: int, act: str, dtype=jnp.float32) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {
+        "w_up": (jax.random.normal(k1, (d, f)) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(k2, (f, d)) * f**-0.5).astype(dtype),
+    }
+    if act != "gelu_plain":
+        p["w_gate"] = (jax.random.normal(k3, (d, f)) * d**-0.5).astype(dtype)
+    return p
+
+
+def mlp_apply(p: Params, x: jax.Array, act: str, shard_act=None) -> jax.Array:
+    up = x @ p["w_up"]
+    if act == "gelu_plain":
+        h = jax.nn.gelu(up)
+    else:
+        gate = x @ p["w_gate"]
+        g = jax.nn.silu(gate) if act == "silu" else jax.nn.gelu(gate)
+        h = g * up
+    if shard_act is not None:
+        # keep the d_ff-sharded hidden sharded through w_down: without this
+        # GSPMD gathers the full [B,T,F] f32 gradient (measured ~1 TB/step
+        # on gemma2 train_4k — see EXPERIMENTS.md SSPerf)
+        h = shard_act(h, "mlp_hidden")
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------- dense block
+def init_dense_block(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ka, km = jax.random.split(key)
+    return {
+        "ln_attn": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attention(ka, cfg, dtype),
+        "ln_mlp": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def dense_block_apply(
+    p: Params,
+    x: jax.Array,
+    cos: jax.Array,
+    sin: jax.Array,
+    cfg: ArchConfig,
+    *,
+    window: Optional[int] = None,
+    cache=None,
+    cache_pos=None,
+    shard_act=None,
+) -> Tuple[jax.Array, Any]:
+    a, new_cache = attention_apply(
+        p["attn"], rms_norm(x, p["ln_attn"], cfg.rms_eps), cos, sin, cfg,
+        window=window, cache=cache, cache_pos=cache_pos, shard_act=shard_act,
+    )
+    x = x + a
+    x = x + mlp_apply(
+        p["mlp"], rms_norm(x, p["ln_mlp"], cfg.rms_eps), cfg.act,
+        shard_act=shard_act,
+    )
+    if shard_act is not None:
+        x = shard_act(x, "residual")
+    return x, new_cache
+
+
+# ------------------------------------------------------------ embedding/head
+def init_embedding(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    ke, kh = jax.random.split(key)
+    v = cfg.padded_vocab
+    p = {"table": (jax.random.normal(ke, (v, cfg.d_model)) * 0.02).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["head"] = (
+            jax.random.normal(kh, (cfg.d_model, v)) * cfg.d_model**-0.5
+        ).astype(dtype)
+    return p
+
+
+def embed(p: Params, tokens: jax.Array, cfg: ArchConfig) -> jax.Array:
+    x = jnp.take(p["table"], tokens, axis=0)
+    if cfg.family == "dense" and cfg.tie_embeddings:  # gemma convention
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    return x
+
+
+def lm_logits(p: Params, x: jax.Array, cfg: ArchConfig) -> jax.Array:
+    w = p["table"].T if cfg.tie_embeddings else p["head"]
+    logits = x @ w.astype(x.dtype)
+    if cfg.final_logit_softcap:
+        c = cfg.final_logit_softcap
+        logits = jnp.tanh(logits / c) * c
+    if cfg.padded_vocab != cfg.vocab:  # mask padded columns out of softmax
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < cfg.vocab, logits, -1e30)
+    return logits
+
+
+def chunked_xent(
+    p: Params,
+    h: jax.Array,
+    labels: jax.Array,
+    cfg: ArchConfig,
+    *,
+    chunk: int = 1024,
+) -> jax.Array:
+    """Mean next-token cross-entropy, computed in T-chunks so the [.., V]
+    logits tensor never materializes for the whole sequence."""
+    b, t, d = h.shape
+    n_chunks = max(1, t // chunk)
+    hc = h.reshape(b, n_chunks, t // n_chunks, d).swapaxes(0, 1)
+    lc = labels.reshape(b, n_chunks, t // n_chunks).swapaxes(0, 1)
+
+    def step(carry, xs):
+        hh, ll = xs
+        logits = lm_logits(p, hh, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(logz - gold), None
+
+    total, _ = jax.lax.scan(step, jnp.float32(0.0), (hc, lc))
+    return total / (b * t)

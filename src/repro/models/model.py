@@ -1,0 +1,556 @@
+"""Model assembly for every assigned architecture family.
+
+One entry point: ``build_model(cfg)`` returns a ``ModelAPI`` with
+``init / loss / forward_hidden / init_cache / decode_step``.  Layer stacks
+are *scanned* (stacked parameter pytrees + ``jax.lax.scan``) so the compiled
+HLO stays one-layer-sized — essential for the 512-device AOT dry-run on CPU.
+
+Scan grouping per family:
+  dense (uniform)        : scan over L blocks
+  gemma2 (alternating)   : scan over L/2 (local, global) pairs
+  moe                    : scan over L blocks (attention + MoE FFN)
+  ssm (mamba2)           : scan over L mamba blocks
+  hybrid (zamba2)        : scan over L/attn_every groups; a *shared*
+                           attention block (one weight set) runs per group
+  encdec (seamless)      : encoder scan + decoder scan (self + cross attn)
+  vlm (qwen2-vl)         : dense decoder over [vision-embeds ; text tokens]
+                           with M-RoPE positions from the frontend stub
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from . import moe as moe_lib
+from . import ssm as ssm_lib
+from .layers import (
+    Params,
+    apply_rope,
+    attention_apply,
+    chunked_xent,
+    dense_block_apply,
+    embed,
+    init_attention,
+    init_dense_block,
+    init_embedding,
+    init_mlp,
+    init_rms_norm,
+    lm_logits,
+    mlp_apply,
+    mrope_angles,
+    rms_norm,
+    rope_angles,
+)
+
+ShardFn = Optional[Callable[[jax.Array, str], jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelCtx:
+    """Per-call context: sharding hook, kernel toggle, EP axis info."""
+
+    shard_act: ShardFn = None
+    use_kernel: bool = False
+    ep_axis: Optional[str] = None
+    ep_size: int = 1
+    mesh: Any = None
+
+
+# =========================================================== block callables
+def _init_moe_block(key, cfg: ArchConfig, dtype) -> Params:
+    ka, km = jax.random.split(key)
+    return {
+        "ln_attn": init_rms_norm(cfg.d_model, dtype),
+        "attn": init_attention(ka, cfg, dtype),
+        "ln_mlp": init_rms_norm(cfg.d_model, dtype),
+        "moe": moe_lib.init_moe_ffn(km, cfg, dtype),
+    }
+
+
+def _moe_block_apply(p, x, cos, sin, cfg, ctx: ModelCtx, cache=None, cache_pos=None):
+    a, new_cache = attention_apply(
+        p["attn"], rms_norm(x, p["ln_attn"], cfg.rms_eps), cos, sin, cfg,
+        cache=cache, cache_pos=cache_pos, shard_act=ctx.shard_act,
+    )
+    x = x + a
+    y, aux = moe_lib.moe_ffn_apply(
+        p["moe"], rms_norm(x, p["ln_mlp"], cfg.rms_eps), cfg,
+        ep_axis=ctx.ep_axis if cache is None else None,
+        ep_size=ctx.ep_size, mesh=ctx.mesh,
+    )
+    x = x + y
+    if ctx.shard_act is not None:
+        x = ctx.shard_act(x, "residual")
+    return x, new_cache, aux
+
+
+# ============================================================== family: LM
+def _lm_init(key, cfg: ArchConfig, dtype) -> Params:
+    keys = jax.random.split(key, 4)
+    p: Params = {"embed": init_embedding(keys[0], cfg, dtype),
+                 "ln_f": init_rms_norm(cfg.d_model, dtype)}
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.alternate_local_global:
+            n_units = cfg.n_layers // 2
+
+            def unit(k):
+                kl, kg = jax.random.split(k)
+                return {
+                    "local": init_dense_block(kl, cfg, dtype),
+                    "global": init_dense_block(kg, cfg, dtype),
+                }
+        else:
+            n_units = cfg.n_layers
+            unit = lambda k: init_dense_block(k, cfg, dtype)
+    elif cfg.family == "moe":
+        n_units = cfg.n_layers
+        unit = lambda k: _init_moe_block(k, cfg, dtype)
+    elif cfg.family == "ssm":
+        n_units = cfg.n_layers
+        unit = lambda k: ssm_lib.init_mamba_block(k, cfg, dtype)
+    elif cfg.family == "hybrid":
+        assert cfg.n_layers % cfg.attn_every == 0
+        n_units = cfg.n_layers // cfg.attn_every
+
+        def unit(k):
+            ks = jax.random.split(k, cfg.attn_every)
+            return jax.tree.map(
+                lambda *xs: jnp.stack(xs),
+                *[ssm_lib.init_mamba_block(kk, cfg, dtype) for kk in ks],
+            )
+
+        p["shared_attn"] = init_dense_block(keys[2], cfg, dtype)
+    else:
+        raise ValueError(cfg.family)
+
+    unit_keys = jax.random.split(keys[1], n_units)
+    p["blocks"] = jax.tree.map(
+        lambda *xs: jnp.stack(xs), *[unit(k) for k in unit_keys]
+    )
+    return p
+
+
+def _positions_angles(cfg: ArchConfig, batch: Dict[str, jax.Array], t: int):
+    if cfg.mrope:
+        pos3 = batch["positions3"]  # [3, B, T]
+        return mrope_angles(pos3, cfg.mrope_sections, cfg.head_dim_, cfg.rope_theta)
+    if cfg.family in ("ssm",):
+        return None, None
+    pos = jnp.arange(t)
+    return rope_angles(pos, cfg.head_dim_, cfg.rope_theta)
+
+
+def _lm_inputs(cfg: ArchConfig, p: Params, batch) -> jax.Array:
+    x = embed(p["embed"], batch["tokens"], cfg)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = jnp.concatenate([batch["vision_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _lm_hidden(
+    p: Params, batch, cfg: ArchConfig, ctx: ModelCtx
+) -> Tuple[jax.Array, jax.Array]:
+    """Full-sequence forward (train/prefill).  Returns (hidden, aux_loss)."""
+    x = _lm_inputs(cfg, p, batch)
+    t = x.shape[1]
+    cos, sin = _positions_angles(cfg, batch, t)
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.alternate_local_global:
+            def body(carry, bp):
+                h, aux = carry
+                h, _ = dense_block_apply(
+                    bp["local"], h, cos, sin, cfg,
+                    window=cfg.sliding_window, shard_act=ctx.shard_act,
+                )
+                h, _ = dense_block_apply(
+                    bp["global"], h, cos, sin, cfg, shard_act=ctx.shard_act,
+                )
+                return (h, aux), None
+        else:
+            def body(carry, bp):
+                h, aux = carry
+                h, _ = dense_block_apply(
+                    bp, h, cos, sin, cfg, shard_act=ctx.shard_act,
+                )
+                return (h, aux), None
+    elif cfg.family == "moe":
+        def body(carry, bp):
+            h, aux = carry
+            h, _, a = _moe_block_apply(bp, h, cos, sin, cfg, ctx)
+            return (h, aux + a), None
+    elif cfg.family == "ssm":
+        def body(carry, bp):
+            h, aux = carry
+            h, _ = ssm_lib.mamba_block_apply(
+                bp, h, cfg, shard_act=ctx.shard_act, use_kernel=ctx.use_kernel
+            )
+            return (h, aux), None
+    elif cfg.family == "hybrid":
+        shared = p["shared_attn"]
+
+        def body(carry, bp):
+            h, aux = carry
+            h, _ = dense_block_apply(
+                shared, h, cos, sin, cfg, shard_act=ctx.shard_act
+            )
+
+            def inner(hh, bpi):
+                hh, _ = ssm_lib.mamba_block_apply(
+                    bpi, hh, cfg, shard_act=ctx.shard_act,
+                    use_kernel=ctx.use_kernel,
+                )
+                return hh, None
+
+            h, _ = jax.lax.scan(inner, h, bp)
+            return (h, aux), None
+    else:
+        raise ValueError(cfg.family)
+
+    # full block remat: backward recomputes each block, so the stash is
+    # one residual stream per layer instead of every intermediate
+    (x, aux), _ = jax.lax.scan(
+        jax.checkpoint(body), (x, jnp.float32(0.0)), p["blocks"]
+    )
+    return rms_norm(x, p["ln_f"], cfg.rms_eps), aux
+
+
+# ------------------------------------------------------------ LM: KV caches
+def _lm_init_cache(cfg: ArchConfig, batch: int, cache_len: int, dtype):
+    hkv, dh = cfg.n_kv_heads, cfg.head_dim_
+
+    def kv(length):
+        return {
+            "k": jnp.zeros((batch, length, hkv, dh), dtype),
+            "v": jnp.zeros((batch, length, hkv, dh), dtype),
+        }
+
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), tree)
+
+    if cfg.family in ("dense", "vlm"):
+        if cfg.alternate_local_global:
+            w = min(cfg.sliding_window, cache_len)
+            return {
+                "local": stack(kv(w), cfg.n_layers // 2),
+                "global": stack(kv(cache_len), cfg.n_layers // 2),
+            }
+        return stack(kv(cache_len), cfg.n_layers)
+    if cfg.family == "moe":
+        return stack(kv(cache_len), cfg.n_layers)
+    if cfg.family == "ssm":
+        return stack(ssm_lib.init_mamba_cache(cfg, batch, dtype), cfg.n_layers)
+    if cfg.family == "hybrid":
+        n_groups = cfg.n_layers // cfg.attn_every
+        return {
+            "mamba": stack(
+                stack(ssm_lib.init_mamba_cache(cfg, batch, dtype), cfg.attn_every),
+                n_groups,
+            ),
+            "shared_kv": stack(kv(cache_len), n_groups),
+        }
+    raise ValueError(cfg.family)
+
+
+def _lm_decode(
+    p: Params, cache, batch, cfg: ArchConfig, ctx: ModelCtx
+) -> Tuple[jax.Array, Any]:
+    """One-token decode.  batch: {'token': [B,1], 'pos': scalar int32}."""
+    tok = batch["token"]
+    pos = batch["pos"]
+    x = embed(p["embed"], tok, cfg)
+    if cfg.mrope:
+        pos3 = jnp.broadcast_to(pos, (3, tok.shape[0], 1))
+        cos, sin = mrope_angles(pos3, cfg.mrope_sections, cfg.head_dim_, cfg.rope_theta)
+    elif cfg.family != "ssm":
+        cos, sin = rope_angles(pos[None], cfg.head_dim_, cfg.rope_theta)
+    else:
+        cos = sin = None
+
+    aux = jnp.float32(0.0)
+    if cfg.family in ("dense", "vlm") and cfg.alternate_local_global:
+        w = cache["local"]["k"].shape[2]
+
+        def body(h, xs):
+            bp, lc, gc = xs
+            h, lc2 = dense_block_apply(
+                bp["local"], h, cos, sin, cfg, window=cfg.sliding_window,
+                cache=lc, cache_pos=jnp.mod(pos, w), shard_act=ctx.shard_act,
+            )
+            h, gc2 = dense_block_apply(
+                bp["global"], h, cos, sin, cfg,
+                cache=gc, cache_pos=pos, shard_act=ctx.shard_act,
+            )
+            return h, (lc2, gc2)
+
+        x, (lc_new, gc_new) = jax.lax.scan(
+            body, x, (p["blocks"], cache["local"], cache["global"])
+        )
+        new_cache = {"local": lc_new, "global": gc_new}
+    elif cfg.family in ("dense", "vlm", "moe"):
+        is_moe = cfg.family == "moe"
+
+        def body(h, xs):
+            bp, kv = xs
+            if is_moe:
+                h, kv2, _ = _moe_block_apply(
+                    bp, h, cos, sin, cfg, ctx, cache=kv, cache_pos=pos
+                )
+            else:
+                h, kv2 = dense_block_apply(
+                    bp, h, cos, sin, cfg,
+                    cache=kv, cache_pos=pos, shard_act=ctx.shard_act,
+                )
+            return h, kv2
+
+        x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            bp, c = xs
+            h, c2 = ssm_lib.mamba_block_apply(
+                bp, h, cfg, cache=c, shard_act=ctx.shard_act
+            )
+            return h, c2
+
+        x, new_cache = jax.lax.scan(body, x, (p["blocks"], cache))
+    elif cfg.family == "hybrid":
+        shared = p["shared_attn"]
+
+        def body(h, xs):
+            bp, mc, skv = xs
+            h, skv2 = dense_block_apply(
+                shared, h, cos, sin, cfg,
+                cache=skv, cache_pos=pos, shard_act=ctx.shard_act,
+            )
+
+            def inner(hh, xsi):
+                bpi, ci = xsi
+                hh, ci2 = ssm_lib.mamba_block_apply(bpi, hh, cfg, cache=ci)
+                return hh, ci2
+
+            h, mc2 = jax.lax.scan(inner, h, (bp, mc))
+            return h, (mc2, skv2)
+
+        x, (mc_new, skv_new) = jax.lax.scan(
+            body, x, (p["blocks"], cache["mamba"], cache["shared_kv"])
+        )
+        new_cache = {"mamba": mc_new, "shared_kv": skv_new}
+    else:
+        raise ValueError(cfg.family)
+
+    x = rms_norm(x, p["ln_f"], cfg.rms_eps)
+    return lm_logits(p["embed"], x, cfg), new_cache
+
+
+# ======================================================== family: enc-dec
+def _init_cross_block(key, cfg: ArchConfig, dtype) -> Params:
+    ka, kc, km = jax.random.split(key, 3)
+    return {
+        "ln_self": init_rms_norm(cfg.d_model, dtype),
+        "self": init_attention(ka, cfg, dtype),
+        "ln_cross": init_rms_norm(cfg.d_model, dtype),
+        "cross": init_attention(kc, cfg, dtype),
+        "ln_mlp": init_rms_norm(cfg.d_model, dtype),
+        "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _cross_attention(p, x, memory, cfg, shard_act=None):
+    from .layers import attention_full  # local import, no cycle
+
+    b, t, d = x.shape
+    hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    q = (x @ p["wq"]).reshape(b, t, hq, dh)
+    k = (memory @ p["wk"]).reshape(b, memory.shape[1], hkv, dh)
+    v = (memory @ p["wv"]).reshape(b, memory.shape[1], hkv, dh)
+    if shard_act is not None:
+        q, k, v = shard_act(q, "attn_q"), shard_act(k, "attn_kv"), shard_act(v, "attn_kv")
+    out = attention_full(q, k, v, causal=False)
+    return out.reshape(b, t, hq * dh) @ p["wo"]
+
+
+def _encdec_init(key, cfg: ArchConfig, dtype) -> Params:
+    k0, k1, k2 = jax.random.split(key, 3)
+    enc_keys = jax.random.split(k1, cfg.n_enc_layers)
+    dec_keys = jax.random.split(k2, cfg.n_layers)
+    return {
+        "embed": init_embedding(k0, cfg, dtype),
+        "enc_blocks": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[init_dense_block(k, cfg, dtype) for k in enc_keys],
+        ),
+        "dec_blocks": jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[_init_cross_block(k, cfg, dtype) for k in dec_keys],
+        ),
+        "ln_enc": init_rms_norm(cfg.d_model, dtype),
+        "ln_f": init_rms_norm(cfg.d_model, dtype),
+    }
+
+
+def _encode(p, src_embeds, cfg, ctx: ModelCtx) -> jax.Array:
+    """Bidirectional (non-causal) encoder over stub frame embeddings."""
+    from .layers import attention_full
+
+    t = src_embeds.shape[1]
+    cos, sin = rope_angles(jnp.arange(t), cfg.head_dim_, cfg.rope_theta)
+
+    def enc_body(h, bp):
+        xn = rms_norm(h, bp["ln_attn"], cfg.rms_eps)
+        ap = bp["attn"]
+        b, tt, _ = xn.shape
+        hq, hkv, dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+        q = apply_rope((xn @ ap["wq"]).reshape(b, tt, hq, dh), cos, sin)
+        k = apply_rope((xn @ ap["wk"]).reshape(b, tt, hkv, dh), cos, sin)
+        v = (xn @ ap["wv"]).reshape(b, tt, hkv, dh)
+        if ctx.shard_act is not None:
+            q = ctx.shard_act(q, "attn_q")
+            k = ctx.shard_act(k, "attn_kv")
+            v = ctx.shard_act(v, "attn_kv")
+        a = attention_full(q, k, v, causal=False).reshape(b, tt, hq * dh) @ ap["wo"]
+        h = h + a
+        h = h + mlp_apply(
+            bp["mlp"], rms_norm(h, bp["ln_mlp"], cfg.rms_eps), cfg.act,
+            shard_act=ctx.shard_act,
+        )
+        if ctx.shard_act is not None:
+            h = ctx.shard_act(h, "residual")
+        return h, None
+
+    x, _ = jax.lax.scan(jax.checkpoint(enc_body), src_embeds, p["enc_blocks"])
+    return rms_norm(x, p["ln_enc"], cfg.rms_eps)
+
+
+def _decode_stack(p, x, memory, cfg, ctx, cos, sin, cache=None, pos=None):
+    def body(h, xs):
+        bp = xs[0] if cache is not None else xs
+        kv = xs[1] if cache is not None else None
+        a, kv2 = attention_apply(
+            bp["self"], rms_norm(h, bp["ln_self"], cfg.rms_eps), cos, sin,
+            cfg, cache=kv, cache_pos=pos, shard_act=ctx.shard_act,
+        )
+        h = h + a
+        h = h + _cross_attention(
+            bp["cross"], rms_norm(h, bp["ln_cross"], cfg.rms_eps), memory,
+            cfg, shard_act=ctx.shard_act,
+        )
+        h = h + mlp_apply(
+            bp["mlp"], rms_norm(h, bp["ln_mlp"], cfg.rms_eps), cfg.act,
+            shard_act=ctx.shard_act,
+        )
+        if ctx.shard_act is not None:
+            h = ctx.shard_act(h, "residual")
+        return h, kv2
+
+    if cache is not None:
+        x, new_cache = jax.lax.scan(body, x, (p["dec_blocks"], cache))
+    else:
+        x, new_cache = jax.lax.scan(jax.checkpoint(body), x, p["dec_blocks"])
+    return rms_norm(x, p["ln_f"], cfg.rms_eps), new_cache
+
+
+def _encdec_hidden(p, batch, cfg, ctx) -> Tuple[jax.Array, jax.Array]:
+    memory = _encode(p, batch["src_embeds"], cfg, ctx)
+    x = embed(p["embed"], batch["tgt_tokens"], cfg)
+    t = x.shape[1]
+    cos, sin = rope_angles(jnp.arange(t), cfg.head_dim_, cfg.rope_theta)
+    x, _ = _decode_stack(p, x, memory, cfg, ctx, cos, sin)
+    return x, jnp.float32(0.0)
+
+
+def _encdec_decode(p, cache, batch, cfg, ctx):
+    """cache: {'kv': stacked self-attn cache, 'memory': [B,T_src,D]}."""
+    pos = batch["pos"]
+    x = embed(p["embed"], batch["token"], cfg)
+    cos, sin = rope_angles(pos[None], cfg.head_dim_, cfg.rope_theta)
+    x, kv_new = _decode_stack(
+        p, x, cache["memory"], cfg, ctx, cos, sin, cache=cache["kv"], pos=pos
+    )
+    logits = lm_logits(p["embed"], x, cfg)
+    return logits, {"kv": kv_new, "memory": cache["memory"]}
+
+
+# ================================================================ public API
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ArchConfig
+    init: Callable[..., Params]
+    hidden: Callable[..., Tuple[jax.Array, jax.Array]]
+    init_cache: Callable[..., Any]
+    decode_step: Callable[..., Tuple[jax.Array, Any]]
+
+    def loss(self, params, batch, ctx: ModelCtx = ModelCtx(), *, aux_weight=0.01):
+        h, aux = self.hidden(params, batch, self.cfg, ctx)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        safe = jnp.maximum(labels, 0)
+        if self.cfg.family == "vlm":
+            # hidden covers [vision ; text]; labels cover text only
+            h = h[:, -labels.shape[1]:, :]
+        ce = _masked_chunked_xent(self._emb(params), h, safe, mask, self.cfg)
+        return ce + aux_weight * aux
+
+    def _emb(self, params):
+        return params["embed"]
+
+
+def _masked_chunked_xent(emb, h, labels, mask, cfg, chunk=1024):
+    b, t, d = h.shape
+    n_chunks = max(1, t // max(1, min(chunk, t)))
+    step_t = t // n_chunks
+    hc = h[:, : n_chunks * step_t].reshape(b, n_chunks, step_t, d).swapaxes(0, 1)
+    lc = labels[:, : n_chunks * step_t].reshape(b, n_chunks, step_t).swapaxes(0, 1)
+    mc = mask[:, : n_chunks * step_t].reshape(b, n_chunks, step_t).swapaxes(0, 1)
+
+    def step(carry, xs):
+        hh, ll, mm = xs
+        logits = lm_logits(emb, hh, cfg).astype(jnp.float32)
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        tot, cnt = carry
+        return (tot + jnp.sum((logz - gold) * mm), cnt + jnp.sum(mm)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.float32(0.0), jnp.float32(0.0)), (hc, lc, mc)
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def build_model(cfg: ArchConfig) -> ModelAPI:
+    if cfg.family == "encdec":
+        return ModelAPI(
+            cfg=cfg,
+            init=lambda key, dtype=jnp.float32: _encdec_init(key, cfg, dtype),
+            hidden=_encdec_hidden,
+            init_cache=lambda batch, cache_len, dtype=jnp.float32: {
+                "kv": jax.tree.map(
+                    lambda x: x,
+                    _stack_kv(cfg, batch, cache_len, dtype, cfg.n_layers),
+                ),
+                "memory": jnp.zeros((batch, cache_len, cfg.d_model), dtype),
+            },
+            decode_step=_encdec_decode,
+        )
+    return ModelAPI(
+        cfg=cfg,
+        init=lambda key, dtype=jnp.float32: _lm_init(key, cfg, dtype),
+        hidden=_lm_hidden,
+        init_cache=lambda batch, cache_len, dtype=jnp.float32: _lm_init_cache(
+            cfg, batch, cache_len, dtype
+        ),
+        decode_step=_lm_decode,
+    )
+
+
+def _stack_kv(cfg, batch, length, dtype, n):
+    kv = {
+        "k": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim_), dtype),
+        "v": jnp.zeros((batch, length, cfg.n_kv_heads, cfg.head_dim_), dtype),
+    }
+    return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), kv)

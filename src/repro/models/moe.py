@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing, and
+explicit expert-parallel all-to-all (the `model` mesh axis owns the expert
+dimension).
+
+The EP data path follows the production pattern: per-shard top-k routing ->
+capacity-bounded dispatch (einsum, no [T,E,C] materialization beyond the
+per-shard mask) -> ``jax.lax.all_to_all`` to the expert owners -> batched
+expert GEMMs -> all_to_all back -> weighted combine.  With ``ep_axis=None``
+(single device / smoke tests) the same math runs without collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import Params, init_mlp, mlp_apply
+
+#: dispatch slots per (token-shard, expert) = tokens * top_k / E * this
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe_ffn(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, f, e = cfg.d_model, cfg.expert_d_ff, cfg.n_experts
+    kr, ke, ks = jax.random.split(key, 3)
+    p: Params = {
+        "router": (jax.random.normal(kr, (d, e)) * d**-0.5).astype(jnp.float32),
+        "w_gate": (jax.random.normal(ke, (e, d, f)) * d**-0.5).astype(dtype),
+        "w_up": (jax.random.normal(jax.random.fold_in(ke, 1), (e, d, f)) * d**-0.5).astype(dtype),
+        "w_down": (jax.random.normal(jax.random.fold_in(ke, 2), (e, f, d)) * f**-0.5).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(
+            ks, d, cfg.expert_d_ff * cfg.n_shared_experts, cfg.act, dtype
+        )
+    return p
+
+
+def _capacity(tokens_per_row: int, cfg: ArchConfig) -> int:
+    c = int(tokens_per_row * cfg.top_k / cfg.n_experts * CAPACITY_FACTOR)
+    return max(1, c)
+
+
+def moe_ffn_apply(
+    p: Params,
+    x: jax.Array,  # [B, S, D]  (global view; S shards over ep_axis)
+    cfg: ArchConfig,
+    *,
+    ep_axis: Optional[str] = None,
+    ep_size: int = 1,
+    mesh=None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE FFN.  When ``ep_axis`` is set (training/prefill on
+    a model-sharded mesh) the body runs under a partial-manual shard_map:
+    tokens split over ``ep_axis``, experts owned by their shard, explicit
+    all_to_all both ways.  Otherwise (single device, or single-token decode
+    where S=1 cannot shard) the same math runs under GSPMD auto."""
+    import jax as _jax
+    from jax.sharding import PartitionSpec as P
+
+    if ep_axis is None or ep_size <= 1 or x.shape[1] % ep_size != 0:
+        return _moe_body(p, x, cfg, None, 1)
+
+    pspecs = {
+        "router": P(),
+        "w_gate": P(ep_axis, None, None),
+        "w_up": P(ep_axis, None, None),
+        "w_down": P(ep_axis, None, None),
+    }
+    p_pass = dict(p)
+    if cfg.n_shared_experts:
+        pspecs["shared"] = _jax.tree.map(lambda _: P(), p["shared"])
+        # replicated manual inputs cross the boundary in f32 so their AD
+        # psum is 32-bit (XLA CPU cannot clone 16-bit reducers that carry a
+        # Shardy constraint — see DESIGN.md).
+        p_pass["shared"] = _jax.tree.map(
+            lambda w: w.astype(jnp.float32), p["shared"]
+        )
+
+    fn = _jax.shard_map(
+        lambda pp, xx: _moe_body(pp, xx, cfg, ep_axis, ep_size),
+        mesh=mesh,
+        in_specs=(pspecs, P(None, ep_axis, None)),
+        out_specs=(P(None, ep_axis, None), P()),
+        axis_names={ep_axis},
+        check_vma=False,
+    )
+    y, aux = fn(p_pass, x)
+    return y.astype(x.dtype), aux
+
+
+def _moe_body(
+    p: Params,
+    x: jax.Array,
+    cfg: ArchConfig,
+    ep_axis: Optional[str],
+    ep_size: int,
+) -> Tuple[jax.Array, jax.Array]:
+    bsz, s, d = x.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = _capacity(s, cfg)
+
+    # ---------------------------------------------------------------- router
+    logits = x.astype(jnp.float32) @ p["router"]            # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_ids = jax.lax.top_k(probs, k)                # [B,S,k]
+    top_w = top_p / jnp.maximum(
+        jnp.sum(top_p, axis=-1, keepdims=True), 1e-9
+    )
+
+    # load-balance auxiliary loss (Switch-style)
+    me = jnp.mean(probs, axis=(0, 1))                       # [E]
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(top_ids, e), axis=2), axis=(0, 1)
+    ) / k
+    aux = e * jnp.sum(me * ce)
+
+    # --------------------------------------------------- dispatch (capacity)
+    onehot = jax.nn.one_hot(top_ids, e, dtype=jnp.float32)  # [B,S,k,E]
+    # position of each (token, choice) within its expert's buffer, per row
+    pos = jnp.cumsum(onehot.reshape(bsz, s * k, e), axis=1).reshape(
+        bsz, s, k, e
+    ) - onehot
+    keep = (pos < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(
+        jnp.sum(pos * onehot, axis=-1).astype(jnp.int32), cap, dtype=jnp.float32
+    )                                                       # [B,S,k,C]
+    disp = jnp.einsum("bske,bskc->bsec", jnp.where(keep, onehot, 0.0), pos_oh)
+    comb = jnp.einsum(
+        "bske,bskc,bsk->bsec", jnp.where(keep, onehot, 0.0), pos_oh, top_w
+    )
+
+    x_send = jnp.einsum("bsec,bsd->becd", disp, x.astype(jnp.float32))
+    x_send = x_send.astype(x.dtype)                         # [B,E,C,D]
+
+    # ------------------------------------------------------------ all_to_all
+    if ep_axis is not None and ep_size > 1:
+        # [B, E, C, D] -> [B, E/ep, ep*C, D]: every shard receives the slots
+        # destined for its local experts from all shards.
+        x_recv = jax.lax.all_to_all(
+            x_send, ep_axis, split_axis=1, concat_axis=2, tiled=True
+        )
+    else:
+        x_recv = x_send                                     # [B, E_loc, C', D]
+
+    # --------------------------------------------------------- expert GEMMs
+    def ffn(xe):  # xe: [B, E_loc, C', D]
+        gate = jnp.einsum("becd,edf->becf", xe, p["w_gate"])
+        up = jnp.einsum("becd,edf->becf", xe, p["w_up"])
+        act = jax.nn.silu(gate) if cfg.act == "silu" else jax.nn.gelu(gate)
+        return jnp.einsum("becf,efd->becd", act * up, p["w_down"])
+
+    y_recv = ffn(x_recv)
+
+    if ep_axis is not None and ep_size > 1:
+        y_send = jax.lax.all_to_all(
+            y_recv, ep_axis, split_axis=2, concat_axis=1, tiled=True
+        )
+    else:
+        y_send = y_recv
+
+    y = jnp.einsum("bsec,becd->bsd", comb, y_send.astype(jnp.float32))
+
+    # --------------------------------------------------------- shared experts
+    if cfg.n_shared_experts:
+        y = y + mlp_apply(p["shared"], x, cfg.act).astype(jnp.float32)
+    aux = aux.astype(jnp.float32)
+    if ep_axis is not None and ep_size > 1:
+        aux = jax.lax.pmean(aux, ep_axis)
+    return y.astype(x.dtype), aux

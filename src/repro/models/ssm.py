@@ -1,0 +1,247 @@
+"""Mamba2 (SSD — state-space duality) blocks.  [arXiv:2405.21060]
+
+``ssd_chunked_ref`` is the pure-jnp chunked SSD scan (also the oracle for
+``repro.kernels.ssd_scan``): within-chunk attention-like matmuls (MXU
+friendly) + an inter-chunk recurrent state pass.
+
+Parameter layout note: the published model fuses (z, x, B, C, dt) into one
+``in_proj`` and convolves [x;B;C] jointly.  We store the projections (and the
+depthwise conv, which factorizes exactly per channel) *separately* so tensor
+parallelism can shard the head-structured pieces (z, x, dt — d_inner/heads
+divisible by the mesh) while keeping the small B/C/state pieces replicated.
+Mathematically identical to the fused layout.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from .layers import Params, init_rms_norm, rms_norm
+
+
+# ----------------------------------------------------------------- SSD core
+def segsum(da_cs: jax.Array) -> jax.Array:
+    """Lower-triangular pairwise decay: L[..., q, k] = exp(cs_q - cs_k), q>=k.
+    da_cs: [..., Q] cumulative sum of (dt * A) within a chunk."""
+    q = da_cs.shape[-1]
+    diff = da_cs[..., :, None] - da_cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool))
+    return jnp.where(mask, jnp.exp(diff), 0.0)
+
+
+def ssd_chunked_ref(
+    x: jax.Array,     # [B, T, H, P]
+    dt: jax.Array,    # [B, T, H]  (post-softplus)
+    a: jax.Array,     # [H]        (negative)
+    b_: jax.Array,    # [B, T, N]
+    c_: jax.Array,    # [B, T, N]
+    *,
+    chunk: int,
+    initial_state: Optional[jax.Array] = None,  # [B, H, P, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.  Returns (y [B,T,H,P], final_state [B,H,P,N])."""
+    bsz, t, h, p = x.shape
+    n = b_.shape[-1]
+    assert t % chunk == 0, (t, chunk)
+    nc, q = t // chunk, chunk
+    f32 = jnp.float32
+
+    xc = x.reshape(bsz, nc, q, h, p).astype(f32)
+    dtc = dt.reshape(bsz, nc, q, h).astype(f32)
+    bc = b_.reshape(bsz, nc, q, n).astype(f32)
+    cc = c_.reshape(bsz, nc, q, n).astype(f32)
+    da = dtc * a.astype(f32)[None, None, None, :]          # [B,C,Q,H]
+    da_cs = jnp.cumsum(da, axis=2)                          # [B,C,Q,H]
+
+    # ---- intra-chunk (quadratic within chunk, like masked attention)
+    lmat = segsum(jnp.moveaxis(da_cs, -1, -2))              # [B,C,H,Q,Q]
+    cb = jnp.einsum("bcqn,bckn->bcqk", cc, bc)              # [B,C,Q,K]
+    xdt = xc * dtc[..., None]                               # [B,C,Q,H,P]
+    y_diag = jnp.einsum("bcqk,bchqk,bckhp->bcqhp", cb, lmat, xdt)
+
+    # ---- chunk boundary states
+    decay_last = jnp.exp(da_cs[:, :, -1:, :] - da_cs)       # [B,C,Q,H]
+    states = jnp.einsum("bckn,bckh,bckhp->bchpn", bc, decay_last, xdt)
+
+    # ---- inter-chunk recurrence
+    chunk_decay = jnp.exp(jnp.sum(da, axis=2))              # [B,C,H]
+    s0 = (
+        jnp.zeros((bsz, h, p, n), f32)
+        if initial_state is None
+        else initial_state.astype(f32)
+    )
+
+    def step(s_prev, inputs):
+        st, dec = inputs  # [B,H,P,N], [B,H]
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev  # emit the state *entering* this chunk
+
+    s_final, s_prev_all = jax.lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    s_prev = jnp.moveaxis(s_prev_all, 0, 1)                 # [B,C,H,P,N]
+
+    # ---- off-diagonal contribution from carried states
+    in_decay = jnp.exp(da_cs)                               # [B,C,Q,H]
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cc, in_decay, s_prev)
+
+    y = (y_diag + y_off).reshape(bsz, t, h, p)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode_step(
+    state: jax.Array,  # [B, H, P, N]
+    x: jax.Array,      # [B, H, P]
+    dt: jax.Array,     # [B, H]
+    a: jax.Array,      # [H]
+    b_: jax.Array,     # [B, N]
+    c_: jax.Array,     # [B, N]
+) -> Tuple[jax.Array, jax.Array]:
+    """Single-token recurrent update.  Returns (y [B,H,P], new_state)."""
+    f32 = jnp.float32
+    da = dt.astype(f32) * a.astype(f32)[None, :]            # [B,H]
+    dec = jnp.exp(da)[:, :, None, None]
+    add = (dt.astype(f32)[:, :, None] * x.astype(f32))[..., None] * b_.astype(
+        f32
+    )[:, None, None, :]
+    new_state = state.astype(f32) * dec + add
+    y = jnp.einsum("bhpn,bn->bhp", new_state, c_.astype(f32))
+    return y.astype(x.dtype), new_state.astype(state.dtype)
+
+
+# -------------------------------------------------------------- mamba2 block
+def init_mamba_block(key, cfg: ArchConfig, dtype=jnp.float32) -> Params:
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    keys = jax.random.split(key, 6)
+    s = d**-0.5
+    return {
+        "ln": init_rms_norm(d, dtype),
+        "w_z": (jax.random.normal(keys[0], (d, di)) * s).astype(dtype),
+        "w_x": (jax.random.normal(keys[1], (d, di)) * s).astype(dtype),
+        "w_b": (jax.random.normal(keys[2], (d, n)) * s).astype(dtype),
+        "w_c": (jax.random.normal(keys[3], (d, n)) * s).astype(dtype),
+        "w_dt": (jax.random.normal(keys[4], (d, h)) * s).astype(dtype),
+        "conv_x": (jax.random.normal(jax.random.fold_in(keys[5], 0), (cfg.ssm_conv, di)) * 0.2).astype(dtype),
+        "conv_b": (jax.random.normal(jax.random.fold_in(keys[5], 1), (cfg.ssm_conv, n)) * 0.2).astype(dtype),
+        "conv_c": (jax.random.normal(jax.random.fold_in(keys[5], 2), (cfg.ssm_conv, n)) * 0.2).astype(dtype),
+        "conv_x_bias": jnp.zeros((di,), dtype),
+        "conv_b_bias": jnp.zeros((n,), dtype),
+        "conv_c_bias": jnp.zeros((n,), dtype),
+        "a_log": jnp.zeros((h,), dtype),           # A = -exp(a_log) = -1
+        "d_skip": jnp.ones((h,), dtype),
+        "dt_bias": jnp.zeros((h,), dtype),
+        "norm": init_rms_norm(di, dtype),
+        "out_proj": (jax.random.normal(jax.random.fold_in(keys[5], 3), (di, d)) * di**-0.5).astype(dtype),
+    }
+
+
+def _causal_conv(xin: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  xin: [B, T, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xin, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(
+        pad[:, i : i + xin.shape[1], :] * w[i][None, None, :] for i in range(k)
+    )
+    return jax.nn.silu(out + b[None, None, :])
+
+
+def _conv_step(hist: jax.Array, new: jax.Array, w: jax.Array, b: jax.Array):
+    """Single-token depthwise conv.  hist: [B, K-1, C]; new: [B, 1, C].
+    Returns (out [B, C], new_hist [B, K-1, C])."""
+    window = jnp.concatenate([hist, new], axis=1)  # [B, K, C]
+    out = jnp.einsum(
+        "bkc,kc->bc", window.astype(jnp.float32), w.astype(jnp.float32)
+    )
+    return jax.nn.silu(out + b.astype(jnp.float32)), window[:, 1:, :]
+
+
+def mamba_block_apply(
+    p: Params,
+    x: jax.Array,  # [B, T, D]
+    cfg: ArchConfig,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    shard_act=None,
+    use_kernel: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """Pre-norm residual Mamba2 block.  cache = {'conv_x','conv_b','conv_c',
+    'state'} for single-token decode."""
+    bsz, t, d = x.shape
+    di, n, h, pd = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    res = x
+    x = rms_norm(x, p["ln"], cfg.rms_eps)
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    br = x @ p["w_b"]
+    cr = x @ p["w_c"]
+    dt_raw = x @ p["w_dt"]
+    dt = jax.nn.softplus(dt_raw + p["dt_bias"][None, None, :].astype(dt_raw.dtype))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+
+    new_cache: Optional[Dict[str, jax.Array]] = None
+    if cache is None:
+        xc = _causal_conv(xr, p["conv_x"], p["conv_x_bias"])
+        b_ = _causal_conv(br, p["conv_b"], p["conv_b_bias"])
+        c_ = _causal_conv(cr, p["conv_c"], p["conv_c_bias"])
+        xs = xc.reshape(bsz, t, h, pd)
+        if shard_act is not None:
+            xs = shard_act(xs, "ssm_x")
+        pad = (-t) % cfg.ssm_chunk  # causality: padded tail never affects y[:t]
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dtp = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            b_ = jnp.pad(b_, ((0, 0), (0, pad), (0, 0)))
+            c_ = jnp.pad(c_, ((0, 0), (0, pad), (0, 0)))
+        else:
+            dtp = dt
+        if use_kernel:
+            from repro.kernels import ops as kops
+
+            y, _ = kops.ssd_scan(xs, dtp, a, b_, c_, chunk=cfg.ssm_chunk)
+        else:
+            y, _ = ssd_chunked_ref(xs, dtp, a, b_, c_, chunk=cfg.ssm_chunk)
+        if pad:
+            y, xs = y[:, :t], xs[:, :t]
+        y = y + p["d_skip"].astype(y.dtype)[None, None, :, None] * xs
+    else:
+        xo, hx = _conv_step(cache["conv_x"], xr, p["conv_x"], p["conv_x_bias"])
+        bo, hb = _conv_step(cache["conv_b"], br, p["conv_b"], p["conv_b_bias"])
+        co, hc = _conv_step(cache["conv_c"], cr, p["conv_c"], p["conv_c_bias"])
+        xs = xo.astype(x.dtype).reshape(bsz, h, pd)
+        y1, new_state = ssd_decode_step(
+            cache["state"], xs, dt[:, 0, :], a,
+            bo.astype(x.dtype), co.astype(x.dtype),
+        )
+        y = (y1 + p["d_skip"].astype(y1.dtype)[None, :, None] * xs)[:, None]
+        new_cache = {
+            "conv_x": hx.astype(x.dtype),
+            "conv_b": hb.astype(x.dtype),
+            "conv_c": hc.astype(x.dtype),
+            "state": new_state,
+        }
+
+    y = y.reshape(bsz, t, di)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.rms_eps)
+    out = y @ p["out_proj"]
+    out = res + out
+    if shard_act is not None:
+        out = shard_act(out, "residual")
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> Dict[str, jax.Array]:
+    k = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, k, cfg.d_inner), dtype),
+        "conv_b": jnp.zeros((batch, k, cfg.ssm_state), dtype),
+        "conv_c": jnp.zeros((batch, k, cfg.ssm_state), dtype),
+        "state": jnp.zeros(
+            (batch, cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state), dtype
+        ),
+    }

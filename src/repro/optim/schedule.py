@@ -1,0 +1,20 @@
+"""Learning-rate schedules."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, *, base_lr: float, warmup: int):
+    s = step.astype(jnp.float32)
+    return base_lr * jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+
+
+def cosine_schedule(
+    step, *, base_lr: float, warmup: int, total: int, min_frac: float = 0.1
+):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (s + 1.0) / max(1, warmup))
+    prog = jnp.clip((s - warmup) / max(1, total - warmup), 0.0, 1.0)
+    cos = min_frac + (1.0 - min_frac) * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base_lr * warm * cos

@@ -1,0 +1,5 @@
+from .gpipe import (  # noqa: F401
+    pipeline_decode,
+    pipeline_forward,
+    stack_pipeline_params,
+)

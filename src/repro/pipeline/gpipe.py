@@ -1,0 +1,163 @@
+"""GPipe microbatch pipelining as differentiable jax.lax control flow.
+
+The forward pipeline is a ``lax.scan`` over schedule ticks inside a
+partial-manual ``shard_map``: every tick each stage (a) reads its input —
+fresh microbatch on stage 0, the ``ppermute``'d activation elsewhere —
+(b) runs its layer slice, (c) forwards the activation one stage down the
+(possibly multi-axis) pipeline.  ``jax.grad`` through the scan + ppermute
+yields the exact reverse (backward) pipeline — this is GPipe's fill/steady/
+drain schedule expressed to XLA, with activation transfer of microbatch i
+overlapping compute of microbatch i+1 by construction.
+
+The pipeline axis may be a *tuple* of mesh axes, e.g. ``("pod", "model")``:
+stages are laid out pod-major, so the stage-15 -> stage-16 edge is exactly
+the low-bandwidth cross-pod (cross-region) link — the placement the paper's
+Pathfinder produces.
+
+Geo/BACE mapping: one pipeline stage group per region, ``n_{j,r}`` stages per
+region (contiguous), WAN edge = pod-axis ppermute.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Axis = Union[str, Tuple[str, ...]]
+
+
+def _axis_tuple(axis: Axis) -> Tuple[str, ...]:
+    return (axis,) if isinstance(axis, str) else tuple(axis)
+
+
+def linear_stage_index(axis: Axis) -> jax.Array:
+    """Linearized stage id over the (possibly tuple) pipeline axis."""
+    names = _axis_tuple(axis)
+    idx = jnp.int32(0)
+    for name in names:
+        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+    return idx
+
+
+def pipeline_size(axis: Axis) -> int:
+    names = _axis_tuple(axis)
+    out = 1
+    for name in names:
+        out *= jax.lax.axis_size(name)
+    return out
+
+
+def _shift_perm(n: int):
+    return [(i, i + 1) for i in range(n - 1)]
+
+
+def stack_pipeline_params(blocks: Any, n_stages: int) -> Any:
+    """[L, ...]-stacked block params -> [S, L/S, ...] stage-major stacking."""
+    def reshape(x):
+        l = x.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return x.reshape((n_stages, l // n_stages) + x.shape[1:])
+
+    return jax.tree.map(reshape, blocks)
+
+
+def pipeline_forward(
+    stage_params: Any,            # per-device slice: [1, L/S, ...] leaves
+    microbatches: jax.Array,      # [M, mb, T] tokens (auto-sharded on mb)
+    *,
+    axis: Axis,
+    n_stages: int,
+    first_fn: Callable[[jax.Array], jax.Array],   # tokens -> embeddings
+    stage_fn: Callable[[Any, jax.Array], jax.Array],
+    act_shape: Tuple[int, ...],   # (mb, T, D) activation shape
+    act_dtype=jnp.bfloat16,
+) -> jax.Array:
+    """Runs the microbatched pipeline; returns last-stage activations
+    [M, mb, T, D] (garbage on other stages — select by stage outside)."""
+    m = microbatches.shape[0]
+    names = _axis_tuple(axis)
+    stage = linear_stage_index(axis)
+    perm = _shift_perm(n_stages)
+    n_ticks = m + n_stages - 1
+
+    params_local = jax.tree.map(lambda x: x[0], stage_params)
+
+    def tick(carry, t):
+        state = carry
+        mb_idx = jnp.clip(t, 0, m - 1)
+        tok = jax.lax.dynamic_index_in_dim(microbatches, mb_idx, 0, keepdims=False)
+        x0 = first_fn(tok).astype(act_dtype)
+        x_in = jnp.where(stage == 0, x0, state)
+        y = stage_fn(params_local, x_in).astype(act_dtype)
+        state_next = jax.lax.ppermute(y, axis_name=names, perm=perm)
+        return state_next, y
+
+    state0 = jnp.zeros(act_shape, act_dtype)
+    _, ys = jax.lax.scan(tick, state0, jnp.arange(n_ticks))
+    # last stage emits microbatch m at tick m + n_stages - 1
+    return ys[n_stages - 1 :]
+
+
+def pipeline_decode(
+    stage_params: Any,
+    caches: Any,                  # leaves [1, L/S, M, mb, ...] per device
+    tokens: jax.Array,            # [M, mb, 1]
+    pos: jax.Array,               # scalar int32
+    *,
+    axis: Axis,
+    n_stages: int,
+    first_fn: Callable[[jax.Array], jax.Array],
+    stage_fn: Callable[[Any, Any, jax.Array, jax.Array], Tuple[jax.Array, Any]],
+    act_shape: Tuple[int, ...],
+    act_dtype=jnp.bfloat16,
+) -> Tuple[jax.Array, Any]:
+    """One pipelined decode step over M batch-microbatches.
+
+    ``stage_fn(params, cache_mb, x, pos) -> (y, new_cache_mb)`` where
+    ``cache_mb`` is the cache slice of one microbatch.  Returns last-stage
+    hidden [M, mb, 1, D] and updated caches.
+    """
+    m = tokens.shape[0]
+    names = _axis_tuple(axis)
+    stage = linear_stage_index(axis)
+    perm = _shift_perm(n_stages)
+    n_ticks = m + n_stages - 1
+    params_local = jax.tree.map(lambda x: x[0], stage_params)
+    caches_local = jax.tree.map(lambda x: x[0], caches)
+
+    def tick(carry, t):
+        state, cache = carry
+        in_idx = jnp.clip(t, 0, m - 1)
+        # the microbatch THIS stage works on this tick
+        my_idx = jnp.clip(t - stage, 0, m - 1)
+        tok = jax.lax.dynamic_index_in_dim(tokens, in_idx, 0, keepdims=False)
+        x0 = first_fn(tok).astype(act_dtype)
+        x_in = jnp.where(stage == 0, x0, state)
+        cache_mb = jax.tree.map(
+            lambda c: jax.lax.dynamic_index_in_dim(c, my_idx, 1, keepdims=False),
+            cache,
+        )
+        y, cache_mb2 = stage_fn(params_local, cache_mb, x_in, pos)
+        y = y.astype(act_dtype)
+        active = (t >= stage) & (t - stage <= m - 1)
+        cache = jax.tree.map(
+            lambda c, c2: jax.lax.dynamic_update_index_in_dim(
+                c,
+                jnp.where(active, c2, jax.lax.dynamic_index_in_dim(c, my_idx, 1, keepdims=False)).astype(c.dtype),
+                my_idx,
+                1,
+            ),
+            cache,
+            cache_mb2,
+        )
+        state_next = jax.lax.ppermute(y, axis_name=names, perm=perm)
+        return (state_next, cache), y
+
+    state0 = jnp.zeros(act_shape, act_dtype)
+    (_, caches_new), ys = jax.lax.scan(
+        tick, (state0, caches_local), jnp.arange(n_ticks)
+    )
+    caches_new = jax.tree.map(lambda x: x[None], caches_new)
+    return ys[n_stages - 1 :], caches_new

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# NOTE: no --xla_force_host_platform_device_count here — smoke tests and
+# benches see the 1 real CPU device.  Multi-device distribution tests spawn
+# subprocesses that set the flag themselves (see test_distributed.py), and
+# the dry-run sets 512 in launch/dryrun.py only.
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

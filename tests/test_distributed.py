@@ -1,0 +1,156 @@
+"""Distribution-layer tests.  These need >1 device, so each case runs in a
+subprocess with its own --xla_force_host_platform_device_count (the main
+pytest process keeps the single real CPU device, per the dry-run contract)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 420) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    return proc.stdout
+
+
+def test_pipeline_matches_sequential_reference():
+    """GPipe pipeline loss+grads == plain sequential execution."""
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.configs import get_config
+        from repro.launch import steps as S
+        from repro.launch.mesh import make_debug_mesh
+        from repro.models.model import build_model, ModelCtx
+        from repro.models.layers import rms_norm, chunked_xent
+        from repro.pipeline import stack_pipeline_params
+
+        mesh = make_debug_mesh()
+        cfg = dataclasses.replace(get_config("qwen1.5-32b").reduced(), pp_stages=2)
+        b, t = 8, 32
+        api = build_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), jnp.float32)
+        toks = jax.random.randint(jax.random.PRNGKey(1), (b, t), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+
+        # reference: single-device loss
+        ref_loss = float(api.loss(params, batch))
+        ref_grads = jax.grad(lambda p: api.loss(p, batch))(params)
+
+        # pipeline loss
+        pp_params = dict(params)
+        pp_params["blocks"] = stack_pipeline_params(params["blocks"], 2)
+        train_step, _, lay = S.build_pp_train(cfg, mesh, multi_pod=False,
+                                              batch=b, seq=t, dtype=jnp.float32)
+        # extract just the loss via the internal fn: rebuild loss path
+        from repro.launch.steps import _pp_forward_hidden
+        def pp_loss(p, batch):
+            h = _pp_forward_hidden(cfg, p, batch["tokens"], lay, mesh, t,
+                                   False, jnp.float32)
+            lbl = batch["labels"].reshape(lay.m_ub, lay.mb, t).reshape(-1, t)
+            return chunked_xent(p["embed"], h, lbl, cfg)
+        with jax.set_mesh(mesh):
+            loss = float(jax.jit(pp_loss)(pp_params, batch))
+            grads = jax.jit(jax.grad(pp_loss))(pp_params, batch)
+        assert abs(loss - ref_loss) < 1e-4, (loss, ref_loss)
+
+        # microbatch-order invariance: labels were reordered identically, so
+        # grads must match the sequential reference
+        g1 = np.asarray(grads["embed"]["table"])
+        g2 = np.asarray(ref_grads["embed"]["table"])
+        np.testing.assert_allclose(g1, g2, atol=2e-4)
+        gb1 = np.asarray(jax.tree.leaves(grads["blocks"])[0])
+        gb2 = np.asarray(jax.tree.leaves(
+            stack_pipeline_params(ref_grads["blocks"], 2))[0])
+        np.testing.assert_allclose(gb1, gb2, atol=2e-4)
+        print("pipeline==sequential OK", loss, ref_loss)
+    """)
+
+
+def test_compressed_pod_gradients_close_to_exact():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed.compression import compressed_pmean
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        g = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 33))
+
+        def f(g):
+            out = compressed_pmean({"w": g}, "pod", 2)
+            return out["w"]
+        with jax.set_mesh(mesh):
+            got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
+                          out_specs=P("pod"), axis_names={"pod"},
+                          check_vma=False))(g)
+        want = jnp.broadcast_to(jnp.mean(g.reshape(2, 1, 64, 33), 0), g.shape)
+        err = float(jnp.max(jnp.abs(got - want)))
+        rng = float(jnp.max(jnp.abs(want)))
+        assert err < 0.02 * rng, (err, rng)  # int8 quantization tolerance
+        print("compressed pmean OK", err)
+    """)
+
+
+def test_moe_ep_all_to_all_matches_single_device():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np
+        from repro.configs import get_config
+        from repro.models import moe as moe_mod
+        from repro.models.moe import moe_ffn_apply, init_moe_ffn
+        # generous capacity so shard-local vs global drop behaviour agrees
+        moe_mod.CAPACITY_FACTOR = 16.0
+        mesh = jax.make_mesh((2, 2), ("data", "model"))
+        cfg = get_config("deepseek-moe-16b").reduced()
+        p = init_moe_ffn(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
+
+        y_ref, aux_ref = moe_ffn_apply(p, x, cfg)  # no EP
+        with jax.set_mesh(mesh):
+            y_ep, aux_ep = jax.jit(lambda p, x: moe_ffn_apply(
+                p, x, cfg, ep_axis="model", ep_size=2, mesh=mesh))(p, x)
+        # EP capacity is per-shard so borderline drops can differ; the bulk
+        # of tokens must agree.
+        diff = np.abs(np.asarray(y_ep) - np.asarray(y_ref)).max(axis=-1)
+        frac_same = float((diff < 1e-4).mean())
+        assert frac_same > 0.99, frac_same
+        print("moe EP OK, agreement:", frac_same)
+    """)
+
+
+def test_train_step_runs_on_debug_mesh_all_strategies():
+    run_sub("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from repro.configs import get_config
+        from repro.launch.mesh import make_debug_mesh
+        from repro.launch.train import build_everything
+        from repro.data import SyntheticLM, make_batch_iterator
+        from repro.launch import steps as S
+
+        for arch in ("qwen1.5-32b", "gemma2-2b", "deepseek-moe-16b", "mamba2-2.7b"):
+            cfg = get_config(arch).reduced()
+            if cfg.model_axis == "pp":
+                cfg = dataclasses.replace(cfg, pp_stages=2)
+            mesh = make_debug_mesh()
+            state, step_fn, _ = build_everything(
+                cfg, mesh, batch=8, seq=32, multi_pod=False, dtype=jnp.float32)
+            src = SyntheticLM(vocab=cfg.vocab, seq_len=32, batch=8)
+            bspec = S.batch_axis_spec(mesh, False, 8)
+            it = make_batch_iterator(src, cfg, mesh, bspec)
+            losses = []
+            with jax.set_mesh(mesh):
+                for i in range(3):
+                    state, loss = step_fn(state, next(it))
+                    losses.append(float(loss))
+            assert all(np.isfinite(l) for l in losses), (arch, losses)
+            print(arch, "losses:", [round(l, 3) for l in losses])
+    """, timeout=560)

@@ -1,0 +1,185 @@
+"""Control-plane behaviour tests: Eqs. (1)-(13), Alg. 1/2, simulator."""
+
+import math
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    CRLCFPolicy,
+    CRLDFPolicy,
+    ClusterState,
+    JobProfile,
+    JobSpec,
+    LCFPolicy,
+    LDFPolicy,
+    ModelSpec,
+    Region,
+    bottleneck_delta,
+    build_placement,
+    cost_min_allocate,
+    electricity_cost,
+    execution_time,
+    find_placement,
+    iteration_time,
+    paper_cluster,
+    paper_jobs,
+    paper_profiles,
+    priority_scores,
+    simulate,
+    uniform_allocate,
+)
+
+
+def tiny_cluster():
+    regions = [
+        Region("a", 8, 0.10),
+        Region("b", 4, 0.20),
+        Region("c", 2, 0.30),
+    ]
+    gbps = {("a", "b"): 100.0, ("b", "c"): 50.0, ("a", "c"): 10.0}
+    return ClusterState.build(regions, gbps, symmetric=True)
+
+
+def tiny_profile(iters=10, layers=8, params=1e9, batch=16):
+    spec = JobSpec(
+        job_id=0,
+        model=ModelSpec("m", params, layers, 1024, batch),
+        iterations=iters,
+    )
+    return JobProfile(spec, gpu_flops=300e12)
+
+
+# ------------------------------------------------------------------ Eq. 1-4
+def test_iteration_time_structure():
+    prof = tiny_profile()
+    cl = tiny_cluster()
+    p = build_placement(prof, cl, ["a"], {"a": 4})
+    t_comp = prof.t_comp(4)
+    m = prof.spec.model.microbatches
+    expected = (sum(p.comm_times) + 4 * t_comp + (m - 1) * bottleneck_delta(prof, p)) * 2
+    assert iteration_time(prof, p) == pytest.approx(expected)
+    assert execution_time(prof, p) == pytest.approx(10 * expected)
+
+
+def test_cost_accrues_only_while_running():
+    prof = tiny_profile()
+    cl = tiny_cluster()
+    p = build_placement(prof, cl, ["a"], {"a": 4})
+    c = electricity_cost(prof, p, cl)
+    rate = 0.10 * prof.gpu_kw * 4 / 3600.0
+    assert c == pytest.approx(execution_time(prof, p) * rate)
+
+
+def test_t_comp_decreases_then_overheads_dominate():
+    prof = tiny_profile(layers=64, params=50e9)
+    ts = [prof.t_iter_ideal(k) for k in range(prof.min_gpus, prof.max_gpus + 1)]
+    k_star = prof.optimal_gpus()
+    assert prof.min_gpus <= k_star <= prof.max_gpus
+    assert min(ts) == pytest.approx(prof.t_iter_ideal(k_star))
+
+
+# -------------------------------------------------------------------- Alg. 2
+def test_cost_min_allocator_fills_cheapest_first():
+    cl = tiny_cluster()
+    alloc = cost_min_allocate(cl, ["c", "a", "b"], 10)
+    assert alloc["a"] == 8  # cheapest filled to capacity
+    assert all(v >= 1 for v in alloc.values())
+    assert sum(alloc.values()) == 10
+
+
+def test_cost_min_allocator_requires_continuity():
+    cl = tiny_cluster()
+    with pytest.raises(ValueError):
+        cost_min_allocate(cl, ["a", "b"], 1)  # < one GPU per region
+
+
+def test_uniform_allocator_spreads():
+    cl = tiny_cluster()
+    alloc = uniform_allocate(cl, ["a", "b"], 6)
+    assert alloc == {"a": 3, "b": 3}
+
+
+# -------------------------------------------------------------------- Alg. 1
+def test_pathfinder_single_region_fast_path():
+    cl = tiny_cluster()
+    prof = tiny_profile(layers=8)
+    placement = find_placement(prof, cl, k_star=4)
+    assert placement.n_regions == 1
+    # cheapest region with capacity wins
+    assert placement.path == ("a",)
+
+
+def test_pathfinder_multi_region_respects_bandwidth():
+    cl = tiny_cluster()
+    prof = tiny_profile(layers=16, params=20e9)
+    placement = find_placement(prof, cl, k_star=12)
+    assert placement is not None
+    assert placement.total_gpus <= 12
+    # every crossing edge sustains b_j: comm time <= compute time
+    t_comp = prof.t_comp(placement.total_gpus)
+    for t in placement.comm_times:
+        assert t <= t_comp * (1 + 1e-9)
+
+
+def test_placement_reserves_only_crossing_edges():
+    cl = tiny_cluster()
+    prof = tiny_profile(layers=16, params=20e9)
+    p = build_placement(prof, cl, ["a", "b"], {"a": 8, "b": 2})
+    assert set(p.reserved_bw) == {("a", "b")}
+    assert p.stage_regions() == ["a"] * 8 + ["b"] * 2
+
+
+# ----------------------------------------------------------------- Eq. 9-12
+def test_priority_prefers_short_jobs_when_idle():
+    cl = paper_cluster()
+    profs = paper_profiles(paper_jobs(seed=0))
+    scores = priority_scores(profs, cl)
+    singles = {p.spec.job_id: p.single_gpu_execution() for p in profs}
+    shortest = min(singles, key=singles.get)
+    assert scores[shortest] == max(scores.values())
+
+
+def test_priority_shifts_to_bandwidth_under_congestion():
+    cl = paper_cluster()
+    profs = paper_profiles(paper_jobs(seed=0))
+    # saturate the ledger artificially
+    for link in cl.bandwidth:
+        cl.reserved_bw[link] = cl.bandwidth[link]
+    assert cl.congestion_alpha() == pytest.approx(1.0)
+    scores = priority_scores(profs, cl)
+    demands = {
+        p.spec.job_id: p.bandwidth_requirement(p.optimal_gpus(cl.total_gpus()))
+        for p in profs
+    }
+    thirstiest = max(demands, key=demands.get)
+    assert scores[thirstiest] == min(scores.values())
+
+
+# ---------------------------------------------------------------- simulator
+@pytest.mark.parametrize(
+    "policy_cls", [BACEPipePolicy, LCFPolicy, LDFPolicy, CRLCFPolicy, CRLDFPolicy]
+)
+def test_simulation_completes_all_jobs(policy_cls):
+    res = simulate(paper_cluster(), paper_profiles(paper_jobs(seed=1)), policy_cls())
+    assert len(res.records) == 8
+    for r in res.records:
+        assert r.finish > r.start >= r.submit
+    assert res.average_jct > 0 and res.total_cost > 0
+
+
+def test_bace_beats_all_baselines_on_jct():
+    profs = paper_profiles(paper_jobs(seed=0))
+    base = simulate(paper_cluster(), profs, BACEPipePolicy())
+    for cls in (LCFPolicy, LDFPolicy, CRLCFPolicy, CRLDFPolicy):
+        other = simulate(paper_cluster(), profs, cls())
+        assert base.average_jct < other.average_jct, cls.__name__
+
+
+def test_resource_ledgers_return_to_initial():
+    cl = paper_cluster()
+    res = simulate(cl, paper_profiles(paper_jobs(seed=2)), BACEPipePolicy())
+    assert res is not None
+    # simulate() snapshots: original ledger untouched
+    assert cl.total_free_gpus() == cl.total_gpus()
+    assert all(v == 0 for v in cl.reserved_bw.values())
