@@ -18,6 +18,7 @@ def main() -> None:
         ablation,
         main_results,
         motivation,
+        scheduler_scaling,
         sensitivity_bandwidth,
         sensitivity_capacity,
         workload_intensity,
@@ -30,6 +31,11 @@ def main() -> None:
         "sensitivity_capacity": sensitivity_capacity.run,    # Fig. 6
         "workload_intensity": workload_intensity.run,        # Fig. 7
         "ablation": ablation.run,            # Fig. 8
+        # Engine perf trajectory: quick smoke via the driver; the full sweep
+        # (python -m benchmarks.scheduler_scaling) is what (re)writes the
+        # BENCH_scheduler.json baseline that scripts/bench_compare.py gates on
+        # — the driver must not silently clobber it.
+        "scheduler_scaling": lambda: scheduler_scaling.run(quick=True),
     }
     try:
         from . import roofline

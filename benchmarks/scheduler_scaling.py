@@ -1,0 +1,151 @@
+"""Scheduler scaling sweep: vectorized vs legacy engine (BENCH trajectory).
+
+Sweeps the control-plane simulator over jobs ∈ {64, 256, 1024} × regions ∈
+{9, 32, 64} with the BACE-Pipe policy, timing one full ``simulate()`` per
+(cell, engine).  ``us_per_call`` is wall-clock microseconds per *scheduled
+job* — the online decision an operator's control plane makes at every
+arrival/completion — so cells of different sizes are comparable.
+
+Emits the usual CSV rows plus ``BENCH_scheduler.json`` at the repo root with
+per-cell timings for both engines; ``scripts/bench_compare.py`` diffs two
+such files and gates on regression.  The legacy engine is the seed
+implementation preserved in ``repro.core.legacy`` (recompute-per-call
+ordering, dict-ledger Prim pathfinding); per-cell makespans are asserted
+identical across engines, so the speedup is measured on provably equivalent
+work.
+
+Usage:  PYTHONPATH=src python -m benchmarks.scheduler_scaling [--quick]
+"""
+
+from __future__ import annotations
+
+import json
+import sys
+import time
+from pathlib import Path
+from typing import Dict, List
+
+from repro.core import BACEPipePolicy, ClusterState, Region, simulate
+from repro.core.job import JobProfile
+from repro.core.workloads import paper_jobs
+
+from .common import BENCH_GPU_FLOPS
+
+JOB_COUNTS = (64, 256, 1024)
+REGION_COUNTS = (9, 32, 64)
+QUICK_JOB_COUNTS = (64, 256)
+QUICK_REGION_COUNTS = (9, 32)
+
+#: Inter-arrival gap (s).  Short against multi-hour job runtimes, so the
+#: pending queue builds toward the job count — the regime where the seed
+#: engine's per-pass recomputation is quadratic-or-worse.
+ARRIVAL_GAP_S = 60.0
+
+# Deterministic region templates, cycled to the requested count (Table II
+# flavor: heterogeneous pools, prices, and egress bandwidths).
+_CAPACITIES = (64, 32, 128, 16, 96, 48, 80, 24, 112)
+_PRICES = (0.251, 0.156, 0.288, 0.191, 0.222, 0.295, 0.173, 0.262, 0.208)
+_GBPS = (50.0, 90.0, 30.0, 70.0, 50.0, 70.0, 100.0, 40.0, 60.0)
+
+BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_scheduler.json"
+
+
+def synth_cluster(n_regions: int) -> ClusterState:
+    regions = [
+        Region(
+            name=f"r{i:02d}",
+            gpu_capacity=_CAPACITIES[i % len(_CAPACITIES)],
+            price_kwh=_PRICES[i % len(_PRICES)],
+        )
+        for i in range(n_regions)
+    ]
+    gbps = {r.name: _GBPS[i % len(_GBPS)] for i, r in enumerate(regions)}
+    return ClusterState.from_region_bandwidths(regions, gbps)
+
+
+def synth_profiles(n_jobs: int) -> List[JobProfile]:
+    jobs = paper_jobs(
+        n_jobs=n_jobs,
+        seed=0,
+        submit_times=[i * ARRIVAL_GAP_S for i in range(n_jobs)],
+    )
+    return [JobProfile(j, gpu_flops=BENCH_GPU_FLOPS) for j in jobs]
+
+
+def _time_cell(n_jobs: int, n_regions: int, engine: str) -> Dict[str, float]:
+    cluster = synth_cluster(n_regions)
+    profiles = synth_profiles(n_jobs)
+    t0 = time.perf_counter()
+    res = simulate(cluster, profiles, BACEPipePolicy(), engine=engine)
+    wall = time.perf_counter() - t0
+    assert len(res.records) == n_jobs
+    return {
+        "jobs": n_jobs,
+        "regions": n_regions,
+        "engine": engine,
+        "wall_s": wall,
+        "us_per_call": 1e6 * wall / n_jobs,
+        "makespan_s": res.makespan,
+        "avg_jct_s": res.average_jct,
+    }
+
+
+def run(*, quick: bool = False) -> List[str]:
+    job_counts = QUICK_JOB_COUNTS if quick else JOB_COUNTS
+    region_counts = QUICK_REGION_COUNTS if quick else REGION_COUNTS
+    rows: List[str] = []
+    cells: List[Dict[str, float]] = []
+    for n_jobs in job_counts:
+        for n_regions in region_counts:
+            vec = _time_cell(n_jobs, n_regions, "vectorized")
+            leg = _time_cell(n_jobs, n_regions, "legacy")
+            if vec["makespan_s"] != leg["makespan_s"]:
+                raise AssertionError(
+                    f"engine divergence at jobs={n_jobs} regions={n_regions}: "
+                    f"{vec['makespan_s']} != {leg['makespan_s']}"
+                )
+            cells.extend([vec, leg])
+            speedup = leg["us_per_call"] / vec["us_per_call"]
+            for m in (vec, leg):
+                rows.append(
+                    f"scheduler_scaling/j{n_jobs}xr{n_regions}/{m['engine']},"
+                    f"{m['us_per_call']:.1f},"
+                    f"wall_s={m['wall_s']:.3f};speedup={speedup:.2f}"
+                )
+    if quick:
+        # Quick mode is a smoke run: don't clobber the full-sweep baseline
+        # that bench_compare gates against.
+        rows.append(f"# quick mode: {BENCH_PATH.name} not written")
+        return rows
+    payload = {
+        "benchmark": "scheduler_scaling",
+        "policy": "bace-pipe",
+        "us_per_call_definition": "1e6 * simulate_wall_s / n_jobs",
+        "arrival_gap_s": ARRIVAL_GAP_S,
+        "cells": cells,
+    }
+    big = [
+        c
+        for c in cells
+        if c["jobs"] == max(job_counts) and c["regions"] == max(region_counts)
+    ]
+    if len(big) == 2:
+        by_engine = {c["engine"]: c for c in big}
+        payload["speedup_biggest_cell"] = (
+            by_engine["legacy"]["us_per_call"]
+            / by_engine["vectorized"]["us_per_call"]
+        )
+    BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
+    rows.append(f"# wrote {BENCH_PATH}")
+    return rows
+
+
+def main() -> None:
+    quick = "--quick" in sys.argv[1:]
+    print("name,us_per_call,derived")
+    for row in run(quick=quick):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

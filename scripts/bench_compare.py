@@ -1,0 +1,83 @@
+#!/usr/bin/env python3
+"""Diff two ``BENCH_scheduler.json`` files and gate on perf regression.
+
+Usage:
+    python scripts/bench_compare.py OLD.json NEW.json [--threshold 0.20]
+
+Matches cells by (jobs, regions, engine) and compares ``us_per_call``.  Any
+matched cell in NEW that is more than ``threshold`` (default 20%) slower than
+in OLD fails the gate: the script prints a per-cell table and exits nonzero,
+so CI (or the next PR's driver) can refuse the change.  Cells present in only
+one file are reported but do not fail the gate — sweeps are allowed to grow.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Dict, Tuple
+
+Key = Tuple[int, int, str]
+
+
+def load_cells(path: Path) -> Dict[Key, dict]:
+    if not path.is_file():
+        raise SystemExit(f"{path}: no such file")
+    payload = json.loads(path.read_text())
+    cells = payload.get("cells", [])
+    out: Dict[Key, dict] = {}
+    for c in cells:
+        out[(int(c["jobs"]), int(c["regions"]), str(c["engine"]))] = c
+    if not out:
+        raise SystemExit(f"{path}: no cells found")
+    return out
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("old", type=Path, help="baseline BENCH_scheduler.json")
+    ap.add_argument("new", type=Path, help="candidate BENCH_scheduler.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=0.20,
+        help="allowed fractional us_per_call growth per cell (default 0.20)",
+    )
+    args = ap.parse_args()
+
+    old = load_cells(args.old)
+    new = load_cells(args.new)
+
+    regressions = []
+    print(f"{'cell':28s} {'old us':>10s} {'new us':>10s} {'ratio':>7s}")
+    for key in sorted(set(old) & set(new)):
+        jobs, regions, engine = key
+        o, n = old[key]["us_per_call"], new[key]["us_per_call"]
+        ratio = n / o if o > 0 else float("inf")
+        tag = ""
+        if ratio > 1.0 + args.threshold:
+            regressions.append((key, ratio))
+            tag = "  << REGRESSION"
+        print(
+            f"j{jobs}xr{regions}/{engine:10s} {o:10.1f} {n:10.1f} "
+            f"{ratio:7.3f}{tag}"
+        )
+    for key in sorted(set(old) ^ set(new)):
+        side = "old only" if key in old else "new only"
+        print(f"j{key[0]}xr{key[1]}/{key[2]}: {side} (not compared)")
+
+    if regressions:
+        worst = max(r for _, r in regressions)
+        print(
+            f"FAIL: {len(regressions)} cell(s) regressed beyond "
+            f"{args.threshold:.0%} (worst {worst:.2f}x)"
+        )
+        return 1
+    print(f"OK: no cell regressed beyond {args.threshold:.0%}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -27,6 +27,11 @@ from .baselines import (  # noqa: F401
 )
 from .cluster import GBPS, ClusterState, Region  # noqa: F401
 from .job import JobProfile, JobSpec, ModelSpec  # noqa: F401
+from .legacy import (  # noqa: F401
+    legacy_find_placement,
+    legacy_order_by_priority,
+    legacy_priority_scores,
+)
 from .pathfinder import find_placement  # noqa: F401
 from .placement import Placement, build_placement  # noqa: F401
 from .priority import (  # noqa: F401
@@ -34,8 +39,10 @@ from .priority import (  # noqa: F401
     computation_intensity,
     order_by_priority,
     priority_scores,
+    score_array,
 )
 from .scheduler import (  # noqa: F401
+    ENGINES,
     BACEPipePolicy,
     JobRecord,
     SchedulingPolicy,

@@ -9,6 +9,7 @@ from __future__ import annotations
 
 from .allocator import uniform_allocate
 from .baselines import CRLDFPolicy
+from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .priority import order_by_priority
 from .scheduler import BACEPipePolicy, SchedulingPolicy, fcfs_order
@@ -24,6 +25,7 @@ class WithoutPriority(BACEPipePolicy):
 
 class WithoutPathfinder(SchedulingPolicy):
     name = "bace-pipe-wo-pathfinder"
+    ordering_kind = "priority"
 
     def __init__(self) -> None:
         self._placer = CRLDFPolicy()
@@ -34,15 +36,27 @@ class WithoutPathfinder(SchedulingPolicy):
     def place(self, profile, cluster):
         return self._placer.place(profile, cluster)
 
+    def legacy_order(self, pending, cluster, now):
+        return legacy_order_by_priority(pending, cluster)
+
 
 class WithoutCostMin(SchedulingPolicy):
     name = "bace-pipe-wo-costmin"
+    ordering_kind = "priority"
 
     def order(self, pending, cluster, now):
         return order_by_priority(pending, cluster)
 
     def place(self, profile, cluster):
         return find_placement(profile, cluster, allocator=uniform_allocate)
+
+    def legacy_order(self, pending, cluster, now):
+        return legacy_order_by_priority(pending, cluster)
+
+    def legacy_place(self, profile, cluster):
+        return legacy_find_placement(
+            profile, cluster, allocator=uniform_allocate
+        )
 
 
 ALL_ABLATIONS = (WithoutPriority, WithoutPathfinder, WithoutCostMin)

@@ -32,7 +32,8 @@ def cost_min_allocate(
     remaining = g - len(path)
 
     # Step 2: surplus to the cheapest regions first.
-    for r in sorted(path, key=lambda r: (cluster.price(r), r)):
+    prices = {r: cluster.price(r) for r in path}
+    for r in sorted(path, key=lambda r: (prices[r], r)):
         if remaining == 0:
             break
         add = min(free[r] - alloc[r], remaining)

@@ -68,6 +68,7 @@ def _single_region(
 class LCFPolicy(SchedulingPolicy):
     name = "lcf"
     strict_fcfs = True
+    ordering_kind = "fcfs"
 
     def order(self, pending, cluster, now):
         return fcfs_order(pending, cluster, now)
@@ -79,6 +80,7 @@ class LCFPolicy(SchedulingPolicy):
 class LDFPolicy(SchedulingPolicy):
     name = "ldf"
     strict_fcfs = True
+    ordering_kind = "fcfs"
 
     def order(self, pending, cluster, now):
         return fcfs_order(pending, cluster, now)
@@ -133,6 +135,7 @@ class CRLCFPolicy(SchedulingPolicy):
 
     name = "cr-lcf"
     strict_fcfs = True
+    ordering_kind = "fcfs"
 
     def __init__(self, bubble_tolerance: float = DEFAULT_BUBBLE_TOLERANCE):
         self.bubble_tolerance = bubble_tolerance
@@ -154,6 +157,7 @@ class CRLDFPolicy(SchedulingPolicy):
 
     name = "cr-ldf"
     strict_fcfs = True
+    ordering_kind = "fcfs"
 
     def __init__(self, bubble_tolerance: float = DEFAULT_BUBBLE_TOLERANCE):
         self.bubble_tolerance = bubble_tolerance

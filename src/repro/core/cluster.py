@@ -6,12 +6,24 @@ joined by directed inter-region links with bandwidth ``B_{u,v}`` (asymmetry
 supported).  ``ClusterState`` additionally keeps *live* ledgers — free GPUs
 per region and reserved bandwidth per link — which Eq. (5)/(6) constrain and
 Eq. (11)'s congestion factor ``alpha`` reads.
+
+Storage layout (see DESIGN.md "vectorized engine"): the ledgers are backed by
+numpy — a region→index map, free/capacity/price vectors, and dense R×R
+installed-bandwidth + reserved matrices — so the Pathfinder and the priority
+ranker operate on arrays instead of per-key dict lookups.  ``free_gpus`` and
+``reserved_bw`` remain dict-like *write-through views* over those arrays, so
+all seed-era call sites (and tests that poke the ledgers directly) keep
+working unchanged.  ``congestion_alpha`` is maintained as an O(1) running sum
+updated on every reserve/release instead of being re-summed per call.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterable, List, Mapping, Optional, Tuple
+from collections.abc import MutableMapping
+from typing import Dict, Iterable, Iterator, List, Mapping, Tuple
+
+import numpy as np
 
 GBPS = 1e9 / 8.0  # bytes/sec per Gbit/s
 
@@ -44,20 +56,141 @@ class Region:
 Link = Tuple[str, str]
 
 
+class _FreeGpuLedger(MutableMapping):
+    """Dict view of the free-GPU vector; writes go straight to the array and
+    keep the cluster's running free-GPU total in sync."""
+
+    __slots__ = ("_cs",)
+
+    def __init__(self, cs: "ClusterState") -> None:
+        self._cs = cs
+
+    def __getitem__(self, region: str) -> int:
+        cs = self._cs
+        try:
+            return int(cs._free[cs._idx[region]])
+        except KeyError:
+            raise KeyError(region) from None
+
+    def __setitem__(self, region: str, count: int) -> None:
+        cs = self._cs
+        i = cs._idx[region]  # KeyError for unknown regions
+        n = int(count)
+        cs._free_total += n - int(cs._free[i])
+        cs._free[i] = n
+
+    def __delitem__(self, region: str) -> None:
+        raise TypeError("region ledger entries cannot be deleted")
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._cs._idx)
+
+    def __len__(self) -> int:
+        return len(self._cs._idx)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
+class _ReservedBwLedger(MutableMapping):
+    """Dict view of the reserved-bandwidth matrix (write-through).
+
+    Links absent from the installed-bandwidth matrix live in a side dict and
+    are excluded from the congestion running sum — mirroring the seed
+    ``congestion_alpha``, which summed installed links only."""
+
+    __slots__ = ("_cs",)
+
+    def __init__(self, cs: "ClusterState") -> None:
+        self._cs = cs
+
+    def __getitem__(self, link: Link) -> float:
+        cs = self._cs
+        ij = cs._link_idx.get(link)
+        if ij is not None:
+            return float(cs._res_mat[ij])
+        return cs._res_extra[link]
+
+    def __setitem__(self, link: Link, value: float) -> None:
+        cs = self._cs
+        v = float(value)
+        ij = cs._link_idx.get(link)
+        if ij is None:
+            cs._res_extra[link] = v
+            return
+        cs._res_total += v - float(cs._res_mat[ij])
+        cs._res_mat[ij] = v
+
+    def __delitem__(self, link: Link) -> None:
+        raise TypeError("link ledger entries cannot be deleted")
+
+    def __iter__(self) -> Iterator[Link]:
+        yield from self._cs._link_idx
+        yield from self._cs._res_extra
+
+    def __len__(self) -> int:
+        return len(self._cs._link_idx) + len(self._cs._res_extra)
+
+    def __repr__(self) -> str:
+        return repr(dict(self))
+
+
 @dataclasses.dataclass
 class ClusterState:
     """Mutable cluster: capacities, prices, bandwidth, and live reservations."""
 
     regions: Dict[str, Region]
     bandwidth: Dict[Link, float]  # bytes/s, directed
-    free_gpus: Dict[str, int] = dataclasses.field(default_factory=dict)
-    reserved_bw: Dict[Link, float] = dataclasses.field(default_factory=dict)
+    free_gpus: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    reserved_bw: Mapping[Link, float] = dataclasses.field(default_factory=dict)
 
     def __post_init__(self) -> None:
-        if not self.free_gpus:
-            self.free_gpus = {r: reg.gpu_capacity for r, reg in self.regions.items()}
-        for link in self.bandwidth:
-            self.reserved_bw.setdefault(link, 0.0)
+        names = list(self.regions)
+        n = len(names)
+        self._names: List[str] = names
+        self._idx: Dict[str, int] = {r: i for i, r in enumerate(names)}
+        # Rank of each region in sorted-name order: vectorized tie-breaks
+        # ("max by (value, name)" / "min by (value, name)") need it.
+        rank = np.empty(n, dtype=np.int64)
+        for pos, i in enumerate(sorted(range(n), key=lambda i: names[i])):
+            rank[i] = pos
+        self._name_rank = rank
+        self._cap = np.array(
+            [self.regions[r].gpu_capacity for r in names], dtype=np.int64
+        )
+        self._price = np.array(
+            [self.regions[r].price_kwh for r in names], dtype=float
+        )
+        self._cap_total = int(self._cap.sum())
+
+        provided_free = dict(self.free_gpus) if self.free_gpus else None
+        if provided_free is None:
+            self._free = self._cap.copy()
+        else:
+            self._free = np.array(
+                [int(provided_free.get(r, 0)) for r in names], dtype=np.int64
+            )
+        self._free_total = int(self._free.sum())
+
+        self._bw_mat = np.zeros((n, n), dtype=float)
+        self._link_idx: Dict[Link, Tuple[int, int]] = {}
+        for (u, v), b in self.bandwidth.items():
+            iu, iv = self._idx.get(u), self._idx.get(v)
+            if iu is None or iv is None:
+                continue
+            self._bw_mat[iu, iv] = b
+            self._link_idx[(u, v)] = (iu, iv)
+        self._bw_total = float(sum(self.bandwidth.values()))
+
+        self._res_mat = np.zeros((n, n), dtype=float)
+        self._res_extra: Dict[Link, float] = {}
+        self._res_total = 0.0
+        provided_res = dict(self.reserved_bw) if self.reserved_bw else None
+        self.free_gpus = _FreeGpuLedger(self)
+        self.reserved_bw = _ReservedBwLedger(self)
+        if provided_res:
+            for link, b in provided_res.items():
+                self.reserved_bw[link] = float(b)
 
     # ------------------------------------------------------------------ build
     @classmethod
@@ -96,27 +229,36 @@ class ClusterState:
 
     # ------------------------------------------------------------------- gpus
     def total_gpus(self) -> int:
-        return sum(r.gpu_capacity for r in self.regions.values())
+        return self._cap_total
 
     def total_free_gpus(self) -> int:
-        return sum(self.free_gpus.values())
+        return self._free_total
 
     def price(self, region: str) -> float:
         return self.regions[region].price_kwh
 
     def reserve_gpus(self, alloc: Mapping[str, int]) -> None:
+        idx, free = self._idx, self._free
         for r, n in alloc.items():
-            if n < 0 or n > self.free_gpus.get(r, 0):
+            i = idx.get(r)
+            have = int(free[i]) if i is not None else 0
+            if n < 0 or n > have:
                 raise ValueError(
-                    f"cannot reserve {n} GPUs in {r} (free={self.free_gpus.get(r, 0)})"
+                    f"cannot reserve {n} GPUs in {r} (free={have})"
                 )
+        taken = 0
         for r, n in alloc.items():
-            self.free_gpus[r] -= n
+            free[idx[r]] -= n
+            taken += n
+        self._free_total -= taken
 
     def release_gpus(self, alloc: Mapping[str, int]) -> None:
+        idx, free = self._idx, self._free
         for r, n in alloc.items():
-            self.free_gpus[r] += n
-            if self.free_gpus[r] > self.regions[r].gpu_capacity:
+            i = idx[r]
+            free[i] += n
+            self._free_total += n
+            if free[i] > self._cap[i]:
                 raise ValueError(f"GPU over-release in {r}")
 
     # ---------------------------------------------------------------- network
@@ -125,47 +267,88 @@ class ClusterState:
         use the constant fast fabric."""
         if u == v:
             return INTRA_REGION_BANDWIDTH
-        return self.bandwidth.get((u, v), 0.0)
+        ij = self._link_idx.get((u, v))
+        return float(self._bw_mat[ij]) if ij is not None else 0.0
 
     def available_bandwidth(self, u: str, v: str) -> float:
         if u == v:
             return INTRA_REGION_BANDWIDTH
-        cap = self.bandwidth.get((u, v), 0.0)
-        return max(0.0, cap - self.reserved_bw.get((u, v), 0.0))
+        ij = self._link_idx.get((u, v))
+        if ij is None:
+            return 0.0
+        return max(0.0, float(self._bw_mat[ij]) - float(self._res_mat[ij]))
+
+    def available_matrix(self) -> np.ndarray:
+        """Dense R×R residual WAN bandwidth (bytes/s); the diagonal is 0 — use
+        ``available_bandwidth`` for intra-region hops."""
+        return np.maximum(0.0, self._bw_mat - self._res_mat)
 
     def reserve_bandwidth(self, edges: Mapping[Link, float]) -> None:
         """Eq. (6): reservations on a link may never exceed its capacity."""
         for (u, v), b in edges.items():
             if u == v:
                 continue
-            if b > self.available_bandwidth(u, v) + 1e-6:
+            avail = self.available_bandwidth(u, v)
+            if b > avail + 1e-6:
                 raise ValueError(
                     f"bandwidth over-subscription on {u}->{v}: "
-                    f"want {b:.3e}, have {self.available_bandwidth(u, v):.3e}"
+                    f"want {b:.3e}, have {avail:.3e}"
                 )
         for (u, v), b in edges.items():
             if u == v:
                 continue
-            self.reserved_bw[(u, v)] = self.reserved_bw.get((u, v), 0.0) + b
+            ij = self._link_idx.get((u, v))
+            if ij is None:
+                self._res_extra[(u, v)] = self._res_extra.get((u, v), 0.0) + b
+            else:
+                self._res_mat[ij] += b
+                self._res_total += b
 
     def release_bandwidth(self, edges: Mapping[Link, float]) -> None:
+        """Releasing more than is reserved (beyond float-drift tolerance) is a
+        double-release bug and raises, mirroring ``release_gpus``.  Validation
+        runs over every edge before any mutation (as ``reserve_bandwidth``
+        does), so a rejected release leaves the ledger untouched."""
+        updates = []
         for (u, v), b in edges.items():
             if u == v:
                 continue
-            self.reserved_bw[(u, v)] = max(0.0, self.reserved_bw.get((u, v), 0.0) - b)
+            ij = self._link_idx.get((u, v))
+            cur = (
+                self._res_extra.get((u, v), 0.0)
+                if ij is None
+                else float(self._res_mat[ij])
+            )
+            new = cur - b
+            if new < -(1e-6 + 1e-9 * self.link_bandwidth(u, v)):
+                raise ValueError(
+                    f"bandwidth over-release on {u}->{v}: releasing {b:.3e} "
+                    f"with only {cur:.3e} reserved"
+                )
+            updates.append(((u, v), ij, cur, max(0.0, new)))
+        for link, ij, cur, new in updates:
+            if ij is None:
+                self._res_extra[link] = new
+            else:
+                self._res_mat[ij] = new
+                self._res_total += new - cur
+        if self._res_total < 0.0:  # guard accumulated float drift
+            self._res_total = 0.0
 
     def congestion_alpha(self) -> float:
         """Eq. (11): ratio of reserved inter-region bandwidth to aggregate
-        installed inter-region capacity, clamped to [0, 1]."""
-        total = sum(self.bandwidth.values())
-        if total <= 0.0:
+        installed inter-region capacity, clamped to [0, 1].  O(1): both terms
+        are running totals maintained by the ledgers."""
+        if self._bw_total <= 0.0:
             return 0.0
-        used = sum(self.reserved_bw.get(l, 0.0) for l in self.bandwidth)
-        return min(1.0, max(0.0, used / total))
+        return min(1.0, max(0.0, self._res_total / self._bw_total))
 
     # ------------------------------------------------------------------ misc
     def region_names(self) -> List[str]:
         return list(self.regions)
+
+    def region_index(self) -> Dict[str, int]:
+        return self._idx
 
     def scaled(
         self,

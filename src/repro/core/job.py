@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import lru_cache
+from functools import cached_property, lru_cache
 from typing import Optional
 
 #: Effective per-GPU throughput (FLOP/s) used by the simulator's timing model.
@@ -98,6 +98,13 @@ class JobSpec:
 class JobProfile:
     """Analytic ``t_comp``/``t_iter`` model for one job (Eqs. 1, 13).
 
+    Scheduling invariants — ``E_j(1)``, ``b_j`` at a given ``k``, and every
+    ``t_comp(k)`` lookup — are pure functions of the construction parameters,
+    so they are memoized on the profile: the priority ranker and Pathfinder
+    hit them thousands of times per simulation (see DESIGN.md).  The
+    ``*_uncached`` variants recompute from scratch and exist so the legacy
+    reference engine can reproduce the seed engine's per-call cost profile.
+
     Parameters
     ----------
     gpu_flops: effective sustained FLOP/s of one GPU.
@@ -129,6 +136,10 @@ class JobProfile:
         self.tp_penalty = tp_penalty
         self.gpu_memory = gpu_memory
         self.gpu_kw = gpu_kw
+        # Memo tables for the per-job scheduling invariants (see class doc).
+        self._t_comp_cache: dict = {}
+        self._bw_req_cache: dict = {}
+        self._single_exec: Optional[float] = None
 
     # ------------------------------------------------------------- primitives
     @property
@@ -156,6 +167,14 @@ class JobProfile:
         return min(k, self.max_stages)
 
     def t_comp(self, k: int) -> float:
+        """Memoized ``t_comp(k)`` — see ``_t_comp_raw`` for the model."""
+        cached = self._t_comp_cache.get(k)
+        if cached is None:
+            cached = self._t_comp_raw(k)
+            self._t_comp_cache[k] = cached
+        return cached
+
+    def _t_comp_raw(self, k: int) -> float:
         """Per-stage forward time of one micro-batch with ``k`` GPUs total.
 
         The trailing ``·2`` of Eq. (1) accounts for the (symmetric) backward
@@ -182,17 +201,17 @@ class JobProfile:
         tc = self.t_comp(k)
         return (self.pipeline_depth(k) * tc + (m.microbatches - 1) * tc) * 2.0
 
-    @property
+    @cached_property
     def max_stages(self) -> int:
         """At most one transformer layer per pipeline stage."""
         return self.spec.model.n_layers
 
-    @property
+    @cached_property
     def max_gpus(self) -> int:
         """Widest useful allocation (tp_max-way stages on every layer)."""
         return self.tp_max * self.max_stages
 
-    @property
+    @cached_property
     def min_gpus(self) -> int:
         """Memory floor: the model state must fit across the stages."""
         need = self.spec.model.n_params * BYTES_PER_PARAM
@@ -218,12 +237,35 @@ class JobProfile:
     def bandwidth_requirement(self, k: int) -> float:
         """``b_j = A_j / t_comp^j(k)`` (bytes/s) — the minimum per-link rate at
         which inter-stage traffic keeps up with compute (§III-A)."""
-        return self.spec.model.activation_bytes / self.t_comp(k)
+        cached = self._bw_req_cache.get(k)
+        if cached is None:
+            cached = self.spec.model.activation_bytes / self.t_comp(k)
+            self._bw_req_cache[k] = cached
+        return cached
+
+    def demand_at_cap(self, cluster_cap: int) -> float:
+        """``b_j`` evaluated at ``K*(cluster_cap)`` — the quantity Eq. (10)
+        normalizes over the pending queue; memoized via the two caches."""
+        return self.bandwidth_requirement(self.optimal_gpus(cluster_cap))
 
     # -------------------------------------------------------------- estimates
     def single_gpu_execution(self) -> float:
         """``E_j(1)`` for the computation-intensity metric (Eq. 9)."""
-        return self.spec.iterations * self.t_iter_ideal(1)
+        if self._single_exec is None:
+            self._single_exec = self.single_gpu_execution_uncached()
+        return self._single_exec
+
+    # ---------------------------------------------------- uncached reference
+    def single_gpu_execution_uncached(self) -> float:
+        """``E_j(1)`` recomputed from scratch (legacy-engine cost profile)."""
+        return self.spec.iterations * (
+            (self.pipeline_depth(1) * self._t_comp_raw(1)
+             + (self.spec.model.microbatches - 1) * self._t_comp_raw(1)) * 2.0
+        )
+
+    def bandwidth_requirement_uncached(self, k: int) -> float:
+        """``b_j`` recomputed from scratch (legacy-engine cost profile)."""
+        return self.spec.model.activation_bytes / self._t_comp_raw(k)
 
     def power_cost_rate(self, price_kwh: float, n_gpus: int) -> float:
         """$/second of ``n_gpus`` drawing board power at ``price_kwh``."""

@@ -1,0 +1,186 @@
+"""Seed-engine reference implementations, kept for parity + benchmarking.
+
+The vectorized engine (``priority.py``, ``pathfinder.py``, the default
+``Simulator`` path) must make bit-identical scheduling decisions to the seed
+engine it replaced.  This module preserves the seed's dict-walking, recompute-
+per-call implementations verbatim so that
+
+* ``tests/test_engine_parity.py`` can prove decision-for-decision equality of
+  ``simulate(..., engine="vectorized")`` and ``simulate(..., engine="legacy")``
+  across every policy and ablation, and
+* ``benchmarks/scheduler_scaling.py`` can measure the speedup against the true
+  seed cost profile (per-job ``E_j(1)``/``b_j`` recomputed on every ordering
+  pass, Prim expansion over scalar ledger lookups).
+
+Nothing here should be used on a hot path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .allocator import cost_min_allocate
+from .cluster import ClusterState
+from .job import JobProfile
+from .placement import Placement, build_placement
+from .timing import average_price
+
+# ------------------------------------------------------ priority (Eqs. 9-12)
+
+
+def legacy_computation_intensity(
+    pending: Sequence[JobProfile],
+) -> Dict[int, float]:
+    """Eq. (9), recomputing ``E_j(1)`` from scratch per call (seed cost)."""
+    singles = {
+        p.spec.job_id: p.single_gpu_execution_uncached() for p in pending
+    }
+    top = max(singles.values(), default=0.0)
+    if top <= 0.0:
+        return {j: 0.0 for j in singles}
+    return {j: v / top for j, v in singles.items()}
+
+
+def legacy_bandwidth_sensitivity(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> Dict[int, float]:
+    """Eq. (10), recomputing ``b_j`` at ``K*`` from scratch per call."""
+    cap = cluster.total_gpus()
+    demands = {
+        p.spec.job_id: p.bandwidth_requirement_uncached(p.optimal_gpus(cap))
+        for p in pending
+    }
+    top = max(demands.values(), default=0.0)
+    if top <= 0.0:
+        return {j: 0.0 for j in demands}
+    return {j: v / top for j, v in demands.items()}
+
+
+def legacy_priority_scores(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> Dict[int, float]:
+    """Eq. (12) with alpha read live from the cluster's bandwidth ledger."""
+    alpha = cluster.congestion_alpha()
+    intensity = legacy_computation_intensity(pending)
+    sensitivity = legacy_bandwidth_sensitivity(pending, cluster)
+    return {
+        p.spec.job_id: (1.0 - alpha) * (1.0 - intensity[p.spec.job_id])
+        + alpha * (1.0 - sensitivity[p.spec.job_id])
+        for p in pending
+    }
+
+
+def legacy_order_by_priority(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> List[JobProfile]:
+    """Descending priority; FCFS (submit time, then id) breaks ties."""
+    scores = legacy_priority_scores(pending, cluster)
+    return sorted(
+        pending,
+        key=lambda p: (
+            -scores[p.spec.job_id],
+            p.spec.submit_time,
+            p.spec.job_id,
+        ),
+    )
+
+
+# -------------------------------------------------------- pathfinder (Alg. 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class _LegacyPathCandidate:
+    path: Tuple[str, ...]
+    gpus: int
+    avg_price: float
+    alloc: Dict[str, int]
+
+
+def legacy_find_placement(
+    profile: JobProfile,
+    cluster: ClusterState,
+    *,
+    k_star: Optional[int] = None,
+    allocator=cost_min_allocate,
+) -> Optional[Placement]:
+    """Alg. 1 exactly as the seed implemented it: dict-ledger lookups, Prim
+    expansion from every seed region, no early exits."""
+    k = k_star if k_star is not None else profile.optimal_gpus(cluster.total_gpus())
+    k = max(k, profile.min_gpus)
+
+    # ---------------------------------------------- Phase 1: single region
+    singles = [r for r, free in cluster.free_gpus.items() if free >= k]
+    if singles:
+        best = min(singles, key=lambda r: (cluster.price(r), r))
+        return build_placement(
+            profile, cluster, [best], {best: k}, require_comm_fits_comp=True
+        )
+
+    # ------------------------------------------ Phase 2: greedy expansion
+    act = profile.spec.model.activation_bytes
+    best_cand: Optional[_LegacyPathCandidate] = None
+    for seed in cluster.region_names():
+        if cluster.free_gpus[seed] < 1:
+            continue
+        path: List[str] = [seed]
+        tail = seed
+        g = min(cluster.free_gpus[seed], k)
+        b_min = float("inf")
+        while len(path) < len(cluster.regions) and g < k:
+            # Highest-bandwidth (residual) outgoing link to a fresh region.
+            cands = [
+                u
+                for u in cluster.region_names()
+                if u not in path
+                and cluster.free_gpus[u] > 0
+                and cluster.available_bandwidth(tail, u) > 0.0
+            ]
+            if not cands:
+                break
+            nxt = max(
+                cands, key=lambda u: (cluster.available_bandwidth(tail, u), u)
+            )
+            b_tmp = min(b_min, cluster.available_bandwidth(tail, nxt))
+            g_new = min(g + cluster.free_gpus[nxt], k)
+            # Alg. 1 line 13: communication must keep up with compute.
+            if act / b_tmp > profile._t_comp_raw(g_new):
+                break
+            path.append(nxt)
+            tail = nxt
+            b_min, g = b_tmp, g_new
+
+        if g < profile.min_gpus or g < len(path):
+            continue
+        try:
+            alloc = allocator(cluster, path, g)
+        except ValueError:
+            continue
+        try:
+            placement = build_placement(
+                profile, cluster, path, alloc, require_comm_fits_comp=True
+            )
+        except ValueError:
+            continue
+        cand = _LegacyPathCandidate(
+            path=tuple(path),
+            gpus=g,
+            avg_price=average_price(placement, cluster),
+            alloc=alloc,
+        )
+        if (
+            best_cand is None
+            or cand.gpus > best_cand.gpus
+            or (cand.gpus == best_cand.gpus and cand.avg_price < best_cand.avg_price)
+        ):
+            best_cand = cand
+
+    if best_cand is None:
+        return None
+    return build_placement(
+        profile,
+        cluster,
+        list(best_cand.path),
+        best_cand.alloc,
+        require_comm_fits_comp=True,
+    )

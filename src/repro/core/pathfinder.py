@@ -10,12 +10,22 @@ free GPUs, admitting an edge only while the would-be communication time
 that keeps communication off the pipeline's critical path).  Each candidate
 path is priced by the Cost-Min Allocator; the path aggregating the most GPUs
 wins, ties broken by mean electricity price.
+
+This implementation runs over the cluster's dense numpy ledgers: one residual
+R×R bandwidth matrix snapshot per call, argmax-based neighbor selection, and
+two early exits — an O(1) rejection when the whole cluster cannot reach the
+job's memory floor, and a per-seed bound that skips seeds whose reachable
+free-GPU total cannot strictly beat the incumbent candidate.  Decisions
+(including all tie-breaks) are identical to the reference implementation in
+``legacy.py``; the engine-parity test enforces that.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
 
 from .allocator import cost_min_allocate
 from .cluster import ClusterState
@@ -46,49 +56,96 @@ def find_placement(
     k = k_star if k_star is not None else profile.optimal_gpus(cluster.total_gpus())
     k = max(k, profile.min_gpus)
 
+    # O(1) reject: any path aggregates at most the cluster-wide free total,
+    # so below the memory floor no placement exists (the reference path walks
+    # every seed to conclude the same).
+    free_total = cluster.total_free_gpus()
+    if free_total < profile.min_gpus:
+        return None
+
+    free = cluster._free
+    names = cluster._names
+    name_rank = cluster._name_rank
+
     # ---------------------------------------------- Phase 1: single region
-    singles = [r for r, free in cluster.free_gpus.items() if free >= k]
-    if singles:
-        best = min(singles, key=lambda r: (cluster.price(r), r))
+    single_mask = free >= k
+    if single_mask.any():
+        idxs = np.flatnonzero(single_mask)
+        prices = cluster._price[idxs]
+        cheapest = idxs[prices == prices.min()]
+        # min by (price, name): among equal-price regions take the smallest name
+        best = names[cheapest[np.argmin(name_rank[cheapest])]]
         return build_placement(
             profile, cluster, [best], {best: k}, require_comm_fits_comp=True
         )
 
     # ------------------------------------------ Phase 2: greedy expansion
     act = profile.spec.model.activation_bytes
+    avail = cluster.available_matrix()
+    n_regions = len(names)
+    has_free = free > 0
+
+    # Per-seed early-exit bound: a path can only aggregate GPUs from regions
+    # reachable over positive-residual links, so a seed whose reachable free
+    # total lands strictly below the incumbent candidate cannot win (equal
+    # totals still compete on price and must expand).  Reachability is lazy —
+    # computed only once an incumbent exists to prune against.
+    adjacency = (avail > 0.0) & has_free[None, :]
+    reach_free: Dict[int, int] = {}
+
+    def reachable_free_total(si: int) -> int:
+        cached = reach_free.get(si)
+        if cached is None:
+            reach = np.zeros(n_regions, dtype=bool)
+            reach[si] = True
+            frontier = reach.copy()
+            while frontier.any():
+                frontier = adjacency[frontier].any(axis=0) & ~reach
+                reach |= frontier
+            cached = int(free[reach].sum())
+            reach_free[si] = cached
+        return cached
+
     best_cand: Optional[PathCandidate] = None
-    for seed in cluster.region_names():
-        if cluster.free_gpus[seed] < 1:
+    for si in range(n_regions):
+        free_seed = int(free[si])
+        if free_seed < 1:
             continue
-        path: List[str] = [seed]
-        tail = seed
-        g = min(cluster.free_gpus[seed], k)
+        if (
+            best_cand is not None
+            and min(reachable_free_total(si), k) < best_cand.gpus
+        ):
+            continue
+        visited = np.zeros(n_regions, dtype=bool)
+        visited[si] = True
+        path_idx: List[int] = [si]
+        tail = si
+        g = min(free_seed, k)
         b_min = float("inf")
-        while len(path) < len(cluster.regions) and g < k:
+        while len(path_idx) < n_regions and g < k:
             # Highest-bandwidth (residual) outgoing link to a fresh region.
-            cands = [
-                u
-                for u in cluster.region_names()
-                if u not in path
-                and cluster.free_gpus[u] > 0
-                and cluster.available_bandwidth(tail, u) > 0.0
-            ]
-            if not cands:
+            row = avail[tail]
+            cand_mask = has_free & ~visited & (row > 0.0)
+            cand_idx = np.flatnonzero(cand_mask)
+            if cand_idx.size == 0:
                 break
-            nxt = max(
-                cands, key=lambda u: (cluster.available_bandwidth(tail, u), u)
-            )
-            b_tmp = min(b_min, cluster.available_bandwidth(tail, nxt))
-            g_new = min(g + cluster.free_gpus[nxt], k)
+            vals = row[cand_idx]
+            top = cand_idx[vals == vals.max()]
+            # max by (bandwidth, name): equal-bandwidth ties take the largest name
+            nxt = int(top[np.argmax(name_rank[top])])
+            b_tmp = min(b_min, float(row[nxt]))
+            g_new = min(g + int(free[nxt]), k)
             # Alg. 1 line 13: communication must keep up with compute.
             if act / b_tmp > profile.t_comp(g_new):
                 break
-            path.append(nxt)
+            path_idx.append(nxt)
+            visited[nxt] = True
             tail = nxt
             b_min, g = b_tmp, g_new
 
-        if g < profile.min_gpus or g < len(path):
+        if g < profile.min_gpus or g < len(path_idx):
             continue
+        path = [names[i] for i in path_idx]
         try:
             alloc = allocator(cluster, path, g)
         except ValueError:

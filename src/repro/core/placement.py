@@ -11,7 +11,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict, List, Mapping, Tuple
 
-from .cluster import ClusterState
+from .cluster import INTRA_REGION_BANDWIDTH, ClusterState
 from .job import JobProfile
 
 
@@ -79,11 +79,12 @@ def build_placement(
 
     comm_times: List[float] = []
     reserved: Dict[Tuple[str, str], float] = {}
-    # Stage boundaries: within a region they ride the intra-region fabric;
-    # between consecutive path regions they ride the WAN link once.
+    # Stage boundaries: within a region they ride the intra-region fabric
+    # (one constant rate, so the hop time is computed once); between
+    # consecutive path regions they ride the WAN link once.
+    intra_hop = act / INTRA_REGION_BANDWIDTH
     for r in path:
-        for _ in range(alloc[r] - 1):
-            comm_times.append(act / cluster.link_bandwidth(r, r))
+        comm_times.extend([intra_hop] * (alloc[r] - 1))
     for u, v in zip(path[:-1], path[1:]):
         avail = cluster.available_bandwidth(u, v)
         if avail <= 0.0:

@@ -8,11 +8,19 @@
 Both metrics are normalized over the *current pending queue* so the score
 adapts as jobs drain.  ``b_j`` is evaluated at the job's ``K*`` (the PP degree
 the scheduler would ideally grant — fixed at the scheduling boundary).
+
+Scoring is a vectorized normalize-and-combine over per-job invariants that
+``JobProfile`` memoizes at first use: one pass costs O(n) numpy arithmetic
+plus an O(n log n) rank, with no ``t_comp`` recomputation (see DESIGN.md).
+The element-wise operations are ordered exactly as the scalar formulas above,
+so scores are bit-identical to the seed implementation.
 """
 
 from __future__ import annotations
 
 from typing import Dict, List, Sequence
+
+import numpy as np
 
 from .cluster import ClusterState
 from .job import JobProfile
@@ -32,40 +40,64 @@ def bandwidth_sensitivity(
 ) -> Dict[int, float]:
     """Eq. (10) over the pending queue, with b_j at K*(cluster size)."""
     cap = cluster.total_gpus()
-    demands = {
-        p.spec.job_id: p.bandwidth_requirement(p.optimal_gpus(cap))
-        for p in pending
-    }
+    demands = {p.spec.job_id: p.demand_at_cap(cap) for p in pending}
     top = max(demands.values(), default=0.0)
     if top <= 0.0:
         return {j: 0.0 for j in demands}
     return {j: v / top for j, v in demands.items()}
 
 
+def _score_vector(
+    singles: np.ndarray, demands: np.ndarray, alpha: float
+) -> np.ndarray:
+    """Eq. (12) over pre-gathered invariant vectors."""
+    top_e = singles.max() if singles.size else 0.0
+    top_b = demands.max() if demands.size else 0.0
+    intensity = singles / top_e if top_e > 0.0 else np.zeros_like(singles)
+    sensitivity = demands / top_b if top_b > 0.0 else np.zeros_like(demands)
+    return (1.0 - alpha) * (1.0 - intensity) + alpha * (1.0 - sensitivity)
+
+
+def score_array(
+    pending: Sequence[JobProfile], cluster: ClusterState
+) -> np.ndarray:
+    """Eq. (12) scores as a vector aligned with ``pending``."""
+    n = len(pending)
+    cap = cluster.total_gpus()
+    singles = np.fromiter(
+        (p.single_gpu_execution() for p in pending), dtype=float, count=n
+    )
+    demands = np.fromiter(
+        (p.demand_at_cap(cap) for p in pending), dtype=float, count=n
+    )
+    return _score_vector(singles, demands, cluster.congestion_alpha())
+
+
 def priority_scores(
     pending: Sequence[JobProfile], cluster: ClusterState
 ) -> Dict[int, float]:
     """Eq. (12) with alpha read live from the cluster's bandwidth ledger."""
-    alpha = cluster.congestion_alpha()
-    intensity = computation_intensity(pending)
-    sensitivity = bandwidth_sensitivity(pending, cluster)
-    return {
-        p.spec.job_id: (1.0 - alpha) * (1.0 - intensity[p.spec.job_id])
-        + alpha * (1.0 - sensitivity[p.spec.job_id])
-        for p in pending
-    }
+    scores = score_array(pending, cluster)
+    return {p.spec.job_id: float(s) for p, s in zip(pending, scores)}
+
+
+def rank_order(
+    scores: np.ndarray, submits: np.ndarray, job_ids: np.ndarray
+) -> np.ndarray:
+    """Index permutation sorting by (-score, submit, id) — descending priority
+    with FCFS tie-breaks, identical to the seed's tuple sort (ids are unique,
+    so the order is total and stability is irrelevant)."""
+    return np.lexsort((job_ids, submits, -scores))
 
 
 def order_by_priority(
     pending: Sequence[JobProfile], cluster: ClusterState
 ) -> List[JobProfile]:
     """Descending priority; FCFS (submit time, then id) breaks ties."""
-    scores = priority_scores(pending, cluster)
-    return sorted(
-        pending,
-        key=lambda p: (
-            -scores[p.spec.job_id],
-            p.spec.submit_time,
-            p.spec.job_id,
-        ),
+    n = len(pending)
+    scores = score_array(pending, cluster)
+    submits = np.fromiter(
+        (p.spec.submit_time for p in pending), dtype=float, count=n
     )
+    ids = np.fromiter((p.spec.job_id for p in pending), dtype=np.int64, count=n)
+    return [pending[i] for i in rank_order(scores, submits, ids)]

@@ -7,6 +7,20 @@ reserve GPUs (Eq. 5) and link bandwidth (Eq. 6) until completion.  All
 policies are work-conserving: a job that cannot be placed is skipped, not a
 barrier — HoL blocking in this model is *resource* occupancy, exactly the
 phenomenon the paper analyses.
+
+Two engines share the identical event loop (see DESIGN.md):
+
+* ``vectorized`` (default) — pending-queue invariants (``E_j(1)``, ``b_j`` at
+  ``K*``, submit keys) live in aligned arrays inside ``_PendingLedger``; a
+  successful placement triggers an incremental re-rank (only ``alpha`` and
+  the two normalization maxima change, an O(n) recombine + O(n log n)
+  ``lexsort``) instead of the seed's recompute-everything re-order.
+* ``legacy`` — the seed engine preserved verbatim (``legacy.py``): full
+  policy re-order with per-call invariant recomputation.  Kept as the parity
+  reference and the benchmark baseline.
+
+Both engines produce bit-identical ``SimulationResult``s; the engine-parity
+test enforces this for every policy and ablation.
 """
 
 from __future__ import annotations
@@ -14,15 +28,18 @@ from __future__ import annotations
 import abc
 import dataclasses
 import heapq
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
 
 from .allocator import cost_min_allocate
 from .cluster import ClusterState
-from .job import JobProfile, JobSpec
+from .job import JobProfile
+from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .placement import Placement
-from .priority import order_by_priority, priority_scores
-from .timing import electricity_cost, execution_time, iteration_time
+from .priority import _score_vector, order_by_priority, rank_order
+from .timing import electricity_cost, iteration_time
 
 
 class SchedulingPolicy(abc.ABC):
@@ -33,10 +50,16 @@ class SchedulingPolicy(abc.ABC):
     behind it wait.  This is how the paper's FCFS baselines exhibit HoL
     blocking.  BACE-Pipe instead *re-orders* the queue every event (Eq. 12),
     which subsumes skipping a stuck job.
+
+    ``ordering_kind`` declares the ordering rule ("priority" for Eq. 12,
+    "fcfs" for submit-time order, None for anything else) so the vectorized
+    engine can maintain the rank incrementally; policies with ``None`` fall
+    back to ``order()`` every pass.
     """
 
     name: str = "base"
     strict_fcfs: bool = False
+    ordering_kind: Optional[str] = None
 
     @abc.abstractmethod
     def order(
@@ -49,6 +72,18 @@ class SchedulingPolicy(abc.ABC):
         self, profile: JobProfile, cluster: ClusterState
     ) -> Optional[Placement]:
         ...
+
+    # Seed-engine hooks: the legacy engine routes through these so the
+    # reference path keeps the seed's exact implementations (and costs).
+    def legacy_order(
+        self, pending: Sequence[JobProfile], cluster: ClusterState, now: float
+    ) -> List[JobProfile]:
+        return self.order(pending, cluster, now)
+
+    def legacy_place(
+        self, profile: JobProfile, cluster: ClusterState
+    ) -> Optional[Placement]:
+        return self.place(profile, cluster)
 
 
 def fcfs_order(
@@ -64,6 +99,7 @@ class BACEPipePolicy(SchedulingPolicy):
 
     def __init__(self, *, use_priority: bool = True) -> None:
         self.use_priority = use_priority
+        self.ordering_kind = "priority" if use_priority else "fcfs"
 
     def order(self, pending, cluster, now):
         if self.use_priority:
@@ -72,6 +108,14 @@ class BACEPipePolicy(SchedulingPolicy):
 
     def place(self, profile, cluster):
         return find_placement(profile, cluster, allocator=cost_min_allocate)
+
+    def legacy_order(self, pending, cluster, now):
+        if self.use_priority:
+            return legacy_order_by_priority(pending, cluster)
+        return fcfs_order(pending, cluster, now)
+
+    def legacy_place(self, profile, cluster):
+        return legacy_find_placement(profile, cluster, allocator=cost_min_allocate)
 
 
 # --------------------------------------------------------------------- result
@@ -121,25 +165,134 @@ class SimulationResult:
         )
 
 
+# --------------------------------------------------------------- pending set
+class _PendingLedger:
+    """Pending queue with its scheduling invariants held in aligned arrays.
+
+    Per-job quantities that never change while a job waits — ``E_j(1)``,
+    ``b_j`` at ``K*(cluster)``, submit time, id — are gathered once on
+    arrival (O(1) amortized; the profile memoizes the math).  A re-rank after
+    a placement therefore only recombines the arrays under the new ``alpha``
+    and normalization maxima: O(n) numpy arithmetic + one O(n log n) lexsort,
+    versus the seed's O(n · K) invariant recomputation per pass.  Removal is
+    a swap-pop, keeping the arrays dense.
+    """
+
+    def __init__(self, cluster_cap: int) -> None:
+        self._cap = cluster_cap
+        self._profiles: List[JobProfile] = []
+        self._singles: List[float] = []
+        self._demands: List[float] = []
+        self._submits: List[float] = []
+        self._ids: List[int] = []
+        self._pos: Dict[int, int] = {}
+
+    def __len__(self) -> int:
+        return len(self._profiles)
+
+    def add(self, profile: JobProfile) -> None:
+        job_id = profile.spec.job_id
+        self._pos[job_id] = len(self._profiles)
+        self._profiles.append(profile)
+        self._singles.append(profile.single_gpu_execution())
+        self._demands.append(profile.demand_at_cap(self._cap))
+        self._submits.append(profile.spec.submit_time)
+        self._ids.append(job_id)
+
+    def remove(self, job_id: int) -> None:
+        i = self._pos.pop(job_id)
+        last = len(self._profiles) - 1
+        if i != last:
+            for arr in (
+                self._profiles,
+                self._singles,
+                self._demands,
+                self._submits,
+                self._ids,
+            ):
+                arr[i] = arr[last]
+            self._pos[self._ids[i]] = i
+        for arr in (
+            self._profiles,
+            self._singles,
+            self._demands,
+            self._submits,
+            self._ids,
+        ):
+            arr.pop()
+
+    def ordered(self, kind: str, cluster: ClusterState) -> List[JobProfile]:
+        n = len(self._profiles)
+        if n <= 1:
+            return list(self._profiles)
+        submits = np.array(self._submits)
+        ids = np.array(self._ids, dtype=np.int64)
+        if kind == "priority":
+            scores = _score_vector(
+                np.array(self._singles),
+                np.array(self._demands),
+                cluster.congestion_alpha(),
+            )
+            perm = rank_order(scores, submits, ids)
+        else:  # fcfs: (submit, id)
+            perm = np.lexsort((ids, submits))
+        profiles = self._profiles
+        return [profiles[i] for i in perm]
+
+
 # ------------------------------------------------------------------ simulator
 _ARRIVAL, _COMPLETION = 0, 1
 
+ENGINES = ("vectorized", "legacy")
+
 
 class Simulator:
-    """Discrete-event simulation of a policy over a job set."""
+    """Discrete-event simulation of a policy over a job set.
+
+    ``engine="vectorized"`` (default) runs the incremental array-backed
+    scheduling path; ``engine="legacy"`` runs the preserved seed path.  Both
+    yield identical results (see module docstring).
+    """
 
     def __init__(
         self,
         cluster: ClusterState,
         profiles: Sequence[JobProfile],
         policy: SchedulingPolicy,
+        *,
+        engine: str = "vectorized",
     ) -> None:
+        if engine not in ENGINES:
+            raise ValueError(f"unknown engine {engine!r} (have: {ENGINES})")
         self.cluster = cluster.snapshot()
         self.profiles = {p.spec.job_id: p for p in profiles}
         self.policy = policy
+        self.engine = engine
 
     def run(self) -> SimulationResult:
         cluster = self.cluster
+        policy = self.policy
+        legacy = self.engine == "legacy"
+        kind = None if legacy else policy.ordering_kind
+        ledger = (
+            _PendingLedger(cluster.total_gpus())
+            if kind in ("priority", "fcfs")
+            else None
+        )
+        if legacy:
+            order = lambda pend, now: policy.legacy_order(  # noqa: E731
+                list(pend.values()), cluster, now
+            )
+            place = policy.legacy_place
+        elif ledger is not None:
+            order = lambda pend, now: ledger.ordered(kind, cluster)  # noqa: E731
+            place = policy.place
+        else:
+            order = lambda pend, now: policy.order(  # noqa: E731
+                list(pend.values()), cluster, now
+            )
+            place = policy.place
+
         pending: Dict[int, JobProfile] = {}
         running: Dict[int, Tuple[Placement, float]] = {}
         records: List[JobRecord] = []
@@ -155,11 +308,13 @@ class Simulator:
             now = events[0][0]
             # Drain all events at this timestamp before scheduling.
             while events and events[0][0] <= now + 1e-12:
-                _, kind, _, job_id = heapq.heappop(events)
-                if kind == _ARRIVAL:
+                _, ev_kind, _, job_id = heapq.heappop(events)
+                if ev_kind == _ARRIVAL:
                     pending[job_id] = self.profiles[job_id]
+                    if ledger is not None:
+                        ledger.add(self.profiles[job_id])
                 else:  # completion
-                    placement, start = running.pop(job_id)
+                    placement, _ = running.pop(job_id)
                     cluster.release_gpus(placement.alloc)
                     cluster.release_bandwidth(placement.reserved_bw)
 
@@ -167,16 +322,16 @@ class Simulator:
             progressed = True
             while progressed and pending:
                 progressed = False
-                ordered = self.policy.order(list(pending.values()), cluster, now)
-                for prof in ordered:
-                    placement = self.policy.place(prof, cluster)
+                for prof in order(pending, now):
+                    placement = place(prof, cluster)
                     if placement is None or placement.total_gpus < prof.min_gpus:
-                        if self.policy.strict_fcfs:
+                        if policy.strict_fcfs:
                             break  # HoL: the stuck head job blocks the queue
                         continue
                     cluster.reserve_gpus(placement.alloc)
                     cluster.reserve_bandwidth(placement.reserved_bw)
-                    e = execution_time(prof, placement)
+                    t_it = iteration_time(prof, placement)
+                    e = prof.spec.iterations * t_it  # Eq. (2)
                     finish = now + e
                     running[prof.spec.job_id] = (placement, now)
                     records.append(
@@ -187,29 +342,31 @@ class Simulator:
                             start=now,
                             finish=finish,
                             placement=placement,
-                            iteration_seconds=iteration_time(prof, placement),
+                            iteration_seconds=t_it,
                         )
                     )
                     costs[prof.spec.job_id] = electricity_cost(
                         prof, placement, cluster, execution_seconds=e
                     )
                     del pending[prof.spec.job_id]
+                    if ledger is not None:
+                        ledger.remove(prof.spec.job_id)
                     heapq.heappush(
                         events, (finish, _COMPLETION, seq, prof.spec.job_id)
                     )
                     seq += 1
                     progressed = True
-                    break  # re-order: alpha/normalization changed
+                    break  # re-rank: alpha/normalization changed
 
             if pending and not running and not events:
                 stuck = sorted(pending)
                 raise RuntimeError(
                     f"deadlock: jobs {stuck} unplaceable on an idle cluster "
-                    f"(policy={self.policy.name})"
+                    f"(policy={policy.name})"
                 )
 
         return SimulationResult(
-            policy=self.policy.name,
+            policy=policy.name,
             records=sorted(records, key=lambda r: r.job_id),
             costs=costs,
             makespan=now,
@@ -220,5 +377,7 @@ def simulate(
     cluster: ClusterState,
     profiles: Sequence[JobProfile],
     policy: SchedulingPolicy,
+    *,
+    engine: str = "vectorized",
 ) -> SimulationResult:
-    return Simulator(cluster, profiles, policy).run()
+    return Simulator(cluster, profiles, policy, engine=engine).run()

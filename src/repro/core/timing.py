@@ -67,5 +67,7 @@ def electricity_cost(
 
 def average_price(placement: Placement, cluster: ClusterState) -> float:
     """Per-GPU mean electricity price of a placement (Alg. 1 line 19)."""
-    g = placement.total_gpus
-    return sum(cluster.price(r) * n for r, n in placement.alloc.items()) / g
+    total = 0.0
+    for r, n in placement.alloc.items():
+        total += cluster.price(r) * n
+    return total / placement.total_gpus

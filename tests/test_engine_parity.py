@@ -1,0 +1,94 @@
+"""Engine parity: the vectorized scheduling engine must reproduce the seed
+(legacy) engine decision-for-decision — identical records, costs, and
+makespan — for every policy and ablation on the paper workload.
+
+This is the contract that lets the repo keep one semantic definition of the
+scheduler (the legacy reference in ``core/legacy.py``) while running the fast
+array-backed path everywhere: any divergence, including tie-break drift, is a
+bug.  Comparisons are exact (``==``), not approximate.
+"""
+
+import pytest
+
+from repro.core import (
+    ALL_ABLATIONS,
+    BACEPipePolicy,
+    CRLCFPolicy,
+    CRLDFPolicy,
+    LCFPolicy,
+    LDFPolicy,
+    paper_cluster,
+    paper_jobs,
+    paper_profiles,
+    simulate,
+)
+
+ALL_POLICIES = [
+    BACEPipePolicy,
+    LCFPolicy,
+    LDFPolicy,
+    CRLCFPolicy,
+    CRLDFPolicy,
+    *ALL_ABLATIONS,
+]
+
+SEEDS = (0, 1, 2)
+
+
+def _assert_identical(vec, leg):
+    assert vec.policy == leg.policy
+    assert vec.makespan == leg.makespan
+    assert vec.costs == leg.costs
+    assert len(vec.records) == len(leg.records)
+    for rv, rl in zip(vec.records, leg.records):
+        assert rv.job_id == rl.job_id
+        assert rv.model_name == rl.model_name
+        assert rv.submit == rl.submit
+        assert rv.start == rl.start
+        assert rv.finish == rl.finish
+        assert rv.iteration_seconds == rl.iteration_seconds
+        assert rv.placement.path == rl.placement.path
+        assert dict(rv.placement.alloc) == dict(rl.placement.alloc)
+        assert rv.placement.comm_times == rl.placement.comm_times
+        assert dict(rv.placement.reserved_bw) == dict(rl.placement.reserved_bw)
+
+
+@pytest.mark.parametrize("policy_cls", ALL_POLICIES, ids=lambda c: c.__name__)
+@pytest.mark.parametrize("seed", SEEDS)
+def test_engines_bit_identical_on_paper_workload(policy_cls, seed):
+    profiles = paper_profiles(paper_jobs(seed=seed))
+    vec = simulate(paper_cluster(), profiles, policy_cls(), engine="vectorized")
+    leg = simulate(paper_cluster(), profiles, policy_cls(), engine="legacy")
+    _assert_identical(vec, leg)
+
+
+@pytest.mark.parametrize("policy_cls", [BACEPipePolicy, CRLDFPolicy])
+def test_engines_bit_identical_with_staggered_arrivals(policy_cls):
+    """Arrivals interleaved with completions exercise the incremental re-rank
+    (queue membership churns) rather than one big t=0 batch."""
+    jobs = paper_jobs(
+        n_jobs=12, seed=3, submit_times=[i * 1800.0 for i in range(12)]
+    )
+    profiles = paper_profiles(jobs)
+    vec = simulate(paper_cluster(), profiles, policy_cls(), engine="vectorized")
+    leg = simulate(paper_cluster(), profiles, policy_cls(), engine="legacy")
+    _assert_identical(vec, leg)
+
+
+def test_unknown_engine_rejected():
+    profiles = paper_profiles(paper_jobs(seed=0))
+    with pytest.raises(ValueError, match="unknown engine"):
+        simulate(paper_cluster(), profiles, BACEPipePolicy(), engine="turbo")
+
+
+def test_bandwidth_over_release_raises():
+    """Satellite guard: releasing more than reserved is a double-release bug
+    and must raise instead of silently clamping to zero."""
+    cluster = paper_cluster()
+    link = next(iter(cluster.bandwidth))
+    cluster.reserve_bandwidth({link: 1e9})
+    with pytest.raises(ValueError, match="over-release"):
+        cluster.release_bandwidth({link: 2e9})
+    # exact release is fine and returns the ledger to zero
+    cluster.release_bandwidth({link: 1e9})
+    assert cluster.reserved_bw[link] == 0.0

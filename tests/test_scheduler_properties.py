@@ -1,8 +1,13 @@
-"""Hypothesis property tests on the scheduler's invariants."""
+"""Hypothesis property tests on the scheduler's invariants.
 
-import math
+``hypothesis`` is an optional dev dependency (see pyproject.toml); the whole
+module is skipped when it is absent so ``pytest -x -q`` still collects clean.
+"""
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     BACEPipePolicy,
