@@ -1,0 +1,81 @@
+"""Dynamic-environment scenario sweep: every registered scenario × policy.
+
+Runs the scenario registry (``repro.core.scenarios``) across all five
+policies and emits the usual ``name,us_per_call,derived`` CSV rows, where
+``derived`` carries avg JCT, total cost, migration count, and total stall
+time.  Each cell is run twice with the same seed and asserted identical
+(``SimulationResult.to_jsonable``) — the determinism contract the golden
+traces pin — and the static-paper scenario is additionally asserted
+bit-identical between the vectorized and legacy engines.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.dynamic_scenarios [--smoke] [--seed N]
+
+``--smoke`` trims to 6-job scenarios for CI (~seconds).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+from typing import List
+
+from repro.core import SCENARIOS, simulate
+
+from .common import BENCH_GPU_FLOPS, POLICY_FACTORIES
+
+
+def run(*, smoke: bool = False, seed: int = 0) -> List[str]:
+    rows: List[str] = []
+    pk = {"gpu_flops": BENCH_GPU_FLOPS}
+    for scen_name, scenario in SCENARIOS.items():
+        n_jobs = 6 if smoke else None
+        for pol_name, factory in POLICY_FACTORIES.items():
+            t0 = time.perf_counter()
+            res = scenario.run(
+                factory(), seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+            )
+            lap = time.perf_counter() - t0
+            rerun = scenario.run(
+                factory(), seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+            )
+            if res.to_jsonable() != rerun.to_jsonable():
+                raise AssertionError(
+                    f"non-deterministic result: {scen_name}/{pol_name} "
+                    f"(seed={seed})"
+                )
+            rows.append(
+                f"dynamic/{scen_name}/{pol_name},{1e6 * lap:.1f},"
+                f"jct_h={res.average_jct / 3600:.3f};"
+                f"cost=${res.total_cost:.2f};"
+                f"migrations={res.total_migrations};"
+                f"stall_h={res.total_stall_seconds / 3600:.3f}"
+            )
+        if not scenario.dynamic:
+            # Static scenarios must stay bit-identical across engines.
+            cluster, profiles, _ = scenario.build(
+                seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+            )
+            for pol_name, factory in POLICY_FACTORIES.items():
+                vec = simulate(cluster, profiles, factory(), engine="vectorized")
+                leg = simulate(cluster, profiles, factory(), engine="legacy")
+                if vec.to_jsonable() != leg.to_jsonable():
+                    raise AssertionError(
+                        f"engine divergence: {scen_name}/{pol_name}"
+                    )
+            rows.append(f"# {scen_name}: engine parity OK (all policies)")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, seed=args.seed):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -16,6 +16,7 @@ import sys
 def main() -> None:
     from . import (
         ablation,
+        dynamic_scenarios,
         main_results,
         motivation,
         scheduler_scaling,
@@ -36,6 +37,8 @@ def main() -> None:
         # BENCH_scheduler.json baseline that scripts/bench_compare.py gates on
         # — the driver must not silently clobber it.
         "scheduler_scaling": lambda: scheduler_scaling.run(quick=True),
+        # Dynamic-environment regimes (PR 2): scenario registry × policies.
+        "dynamic_scenarios": lambda: dynamic_scenarios.run(smoke=True),
     }
     try:
         from . import roofline

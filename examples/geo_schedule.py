@@ -14,12 +14,14 @@ import sys
 import textwrap
 
 from repro.core import (
+    BACEPipePolicy,
     ClusterState,
     JobProfile,
     JobSpec,
     ModelSpec,
     Region,
     find_placement,
+    get_scenario,
 )
 
 
@@ -49,6 +51,22 @@ def control_plane():
     return placement
 
 
+def dynamic_control_plane():
+    """The same control plane under a *dynamic* environment: the registered
+    link-flap scenario collapses the fattest WAN link mid-run; the simulator
+    preempts the stranded pipeline, checkpoints it, and re-places it."""
+    scenario = get_scenario("link-flap")
+    res = scenario.run(BACEPipePolicy(), seed=0)
+    print(f"[control] scenario {scenario.name!r}: {res.summary()}")
+    for job_id, n in sorted(res.migrations.items()):
+        segs = [r for r in res.records if r.job_id == job_id]
+        paths = " | ".join(r.placement.describe() for r in segs)
+        print(
+            f"[control] job {job_id} migrated {n}x "
+            f"(stall {res.stall_seconds[job_id]:.0f}s): {paths}"
+        )
+
+
 def data_plane():
     """Train the same 4-layer model with a 2-stage geo pipeline (pod axis =
     cross-region link) on 8 host devices, in a subprocess so this process
@@ -62,6 +80,7 @@ def data_plane():
         from repro.launch.train import build_everything
         from repro.launch import steps as S
         from repro.data import SyntheticLM, make_batch_iterator
+        from repro.distributed.compat import use_mesh
 
         cfg = dataclasses.replace(
             get_config("qwen1.5-32b").reduced(),
@@ -74,7 +93,7 @@ def data_plane():
         it = make_batch_iterator(src, cfg, mesh, S.batch_axis_spec(
             mesh, True, 8, pipe_axes=("pod", "model")))
         losses = []
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             for i in range(30):
                 state, loss = step_fn(state, next(it))
                 losses.append(float(loss))
@@ -94,6 +113,7 @@ def data_plane():
 
 def main() -> None:
     control_plane()
+    dynamic_control_plane()
     data_plane()
     print("[geo] OK: control-plane placement + geo-pipelined training ran.")
 

@@ -16,6 +16,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.data import SyntheticLM, make_batch_iterator
+from repro.distributed.compat import use_mesh
 from repro.ft import FailureInjector, resilient_train_loop
 from repro.launch import steps as S
 from repro.launch.train import build_everything
@@ -54,7 +55,7 @@ def main() -> None:
         shutil.rmtree(args.ckpt_dir)
 
     def wrapped(state_, batch_):
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             return jit_step(state_, batch_)
 
     out = resilient_train_loop(

@@ -3,12 +3,20 @@
 
 Usage:
     python scripts/bench_compare.py OLD.json NEW.json [--threshold 0.20]
+                                    [--relative]
 
 Matches cells by (jobs, regions, engine) and compares ``us_per_call``.  Any
 matched cell in NEW that is more than ``threshold`` (default 20%) slower than
 in OLD fails the gate: the script prints a per-cell table and exits nonzero,
 so CI (or the next PR's driver) can refuse the change.  Cells present in only
 one file are reported but do not fail the gate — sweeps are allowed to grow.
+
+``--relative`` compares the per-(jobs, regions) *speedup* (legacy /
+vectorized ``us_per_call``, both measured within the same run) instead of
+absolute timings.  Speedup is machine-portable, so this is the mode for CI,
+where NEW comes from a shared runner while the checked-in baseline was
+measured elsewhere: the gate fails only when NEW's speedup falls more than
+``threshold`` below OLD's on a matched cell.
 """
 
 from __future__ import annotations
@@ -35,6 +43,45 @@ def load_cells(path: Path) -> Dict[Key, dict]:
     return out
 
 
+def speedups(cells: Dict[Key, dict]) -> Dict[Tuple[int, int], float]:
+    """legacy/vectorized us_per_call per (jobs, regions) cell, where both
+    engines are present."""
+    out: Dict[Tuple[int, int], float] = {}
+    for (jobs, regions, engine), c in cells.items():
+        if engine != "vectorized":
+            continue
+        leg = cells.get((jobs, regions, "legacy"))
+        if leg and c["us_per_call"] > 0:
+            out[(jobs, regions)] = leg["us_per_call"] / c["us_per_call"]
+    return out
+
+
+def compare_relative(old, new, threshold: float) -> int:
+    old_s, new_s = speedups(old), speedups(new)
+    regressions = []
+    print(f"{'cell':16s} {'old x':>8s} {'new x':>8s} {'ratio':>7s}")
+    for key in sorted(set(old_s) & set(new_s)):
+        o, n = old_s[key], new_s[key]
+        ratio = n / o
+        tag = ""
+        if ratio < 1.0 - threshold:
+            regressions.append((key, ratio))
+            tag = "  << REGRESSION"
+        print(f"j{key[0]}xr{key[1]:<8d} {o:8.2f} {n:8.2f} {ratio:7.3f}{tag}")
+    for key in sorted(set(old_s) ^ set(new_s)):
+        side = "old only" if key in old_s else "new only"
+        print(f"j{key[0]}xr{key[1]}: {side} (not compared)")
+    if regressions:
+        worst = min(r for _, r in regressions)
+        print(
+            f"FAIL: {len(regressions)} cell(s) lost more than "
+            f"{threshold:.0%} of their engine speedup (worst {worst:.2f}x)"
+        )
+        return 1
+    print(f"OK: no cell lost more than {threshold:.0%} of its speedup")
+    return 0
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("old", type=Path, help="baseline BENCH_scheduler.json")
@@ -45,10 +92,19 @@ def main() -> int:
         default=0.20,
         help="allowed fractional us_per_call growth per cell (default 0.20)",
     )
+    ap.add_argument(
+        "--relative",
+        action="store_true",
+        help="gate on per-cell engine speedup (machine-portable) instead of "
+        "absolute us_per_call",
+    )
     args = ap.parse_args()
 
     old = load_cells(args.old)
     new = load_cells(args.new)
+
+    if args.relative:
+        return compare_relative(old, new, args.threshold)
 
     regressions = []
     print(f"{'cell':28s} {'old us':>10s} {'new us':>10s} {'ratio':>7s}")

@@ -25,14 +25,20 @@ from .baselines import (  # noqa: F401
     LCFPolicy,
     LDFPolicy,
 )
-from .cluster import GBPS, ClusterState, Region  # noqa: F401
+from .cluster import (  # noqa: F401
+    GBPS,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    Region,
+)
 from .job import JobProfile, JobSpec, ModelSpec  # noqa: F401
 from .legacy import (  # noqa: F401
     legacy_find_placement,
     legacy_order_by_priority,
     legacy_priority_scores,
 )
-from .pathfinder import find_placement  # noqa: F401
+from .pathfinder import find_placement, placement_feasible  # noqa: F401
 from .placement import Placement, build_placement  # noqa: F401
 from .priority import (  # noqa: F401
     bandwidth_sensitivity,
@@ -42,6 +48,7 @@ from .priority import (  # noqa: F401
     score_array,
 )
 from .scheduler import (  # noqa: F401
+    DEFAULT_RESTART_PENALTY_S,
     ENGINES,
     BACEPipePolicy,
     JobRecord,
@@ -61,9 +68,21 @@ from .workloads import (  # noqa: F401
     DATASETS,
     TABLE_II_REGIONS,
     TABLE_III_MODELS,
+    bursty_submit_times,
+    diurnal_trace,
+    link_flap_trace,
     motivation_cluster,
     motivation_profiles,
     paper_cluster,
     paper_jobs,
     paper_profiles,
+    poisson_submit_times,
+    price_spike_trace,
+    random_fluctuation_trace,
+)
+from .scenarios import (  # noqa: F401
+    SCENARIOS,
+    Scenario,
+    get_scenario,
+    scenario_names,
 )

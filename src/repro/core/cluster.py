@@ -56,6 +56,63 @@ class Region:
 Link = Tuple[str, str]
 
 
+@dataclasses.dataclass(frozen=True)
+class EnvUpdate:
+    """One breakpoint of a piecewise-constant environment trace.
+
+    At ``time`` the listed links take bandwidth multiplier ``bandwidth[link]``
+    (absolute against the *installed* capacity, not against the previous
+    value) and the listed regions take electricity-price multiplier
+    ``prices[region]`` (absolute against the construction-time price).
+    Links/regions not listed keep their current multiplier.
+    """
+
+    time: float
+    bandwidth: Mapping[Link, float] = dataclasses.field(default_factory=dict)
+    prices: Mapping[str, float] = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.time < 0.0:
+            raise ValueError("EnvUpdate.time must be >= 0")
+        for link, m in self.bandwidth.items():
+            if m < 0.0:
+                raise ValueError(f"negative bandwidth multiplier on {link}")
+        for region, m in self.prices.items():
+            if m < 0.0:
+                raise ValueError(f"negative price multiplier for {region}")
+
+
+class BandwidthTrace:
+    """Time-varying environment: an ordered sequence of ``EnvUpdate``s.
+
+    The model is piecewise-constant (paper-style "real-time network
+    utilization" snapshots): between breakpoints the effective bandwidth
+    matrix and prices are fixed; at a breakpoint the simulator applies the
+    update atomically with every other event at that timestamp, then
+    re-validates running placements (see ``core/scheduler.py``).  Updates are
+    stored sorted by time (stable for equal times).
+    """
+
+    def __init__(self, updates: Iterable[EnvUpdate] = ()) -> None:
+        self.updates: List[EnvUpdate] = sorted(updates, key=lambda u: u.time)
+
+    def __len__(self) -> int:
+        return len(self.updates)
+
+    def __iter__(self) -> Iterator[EnvUpdate]:
+        return iter(self.updates)
+
+    def change_times(self) -> List[float]:
+        out: List[float] = []
+        for u in self.updates:
+            if not out or u.time != out[-1]:
+                out.append(u.time)
+        return out
+
+    def merged(self, other: "BandwidthTrace") -> "BandwidthTrace":
+        return BandwidthTrace([*self.updates, *other.updates])
+
+
 class _FreeGpuLedger(MutableMapping):
     """Dict view of the free-GPU vector; writes go straight to the array and
     keep the cluster's running free-GPU total in sync."""
@@ -161,6 +218,7 @@ class ClusterState:
         self._price = np.array(
             [self.regions[r].price_kwh for r in names], dtype=float
         )
+        self._price_base = self._price.copy()
         self._cap_total = int(self._cap.sum())
 
         provided_free = dict(self.free_gpus) if self.free_gpus else None
@@ -181,6 +239,10 @@ class ClusterState:
             self._bw_mat[iu, iv] = b
             self._link_idx[(u, v)] = (iu, iv)
         self._bw_total = float(sum(self.bandwidth.values()))
+        # Installed-capacity baseline for time-varying multipliers: dynamic
+        # scenarios rescale _bw_mat against this, never compounding.
+        self._bw_base = self._bw_mat.copy()
+        self._bw_dict_base = dict(self.bandwidth)
 
         self._res_mat = np.zeros((n, n), dtype=float)
         self._res_extra: Dict[Link, float] = {}
@@ -235,7 +297,9 @@ class ClusterState:
         return self._free_total
 
     def price(self, region: str) -> float:
-        return self.regions[region].price_kwh
+        """Current electricity price ($/kWh) — the construction-time price
+        scaled by any live multiplier (see ``set_price_multipliers``)."""
+        return float(self._price[self._idx[region]])
 
     def reserve_gpus(self, alloc: Mapping[str, int]) -> None:
         idx, free = self._idx, self._free
@@ -263,8 +327,10 @@ class ClusterState:
 
     # ---------------------------------------------------------------- network
     def link_bandwidth(self, u: str, v: str) -> float:
-        """Installed bandwidth of the directed link (u, v); intra-region hops
-        use the constant fast fabric."""
+        """Current capacity of the directed link (u, v) — the installed
+        bandwidth scaled by any live multiplier (see
+        ``set_link_multipliers``); intra-region hops use the constant fast
+        fabric."""
         if u == v:
             return INTRA_REGION_BANDWIDTH
         ij = self._link_idx.get((u, v))
@@ -343,6 +409,78 @@ class ClusterState:
             return 0.0
         return min(1.0, max(0.0, self._res_total / self._bw_total))
 
+    # ------------------------------------------------------ dynamic environment
+    def set_link_multipliers(self, multipliers: Mapping[Link, float]) -> None:
+        """Rescale listed links to ``multiplier × installed capacity``.
+
+        Multipliers are absolute against the construction-time (base)
+        capacity, so repeated application never compounds.  Reservations are
+        left untouched: a link may transiently hold more reserved bandwidth
+        than its shrunk capacity until the simulator's preemption pass
+        resolves it (``oversubscribed_links`` reports such links).
+
+        Validation runs over every entry before any mutation (the same
+        convention as ``reserve_bandwidth``/``release_bandwidth``): a
+        rejected update leaves the cluster untouched.
+        """
+        resolved = []
+        for link, m in multipliers.items():
+            if m < 0.0:
+                raise ValueError(f"negative bandwidth multiplier on {link}")
+            ij = self._link_idx.get(link)
+            if ij is None:
+                raise KeyError(f"link {link} is not installed")
+            resolved.append((link, ij, m))
+        for link, ij, m in resolved:
+            new = float(self._bw_base[ij]) * m
+            self._bw_total += new - float(self._bw_mat[ij])
+            self._bw_mat[ij] = new
+            self.bandwidth[link] = new
+
+    def set_price_multipliers(self, multipliers: Mapping[str, float]) -> None:
+        """Rescale listed regions' electricity prices against their
+        construction-time values (absolute multipliers, no compounding).
+        All-or-nothing, like ``set_link_multipliers``."""
+        resolved = []
+        for region, m in multipliers.items():
+            if m < 0.0:
+                raise ValueError(f"negative price multiplier for {region}")
+            i = self._idx.get(region)
+            if i is None:
+                raise KeyError(f"unknown region {region}")
+            resolved.append((i, m))
+        for i, m in resolved:
+            self._price[i] = self._price_base[i] * m
+
+    def apply_env_update(self, update: EnvUpdate) -> bool:
+        """Apply one trace breakpoint; returns True if link capacities moved
+        (the trigger for the simulator's placement re-validation).
+        All-or-nothing across both halves: unknown links/regions are rejected
+        before either multiplier set mutates."""
+        for link in update.bandwidth:
+            if link not in self._link_idx:
+                raise KeyError(f"link {link} is not installed")
+        for region in update.prices:
+            if region not in self._idx:
+                raise KeyError(f"unknown region {region}")
+        if update.prices:
+            self.set_price_multipliers(update.prices)
+        if update.bandwidth:
+            self.set_link_multipliers(update.bandwidth)
+            return True
+        return False
+
+    def oversubscribed_links(self, *, rel_tol: float = 1e-9) -> List[Link]:
+        """Links whose reserved bandwidth exceeds their (possibly shrunk)
+        capacity — Eq. (6) violations a bandwidth drop can introduce.
+        Sorted by link name for deterministic preemption resolution."""
+        over = self._res_mat > self._bw_mat * (1.0 + rel_tol) + 1e-6
+        out = [
+            link for link, ij in self._link_idx.items() if over[ij]
+        ]
+        out.sort()
+        return out
+
     # ------------------------------------------------------------------ misc
     def region_names(self) -> List[str]:
         return list(self.regions)
@@ -369,9 +507,19 @@ class ClusterState:
         return ClusterState.build(regs, bw, symmetric=False)
 
     def snapshot(self) -> "ClusterState":
-        return ClusterState(
+        """Deep copy with identical live state: ledgers, *and* any dynamic
+        multipliers — the copy keeps the original installed-capacity /
+        base-price baselines, so later absolute multipliers rescale against
+        the same base as on the source cluster."""
+        snap = ClusterState(
             regions=dict(self.regions),
-            bandwidth=dict(self.bandwidth),
+            bandwidth=dict(self._bw_dict_base),
             free_gpus=dict(self.free_gpus),
             reserved_bw=dict(self.reserved_bw),
         )
+        np.copyto(snap._bw_mat, self._bw_mat)
+        snap._bw_total = self._bw_total
+        snap.bandwidth.clear()
+        snap.bandwidth.update(self.bandwidth)
+        np.copyto(snap._price, self._price)
+        return snap

@@ -44,6 +44,23 @@ class PathCandidate:
     alloc: Dict[str, int]
 
 
+def placement_feasible(
+    placement: Placement, cluster: ClusterState, *, rel_tol: float = 1e-9
+) -> bool:
+    """Convenience probe: can every crossing edge of this placement still
+    carry the share the job reserved under the current (possibly shrunk)
+    link capacities (Eq. 6)?  For callers re-validating a single placement
+    (control-plane tooling, examples).  Note the engine's actual preemption
+    trigger is the *aggregate* check across jobs sharing a link —
+    ``ClusterState.oversubscribed_links`` — which subsumes this per-job
+    condition."""
+    for (u, v), share in placement.reserved_bw.items():
+        cap = cluster.link_bandwidth(u, v)
+        if share > cap * (1.0 + rel_tol) + 1e-6:
+            return False
+    return True
+
+
 def find_placement(
     profile: JobProfile,
     cluster: ClusterState,

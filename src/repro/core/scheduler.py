@@ -19,8 +19,18 @@ Two engines share the identical event loop (see DESIGN.md):
   policy re-order with per-call invariant recomputation.  Kept as the parity
   reference and the benchmark baseline.
 
-Both engines produce bit-identical ``SimulationResult``s; the engine-parity
-test enforces this for every policy and ablation.
+Both engines produce bit-identical ``SimulationResult``s on static
+scenarios; the engine-parity test enforces this for every policy and
+ablation.
+
+Dynamic environments (``trace=``) add two event families on top of arrivals
+and completions — ``bandwidth_change`` (a ``BandwidthTrace`` breakpoint
+rescaling link capacities and/or electricity prices) and preemptive
+migration when a drop strands a running pipeline (see the ``Simulator``
+docstring for the exact semantics and tiebreak order).  Dynamic scenarios
+run on the vectorized engine only and carry their own determinism
+guarantee: same cluster, profiles, trace, and policy ⇒ an identical
+``SimulationResult``, event log included.
 """
 
 from __future__ import annotations
@@ -33,13 +43,18 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from .allocator import cost_min_allocate
-from .cluster import ClusterState
+from .cluster import BandwidthTrace, ClusterState
 from .job import JobProfile
 from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .placement import Placement
 from .priority import _score_vector, order_by_priority, rank_order
 from .timing import electricity_cost, iteration_time
+
+#: Lost progress per preemption (s): checkpoint write + restore + pipeline
+#: re-warm.  Charged as extra execution time (GPUs are held while restoring,
+#: so Eq. 4 cost accrues for it too).
+DEFAULT_RESTART_PENALTY_S = 600.0
 
 
 class SchedulingPolicy(abc.ABC):
@@ -121,6 +136,11 @@ class BACEPipePolicy(SchedulingPolicy):
 # --------------------------------------------------------------------- result
 @dataclasses.dataclass
 class JobRecord:
+    """One *run segment* of a job.  Static scenarios have exactly one segment
+    per job; under the dynamic engine a preempted job leaves one record per
+    aborted segment (``preempted=True``, ``finish`` = preemption time) plus
+    the final completed one."""
+
     job_id: int
     model_name: str
     submit: float
@@ -128,6 +148,7 @@ class JobRecord:
     finish: float
     placement: Placement
     iteration_seconds: float
+    preempted: bool = False
 
     @property
     def wait(self) -> float:  # W_j
@@ -148,21 +169,93 @@ class SimulationResult:
     records: List[JobRecord]
     costs: Dict[int, float]
     makespan: float
+    #: Per-job preemptive-migration count (jobs never preempted are absent).
+    migrations: Dict[int, int] = dataclasses.field(default_factory=dict)
+    #: Per-job total preempted-to-restart stall time (s); same keys as
+    #: ``migrations``.
+    stall_seconds: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: Chronological event log: (time, kind, id) with kind in {"arrival",
+    #: "start", "preempt", "complete", "env"}; id is the job id (or the trace
+    #: update index for "env").  This is what the golden-trace tests pin.
+    events: List[Tuple[float, str, int]] = dataclasses.field(
+        default_factory=list
+    )
+
+    @property
+    def completed_records(self) -> List[JobRecord]:
+        """Final (non-preempted) segment of every job."""
+        return [r for r in self.records if not r.preempted]
 
     @property
     def average_jct(self) -> float:
-        return sum(r.jct for r in self.records) / len(self.records)
+        done = self.completed_records
+        return sum(r.jct for r in done) / len(done)
 
     @property
     def total_cost(self) -> float:
         return sum(self.costs.values())
 
+    @property
+    def total_migrations(self) -> int:
+        return sum(self.migrations.values())
+
+    @property
+    def total_stall_seconds(self) -> float:
+        return sum(self.stall_seconds.values())
+
     def summary(self) -> str:
+        extra = (
+            f", migrations={self.total_migrations}"
+            if self.migrations
+            else ""
+        )
         return (
             f"{self.policy}: avg_jct={self.average_jct / 3600.0:.3f} h, "
             f"total_cost=${self.total_cost:.2f}, "
-            f"makespan={self.makespan / 3600.0:.3f} h"
+            f"makespan={self.makespan / 3600.0:.3f} h{extra}"
         )
+
+    def to_jsonable(self) -> Dict:
+        """Canonical JSON form (sorted keys, full float precision) for the
+        golden-trace regression tests and benchmark dumps."""
+        return {
+            "policy": self.policy,
+            "makespan": self.makespan,
+            "costs": {str(j): c for j, c in sorted(self.costs.items())},
+            "migrations": {
+                str(j): n for j, n in sorted(self.migrations.items())
+            },
+            "stall_seconds": {
+                str(j): s for j, s in sorted(self.stall_seconds.items())
+            },
+            "records": [
+                {
+                    "job_id": r.job_id,
+                    "model_name": r.model_name,
+                    "submit": r.submit,
+                    "start": r.start,
+                    "finish": r.finish,
+                    "preempted": r.preempted,
+                    "iteration_seconds": r.iteration_seconds,
+                    "placement": {
+                        "path": list(r.placement.path),
+                        "alloc": {
+                            reg: int(n)
+                            for reg, n in sorted(r.placement.alloc.items())
+                        },
+                        "comm_times": list(r.placement.comm_times),
+                        "reserved_bw": {
+                            f"{u}->{v}": b
+                            for (u, v), b in sorted(
+                                r.placement.reserved_bw.items()
+                            )
+                        },
+                    },
+                }
+                for r in self.records
+            ],
+            "events": [[t, kind, i] for t, kind, i in self.events],
+        }
 
 
 # --------------------------------------------------------------- pending set
@@ -241,9 +334,31 @@ class _PendingLedger:
 
 
 # ------------------------------------------------------------------ simulator
-_ARRIVAL, _COMPLETION = 0, 1
+#: Event kinds, in same-timestamp heap order.  All events sharing a timestamp
+#: are drained *atomically* — completions release resources, environment
+#: updates rescale capacities/prices, arrivals join the queue — before the
+#: preemption check and the single scheduling pass for that timestamp run.
+#: The end state of a drain is therefore independent of intra-timestamp
+#: ordering (updates are absolute, releases/additions commute); the numeric
+#: kind order (arrival < completion < env-change, then insertion seq) only
+#: fixes the *event log* order, making traces reproducible byte-for-byte.
+_ARRIVAL, _COMPLETION, _ENV_CHANGE = 0, 1, 2
 
 ENGINES = ("vectorized", "legacy")
+
+
+@dataclasses.dataclass
+class _RunningJob:
+    """Live segment bookkeeping: placement + its record + the generation
+    guarding stale completion events + the $/s rate for cost back-out +
+    the leading restore time (restart penalty) that must not be credited
+    as training progress if this segment is itself preempted."""
+
+    placement: Placement
+    record: JobRecord
+    gen: int
+    cost_rate: float
+    restore_s: float
 
 
 class Simulator:
@@ -251,7 +366,18 @@ class Simulator:
 
     ``engine="vectorized"`` (default) runs the incremental array-backed
     scheduling path; ``engine="legacy"`` runs the preserved seed path.  Both
-    yield identical results (see module docstring).
+    yield identical results on static scenarios (see module docstring).
+
+    ``trace`` switches on the dynamic environment: piecewise-constant
+    bandwidth/price multipliers applied as ``_ENV_CHANGE`` events.  When a
+    bandwidth drop leaves a link carrying more reserved bandwidth than its
+    new capacity (Eq. 6 violation), running jobs on that link are preempted
+    latest-started-first until the link fits again: each victim checkpoints
+    (progress floors to whole finished iterations), releases its GPUs and
+    bandwidth, pays ``restart_penalty_s`` of extra execution on its next
+    placement, and re-enters the pending queue at its original submit time.
+    Dynamic scenarios are vectorized-engine-only; the legacy reference
+    predates the event types and refuses them.
     """
 
     def __init__(
@@ -261,13 +387,25 @@ class Simulator:
         policy: SchedulingPolicy,
         *,
         engine: str = "vectorized",
+        trace: Optional[BandwidthTrace] = None,
+        restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (have: {ENGINES})")
+        if trace is not None and len(trace) > 0 and engine == "legacy":
+            raise ValueError(
+                "dynamic scenarios (bandwidth/price traces) require "
+                'engine="vectorized"; the legacy seed engine only models '
+                "a static environment"
+            )
+        if restart_penalty_s < 0.0:
+            raise ValueError("restart_penalty_s must be >= 0")
         self.cluster = cluster.snapshot()
         self.profiles = {p.spec.job_id: p for p in profiles}
         self.policy = policy
         self.engine = engine
+        self.trace = trace
+        self.restart_penalty_s = restart_penalty_s
 
     def run(self) -> SimulationResult:
         cluster = self.cluster
@@ -294,29 +432,127 @@ class Simulator:
             place = policy.place
 
         pending: Dict[int, JobProfile] = {}
-        running: Dict[int, Tuple[Placement, float]] = {}
+        running: Dict[int, _RunningJob] = {}
         records: List[JobRecord] = []
         costs: Dict[int, float] = {}
-        events: List[Tuple[float, int, int, int]] = []  # (t, kind, seq, job)
+        log: List[Tuple[float, str, int]] = []
+        migrations: Dict[int, int] = {}
+        stall: Dict[int, float] = {}
+        #: iterations still owed per job (== spec.iterations until preempted)
+        remaining: Dict[int, int] = {
+            j: p.spec.iterations for j, p in self.profiles.items()
+        }
+        #: completion-event generation per job; bumped on preemption so the
+        #: stale completion queued for the aborted segment is skipped on pop
+        gen: Dict[int, int] = {j: 0 for j in self.profiles}
+        #: preemption time of jobs currently back in the queue (stall clock)
+        preempted_at: Dict[int, float] = {}
+
+        # (t, kind, seq, payload): payload is the job id for arrivals, the
+        # (job id, generation) pair for completions, and the trace-update
+        # index for env changes.  seq keeps heap comparisons total.
+        events: List[Tuple[float, int, int, object]] = []
         seq = 0
-        for p in self.profiles.values():
-            heapq.heappush(events, (p.spec.submit_time, _ARRIVAL, seq, p.spec.job_id))
+        # Seed arrivals in job-id order so same-timestamp arrivals drain (and
+        # log) canonically regardless of the caller's profile ordering.
+        for job_id in sorted(self.profiles):
+            p = self.profiles[job_id]
+            heapq.heappush(events, (p.spec.submit_time, _ARRIVAL, seq, job_id))
             seq += 1
+        arrivals_left = len(self.profiles)
+        if self.trace is not None:
+            for i, upd in enumerate(self.trace.updates):
+                heapq.heappush(events, (upd.time, _ENV_CHANGE, seq, i))
+                seq += 1
+
+        def preempt(job_id: int, t: float) -> None:
+            run = running.pop(job_id)
+            cluster.release_gpus(run.placement.alloc)
+            cluster.release_bandwidth(run.placement.reserved_bw)
+            rec = run.record
+            # Progress floors to whole checkpointed iterations; the leading
+            # restore window of a restarted segment is not training time.
+            # The unearned projected cost is backed out of the Eq. 4 ledger.
+            trained = max(0.0, (t - rec.start) - run.restore_s)
+            done = int(trained // rec.iteration_seconds)
+            remaining[job_id] = max(1, remaining[job_id] - max(0, done))
+            costs[job_id] -= (rec.finish - t) * run.cost_rate
+            rec.finish = t
+            rec.preempted = True
+            gen[job_id] += 1
+            migrations[job_id] = migrations.get(job_id, 0) + 1
+            stall.setdefault(job_id, 0.0)
+            preempted_at[job_id] = t
+            pending[job_id] = self.profiles[job_id]
+            if ledger is not None:
+                ledger.add(self.profiles[job_id])
+            log.append((t, "preempt", job_id))
 
         now = 0.0
         while events:
             now = events[0][0]
-            # Drain all events at this timestamp before scheduling.
+            env_changed = False
+            # Drain all events at this timestamp before acting (atomic drain;
+            # see the kind-order comment above).
             while events and events[0][0] <= now + 1e-12:
-                _, ev_kind, _, job_id = heapq.heappop(events)
+                t_ev, ev_kind, _, payload = heapq.heappop(events)
                 if ev_kind == _ARRIVAL:
+                    job_id = payload
                     pending[job_id] = self.profiles[job_id]
                     if ledger is not None:
                         ledger.add(self.profiles[job_id])
-                else:  # completion
-                    placement, _ = running.pop(job_id)
-                    cluster.release_gpus(placement.alloc)
-                    cluster.release_bandwidth(placement.reserved_bw)
+                    arrivals_left -= 1
+                    log.append((t_ev, "arrival", job_id))
+                elif ev_kind == _COMPLETION:
+                    job_id, ev_gen = payload
+                    run = running.get(job_id)
+                    if run is None or run.gen != ev_gen:
+                        continue  # stale: the segment was preempted
+                    running.pop(job_id)
+                    cluster.release_gpus(run.placement.alloc)
+                    cluster.release_bandwidth(run.placement.reserved_bw)
+                    log.append((t_ev, "complete", job_id))
+                else:  # _ENV_CHANGE
+                    upd = self.trace.updates[payload]
+                    if cluster.apply_env_update(upd):
+                        env_changed = True
+                    log.append((t_ev, "env", payload))
+
+            # Preemptive migration: resolve Eq. 6 violations a bandwidth drop
+            # introduced.  Victim rule (deterministic): walk over-subscribed
+            # links in sorted name order; on each, preempt the latest-started
+            # job (ties: highest job id) until the link fits — LIFO keeps the
+            # oldest pipelines running.
+            if env_changed:
+                # Links whose over-subscription no running job owns (e.g. a
+                # background reservation handed to the ClusterState at
+                # construction) cannot be resolved by preemption: skip them
+                # instead of spinning.
+                unresolvable: set = set()
+                while True:
+                    over = [
+                        l
+                        for l in cluster.oversubscribed_links()
+                        if l not in unresolvable
+                    ]
+                    if not over:
+                        break
+                    link = over[0]
+                    users = [
+                        j
+                        for j, run in running.items()
+                        if link in run.placement.reserved_bw
+                    ]
+                    if not users:
+                        unresolvable.add(link)
+                        continue
+                    victim = max(
+                        users, key=lambda j: (running[j].record.start, j)
+                    )
+                    preempt(victim, now)
+
+            if not pending and not running and arrivals_left == 0:
+                break  # only trailing env events remain; nothing can change
 
             # Scheduling pass (work-conserving).
             progressed = True
@@ -328,33 +564,47 @@ class Simulator:
                         if policy.strict_fcfs:
                             break  # HoL: the stuck head job blocks the queue
                         continue
+                    job_id = prof.spec.job_id
                     cluster.reserve_gpus(placement.alloc)
                     cluster.reserve_bandwidth(placement.reserved_bw)
                     t_it = iteration_time(prof, placement)
-                    e = prof.spec.iterations * t_it  # Eq. (2)
+                    e = remaining[job_id] * t_it  # Eq. (2), remaining work
+                    restore = 0.0
+                    if job_id in preempted_at:
+                        stall[job_id] += now - preempted_at.pop(job_id)
+                        restore = self.restart_penalty_s
+                        e += restore
                     finish = now + e
-                    running[prof.spec.job_id] = (placement, now)
-                    records.append(
-                        JobRecord(
-                            job_id=prof.spec.job_id,
-                            model_name=prof.spec.model.name,
-                            submit=prof.spec.submit_time,
-                            start=now,
-                            finish=finish,
-                            placement=placement,
-                            iteration_seconds=t_it,
-                        )
-                    )
-                    costs[prof.spec.job_id] = electricity_cost(
+                    cost = electricity_cost(
                         prof, placement, cluster, execution_seconds=e
                     )
-                    del pending[prof.spec.job_id]
+                    record = JobRecord(
+                        job_id=job_id,
+                        model_name=prof.spec.model.name,
+                        submit=prof.spec.submit_time,
+                        start=now,
+                        finish=finish,
+                        placement=placement,
+                        iteration_seconds=t_it,
+                    )
+                    records.append(record)
+                    running[job_id] = _RunningJob(
+                        placement=placement,
+                        record=record,
+                        gen=gen[job_id],
+                        cost_rate=cost / e,
+                        restore_s=restore,
+                    )
+                    costs[job_id] = costs.get(job_id, 0.0) + cost
+                    del pending[job_id]
                     if ledger is not None:
-                        ledger.remove(prof.spec.job_id)
+                        ledger.remove(job_id)
                     heapq.heappush(
-                        events, (finish, _COMPLETION, seq, prof.spec.job_id)
+                        events,
+                        (finish, _COMPLETION, seq, (job_id, gen[job_id])),
                     )
                     seq += 1
+                    log.append((now, "start", job_id))
                     progressed = True
                     break  # re-rank: alpha/normalization changed
 
@@ -367,9 +617,12 @@ class Simulator:
 
         return SimulationResult(
             policy=policy.name,
-            records=sorted(records, key=lambda r: r.job_id),
+            records=sorted(records, key=lambda r: (r.job_id, r.start)),
             costs=costs,
-            makespan=now,
+            makespan=max((r.finish for r in records), default=0.0),
+            migrations=migrations,
+            stall_seconds=stall,
+            events=log,
         )
 
 
@@ -379,5 +632,14 @@ def simulate(
     policy: SchedulingPolicy,
     *,
     engine: str = "vectorized",
+    trace: Optional[BandwidthTrace] = None,
+    restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
 ) -> SimulationResult:
-    return Simulator(cluster, profiles, policy, engine=engine).run()
+    return Simulator(
+        cluster,
+        profiles,
+        policy,
+        engine=engine,
+        trace=trace,
+        restart_penalty_s=restart_penalty_s,
+    ).run()

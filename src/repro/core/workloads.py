@@ -11,9 +11,9 @@ from __future__ import annotations
 
 import math
 import random
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .cluster import ClusterState, Region
+from .cluster import BandwidthTrace, ClusterState, EnvUpdate, Link, Region
 from .job import JobProfile, JobSpec, ModelSpec
 
 # ------------------------------------------------------------------- Table II
@@ -116,6 +116,151 @@ def paper_profiles(
     if jobs is None:
         jobs = paper_jobs()
     return [JobProfile(j, **profile_kwargs) for j in jobs]
+
+
+# ------------------------------------------------------------ arrival traces
+def poisson_submit_times(
+    n_jobs: int, *, mean_interarrival_s: float = 1800.0, seed: int = 0
+) -> List[float]:
+    """Online arrivals: exponential inter-arrival gaps (Poisson process),
+    replacing the seed's all-at-t=0 assumption.  Deterministic per seed."""
+    rng = random.Random(seed)
+    t, out = 0.0, []
+    for _ in range(n_jobs):
+        t += rng.expovariate(1.0 / mean_interarrival_s)
+        out.append(t)
+    return out
+
+
+def bursty_submit_times(
+    n_jobs: int,
+    *,
+    burst_size: int = 4,
+    burst_gap_s: float = 7200.0,
+    intra_burst_s: float = 60.0,
+    seed: int = 0,
+) -> List[float]:
+    """Bursty arrivals: tight clumps of ``burst_size`` jobs separated by long
+    gaps — the HoL-amplifying regime (queue spikes while resources drain)."""
+    rng = random.Random(seed)
+    out: List[float] = []
+    t = 0.0
+    while len(out) < n_jobs:
+        for _ in range(min(burst_size, n_jobs - len(out))):
+            out.append(t + rng.uniform(0.0, intra_burst_s))
+        t += burst_gap_s
+    out.sort()
+    return out
+
+
+# ----------------------------------------------------------- bandwidth traces
+def _inter_region_links(cluster: ClusterState) -> List[Link]:
+    return sorted(cluster.bandwidth)
+
+
+def diurnal_trace(
+    cluster: ClusterState,
+    *,
+    period_s: float = 86_400.0,
+    amplitude: float = 0.5,
+    steps_per_period: int = 8,
+    horizon_s: float = 86_400.0,
+    floor: float = 0.05,
+) -> BandwidthTrace:
+    """Piecewise-constant diurnal wave over every inter-region link.
+
+    The multiplier follows ``1 - amplitude * (0.5 - 0.5*cos(2*pi*t/T))`` —
+    full capacity at t=0 (off-peak), dipping to ``1 - amplitude`` half a
+    period in (business-hours congestion), sampled at ``steps_per_period``
+    plateaus per period.  Deterministic: no randomness involved.
+    """
+    links = _inter_region_links(cluster)
+    updates: List[EnvUpdate] = []
+    step = period_s / steps_per_period
+    t = step
+    while t <= horizon_s + 1e-9:
+        phase = 2.0 * math.pi * t / period_s
+        m = max(floor, 1.0 - amplitude * (0.5 - 0.5 * math.cos(phase)))
+        updates.append(EnvUpdate(time=t, bandwidth={l: m for l in links}))
+        t += step
+    return BandwidthTrace(updates)
+
+
+def link_flap_trace(
+    links: Iterable[Link],
+    *,
+    t_down_s: float,
+    t_up_s: Optional[float] = None,
+    drop_to: float = 0.1,
+    symmetric: bool = True,
+) -> BandwidthTrace:
+    """Step-drop ("link flap"): the listed links fall to ``drop_to`` × their
+    installed capacity at ``t_down_s`` and recover to full at ``t_up_s``
+    (never, when None).  ``symmetric`` also flaps each reverse direction."""
+    flapped: List[Link] = []
+    for u, v in links:
+        flapped.append((u, v))
+        if symmetric:
+            flapped.append((v, u))
+    down = {l: drop_to for l in flapped}
+    updates = [EnvUpdate(time=t_down_s, bandwidth=down)]
+    if t_up_s is not None:
+        if t_up_s <= t_down_s:
+            raise ValueError("t_up_s must be after t_down_s")
+        updates.append(
+            EnvUpdate(time=t_up_s, bandwidth={l: 1.0 for l in flapped})
+        )
+    return BandwidthTrace(updates)
+
+
+def random_fluctuation_trace(
+    cluster: ClusterState,
+    *,
+    seed: int = 0,
+    interval_s: float = 3600.0,
+    horizon_s: float = 86_400.0,
+    lo: float = 0.4,
+    hi: float = 1.0,
+) -> BandwidthTrace:
+    """Seeded random per-link fluctuation: every ``interval_s`` each link
+    independently draws a multiplier uniform in [lo, hi].  Same seed ⇒ the
+    identical trace (links are visited in sorted order)."""
+    if not 0.0 <= lo <= hi:
+        raise ValueError("need 0 <= lo <= hi")
+    rng = random.Random(seed)
+    links = _inter_region_links(cluster)
+    updates: List[EnvUpdate] = []
+    t = interval_s
+    while t <= horizon_s + 1e-9:
+        updates.append(
+            EnvUpdate(
+                time=t,
+                bandwidth={l: rng.uniform(lo, hi) for l in links},
+            )
+        )
+        t += interval_s
+    return BandwidthTrace(updates)
+
+
+def price_spike_trace(
+    regions: Iterable[str],
+    *,
+    t_start_s: float,
+    t_end_s: Optional[float] = None,
+    factor: float = 3.0,
+) -> BandwidthTrace:
+    """Electricity-price spike: the listed regions' prices scale by ``factor``
+    during [t_start_s, t_end_s).  Prices never trigger preemption — they only
+    steer subsequent Cost-Min allocations and the cost of new segments."""
+    spiked = list(regions)
+    updates = [EnvUpdate(time=t_start_s, prices={r: factor for r in spiked})]
+    if t_end_s is not None:
+        if t_end_s <= t_start_s:
+            raise ValueError("t_end_s must be after t_start_s")
+        updates.append(
+            EnvUpdate(time=t_end_s, prices={r: 1.0 for r in spiked})
+        )
+    return BandwidthTrace(updates)
 
 
 # ---------------------------------------------------------------- Fig. 1 demo

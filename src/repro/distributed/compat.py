@@ -1,0 +1,101 @@
+"""Version-tolerant wrappers over fast-moving jax mesh/shard_map APIs.
+
+The repo targets the current jax API (``jax.set_mesh``, ``jax.shard_map`` with
+``axis_names=``/``check_vma=``), but must also run on older installs where the
+mesh context is ``jax.sharding.use_mesh`` or the ``Mesh`` object itself, and
+where shard_map lives in ``jax.experimental.shard_map`` with the
+``auto=``/``check_rep=`` spelling.  Everything that needs either API imports it
+from here instead of probing ``jax`` directly.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def use_mesh(mesh):
+    """Context manager making ``mesh`` ambient for jit/shard_map.
+
+    Resolution order: ``jax.set_mesh`` (current), ``jax.sharding.use_mesh``
+    (transitional), then the ``Mesh`` object itself (older jax, where ``with
+    mesh:`` enters the resource environment).
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    sharding_use_mesh = getattr(jax.sharding, "use_mesh", None)
+    if sharding_use_mesh is not None:
+        return sharding_use_mesh(mesh)
+    return mesh
+
+
+_manual_region_depth = 0
+
+
+def constrain_auto_axes(x, spec):
+    """``with_sharding_constraint`` for constraints naming would-be-auto axes
+    inside a shard_map body.  Under the full-manual fallback (old jax, see
+    ``shard_map`` below) every mesh axis is manual, so such a constraint
+    fails at lowering; it is a GSPMD performance hint, not semantics, and is
+    skipped there.  On jax with native partial-auto shard_map (and in plain
+    auto regions on any jax) it always applies."""
+    if _manual_region_depth > 0:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def axis_size(name):
+    """``jax.lax.axis_size`` inside a manual (shard_map) region, on any jax.
+    Older versions lack it; ``psum(1, name)`` constant-folds to the same
+    concrete int there."""
+    native = getattr(jax.lax, "axis_size", None)
+    if native is not None:
+        return native(name)
+    return jax.lax.psum(1, name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None, check_vma=True):
+    """``jax.shard_map`` with the current keyword surface, on any jax.
+
+    ``axis_names`` names the *manual* mesh axes (all axes when None).  On jax
+    versions without ``jax.shard_map`` the fallback ignores ``axis_names``
+    and runs the region *full-manual* (partial-auto there rejects
+    ``axis_index``/``ppermute`` at SPMD partitioning) — numerically identical
+    since specs that omit an axis replicate over it, at the cost of redundant
+    compute on the would-be-auto axes; ``check_vma`` maps onto ``check_rep``.
+    """
+    native = getattr(jax, "shard_map", None)
+    if native is not None:
+        kwargs = {} if axis_names is None else {"axis_names": axis_names}
+        return native(
+            f,
+            mesh=mesh,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            check_vma=check_vma,
+            **kwargs,
+        )
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+
+    # Old jax: run full-manual instead of partial-auto.  ``axis_index`` and
+    # ``ppermute`` under partial-auto lower to instructions the SPMD
+    # partitioner rejects there; full-manual is numerically identical (specs
+    # that omit an axis replicate over it) at the cost of redundant compute
+    # on the would-be-auto axes.  While the body traces, a flag tells
+    # ``constrain_auto_axes`` to drop auto-axis sharding hints that would be
+    # illegal in a fully-manual region.
+    def body(*args, **body_kwargs):
+        global _manual_region_depth
+        _manual_region_depth += 1
+        try:
+            return f(*args, **body_kwargs)
+        finally:
+            _manual_region_depth -= 1
+
+    return _experimental_shard_map(
+        body,
+        mesh=mesh,
+        in_specs=in_specs,
+        out_specs=out_specs,
+        check_rep=check_vma,
+    )

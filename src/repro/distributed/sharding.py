@@ -15,6 +15,8 @@ from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.distributed.compat import constrain_auto_axes
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
@@ -236,6 +238,6 @@ def make_shard_act(
         # bare PartitionSpec: resolves against the context mesh, so the same
         # hook works inside pod-manual shard_map regions (abstract mesh with
         # Manual pod axis) and in plain auto regions alike.
-        return jax.lax.with_sharding_constraint(x, s)
+        return constrain_auto_axes(x, s)
 
     return shard

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import use_mesh
+
 from repro.configs import SHAPES_BY_NAME, get_config, runnable_cells, ARCH_IDS
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.launch import steps as S
@@ -181,7 +183,7 @@ def run_cell(
     }
     t0 = time.time()
     try:
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             lowered, meta = lower_cell(
                 cfg, cell, mesh, multi_pod=multi_pod,
                 cache_dtype={"bf16": jnp.bfloat16, "int8": jnp.int8}[cache_dtype],

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.distributed.compat import constrain_auto_axes, shard_map
+
 from repro.configs.base import ArchConfig, ShapeCell
 from repro.distributed.compression import compressed_pmean
 from repro.distributed.sharding import (
@@ -205,7 +207,7 @@ def build_auto_train(
             k: (P(None, "pod") if k == "positions3" else P("pod"))
             for k in batch_
         }
-        return jax.shard_map(
+        return shard_map(
             pod_fn,
             mesh=mesh,
             in_specs=(jax.tree.map(lambda _: P(), params), in_batch_specs),
@@ -330,7 +332,7 @@ def _pp_batch_shard(x: jax.Array, name: str) -> jax.Array:
     batch-sharded over the (auto) data axis.  Without this GSPMD sometimes
     gathers activation-sized tensors over `data` to compute replicated
     weight grads — measured 1.8 TB/step per dot on qwen train_4k (SSPerf)."""
-    return jax.lax.with_sharding_constraint(
+    return constrain_auto_axes(
         x, P("data", *([None] * (x.ndim - 1)))
     )
 
@@ -425,7 +427,7 @@ def _pp_forward_hidden(cfg, params, tokens, lay: PPLayout, mesh, seq,
     # (transpose of a replicated input) is a 32-bit all-reduce — XLA's CPU
     # AllReducePromotion pass crashes cloning 16-bit reducers that carry a
     # Shardy sharding_constraint (see DESIGN.md "hardware adaptation").
-    hidden = jax.shard_map(
+    hidden = shard_map(
         inner,
         mesh=mesh,
         in_specs=(
@@ -539,7 +541,7 @@ def build_pp_serve(cfg, mesh, *, multi_pod, batch, cache_len,
 
         blocks_spec = P(lay.pipe_axes)
         cache_tree_spec = jax.tree.map(lambda _: P(lay.pipe_axes), cache)
-        hidden, cache_new = jax.shard_map(
+        hidden, cache_new = shard_map(
             inner,
             mesh=mesh,
             in_specs=(

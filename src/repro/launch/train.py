@@ -22,6 +22,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data import SyntheticLM, make_batch_iterator
+from repro.distributed.compat import use_mesh
 from repro.distributed.sharding import param_specs
 from repro.ft import FailureInjector, resilient_train_loop
 from repro.launch import steps as S
@@ -59,7 +60,7 @@ def build_everything(cfg, mesh, *, batch, seq, multi_pod, dtype, seed=0):
     sspecs = S.state_specs(cfg, mesh, params_abs, pspecs)
     state_ns = S.ns(mesh, sspecs)
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = jax.jit(init_params, out_shardings=S.ns(mesh, pspecs))()
         opt = jax.jit(adamw_init, out_shardings=state_ns.opt)(params)
     state = S.TrainState(params, opt)
@@ -123,7 +124,7 @@ def main(argv=None) -> None:
         injector = FailureInjector({args.simulate_failure: "pod-1"})
 
     def wrapped_step(state_, batch_):
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             return jit_step(state_, batch_)
 
     out = resilient_train_loop(

@@ -61,6 +61,8 @@ def moe_ffn_apply(
     import jax as _jax
     from jax.sharding import PartitionSpec as P
 
+    from repro.distributed.compat import shard_map
+
     if ep_axis is None or ep_size <= 1 or x.shape[1] % ep_size != 0:
         return _moe_body(p, x, cfg, None, 1)
 
@@ -80,7 +82,7 @@ def moe_ffn_apply(
             lambda w: w.astype(jnp.float32), p["shared"]
         )
 
-    fn = _jax.shard_map(
+    fn = shard_map(
         lambda pp, xx: _moe_body(pp, xx, cfg, ep_axis, ep_size),
         mesh=mesh,
         in_specs=(pspecs, P(None, ep_axis, None)),

@@ -25,6 +25,8 @@ from typing import Any, Callable, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.distributed.compat import axis_size as _lax_axis_size
+
 Axis = Union[str, Tuple[str, ...]]
 
 
@@ -37,7 +39,7 @@ def linear_stage_index(axis: Axis) -> jax.Array:
     names = _axis_tuple(axis)
     idx = jnp.int32(0)
     for name in names:
-        idx = idx * jax.lax.axis_size(name) + jax.lax.axis_index(name)
+        idx = idx * _lax_axis_size(name) + jax.lax.axis_index(name)
     return idx
 
 
@@ -45,7 +47,7 @@ def pipeline_size(axis: Axis) -> int:
     names = _axis_tuple(axis)
     out = 1
     for name in names:
-        out *= jax.lax.axis_size(name)
+        out *= _lax_axis_size(name)
     return out
 
 

@@ -6,3 +6,13 @@ import sys
 # subprocesses that set the flag themselves (see test_distributed.py), and
 # the dry-run sets 512 in launch/dryrun.py only.
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--regen",
+        action="store_true",
+        default=False,
+        help="regenerate the golden-trace files under tests/golden/ from "
+        "the current engine instead of asserting against them",
+    )

@@ -31,6 +31,7 @@ def test_pipeline_matches_sequential_reference():
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_config
         from repro.launch import steps as S
+        from repro.distributed.compat import use_mesh
         from repro.launch.mesh import make_debug_mesh
         from repro.models.model import build_model, ModelCtx
         from repro.models.layers import rms_norm, chunked_xent
@@ -60,7 +61,7 @@ def test_pipeline_matches_sequential_reference():
                                    False, jnp.float32)
             lbl = batch["labels"].reshape(lay.m_ub, lay.mb, t).reshape(-1, t)
             return chunked_xent(p["embed"], h, lbl, cfg)
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             loss = float(jax.jit(pp_loss)(pp_params, batch))
             grads = jax.jit(jax.grad(pp_loss))(pp_params, batch)
         assert abs(loss - ref_loss) < 1e-4, (loss, ref_loss)
@@ -82,6 +83,7 @@ def test_compressed_pod_gradients_close_to_exact():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np
         from jax.sharding import PartitionSpec as P
+        from repro.distributed.compat import shard_map, use_mesh
         from repro.distributed.compression import compressed_pmean
         mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
         g = jax.random.normal(jax.random.PRNGKey(0), (2, 64, 33))
@@ -89,8 +91,8 @@ def test_compressed_pod_gradients_close_to_exact():
         def f(g):
             out = compressed_pmean({"w": g}, "pod", 2)
             return out["w"]
-        with jax.set_mesh(mesh):
-            got = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
+        with use_mesh(mesh):
+            got = jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
                           out_specs=P("pod"), axis_names={"pod"},
                           check_vma=False))(g)
         want = jnp.broadcast_to(jnp.mean(g.reshape(2, 1, 64, 33), 0), g.shape)
@@ -107,6 +109,7 @@ def test_moe_ep_all_to_all_matches_single_device():
         from repro.configs import get_config
         from repro.models import moe as moe_mod
         from repro.models.moe import moe_ffn_apply, init_moe_ffn
+        from repro.distributed.compat import use_mesh
         # generous capacity so shard-local vs global drop behaviour agrees
         moe_mod.CAPACITY_FACTOR = 16.0
         mesh = jax.make_mesh((2, 2), ("data", "model"))
@@ -115,7 +118,7 @@ def test_moe_ep_all_to_all_matches_single_device():
         x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model)) * 0.3
 
         y_ref, aux_ref = moe_ffn_apply(p, x, cfg)  # no EP
-        with jax.set_mesh(mesh):
+        with use_mesh(mesh):
             y_ep, aux_ep = jax.jit(lambda p, x: moe_ffn_apply(
                 p, x, cfg, ep_axis="model", ep_size=2, mesh=mesh))(p, x)
         # EP capacity is per-shard so borderline drops can differ; the bulk
@@ -131,6 +134,7 @@ def test_train_step_runs_on_debug_mesh_all_strategies():
     run_sub("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
         from repro.configs import get_config
+        from repro.distributed.compat import use_mesh
         from repro.launch.mesh import make_debug_mesh
         from repro.launch.train import build_everything
         from repro.data import SyntheticLM, make_batch_iterator
@@ -147,7 +151,7 @@ def test_train_step_runs_on_debug_mesh_all_strategies():
             bspec = S.batch_axis_spec(mesh, False, 8)
             it = make_batch_iterator(src, cfg, mesh, bspec)
             losses = []
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 for i in range(3):
                     state, loss = step_fn(state, next(it))
                     losses.append(float(loss))

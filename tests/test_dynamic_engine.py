@@ -1,0 +1,378 @@
+"""Dynamic-engine behavior tests: bandwidth traces, preemptive migration,
+event-ordering determinism, and the trace/cluster plumbing itself.
+
+The documented same-timestamp semantics (see ``core/scheduler.py``): all
+events sharing a timestamp drain *atomically* — completions release,
+environment updates rescale, arrivals enqueue — before the preemption check
+and the (single) scheduling pass for that timestamp run.  The tests here pin
+the observable consequences: a job finishing exactly at a drop time is never
+preempted, an arrival coinciding with a drop is placed under the reduced
+capacity, and results are invariant to the caller's profile ordering.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    Simulator,
+    get_scenario,
+    simulate,
+)
+
+
+def two_region_cluster(cap=6, gbps=50.0):
+    regions = [Region("a", cap, 0.10), Region("b", cap, 0.20)]
+    return ClusterState.build(regions, {("a", "b"): gbps}, symmetric=True)
+
+
+def spanning_profile(job_id=0, iters=20):
+    """A job whose memory floor (8 GPUs at 44 GB each) exceeds either
+    region's pool, forcing a cross-region pipeline over the a<->b link."""
+    spec = JobSpec(
+        job_id,
+        ModelSpec(f"j{job_id}", 20e9, 16, 2048, batch_size=16),
+        iterations=iters,
+    )
+    return JobProfile(spec, gpu_flops=300e12)
+
+
+FLAP_LINKS = {("a", "b"): 0.01, ("b", "a"): 0.01}
+RESTORE_LINKS = {("a", "b"): 1.0, ("b", "a"): 1.0}
+
+
+# ------------------------------------------------------- preemption semantics
+def test_link_drop_preempts_migrates_and_completes():
+    prof = spanning_profile()
+    static = simulate(two_region_cluster(), [prof], BACEPipePolicy())
+    assert len(static.records) == 1
+    t_it = static.records[0].iteration_seconds
+    finish0 = static.records[0].finish
+    t_drop = 0.4 * finish0  # mid-run, not iteration-aligned
+    t_up = finish0 * 2.0
+
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=t_drop, bandwidth=FLAP_LINKS),
+            EnvUpdate(time=t_up, bandwidth=RESTORE_LINKS),
+        ]
+    )
+    penalty = 500.0
+    sim = Simulator(
+        two_region_cluster(),
+        [spanning_profile()],
+        BACEPipePolicy(),
+        trace=trace,
+        restart_penalty_s=penalty,
+    )
+    res = sim.run()
+
+    # one aborted segment + one completed segment
+    assert [r.preempted for r in res.records] == [True, False]
+    aborted, done = res.records
+    assert aborted.finish == t_drop
+    assert res.migrations == {0: 1}
+
+    # no placement possible while the link is down: the job stalls until the
+    # recovery breakpoint, then restarts from its checkpoint
+    assert done.start == t_up
+    assert res.stall_seconds[0] == pytest.approx(t_up - t_drop)
+
+    # progress floors to whole iterations; the restart pays the penalty
+    done_iters = math.floor(t_drop / t_it)
+    expected_exec = (20 - done_iters) * done.iteration_seconds + penalty
+    assert done.finish == pytest.approx(t_up + expected_exec)
+    assert res.makespan == done.finish
+
+    # Eq. 4 cost accrues exactly over the active (non-stalled) time
+    rate = res.costs[0] / (aborted.execution + done.execution)
+    assert res.costs[0] == pytest.approx(
+        rate * ((t_drop - 0.0) + (done.finish - t_up))
+    )
+
+    # conservation: the simulator's cluster returned to its initial ledger
+    assert sim.cluster.total_free_gpus() == sim.cluster.total_gpus()
+    assert all(v == 0.0 for v in sim.cluster.reserved_bw.values())
+
+    # event log tells the story in order
+    kinds = [k for _, k, _ in res.events]
+    assert kinds == ["arrival", "start", "env", "preempt", "env", "start",
+                     "complete"]
+    assert all(
+        t1 <= t2 for (t1, _, _), (t2, _, _) in zip(res.events, res.events[1:])
+    )
+
+
+def test_repreemption_does_not_credit_restore_time_as_progress():
+    """A restarted segment spends its first ``restart_penalty_s`` restoring,
+    not training; preempting it again must not count that window as
+    iterations.  With a penalty far longer than the second up-window, zero
+    iterations complete between the flaps — the job must still owe (almost)
+    everything afterwards, i.e. its total trained time stays ~(iters × t_it)."""
+    prof = spanning_profile()
+    static = simulate(two_region_cluster(), [prof], BACEPipePolicy())
+    t_it = static.records[0].iteration_seconds
+    penalty = 300.0 * t_it  # dwarfs the inter-flap gap below
+    t1 = 5.0 * t_it + 0.3 * t_it          # first drop, mid-iteration 6
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=t1, bandwidth=FLAP_LINKS),
+            EnvUpdate(time=t1 + t_it, bandwidth=RESTORE_LINKS),  # restart
+            # second drop: the restarted segment has only restored for
+            # 2*t_it << penalty, so it has trained 0 iterations
+            EnvUpdate(time=t1 + 3.0 * t_it, bandwidth=FLAP_LINKS),
+            EnvUpdate(time=t1 + 4.0 * t_it, bandwidth=RESTORE_LINKS),
+        ]
+    )
+    sim = Simulator(
+        two_region_cluster(),
+        [spanning_profile()],
+        BACEPipePolicy(),
+        trace=trace,
+        restart_penalty_s=penalty,
+    )
+    res = sim.run()
+    assert res.migrations == {0: 2}
+    segs = res.records
+    assert [r.preempted for r in segs] == [True, True, False]
+    # segment 1 trained 5 whole iterations; segment 2 trained 0 (all restore)
+    final = segs[-1]
+    expected_exec = (20 - 5) * final.iteration_seconds + penalty
+    assert final.finish - final.start == pytest.approx(expected_exec)
+
+
+def test_background_reservation_oversubscription_does_not_crash():
+    """An over-subscribed link whose reservation is owned by no running job
+    (a background reservation handed to the ClusterState) is unresolvable by
+    preemption and must be skipped, not crash the victim search."""
+    cluster = two_region_cluster(gbps=50.0)
+    cluster.reserve_bandwidth({("a", "b"): cluster.bandwidth[("a", "b")] * 0.5})
+    snapshot_seed = cluster  # simulate() snapshots, preserving the reservation
+    prof = spanning_profile()
+    static = simulate(snapshot_seed, [spanning_profile()], BACEPipePolicy())
+    t_drop = 0.5 * static.records[0].finish
+    trace = BandwidthTrace(
+        [EnvUpdate(time=t_drop, bandwidth={("a", "b"): 0.01, ("b", "a"): 1.0})]
+    )
+    # the running job reserves only on (b, a) or none after the background
+    # load; whichever way it lands, resolution must terminate without error
+    res = simulate(snapshot_seed, [spanning_profile()], BACEPipePolicy(),
+                   trace=trace)
+    assert len(res.completed_records) == 1
+
+
+def test_completion_exactly_at_drop_time_is_not_preempted():
+    """Same-timestamp tiebreak: completions drain before the preemption
+    check, so a pipeline finishing at the drop instant migrates nowhere."""
+    prof = spanning_profile()
+    static = simulate(two_region_cluster(), [prof], BACEPipePolicy())
+    finish0 = static.records[0].finish
+    trace = BandwidthTrace([EnvUpdate(time=finish0, bandwidth=FLAP_LINKS)])
+    res = simulate(
+        two_region_cluster(), [spanning_profile()], BACEPipePolicy(),
+        trace=trace,
+    )
+    assert res.migrations == {}
+    assert [r.preempted for r in res.records] == [False]
+    assert res.records[0].finish == finish0
+
+
+def test_arrival_at_drop_time_sees_reduced_capacity():
+    """Same-timestamp tiebreak: the environment update is folded in before
+    the scheduling pass, so a job arriving at the drop instant reserves
+    against the *shrunk* link."""
+    cluster = two_region_cluster(gbps=50.0)
+    t0 = 3600.0
+    half = {("a", "b"): 0.5, ("b", "a"): 0.5}
+    trace = BandwidthTrace([EnvUpdate(time=t0, bandwidth=half)])
+    spec = JobSpec(
+        0, ModelSpec("j0", 20e9, 16, 2048, batch_size=16), iterations=20,
+        submit_time=t0,
+    )
+    prof = JobProfile(spec, gpu_flops=300e12)
+    res = simulate(cluster, [prof], BACEPipePolicy(), trace=trace)
+    rec = res.records[0]
+    assert rec.start == t0
+    from repro.core import GBPS
+
+    cap_after = 50.0 * GBPS * 0.5
+    for share in rec.placement.reserved_bw.values():
+        assert share <= cap_after * (1 + 1e-9)
+
+
+def test_victim_is_latest_started_on_the_flapped_link():
+    """Preemption victim rule: among jobs sharing the over-subscribed link,
+    the latest-started one is evicted (LIFO keeps old pipelines running)."""
+    res = get_scenario("link-flap").run(BACEPipePolicy(), seed=0)
+    assert res.total_migrations > 0
+    flapped = {("us-east-2", "ea-east"), ("ea-east", "us-east-2")}
+    for t, kind, job_id in res.events:
+        if kind != "preempt":
+            continue
+        victim = next(
+            r for r in res.records if r.job_id == job_id and r.finish == t
+            and r.preempted
+        )
+        running_peers = [
+            r
+            for r in res.records
+            if r.start <= t < r.finish
+            and set(r.placement.reserved_bw) & flapped
+        ]
+        for peer in running_peers:
+            assert peer.start <= victim.start
+
+
+# ------------------------------------------------------ determinism contracts
+def test_result_invariant_to_profile_ordering():
+    cluster, profiles, trace = get_scenario("mixed-stress").build(seed=3)
+    a = simulate(cluster.snapshot(), profiles, BACEPipePolicy(), trace=trace)
+    b = simulate(
+        cluster.snapshot(), list(reversed(profiles)), BACEPipePolicy(),
+        trace=trace,
+    )
+    assert a.to_jsonable() == b.to_jsonable()
+
+
+def test_same_seed_identical_result_all_scenarios():
+    from repro.core import SCENARIOS
+
+    for name, scenario in SCENARIOS.items():
+        r1 = scenario.run(BACEPipePolicy(), seed=7)
+        r2 = scenario.run(BACEPipePolicy(), seed=7)
+        assert r1.to_jsonable() == r2.to_jsonable(), name
+
+
+def test_legacy_engine_rejects_traces():
+    cluster, profiles, trace = get_scenario("link-flap").build(seed=0)
+    with pytest.raises(ValueError, match="legacy"):
+        simulate(cluster, profiles, BACEPipePolicy(), engine="legacy",
+                 trace=trace)
+    # an empty trace is not dynamic: legacy accepts it
+    res = simulate(
+        cluster, profiles, BACEPipePolicy(), engine="legacy",
+        trace=BandwidthTrace([]),
+    )
+    assert res.records
+
+
+# --------------------------------------------------------- trace/cluster unit
+def test_multipliers_are_absolute_not_compounding():
+    cluster = two_region_cluster(gbps=40.0)
+    base = cluster.bandwidth[("a", "b")]
+    cluster.set_link_multipliers({("a", "b"): 0.5})
+    cluster.set_link_multipliers({("a", "b"): 0.5})
+    assert cluster.link_bandwidth("a", "b") == pytest.approx(0.5 * base)
+    cluster.set_link_multipliers({("a", "b"): 1.0})
+    assert cluster.link_bandwidth("a", "b") == pytest.approx(base)
+
+    p0 = cluster.price("a")
+    cluster.set_price_multipliers({"a": 2.0})
+    cluster.set_price_multipliers({"a": 2.0})
+    assert cluster.price("a") == pytest.approx(2.0 * p0)
+    cluster.set_price_multipliers({"a": 1.0})
+    assert cluster.price("a") == pytest.approx(p0)
+
+
+def test_multiplier_updates_are_all_or_nothing():
+    """A rejected update must leave the cluster untouched, even when valid
+    entries precede the bad one (same convention as reserve/release)."""
+    cluster = two_region_cluster(gbps=40.0)
+    base_bw = cluster.bandwidth[("a", "b")]
+    base_price = cluster.price("a")
+    with pytest.raises(KeyError):
+        cluster.set_link_multipliers({("a", "b"): 0.5, ("a", "nope"): 0.5})
+    assert cluster.link_bandwidth("a", "b") == base_bw
+    with pytest.raises(ValueError):
+        cluster.set_price_multipliers({"a": 2.0, "b": -1.0})
+    assert cluster.price("a") == base_price
+    with pytest.raises(KeyError):
+        cluster.apply_env_update(
+            EnvUpdate(time=0.0, bandwidth={("a", "nope"): 0.5},
+                      prices={"a": 2.0})
+        )
+    assert cluster.price("a") == base_price
+    assert cluster.link_bandwidth("a", "b") == base_bw
+
+
+def test_multiplier_validation():
+    cluster = two_region_cluster()
+    with pytest.raises(KeyError):
+        cluster.set_link_multipliers({("a", "nope"): 0.5})
+    with pytest.raises(ValueError):
+        cluster.set_link_multipliers({("a", "b"): -0.1})
+    with pytest.raises(KeyError):
+        cluster.set_price_multipliers({"nope": 0.5})
+    with pytest.raises(ValueError):
+        cluster.set_price_multipliers({"a": -1.0})
+    with pytest.raises(ValueError):
+        EnvUpdate(time=-1.0)
+    with pytest.raises(ValueError):
+        EnvUpdate(time=0.0, bandwidth={("a", "b"): -0.5})
+
+
+def test_trace_sorting_and_change_times():
+    u1 = EnvUpdate(time=30.0, bandwidth={})
+    u2 = EnvUpdate(time=10.0, prices={})
+    u3 = EnvUpdate(time=30.0, prices={})
+    trace = BandwidthTrace([u1, u2, u3])
+    assert [u.time for u in trace.updates] == [10.0, 30.0, 30.0]
+    # stable within equal times: u1 (given first) stays ahead of u3
+    assert trace.updates[1] is u1 and trace.updates[2] is u3
+    assert trace.change_times() == [10.0, 30.0]
+    merged = trace.merged(BandwidthTrace([EnvUpdate(time=20.0)]))
+    assert [u.time for u in merged.updates] == [10.0, 20.0, 30.0, 30.0]
+
+
+def test_snapshot_preserves_multipliers_and_base():
+    """Simulator snapshots its input cluster; live multipliers must survive
+    the copy, and the copy must keep the *original* base so later absolute
+    multipliers rescale correctly."""
+    cluster = two_region_cluster(gbps=40.0)
+    base_bw = cluster.bandwidth[("a", "b")]
+    base_price = cluster.price("a")
+    cluster.set_link_multipliers({("a", "b"): 0.5})
+    cluster.set_price_multipliers({"a": 2.0})
+    snap = cluster.snapshot()
+    assert snap.link_bandwidth("a", "b") == pytest.approx(0.5 * base_bw)
+    assert snap.price("a") == pytest.approx(2.0 * base_price)
+    # rescaling against the same installed baseline, not the shrunk value
+    snap.set_link_multipliers({("a", "b"): 1.0})
+    snap.set_price_multipliers({"a": 1.0})
+    assert snap.link_bandwidth("a", "b") == pytest.approx(base_bw)
+    assert snap.price("a") == pytest.approx(base_price)
+    # congestion denominator tracks the live (scaled) totals
+    assert cluster.congestion_alpha() == snap.congestion_alpha() == 0.0
+
+
+def test_placement_feasible_probe():
+    from repro.core import placement_feasible
+
+    prof = spanning_profile()
+    cluster = two_region_cluster()
+    res = simulate(cluster, [prof], BACEPipePolicy())
+    placement = res.records[0].placement
+    probe = cluster.snapshot()
+    assert placement_feasible(placement, probe)
+    probe.set_link_multipliers(FLAP_LINKS)
+    assert not placement_feasible(placement, probe)
+    probe.set_link_multipliers(RESTORE_LINKS)
+    assert placement_feasible(placement, probe)
+
+
+def test_oversubscribed_links_probe():
+    cluster = two_region_cluster(gbps=40.0)
+    cluster.reserve_bandwidth({("a", "b"): cluster.bandwidth[("a", "b")] * 0.8})
+    assert cluster.oversubscribed_links() == []
+    cluster.set_link_multipliers({("a", "b"): 0.5})
+    assert cluster.oversubscribed_links() == [("a", "b")]
+    cluster.set_link_multipliers({("a", "b"): 1.0})
+    assert cluster.oversubscribed_links() == []

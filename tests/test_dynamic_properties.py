@@ -1,0 +1,258 @@
+"""Property-based tests of the dynamic engine's conservation invariants.
+
+The invariant checker (``check_dynamic_invariants``) is plain code so the
+fixed-case tests at the bottom exercise it even when ``hypothesis`` (an
+optional dev extra) is absent; the ``@given`` tests then sweep it over
+arbitrary clusters, job sets, and bandwidth/price traces.
+
+Invariants, under *any* trace:
+- every job eventually completes exactly once (final non-preempted segment);
+- segments of one job never overlap and strictly alternate
+  preempt -> restart;
+- everything reserved is released: the simulator's cluster ends with all
+  GPUs free and zero reserved bandwidth on every link;
+- instantaneous GPU usage never exceeds any region's capacity (replay);
+- no placement ever dips below the job's memory floor (``min_gpus``),
+  migrations included, and pipeline continuity (>=1 GPU per path region)
+  holds;
+- migration/stall bookkeeping is consistent with the per-segment records.
+"""
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    Simulator,
+)
+
+
+def build_cluster(caps_prices, bw=8.0):
+    regs = [Region(f"r{i}", c, p) for i, (c, p) in enumerate(caps_prices)]
+    gbps = {}
+    for i, a in enumerate(regs):
+        for b in regs[i + 1 :]:
+            gbps[(a.name, b.name)] = bw
+    return ClusterState.build(regs, gbps, symmetric=True)
+
+
+def build_profiles(raw):
+    profs = []
+    for i, (params, layers, hidden, batch, iters, submit) in enumerate(raw):
+        spec = JobSpec(
+            job_id=i,
+            model=ModelSpec(f"j{i}", params, layers, hidden, batch),
+            iterations=iters,
+            submit_time=submit,
+        )
+        # generous memory => min_gpus small => every job fits *some* region
+        # even with all links dead, so completion is guaranteed
+        profs.append(JobProfile(spec, gpu_flops=300e12, gpu_memory=400e9))
+    return profs
+
+
+def build_trace(cluster, raw_updates):
+    links = sorted(cluster.bandwidth)
+    regions = cluster.region_names()
+    updates = []
+    for t, link_sel, bw_mult, price_sel, price_mult in raw_updates:
+        bw = {links[i % len(links)]: bw_mult for i in link_sel}
+        pr = {regions[i % len(regions)]: price_mult for i in price_sel}
+        updates.append(EnvUpdate(time=t, bandwidth=bw, prices=pr))
+    return BandwidthTrace(updates)
+
+
+def check_dynamic_invariants(cluster, profiles, trace):
+    sim = Simulator(cluster, profiles, BACEPipePolicy(), trace=trace)
+    res = sim.run()
+
+    # -- every job completes exactly once
+    final = [r for r in res.records if not r.preempted]
+    assert sorted(r.job_id for r in final) == sorted(
+        p.spec.job_id for p in profiles
+    )
+
+    # -- per-job segment structure: ordered, non-overlapping, aborted
+    #    segments all precede the completion
+    by_job = {}
+    for r in res.records:
+        by_job.setdefault(r.job_id, []).append(r)
+    for job_id, segs in by_job.items():
+        assert segs == sorted(segs, key=lambda r: r.start)
+        for a, b in zip(segs, segs[1:]):
+            assert a.preempted and a.finish <= b.start
+        assert not segs[-1].preempted
+        assert all(s.preempted for s in segs[:-1])
+
+    # -- migration / stall bookkeeping mirrors the records
+    for job_id, segs in by_job.items():
+        n_aborted = sum(1 for s in segs if s.preempted)
+        assert res.migrations.get(job_id, 0) == n_aborted
+        if n_aborted:
+            assert res.stall_seconds[job_id] >= 0.0
+    assert set(res.migrations) == set(res.stall_seconds)
+
+    # -- released == reserved: the ledgers are back at their initial state
+    assert sim.cluster.total_free_gpus() == sim.cluster.total_gpus()
+    for region in sim.cluster.region_names():
+        free = sim.cluster.free_gpus[region]
+        assert 0 <= free <= sim.cluster.regions[region].gpu_capacity
+    for link, reserved in sim.cluster.reserved_bw.items():
+        assert reserved == pytest.approx(0.0, abs=1e-6), link
+
+    # -- memory floor + continuity + per-region capacity, every segment
+    prof_by_id = {p.spec.job_id: p for p in profiles}
+    for r in res.records:
+        prof = prof_by_id[r.job_id]
+        assert r.placement.total_gpus >= prof.min_gpus
+        assert all(n >= 1 for n in r.placement.alloc.values())
+        for region, n in r.placement.alloc.items():
+            assert n <= cluster.regions[region].gpu_capacity
+
+    # -- instantaneous GPU usage never exceeds capacity (timeline replay;
+    #    at equal timestamps releases happen before reservations)
+    deltas = []
+    for r in res.records:
+        for region, n in r.placement.alloc.items():
+            deltas.append((r.start, n, region))
+            deltas.append((r.finish, -n, region))
+    usage = {}
+    for t, delta, region in sorted(deltas, key=lambda e: (e[0], e[1])):
+        usage[region] = usage.get(region, 0) + delta
+        assert usage[region] <= cluster.regions[region].gpu_capacity
+        assert usage[region] >= 0 or abs(usage[region]) == 0
+
+    # -- event log is chronological and internally consistent
+    times = [t for t, _, _ in res.events]
+    assert times == sorted(times)
+    n_preempts = sum(1 for _, k, _ in res.events if k == "preempt")
+    assert n_preempts == res.total_migrations
+
+    return res
+
+
+# ---------------------------------------------------------------- fixed cases
+FIXED_CASES = [
+    # (caps_prices, raw_jobs, raw_updates)
+    (
+        [(8, 0.10), (4, 0.20), (2, 0.30)],
+        [(8e9, 16, 1024, 16, 10, 0.0), (2e9, 8, 1024, 8, 5, 600.0)],
+        [(1800.0, [0, 1, 2], 0.05, [0], 2.0), (7200.0, [0, 1, 2], 1.0, [0], 1.0)],
+    ),
+    (
+        [(6, 0.15), (6, 0.12)],
+        [(20e9, 24, 2048, 16, 12, 0.0), (1e9, 8, 1024, 8, 30, 100.0)],
+        [(900.0, [0, 1], 0.0, [], 1.0)],  # link fully dead, never recovers
+    ),
+    (
+        [(16, 0.10), (8, 0.25), (8, 0.18), (4, 0.30)],
+        [
+            (30e9, 32, 2048, 32, 8, 0.0),
+            (10e9, 16, 2048, 16, 20, 50.0),
+            (5e9, 12, 1024, 16, 40, 50.0),
+        ],
+        [
+            (1000.0, [0, 2, 4], 0.2, [1], 3.0),
+            (1000.0, [1, 3], 0.6, [], 1.0),  # same-timestamp second update
+            (5000.0, [0, 1, 2, 3, 4, 5], 1.0, [1], 1.0),
+        ],
+    ),
+]
+
+
+@pytest.mark.parametrize("caps_prices,raw_jobs,raw_updates", FIXED_CASES)
+def test_dynamic_invariants_fixed(caps_prices, raw_jobs, raw_updates):
+    cluster = build_cluster(caps_prices)
+    profiles = build_profiles(raw_jobs)
+    trace = build_trace(cluster, raw_updates)
+    check_dynamic_invariants(cluster, profiles, trace)
+
+
+def test_dead_links_still_complete_via_single_region():
+    """With every link at multiplier 0 forever, Phase-2 single-seed paths
+    keep the cluster schedulable: all jobs must still finish."""
+    cluster = build_cluster([(8, 0.1), (8, 0.2)])
+    profiles = build_profiles(
+        [(4e9, 16, 1024, 16, 10, 0.0), (4e9, 16, 1024, 16, 10, 0.0)]
+    )
+    trace = build_trace(cluster, [(10.0, [0, 1], 0.0, [], 1.0)])
+    res = check_dynamic_invariants(cluster, profiles, trace)
+    for r in res.completed_records:
+        if r.start > 10.0:
+            assert r.placement.n_regions == 1
+
+
+# ------------------------------------------------------------- property sweep
+# hypothesis is an optional dev extra: the fixed cases above always run; the
+# @given sweep below only exists when it is installed.
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover
+    given = None
+
+if given is not None:
+    regions_st = st.lists(
+        st.tuples(
+            st.integers(min_value=2, max_value=32),     # capacity
+            st.floats(min_value=0.05, max_value=0.40),  # price
+        ),
+        min_size=2,
+        max_size=5,
+    )
+
+    jobs_st = st.lists(
+        st.tuples(
+            st.floats(min_value=0.5e9, max_value=40e9),   # params
+            st.sampled_from([8, 16, 24, 32]),             # layers
+            st.sampled_from([1024, 2048]),                # hidden
+            st.sampled_from([8, 16, 32]),                 # batch
+            st.integers(min_value=1, max_value=40),       # iterations
+            st.floats(min_value=0.0, max_value=20_000.0),  # submit time
+        ),
+        min_size=1,
+        max_size=5,
+    )
+
+    updates_st = st.lists(
+        st.tuples(
+            st.floats(min_value=0.0, max_value=80_000.0),      # breakpoint time
+            st.lists(st.integers(min_value=0, max_value=19),    # link selector
+                     max_size=6),
+            st.floats(min_value=0.0, max_value=1.5),            # bw multiplier
+            st.lists(st.integers(min_value=0, max_value=9),     # region selector
+                     max_size=3),
+            st.floats(min_value=0.25, max_value=4.0),           # price multiplier
+        ),
+        max_size=6,
+    )
+
+
+    @settings(max_examples=40, deadline=None)
+    @given(regions_st, jobs_st, updates_st)
+    def test_dynamic_invariants_hold_under_arbitrary_traces(
+        caps_prices, raw_jobs, raw_updates
+    ):
+        cluster = build_cluster(caps_prices)
+        profiles = build_profiles(raw_jobs)
+        trace = build_trace(cluster, raw_updates)
+        check_dynamic_invariants(cluster, profiles, trace)
+
+
+    @settings(max_examples=25, deadline=None)
+    @given(regions_st, jobs_st, updates_st)
+    def test_dynamic_runs_are_deterministic(caps_prices, raw_jobs, raw_updates):
+        def once():
+            cluster = build_cluster(caps_prices)
+            profiles = build_profiles(raw_jobs)
+            trace = build_trace(cluster, raw_updates)
+            return Simulator(
+                cluster, profiles, BACEPipePolicy(), trace=trace
+            ).run()
+
+        assert once().to_jsonable() == once().to_jsonable()

@@ -1,0 +1,80 @@
+"""Golden-trace regression tests: the engine's full observable behavior —
+records (per segment), costs, makespan, migrations, stalls, and the
+chronological event log — is serialized per (scenario, policy) into
+``tests/golden/*.json``.  Any behavioral drift in the scheduling engine
+fails these tests loudly.
+
+Intentional behavior changes regenerate the files with::
+
+    PYTHONPATH=src python -m pytest tests/test_golden_traces.py --regen
+
+and the diff is then reviewed like any other code change.  JSON float
+round-tripping is exact (shortest-repr), so comparisons are ``==``, not
+approximate.
+"""
+
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    CRLCFPolicy,
+    CRLDFPolicy,
+    LCFPolicy,
+    LDFPolicy,
+    get_scenario,
+)
+
+GOLDEN_DIR = Path(__file__).parent / "golden"
+
+ALL_POLICIES = [BACEPipePolicy, LCFPolicy, LDFPolicy, CRLCFPolicy, CRLDFPolicy]
+
+#: One static scenario (the engine-parity surface) and one dynamic scenario
+#: (bandwidth flap + preemptive migration) per policy.
+GOLDEN_SCENARIOS = ("static-paper", "link-flap")
+
+SEED = 0
+
+
+def _case_path(scenario_name: str, policy_name: str) -> Path:
+    return GOLDEN_DIR / f"{scenario_name}__{policy_name}.json"
+
+
+@pytest.mark.parametrize("policy_cls", ALL_POLICIES, ids=lambda c: c.__name__)
+@pytest.mark.parametrize("scenario_name", GOLDEN_SCENARIOS)
+def test_golden_trace(scenario_name, policy_cls, request):
+    policy = policy_cls()
+    result = get_scenario(scenario_name).run(policy, seed=SEED)
+    got = result.to_jsonable()
+    path = _case_path(scenario_name, policy.name)
+
+    if request.config.getoption("--regen"):
+        GOLDEN_DIR.mkdir(exist_ok=True)
+        path.write_text(json.dumps(got, indent=1, sort_keys=True) + "\n")
+        # regeneration still asserts the serialization round-trips exactly
+        assert json.loads(path.read_text()) == got
+        return
+
+    assert path.is_file(), (
+        f"missing golden file {path.name}; generate it with "
+        f"`pytest {__file__} --regen`"
+    )
+    expected = json.loads(path.read_text())
+    assert got == expected, (
+        f"engine behavior drifted from {path.name}; if the change is "
+        f"intentional, regenerate with `pytest {__file__} --regen` and "
+        f"review the diff"
+    )
+
+
+def test_golden_covers_a_migration():
+    """The dynamic golden scenario must actually exercise the preemption
+    path for at least one policy — otherwise the golden files silently stop
+    covering migration semantics."""
+    migrated = 0
+    for policy_cls in ALL_POLICIES:
+        res = get_scenario("link-flap").run(policy_cls(), seed=SEED)
+        migrated += res.total_migrations
+    assert migrated > 0
