@@ -2,11 +2,19 @@
 
 Runs the scenario registry (``repro.core.scenarios``) across all five
 policies and emits the usual ``name,us_per_call,derived`` CSV rows, where
-``derived`` carries avg JCT, total cost, migration count, and total stall
-time.  Each cell is run twice with the same seed and asserted identical
-(``SimulationResult.to_jsonable``) — the determinism contract the golden
-traces pin — and the static-paper scenario is additionally asserted
-bit-identical between the vectorized and legacy engines.
+``derived`` carries avg JCT, total cost, migration counts (voluntary broken
+out), and total stall time.  Each cell is run twice with the same seed and
+asserted identical (``SimulationResult.to_jsonable``) — the determinism
+contract the golden traces pin — and the static-paper scenario is
+additionally asserted bit-identical between the vectorized and legacy
+engines.
+
+Every cell also asserts the piecewise-accounting invariants (segment costs
+non-negative and partitioning the per-job Eq. 4 totals), and the
+price-spike scenario asserts that BACE-Pipe with voluntary migration (the
+scenario default) lands strictly cheaper than the stay-put schedule —
+both measured by the same breakpoint-accurate ledger.  These run in CI via
+``--smoke``.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.dynamic_scenarios [--smoke] [--seed N]
@@ -20,9 +28,33 @@ import argparse
 import time
 from typing import List
 
-from repro.core import SCENARIOS, simulate
+from repro.core import BACEPipePolicy, SCENARIOS, SimulationResult, simulate
 
 from .common import BENCH_GPU_FLOPS, POLICY_FACTORIES
+
+
+def assert_cost_invariants(res: SimulationResult, cell: str) -> None:
+    """Piecewise-ledger invariants every simulation must satisfy: settled
+    segment costs are non-negative and partition the per-job totals, and
+    voluntary migrations are a subset of all migrations."""
+    by_job = {}
+    for rec in res.records:
+        if rec.cost < 0.0:
+            raise AssertionError(f"negative segment cost in {cell}: {rec}")
+        by_job.setdefault(rec.job_id, 0.0)
+        by_job[rec.job_id] += rec.cost
+    for job_id, total in by_job.items():
+        ledger = res.costs[job_id]
+        if ledger < 0.0 or abs(total - ledger) > 1e-6 + 1e-9 * abs(ledger):
+            raise AssertionError(
+                f"segment costs do not partition job {job_id} total in "
+                f"{cell}: {total} vs {ledger}"
+            )
+    for job_id, n_vol in res.voluntary_migrations.items():
+        if not 0 < n_vol <= res.migrations.get(job_id, 0):
+            raise AssertionError(
+                f"voluntary > total migrations for job {job_id} in {cell}"
+            )
 
 
 def run(*, smoke: bool = False, seed: int = 0) -> List[str]:
@@ -30,6 +62,7 @@ def run(*, smoke: bool = False, seed: int = 0) -> List[str]:
     pk = {"gpu_flops": BENCH_GPU_FLOPS}
     for scen_name, scenario in SCENARIOS.items():
         n_jobs = 6 if smoke else None
+        bace_res = None
         for pol_name, factory in POLICY_FACTORIES.items():
             t0 = time.perf_counter()
             res = scenario.run(
@@ -44,12 +77,44 @@ def run(*, smoke: bool = False, seed: int = 0) -> List[str]:
                     f"non-deterministic result: {scen_name}/{pol_name} "
                     f"(seed={seed})"
                 )
+            assert_cost_invariants(res, f"{scen_name}/{pol_name}")
+            if pol_name == "bace-pipe":
+                bace_res = res
             rows.append(
                 f"dynamic/{scen_name}/{pol_name},{1e6 * lap:.1f},"
                 f"jct_h={res.average_jct / 3600:.3f};"
                 f"cost=${res.total_cost:.2f};"
                 f"migrations={res.total_migrations};"
+                f"voluntary={res.total_voluntary_migrations};"
                 f"stall_h={res.total_stall_seconds / 3600:.3f}"
+            )
+        if scenario.voluntary_migration_threshold is not None:
+            # A/B the voluntary pass against the stay-put schedule the
+            # stale-price engine used to produce, on the same piecewise
+            # ledger.  The BACE-Pipe cell above (determinism-asserted) *is*
+            # the "on" run.  The greedy breakpoint-time decision is not
+            # globally optimal — a later price reversion can make a migrated
+            # schedule dearer — so the strict-saving gate applies only at
+            # the registry's default seed, the acceptance surface the
+            # scenario was tuned for; other seeds just report.
+            on = bace_res
+            off = scenario.run(
+                BACEPipePolicy(),
+                seed=seed,
+                n_jobs=n_jobs,
+                profile_kwargs=pk,
+                voluntary_migration_threshold=None,
+            )
+            if seed == 0 and not on.total_cost < off.total_cost:
+                raise AssertionError(
+                    f"voluntary migration saved nothing on {scen_name} at "
+                    f"the default seed: ${on.total_cost:.2f} vs "
+                    f"${off.total_cost:.2f}"
+                )
+            rows.append(
+                f"# {scen_name}: voluntary migration "
+                f"${off.total_cost:.2f} -> ${on.total_cost:.2f} "
+                f"({on.total_voluntary_migrations} moves)"
             )
         if not scenario.dynamic:
             # Static scenarios must stay bit-identical across engines.

@@ -11,6 +11,7 @@ Public API:
     simulate                       — event-driven multi-job simulator
 """
 
+from .accounting import SegmentLedger  # noqa: F401
 from .ablations import (  # noqa: F401
     ALL_ABLATIONS,
     WithoutCostMin,
@@ -63,6 +64,7 @@ from .timing import (  # noqa: F401
     electricity_cost,
     execution_time,
     iteration_time,
+    placement_power_rate,
 )
 from .workloads import (  # noqa: F401
     DATASETS,

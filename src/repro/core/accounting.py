@@ -1,0 +1,143 @@
+"""Piecewise segment accounting: the Eq. (4) cost ledger under env changes.
+
+PR 2 froze a segment's $/s rate at placement time, so a mid-segment
+electricity-price breakpoint never repriced running jobs — exactly wrong in
+the dynamic regimes (price-spike, diurnal, mixed-stress) the scenario
+registry exists to exercise.  This module replaces "project at start, back
+out at preemption" with *piecewise integration over env breakpoints*:
+
+* Every live run segment owns a :class:`SegmentLedger`.
+* At each ``EnvUpdate`` that moves a price of a region the segment occupies,
+  the simulator calls :meth:`SegmentLedger.reprice`, which closes the
+  sub-interval ``[last_settle, t)`` at the then-current rate and opens a new
+  one at the post-update rate.
+* Completion and preemption call :meth:`SegmentLedger.settle`, which returns
+  the exact accrued cost up to the event time — a sum of non-negative
+  ``duration × rate`` terms, so a segment's cost can never go negative (the
+  old back-out ``cost -= (finish - t) * rate`` could, when the restore window
+  dominated a short segment).
+
+Progress derives from the same ledger (:meth:`completed_iterations`): the
+elapsed active time minus the leading restore window, floored to whole
+checkpointed iterations — identical semantics to PR 2, now owned by the
+accounting layer instead of being re-derived inline in ``preempt()``.
+
+Static-parity contract (bit-identical): a segment that is never repriced
+settles, at its projected finish, to the *placement-time projection*
+``electricity_cost(..., execution_seconds=e)`` — the exact float the seed
+engine charged — so static scenarios (and the legacy engine, which shares
+this event loop) produce byte-identical costs and golden traces.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from .cluster import ClusterState
+from .job import JobProfile
+from .placement import Placement
+from .timing import electricity_cost, placement_power_rate
+
+
+@dataclasses.dataclass
+class SegmentLedger:
+    """Cost + progress accounting for one live run segment.
+
+    The ledger is a piecewise-constant rate integral: ``accrued`` holds the
+    closed sub-intervals, ``[last_settle, now)`` accrues at ``rate`` (the
+    live $/s of the placement, re-read from the cluster at every price
+    breakpoint touching an occupied region).  ``projected_cost`` /
+    ``projected_finish`` keep the placement-time projection so a
+    never-repriced segment settles to the seed engine's exact float (see
+    module docstring).
+    """
+
+    profile: JobProfile
+    placement: Placement
+    start: float
+    #: Leading checkpoint-restore window (s) of a restarted segment: not
+    #: training time, but GPUs are held, so Eq. 4 cost accrues for it.
+    restore_s: float
+    iteration_seconds: float
+    projected_finish: float
+    projected_cost: float
+    rate: float
+    accrued: float = 0.0
+    last_settle: float = 0.0
+    repriced: bool = False
+
+    @classmethod
+    def open(
+        cls,
+        profile: JobProfile,
+        placement: Placement,
+        cluster: ClusterState,
+        *,
+        start: float,
+        restore_s: float,
+        iteration_seconds: float,
+        execution_seconds: float,
+    ) -> "SegmentLedger":
+        """Open a ledger at placement time, pricing the projection at the
+        cluster's *current* (live-multiplier) prices."""
+        return cls(
+            profile=profile,
+            placement=placement,
+            start=start,
+            restore_s=restore_s,
+            iteration_seconds=iteration_seconds,
+            projected_finish=start + execution_seconds,
+            projected_cost=electricity_cost(
+                profile, placement, cluster,
+                execution_seconds=execution_seconds,
+            ),
+            rate=placement_power_rate(profile, placement, cluster),
+            last_settle=start,
+        )
+
+    def reprice(
+        self, t: float, cluster: ClusterState, regions: Iterable[str]
+    ) -> bool:
+        """Split the segment at breakpoint ``t`` if the price change touches
+        an occupied region *and* actually moves the placement's $/s rate.
+
+        Returns True when a new sub-interval was opened.  A breakpoint that
+        leaves the rate bitwise unchanged (multiplier back to the same value,
+        or only foreign regions listed) is skipped, so the accrual stays the
+        single placement-time projection and settles bit-exactly.
+        """
+        if not any(r in self.placement.alloc for r in regions):
+            return False
+        new_rate = placement_power_rate(self.profile, self.placement, cluster)
+        if new_rate == self.rate:
+            return False
+        self.accrued += (t - self.last_settle) * self.rate
+        self.last_settle = t
+        self.rate = new_rate
+        self.repriced = True
+        return True
+
+    def settle(self, t: float) -> float:
+        """Total accrued cost of this segment over ``[start, t)``.
+
+        Never repriced + settled at the projected finish ⇒ the exact
+        placement-time projection (static-parity contract).  Otherwise the
+        piecewise sum, whose every term is ``duration ≥ 0 × rate ≥ 0`` — the
+        ``cost >= 0`` simulator invariant follows structurally.
+        """
+        if not self.repriced and t == self.projected_finish:
+            return self.projected_cost
+        return self.accrued + (t - self.last_settle) * self.rate
+
+    def completed_iterations(self, t: float) -> int:
+        """Whole checkpointed iterations trained by time ``t``: elapsed
+        active time minus the leading restore window, floored."""
+        trained = max(0.0, (t - self.start) - self.restore_s)
+        return max(0, int(trained // self.iteration_seconds))
+
+    def remaining_after_checkpoint(self, t: float, remaining: int) -> int:
+        """Iterations still owed if the segment checkpoints at ``t``; never
+        below 1 (a checkpoint mid-iteration discards the partial work) and
+        never above ``remaining`` — migration cannot increase owed work."""
+        return max(1, remaining - self.completed_iterations(t))

@@ -452,9 +452,11 @@ class ClusterState:
         for i, m in resolved:
             self._price[i] = self._price_base[i] * m
 
-    def apply_env_update(self, update: EnvUpdate) -> bool:
-        """Apply one trace breakpoint; returns True if link capacities moved
-        (the trigger for the simulator's placement re-validation).
+    def apply_env_update(self, update: EnvUpdate) -> Tuple[bool, bool]:
+        """Apply one trace breakpoint; returns ``(bandwidth_changed,
+        prices_changed)`` — the first triggers the simulator's placement
+        re-validation (forced preemption), the second its segment repricing
+        and price-aware voluntary-migration passes.
         All-or-nothing across both halves: unknown links/regions are rejected
         before either multiplier set mutates."""
         for link in update.bandwidth:
@@ -467,17 +469,21 @@ class ClusterState:
             self.set_price_multipliers(update.prices)
         if update.bandwidth:
             self.set_link_multipliers(update.bandwidth)
-            return True
-        return False
+        return bool(update.bandwidth), bool(update.prices)
 
     def oversubscribed_links(self, *, rel_tol: float = 1e-9) -> List[Link]:
         """Links whose reserved bandwidth exceeds their (possibly shrunk)
         capacity — Eq. (6) violations a bandwidth drop can introduce.
-        Sorted by link name for deterministic preemption resolution."""
+        Uninstalled links (``_res_extra``: background reservations handed in
+        at construction) have zero capacity, so any positive reservation on
+        one is a standing violation and is reported too — otherwise the
+        preemption pass could never even see it.  Sorted by link name for
+        deterministic preemption resolution."""
         over = self._res_mat > self._bw_mat * (1.0 + rel_tol) + 1e-6
         out = [
             link for link, ij in self._link_idx.items() if over[ij]
         ]
+        out.extend(link for link, b in self._res_extra.items() if b > 1e-6)
         out.sort()
         return out
 
@@ -494,7 +500,14 @@ class ClusterState:
         bandwidth_factor: float = 1.0,
         capacity_factor: float = 1.0,
     ) -> "ClusterState":
-        """Fresh cluster with scaled links / GPU pools (paper Figs. 5–6)."""
+        """Fresh cluster with scaled links / GPU pools (paper Figs. 5–6).
+
+        Scaling applies to the *installed* (construction-time) capacities and
+        base prices; any live dynamic multipliers are then re-applied on the
+        new cluster — base and dynamic state stay separated instead of the
+        live bandwidth silently becoming the new cluster's installed baseline
+        next to construction-time prices.  Reservations are not carried over
+        (same as before: a scaled cluster starts empty)."""
         regs = [
             Region(
                 name=r.name,
@@ -503,8 +516,30 @@ class ClusterState:
             )
             for r in self.regions.values()
         ]
-        bw = {l: b * bandwidth_factor / GBPS for l, b in self.bandwidth.items()}
-        return ClusterState.build(regs, bw, symmetric=False)
+        bw = {
+            l: b * bandwidth_factor / GBPS
+            for l, b in self._bw_dict_base.items()
+        }
+        out = ClusterState.build(regs, bw, symmetric=False)
+        link_mults = {}
+        for link, ij in self._link_idx.items():
+            base = float(self._bw_base[ij])
+            if base > 0.0:
+                m = float(self._bw_mat[ij]) / base
+                if m != 1.0:
+                    link_mults[link] = m
+        price_mults = {}
+        for region, i in self._idx.items():
+            base = float(self._price_base[i])
+            if base > 0.0:
+                m = float(self._price[i]) / base
+                if m != 1.0:
+                    price_mults[region] = m
+        if link_mults:
+            out.set_link_multipliers(link_mults)
+        if price_mults:
+            out.set_price_multipliers(price_mults)
+        return out
 
     def snapshot(self) -> "ClusterState":
         """Deep copy with identical live state: ledgers, *and* any dynamic

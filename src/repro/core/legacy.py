@@ -13,6 +13,13 @@ per-call implementations verbatim so that
   pass, Prim expansion over scalar ledger lookups).
 
 Nothing here should be used on a hot path.
+
+Accounting note: the simulator's piecewise segment ledgers
+(``core/accounting.py``) preserve this parity surface — a segment that is
+never repriced (always true on the static scenarios the legacy engine is
+limited to) settles to its placement-time ``electricity_cost`` projection
+bit-exactly, so the settle-on-event refactor changes no legacy-comparable
+float.
 """
 
 from __future__ import annotations

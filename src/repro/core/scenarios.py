@@ -17,7 +17,9 @@ The registry names the regimes the paper's headline claims live in:
   recovers later: the preemptive-migration stress case.
 - ``burst-arrival``  — clumped submissions, amplifying HoL blocking.
 - ``price-spike``    — the cheapest regions' electricity triples for a few
-  hours; tests Cost-Min's reaction, never triggers preemption.
+  hours; tests Cost-Min's reaction plus piecewise repricing of running
+  segments and price-aware *voluntary* migration (never a forced Eq. 6
+  eviction).
 - ``mixed-stress``   — bursty arrivals + random link fluctuation + a price
   spike, all at once.
 """
@@ -54,6 +56,11 @@ _Builder = Callable[
 ]
 
 
+#: Sentinel distinguishing "caller did not override" from an explicit None
+#: (= disable voluntary migration) in ``Scenario.run``.
+_UNSET = object()
+
+
 @dataclasses.dataclass(frozen=True)
 class Scenario:
     """One registered scenario: metadata + input factory."""
@@ -64,6 +71,10 @@ class Scenario:
     default_n_jobs: int
     builder: _Builder
     restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S
+    #: Scenario-default price-aware voluntary-migration threshold (None =
+    #: off).  ``run(voluntary_migration_threshold=...)`` overrides it either
+    #: way, which is how the benchmarks A/B the stay-put baseline.
+    voluntary_migration_threshold: Optional[float] = None
 
     def build(
         self,
@@ -83,9 +94,15 @@ class Scenario:
         n_jobs: Optional[int] = None,
         engine: str = "vectorized",
         profile_kwargs: Optional[dict] = None,
+        voluntary_migration_threshold: object = _UNSET,
     ) -> SimulationResult:
         cluster, profiles, trace = self.build(
             seed=seed, n_jobs=n_jobs, profile_kwargs=profile_kwargs
+        )
+        threshold = (
+            self.voluntary_migration_threshold
+            if voluntary_migration_threshold is _UNSET
+            else voluntary_migration_threshold
         )
         return simulate(
             cluster,
@@ -94,6 +111,7 @@ class Scenario:
             engine=engine,
             trace=trace,
             restart_penalty_s=self.restart_penalty_s,
+            voluntary_migration_threshold=threshold,
         )
 
 
@@ -241,10 +259,15 @@ _register(
 _register(
     Scenario(
         name="price-spike",
-        description="Cheapest regions' electricity triples for 5.5 h",
+        description="Cheapest regions' electricity triples for 5.5 h; "
+        "price-aware voluntary migration on (10% threshold)",
         dynamic=True,
-        default_n_jobs=8,
+        # 6 jobs leaves slack capacity in the non-spiked regions at the
+        # breakpoint — the regime where voluntary migration has somewhere to
+        # go (8 jobs pack the cluster wall-to-wall and pin every probe).
+        default_n_jobs=6,
         builder=_price_spike,
+        voluntary_migration_threshold=0.10,
     )
 )
 _register(

@@ -31,6 +31,20 @@ docstring for the exact semantics and tiebreak order).  Dynamic scenarios
 run on the vectorized engine only and carry their own determinism
 guarantee: same cluster, profiles, trace, and policy ⇒ an identical
 ``SimulationResult``, event log included.
+
+Cost accounting is *settle-on-event* (``core/accounting.py``): every live
+segment owns a ``SegmentLedger`` that splits at each price breakpoint
+touching an occupied region and accrues per sub-interval at the then-current
+regional prices; completion and preemption settle the accrued value instead
+of charging a start-time projection and backing it out.  A never-repriced
+segment settles to its placement-time projection bit-exactly, which is what
+keeps static scenarios (and the legacy engine, sharing this event loop)
+byte-identical to the seed.  On top of the ledger sits *price-aware
+voluntary migration* (``voluntary_migration_threshold=``): at a price
+breakpoint a running job whose remaining-work cost on its current placement
+exceeds the best feasible live-priced alternative by more than the threshold
+checkpoints and re-queues (event kind ``"migrate"``; counted separately from
+forced ``"preempt"`` evictions).
 """
 
 from __future__ import annotations
@@ -42,6 +56,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .accounting import SegmentLedger
 from .allocator import cost_min_allocate
 from .cluster import BandwidthTrace, ClusterState
 from .job import JobProfile
@@ -49,7 +64,7 @@ from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .placement import Placement
 from .priority import _score_vector, order_by_priority, rank_order
-from .timing import electricity_cost, iteration_time
+from .timing import iteration_time, placement_power_rate
 
 #: Lost progress per preemption (s): checkpoint write + restore + pipeline
 #: re-warm.  Charged as extra execution time (GPUs are held while restoring,
@@ -149,6 +164,11 @@ class JobRecord:
     placement: Placement
     iteration_seconds: float
     preempted: bool = False
+    #: Settled Eq. 4 cost of this segment (piecewise over env breakpoints;
+    #: always >= 0).  Not serialized by ``to_jsonable`` — the golden traces
+    #: pin the per-job ``costs`` dict, of which segment costs are the
+    #: partition.
+    cost: float = 0.0
 
     @property
     def wait(self) -> float:  # W_j
@@ -169,14 +189,22 @@ class SimulationResult:
     records: List[JobRecord]
     costs: Dict[int, float]
     makespan: float
-    #: Per-job preemptive-migration count (jobs never preempted are absent).
+    #: Per-job migration count, forced *and* voluntary (jobs never migrated
+    #: are absent) — one entry per aborted segment.
     migrations: Dict[int, int] = dataclasses.field(default_factory=dict)
     #: Per-job total preempted-to-restart stall time (s); same keys as
     #: ``migrations``.
     stall_seconds: Dict[int, float] = dataclasses.field(default_factory=dict)
+    #: Per-job *voluntary* (price-reactive) migration count; a subset of
+    #: ``migrations``.  Forced (Eq. 6 eviction) counts are the difference —
+    #: see ``forced_migrations``.
+    voluntary_migrations: Dict[int, int] = dataclasses.field(
+        default_factory=dict
+    )
     #: Chronological event log: (time, kind, id) with kind in {"arrival",
-    #: "start", "preempt", "complete", "env"}; id is the job id (or the trace
-    #: update index for "env").  This is what the golden-trace tests pin.
+    #: "start", "preempt" (forced), "migrate" (voluntary), "complete",
+    #: "env"}; id is the job id (or the trace update index for "env").  This
+    #: is what the golden-trace tests pin.
     events: List[Tuple[float, str, int]] = dataclasses.field(
         default_factory=list
     )
@@ -200,12 +228,28 @@ class SimulationResult:
         return sum(self.migrations.values())
 
     @property
+    def forced_migrations(self) -> Dict[int, int]:
+        """Per-job Eq. 6 (bandwidth-drop) eviction counts:
+        ``migrations - voluntary_migrations``."""
+        out = {}
+        for job_id, n in self.migrations.items():
+            forced = n - self.voluntary_migrations.get(job_id, 0)
+            if forced:
+                out[job_id] = forced
+        return out
+
+    @property
+    def total_voluntary_migrations(self) -> int:
+        return sum(self.voluntary_migrations.values())
+
+    @property
     def total_stall_seconds(self) -> float:
         return sum(self.stall_seconds.values())
 
     def summary(self) -> str:
         extra = (
             f", migrations={self.total_migrations}"
+            f" ({self.total_voluntary_migrations} voluntary)"
             if self.migrations
             else ""
         )
@@ -217,8 +261,13 @@ class SimulationResult:
 
     def to_jsonable(self) -> Dict:
         """Canonical JSON form (sorted keys, full float precision) for the
-        golden-trace regression tests and benchmark dumps."""
-        return {
+        golden-trace regression tests and benchmark dumps.  The
+        ``voluntary_migrations`` key only appears when non-empty so scenarios
+        that never migrate voluntarily (every static scenario, every
+        price-free trace) keep their historical serialization byte-for-byte;
+        per-segment ``JobRecord.cost`` is intentionally not serialized (the
+        per-job ``costs`` dict it partitions is)."""
+        out = {
             "policy": self.policy,
             "makespan": self.makespan,
             "costs": {str(j): c for j, c in sorted(self.costs.items())},
@@ -256,6 +305,12 @@ class SimulationResult:
             ],
             "events": [[t, kind, i] for t, kind, i in self.events],
         }
+        if self.voluntary_migrations:
+            out["voluntary_migrations"] = {
+                str(j): n
+                for j, n in sorted(self.voluntary_migrations.items())
+            }
+        return out
 
 
 # --------------------------------------------------------------- pending set
@@ -350,15 +405,13 @@ ENGINES = ("vectorized", "legacy")
 @dataclasses.dataclass
 class _RunningJob:
     """Live segment bookkeeping: placement + its record + the generation
-    guarding stale completion events + the $/s rate for cost back-out +
-    the leading restore time (restart penalty) that must not be credited
-    as training progress if this segment is itself preempted."""
+    guarding stale completion events + the piecewise accounting ledger
+    (cost sub-intervals, live $/s rate, restore window, progress floor)."""
 
     placement: Placement
     record: JobRecord
     gen: int
-    cost_rate: float
-    restore_s: float
+    acct: SegmentLedger
 
 
 class Simulator:
@@ -378,6 +431,17 @@ class Simulator:
     placement, and re-enters the pending queue at its original submit time.
     Dynamic scenarios are vectorized-engine-only; the legacy reference
     predates the event types and refuses them.
+
+    Price breakpoints reprice every affected running segment's ledger
+    (piecewise accounting, ``core/accounting.py``) and — when
+    ``voluntary_migration_threshold`` is set — trigger the voluntary pass:
+    each running job (ascending job id) is offered its best live-priced
+    alternative placement (the engine's own ``place`` on a probe where the
+    job's resources are released); if staying costs more than
+    ``(1 + threshold) ×`` the alternative's remaining cost (restart penalty
+    included), the job checkpoints and re-queues exactly like a forced
+    victim, logged as ``"migrate"`` and counted in
+    ``voluntary_migrations``.  ``None`` (default) disables the pass.
     """
 
     def __init__(
@@ -389,6 +453,7 @@ class Simulator:
         engine: str = "vectorized",
         trace: Optional[BandwidthTrace] = None,
         restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
+        voluntary_migration_threshold: Optional[float] = None,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (have: {ENGINES})")
@@ -400,12 +465,18 @@ class Simulator:
             )
         if restart_penalty_s < 0.0:
             raise ValueError("restart_penalty_s must be >= 0")
+        if (
+            voluntary_migration_threshold is not None
+            and voluntary_migration_threshold < 0.0
+        ):
+            raise ValueError("voluntary_migration_threshold must be >= 0")
         self.cluster = cluster.snapshot()
         self.profiles = {p.spec.job_id: p for p in profiles}
         self.policy = policy
         self.engine = engine
         self.trace = trace
         self.restart_penalty_s = restart_penalty_s
+        self.voluntary_migration_threshold = voluntary_migration_threshold
 
     def run(self) -> SimulationResult:
         cluster = self.cluster
@@ -437,6 +508,7 @@ class Simulator:
         costs: Dict[int, float] = {}
         log: List[Tuple[float, str, int]] = []
         migrations: Dict[int, int] = {}
+        vol_migrations: Dict[int, int] = {}
         stall: Dict[int, float] = {}
         #: iterations still owed per job (== spec.iterations until preempted)
         remaining: Dict[int, int] = {
@@ -465,35 +537,55 @@ class Simulator:
                 heapq.heappush(events, (upd.time, _ENV_CHANGE, seq, i))
                 seq += 1
 
-        def preempt(job_id: int, t: float) -> None:
+        def settle(job_id: int, run: _RunningJob, t: float) -> None:
+            """Close the segment's ledger at ``t`` and post the accrued cost
+            to the Eq. 4 dict — the sole write path for ``costs``, so per-job
+            cost is a sum of non-negative settled segments (a simulator
+            invariant the old projection back-out could violate)."""
+            seg_cost = run.acct.settle(t)
+            if seg_cost < 0.0:
+                raise RuntimeError(
+                    f"negative settled segment cost for job {job_id}: "
+                    f"{seg_cost!r}"
+                )
+            run.record.cost = seg_cost
+            costs[job_id] = costs.get(job_id, 0.0) + seg_cost
+
+        def preempt(job_id: int, t: float, *, voluntary: bool = False) -> None:
             run = running.pop(job_id)
             cluster.release_gpus(run.placement.alloc)
             cluster.release_bandwidth(run.placement.reserved_bw)
             rec = run.record
-            # Progress floors to whole checkpointed iterations; the leading
-            # restore window of a restarted segment is not training time.
-            # The unearned projected cost is backed out of the Eq. 4 ledger.
-            trained = max(0.0, (t - rec.start) - run.restore_s)
-            done = int(trained // rec.iteration_seconds)
-            remaining[job_id] = max(1, remaining[job_id] - max(0, done))
-            costs[job_id] -= (rec.finish - t) * run.cost_rate
+            # Progress floors to whole checkpointed iterations (the leading
+            # restore window of a restarted segment is not training time);
+            # the cost accrued so far settles from the piecewise ledger.
+            remaining[job_id] = run.acct.remaining_after_checkpoint(
+                t, remaining[job_id]
+            )
+            settle(job_id, run, t)
             rec.finish = t
             rec.preempted = True
             gen[job_id] += 1
             migrations[job_id] = migrations.get(job_id, 0) + 1
+            if voluntary:
+                vol_migrations[job_id] = vol_migrations.get(job_id, 0) + 1
             stall.setdefault(job_id, 0.0)
             preempted_at[job_id] = t
             pending[job_id] = self.profiles[job_id]
             if ledger is not None:
                 ledger.add(self.profiles[job_id])
-            log.append((t, "preempt", job_id))
+            log.append((t, "migrate" if voluntary else "preempt", job_id))
 
         now = 0.0
         while events:
             now = events[0][0]
             env_changed = False
+            prices_changed = False
             # Drain all events at this timestamp before acting (atomic drain;
-            # see the kind-order comment above).
+            # see the kind-order comment above).  Completions drain before
+            # env updates, so a segment finishing exactly at a price
+            # breakpoint settles at the pre-breakpoint rate (the breakpoint
+            # overlaps it for zero duration).
             while events and events[0][0] <= now + 1e-12:
                 t_ev, ev_kind, _, payload = heapq.heappop(events)
                 if ev_kind == _ARRIVAL:
@@ -511,11 +603,21 @@ class Simulator:
                     running.pop(job_id)
                     cluster.release_gpus(run.placement.alloc)
                     cluster.release_bandwidth(run.placement.reserved_bw)
+                    settle(job_id, run, run.record.finish)
                     log.append((t_ev, "complete", job_id))
                 else:  # _ENV_CHANGE
                     upd = self.trace.updates[payload]
-                    if cluster.apply_env_update(upd):
+                    bw_moved, prices_moved = cluster.apply_env_update(upd)
+                    if bw_moved:
                         env_changed = True
+                    if prices_moved:
+                        prices_changed = True
+                        # Split every affected running segment's ledger at
+                        # this breakpoint (piecewise accounting).
+                        for jid in sorted(running):
+                            running[jid].acct.reprice(
+                                t_ev, cluster, upd.prices
+                            )
                     log.append((t_ev, "env", payload))
 
             # Preemptive migration: resolve Eq. 6 violations a bandwidth drop
@@ -551,6 +653,49 @@ class Simulator:
                     )
                     preempt(victim, now)
 
+            # Price-aware voluntary migration: after a price breakpoint (and
+            # after any forced evictions above), each still-running job is
+            # offered its best live-priced alternative.  The probe releases
+            # the job's own resources, runs the engine's placement path
+            # (Pathfinder + allocator at live prices for BACE-Pipe), and
+            # restores the reservation; the job only actually checkpoints
+            # when staying costs more than (1 + threshold) × moving —
+            # remaining work re-floored to whole checkpointed iterations,
+            # restart penalty included — so the restart cost naturally damps
+            # flapping.  Jobs are visited in ascending id for determinism;
+            # earlier migrations free resources later probes can see.
+            threshold = self.voluntary_migration_threshold
+            if prices_changed and threshold is not None:
+                for job_id in sorted(running):
+                    run = running[job_id]
+                    time_left = run.record.finish - now
+                    if time_left <= 0.0:
+                        continue
+                    stay_cost = time_left * run.acct.rate
+                    prof = self.profiles[job_id]
+                    rem = run.acct.remaining_after_checkpoint(
+                        now, remaining[job_id]
+                    )
+                    cluster.release_gpus(run.placement.alloc)
+                    cluster.release_bandwidth(run.placement.reserved_bw)
+                    alt = place(prof, cluster)
+                    move_cost = None
+                    if alt is not None and alt.total_gpus >= prof.min_gpus:
+                        e_alt = (
+                            rem * iteration_time(prof, alt)
+                            + self.restart_penalty_s
+                        )
+                        move_cost = e_alt * placement_power_rate(
+                            prof, alt, cluster
+                        )
+                    cluster.reserve_gpus(run.placement.alloc)
+                    cluster.reserve_bandwidth(run.placement.reserved_bw)
+                    if (
+                        move_cost is not None
+                        and stay_cost > (1.0 + threshold) * move_cost
+                    ):
+                        preempt(job_id, now, voluntary=True)
+
             if not pending and not running and arrivals_left == 0:
                 break  # only trailing env events remain; nothing can change
 
@@ -575,9 +720,6 @@ class Simulator:
                         restore = self.restart_penalty_s
                         e += restore
                     finish = now + e
-                    cost = electricity_cost(
-                        prof, placement, cluster, execution_seconds=e
-                    )
                     record = JobRecord(
                         job_id=job_id,
                         model_name=prof.spec.model.name,
@@ -588,14 +730,22 @@ class Simulator:
                         iteration_seconds=t_it,
                     )
                     records.append(record)
+                    # Cost is *not* charged here: the segment's ledger
+                    # accrues piecewise and settles on completion/preemption.
                     running[job_id] = _RunningJob(
                         placement=placement,
                         record=record,
                         gen=gen[job_id],
-                        cost_rate=cost / e,
-                        restore_s=restore,
+                        acct=SegmentLedger.open(
+                            prof,
+                            placement,
+                            cluster,
+                            start=now,
+                            restore_s=restore,
+                            iteration_seconds=t_it,
+                            execution_seconds=e,
+                        ),
                     )
-                    costs[job_id] = costs.get(job_id, 0.0) + cost
                     del pending[job_id]
                     if ledger is not None:
                         ledger.remove(job_id)
@@ -622,6 +772,7 @@ class Simulator:
             makespan=max((r.finish for r in records), default=0.0),
             migrations=migrations,
             stall_seconds=stall,
+            voluntary_migrations=vol_migrations,
             events=log,
         )
 
@@ -634,6 +785,7 @@ def simulate(
     engine: str = "vectorized",
     trace: Optional[BandwidthTrace] = None,
     restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
+    voluntary_migration_threshold: Optional[float] = None,
 ) -> SimulationResult:
     return Simulator(
         cluster,
@@ -642,4 +794,5 @@ def simulate(
         engine=engine,
         trace=trace,
         restart_penalty_s=restart_penalty_s,
+        voluntary_migration_threshold=voluntary_migration_threshold,
     ).run()

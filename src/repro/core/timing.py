@@ -44,6 +44,18 @@ def execution_time(profile: JobProfile, placement: Placement) -> float:
     return profile.spec.iterations * iteration_time(profile, placement)
 
 
+def placement_power_rate(
+    profile: JobProfile, placement: Placement, cluster: ClusterState
+) -> float:
+    """Eq. (4)'s $/s term ``Σ_r n_{j,r} · P_r`` at the cluster's *current*
+    (live-multiplier) prices — the rate the piecewise segment ledger
+    integrates between env breakpoints."""
+    return sum(
+        profile.power_cost_rate(cluster.price(r), n)
+        for r, n in placement.alloc.items()
+    )
+
+
 def electricity_cost(
     profile: JobProfile,
     placement: Placement,
@@ -58,11 +70,7 @@ def electricity_cost(
         if execution_seconds is None
         else execution_seconds
     )
-    dollars_per_sec = sum(
-        profile.power_cost_rate(cluster.price(r), n)
-        for r, n in placement.alloc.items()
-    )
-    return e * dollars_per_sec
+    return e * placement_power_rate(profile, placement, cluster)
 
 
 def average_price(placement: Placement, cluster: ClusterState) -> float:

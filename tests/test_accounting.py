@@ -1,0 +1,359 @@
+"""Piecewise segment accounting + price-aware voluntary migration.
+
+Tentpole coverage for the settle-on-event refactor (``core/accounting.py``):
+
+* mid-segment repricing integrates exactly (closed-form piecewise sum,
+  1e-9), and a breakpoint that does not move the rate keeps the
+  placement-time projection *bit-exactly* (the static-parity contract);
+* settled costs are structurally non-negative, preemption included, and the
+  per-segment costs partition the per-job Eq. 4 ledger;
+* voluntary migration fires only when the live-priced alternative beats
+  staying by the threshold, re-queues through the normal pending path,
+  never increases the iterations still owed, and is accounted separately
+  from forced (Eq. 6) evictions;
+* satellite regressions: ``ClusterState.scaled()`` rebuilds from base
+  capacities/prices and re-applies live multipliers;
+  ``oversubscribed_links()`` sees reservations on uninstalled links.
+"""
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    Simulator,
+    get_scenario,
+    placement_power_rate,
+    simulate,
+)
+
+
+def one_region_job_cluster(price_a=0.10, price_b=0.30, cap=8, gbps=50.0):
+    regions = [Region("a", cap, price_a), Region("b", cap, price_b)]
+    return ClusterState.build(regions, {("a", "b"): gbps}, symmetric=True)
+
+
+def small_job(job_id=0, iters=30, layers=4):
+    """Fits inside a single region (generous memory, few layers):
+    ``max_gpus = 2 * layers <= cap`` so Phase 1 picks the cheapest region."""
+    spec = JobSpec(
+        job_id,
+        ModelSpec(f"j{job_id}", 2e9, layers, 1024, batch_size=16),
+        iterations=iters,
+    )
+    return JobProfile(spec, gpu_flops=300e12, gpu_memory=400e9)
+
+
+# -------------------------------------------------------- piecewise repricing
+def test_mid_segment_price_doubling_matches_closed_form():
+    """Analytic fixture: the hosting region's price doubles halfway through
+    the (single) segment; the settled cost must equal the closed-form
+    piecewise sum  r·(t_mid − t_0) + 2r·(t_end − t_mid)  within 1e-9."""
+    prof = small_job()
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    rec = static.records[0]
+    assert rec.placement.path == ("a",)  # cheapest region hosts the job
+    t_mid = 0.5 * rec.finish
+
+    cluster = one_region_job_cluster()
+    trace = BandwidthTrace([EnvUpdate(time=t_mid, prices={"a": 2.0})])
+    res = simulate(
+        one_region_job_cluster(), [small_job()], BACEPipePolicy(), trace=trace
+    )
+    assert res.migrations == {}  # prices never force an eviction
+    rec_d = res.records[0]
+    assert rec_d.finish == rec.finish  # repricing never moves the schedule
+
+    rate = placement_power_rate(prof, rec_d.placement, cluster)
+    expected = rate * (t_mid - rec_d.start) + 2.0 * rate * (
+        rec_d.finish - t_mid
+    )
+    assert res.costs[0] == pytest.approx(expected, rel=1e-9)
+    assert rec_d.cost == res.costs[0]
+    # and strictly more than the stale-price projection would have claimed
+    assert res.costs[0] > static.costs[0]
+
+
+def test_rate_neutral_breakpoint_keeps_projection_bit_exact():
+    """A price breakpoint that leaves the placement's $/s rate unchanged
+    (multiplier re-set to its current value, or only foreign regions listed)
+    must not split the ledger: the settled cost is the placement-time
+    projection, bitwise — the contract that keeps static goldens frozen."""
+    prof = small_job()
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    t_mid = 0.5 * static.records[0].finish
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=t_mid, prices={"a": 1.0}),  # rate-neutral
+            EnvUpdate(time=t_mid, prices={"b": 5.0}),  # foreign region
+        ]
+    )
+    res = simulate(
+        one_region_job_cluster(), [small_job()], BACEPipePolicy(), trace=trace
+    )
+    assert res.costs[0] == static.costs[0]  # exact, not approx
+
+
+def test_multi_breakpoint_piecewise_sum():
+    """Spike-and-revert: three sub-intervals, closed form within 1e-9."""
+    prof = small_job()
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    rec = static.records[0]
+    t1, t2 = 0.25 * rec.finish, 0.75 * rec.finish
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=t1, prices={"a": 3.0}),
+            EnvUpdate(time=t2, prices={"a": 1.0}),
+        ]
+    )
+    res = simulate(
+        one_region_job_cluster(), [small_job()], BACEPipePolicy(), trace=trace
+    )
+    cluster = one_region_job_cluster()
+    rate = placement_power_rate(prof, rec.placement, cluster)
+    expected = rate * (
+        (t1 - rec.start) + 3.0 * (t2 - t1) + (rec.finish - t2)
+    )
+    assert res.costs[0] == pytest.approx(expected, rel=1e-9)
+
+
+def test_preempted_segment_costs_stay_non_negative():
+    """Satellite: the old ``cost -= (finish - t) * rate`` back-out is gone;
+    every settled segment cost is a sum of duration × rate terms, so even a
+    segment preempted while still inside its restore window accrues a
+    non-negative cost, and the segment costs partition the job's total."""
+    regions = [Region("a", 6, 0.10), Region("b", 6, 0.20)]
+    cluster = ClusterState.build(regions, {("a", "b"): 50.0}, symmetric=True)
+    spec = JobSpec(
+        0, ModelSpec("j0", 20e9, 16, 2048, batch_size=16), iterations=20
+    )
+    prof = JobProfile(spec, gpu_flops=300e12)
+    static = simulate(cluster.snapshot(), [prof], BACEPipePolicy())
+    t_it = static.records[0].iteration_seconds
+    flap = {("a", "b"): 0.01, ("b", "a"): 0.01}
+    restore = {("a", "b"): 1.0, ("b", "a"): 1.0}
+    t1 = 5.3 * t_it
+    # second drop lands inside the restarted segment's restore window
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=t1, bandwidth=flap),
+            EnvUpdate(time=t1 + t_it, bandwidth=restore),
+            EnvUpdate(time=t1 + 2.0 * t_it, bandwidth=flap),
+            EnvUpdate(time=t1 + 3.0 * t_it, bandwidth=restore),
+        ]
+    )
+    res = simulate(
+        cluster.snapshot(),
+        [JobProfile(spec, gpu_flops=300e12)],
+        BACEPipePolicy(),
+        trace=trace,
+        restart_penalty_s=100.0 * t_it,  # restore dwarfs the up-window
+    )
+    assert res.migrations == {0: 2}
+    assert all(r.cost >= 0.0 for r in res.records)
+    assert res.costs[0] >= 0.0
+    assert sum(r.cost for r in res.records) == pytest.approx(
+        res.costs[0], rel=1e-9
+    )
+
+
+# ------------------------------------------------------- voluntary migration
+def spike_trace(t, factor=10.0):
+    return BandwidthTrace([EnvUpdate(time=t, prices={"a": factor})])
+
+
+def test_voluntary_migration_moves_off_spiked_region():
+    """Price of the hosting region ×10 mid-run with the other region idle:
+    the job checkpoints voluntarily, restarts on the now-cheaper region, and
+    both segments settle at their live prices."""
+    prof = small_job()
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    rec0 = static.records[0]
+    assert rec0.placement.path == ("a",)
+    t_spike = 0.4 * rec0.finish
+    penalty = 10.0
+
+    res = simulate(
+        one_region_job_cluster(),
+        [small_job()],
+        BACEPipePolicy(),
+        trace=spike_trace(t_spike),
+        restart_penalty_s=penalty,
+        voluntary_migration_threshold=0.10,
+    )
+    assert res.voluntary_migrations == {0: 1}
+    assert res.forced_migrations == {}
+    assert res.migrations == {0: 1}  # voluntary counts as a migration
+    aborted, done = res.records
+    assert aborted.preempted and aborted.finish == t_spike
+    assert aborted.placement.path == ("a",)
+    assert done.placement.path == ("b",)
+    assert done.start == t_spike  # re-placed in the same scheduling pass
+    assert res.stall_seconds[0] == 0.0
+    kinds = [k for _, k, _ in res.events]
+    assert "migrate" in kinds and "preempt" not in kinds
+
+    # both segments settle at live prices: closed-form check
+    cluster = one_region_job_cluster()
+    rate_a = placement_power_rate(prof, aborted.placement, cluster)
+    rate_b = placement_power_rate(prof, done.placement, cluster)
+    expected = rate_a * (t_spike - 0.0) + rate_b * (done.finish - t_spike)
+    assert res.costs[0] == pytest.approx(expected, rel=1e-9)
+
+    # migrating must beat staying put, measured by the same piecewise ledger
+    stay = simulate(
+        one_region_job_cluster(),
+        [small_job()],
+        BACEPipePolicy(),
+        trace=spike_trace(t_spike),
+        restart_penalty_s=penalty,
+    )
+    assert stay.total_migrations == 0
+    assert res.total_cost < stay.total_cost
+
+
+def test_voluntary_migration_respects_threshold():
+    """A threshold larger than the achievable saving keeps the job put."""
+    prof = small_job()
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    t_spike = 0.4 * static.records[0].finish
+    res = simulate(
+        one_region_job_cluster(),
+        [small_job()],
+        BACEPipePolicy(),
+        trace=spike_trace(t_spike),
+        restart_penalty_s=10.0,
+        voluntary_migration_threshold=1000.0,
+    )
+    assert res.total_migrations == 0
+    assert [r.preempted for r in res.records] == [False]
+
+
+def test_voluntary_migration_never_increases_remaining_iterations():
+    """The restarted segment owes ``iterations − floor(trained)`` (+ restart
+    penalty time), never more: checkpointing floors progress but migration
+    cannot add work."""
+    prof = small_job(iters=30)
+    static = simulate(one_region_job_cluster(), [prof], BACEPipePolicy())
+    rec0 = static.records[0]
+    t_it = rec0.iteration_seconds
+    t_spike = 0.4 * rec0.finish
+    penalty = 10.0
+    res = simulate(
+        one_region_job_cluster(),
+        [small_job(iters=30)],
+        BACEPipePolicy(),
+        trace=spike_trace(t_spike),
+        restart_penalty_s=penalty,
+        voluntary_migration_threshold=0.10,
+    )
+    assert res.voluntary_migrations == {0: 1}
+    done_iters = int(t_spike // t_it)
+    final = res.records[-1]
+    owed = 30 - done_iters
+    assert 0 < owed <= 30
+    assert final.execution == pytest.approx(
+        owed * final.iteration_seconds + penalty, rel=1e-9
+    )
+
+
+def test_price_spike_scenario_beats_stale_baseline():
+    """Acceptance: on the registered price-spike scenario, BACE-Pipe with
+    voluntary migration (the scenario default) ends strictly cheaper than
+    the stay-put schedule the stale-price accounting used to produce — both
+    measured by the same piecewise-accurate ledger."""
+    sc = get_scenario("price-spike")
+    assert sc.voluntary_migration_threshold is not None
+    on = sc.run(BACEPipePolicy(), seed=0)
+    off = sc.run(BACEPipePolicy(), seed=0, voluntary_migration_threshold=None)
+    assert off.total_voluntary_migrations == 0
+    assert on.total_voluntary_migrations > 0
+    assert on.total_cost < off.total_cost
+
+
+def test_voluntary_threshold_validation():
+    cluster = one_region_job_cluster()
+    with pytest.raises(ValueError, match="voluntary_migration_threshold"):
+        Simulator(
+            cluster,
+            [small_job()],
+            BACEPipePolicy(),
+            voluntary_migration_threshold=-0.1,
+        )
+
+
+# ------------------------------------------------------- satellite: scaled()
+def test_scaled_rebuilds_from_base_and_reapplies_multipliers():
+    """Regression: ``scaled()`` used to rebuild from the *live* (multiplier-
+    scaled) bandwidth next to construction-time prices, silently compounding
+    dynamic state into the new installed baseline.  It must scale the base
+    and re-apply both multiplier sets."""
+    cluster = one_region_job_cluster(gbps=40.0)
+    base_bw = cluster.bandwidth[("a", "b")]
+    base_price = cluster.price("a")
+    cluster.set_link_multipliers({("a", "b"): 0.5})
+    cluster.set_price_multipliers({"a": 2.0})
+
+    out = cluster.scaled(bandwidth_factor=2.0, capacity_factor=2.0)
+    # live state carries over on top of the scaled base...
+    assert out.link_bandwidth("a", "b") == pytest.approx(
+        2.0 * base_bw * 0.5
+    )
+    assert out.price("a") == pytest.approx(2.0 * base_price)
+    assert out.regions["a"].gpu_capacity == 16
+    # ...and resetting the multipliers lands on the scaled *base*, proving
+    # the baseline never absorbed the live multiplier
+    out.set_link_multipliers({("a", "b"): 1.0})
+    out.set_price_multipliers({"a": 1.0})
+    assert out.link_bandwidth("a", "b") == pytest.approx(2.0 * base_bw)
+    assert out.price("a") == pytest.approx(base_price)
+    # untouched direction scales cleanly too
+    assert out.link_bandwidth("b", "a") == pytest.approx(2.0 * base_bw)
+
+
+def test_scaled_without_multipliers_matches_old_behavior():
+    cluster = one_region_job_cluster(gbps=40.0)
+    out = cluster.scaled(bandwidth_factor=0.5)
+    assert out.link_bandwidth("a", "b") == pytest.approx(
+        0.5 * cluster.bandwidth[("a", "b")]
+    )
+    assert out.price("a") == cluster.price("a")
+
+
+# ------------------------------------- satellite: oversubscribed _res_extra
+def test_oversubscribed_links_sees_uninstalled_reservations():
+    """Reservations parked on uninstalled links (zero capacity) are standing
+    Eq. 6 violations and must be reported, not silently skipped."""
+    regions = [Region("a", 4, 0.1), Region("b", 4, 0.2)]
+    # only a->b installed; a background reservation arrives on b->a
+    cluster = ClusterState(
+        regions={r.name: r for r in regions},
+        bandwidth={("a", "b"): 50.0e9},
+        reserved_bw={("b", "a"): 1.0e9},
+    )
+    assert cluster.oversubscribed_links() == [("b", "a")]
+    # dust below tolerance is not a violation
+    cluster.reserved_bw[("b", "a")] = 1e-9
+    assert cluster.oversubscribed_links() == []
+
+
+def test_simulation_tolerates_uninstalled_background_reservation():
+    """The preemption pass must classify an uninstalled-link violation as
+    unresolvable (no running job owns it) and carry on."""
+    regions = [Region("a", 8, 0.1), Region("b", 8, 0.2)]
+    cluster = ClusterState(
+        regions={r.name: r for r in regions},
+        bandwidth={("a", "b"): 50.0e9, ("b", "a"): 50.0e9},
+        reserved_bw={("a", "nowhere"): 1.0e9},
+    )
+    trace = BandwidthTrace(
+        [EnvUpdate(time=100.0, bandwidth={("a", "b"): 0.5})]
+    )
+    res = simulate(cluster, [small_job()], BACEPipePolicy(), trace=trace)
+    assert len(res.completed_records) == 1

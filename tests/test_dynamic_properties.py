@@ -5,7 +5,7 @@ fixed-case tests at the bottom exercise it even when ``hypothesis`` (an
 optional dev extra) is absent; the ``@given`` tests then sweep it over
 arbitrary clusters, job sets, and bandwidth/price traces.
 
-Invariants, under *any* trace:
+Invariants, under *any* trace (and with voluntary migration on or off):
 - every job eventually completes exactly once (final non-preempted segment);
 - segments of one job never overlap and strictly alternate
   preempt -> restart;
@@ -15,12 +15,20 @@ Invariants, under *any* trace:
 - no placement ever dips below the job's memory floor (``min_gpus``),
   migrations included, and pipeline continuity (>=1 GPU per path region)
   holds;
-- migration/stall bookkeeping is consistent with the per-segment records.
+- migration/stall bookkeeping is consistent with the per-segment records,
+  and voluntary counts are a subset of total migrations;
+- cost is monotone in time: every settled segment cost is >= 0 (so each
+  job's cumulative Eq. 4 ledger never decreases), and the segment costs
+  partition the per-job total;
+- migration never increases owed work: replaying the checkpoint floor over
+  the segment records yields a non-increasing remaining-iteration sequence
+  that exactly explains the final segment's duration.
 """
 
 import pytest
 
 from repro.core import (
+    DEFAULT_RESTART_PENALTY_S,
     BACEPipePolicy,
     BandwidthTrace,
     ClusterState,
@@ -68,8 +76,14 @@ def build_trace(cluster, raw_updates):
     return BandwidthTrace(updates)
 
 
-def check_dynamic_invariants(cluster, profiles, trace):
-    sim = Simulator(cluster, profiles, BACEPipePolicy(), trace=trace)
+def check_dynamic_invariants(cluster, profiles, trace, *, threshold=None):
+    sim = Simulator(
+        cluster,
+        profiles,
+        BACEPipePolicy(),
+        trace=trace,
+        voluntary_migration_threshold=threshold,
+    )
     res = sim.run()
 
     # -- every job completes exactly once
@@ -97,6 +111,43 @@ def check_dynamic_invariants(cluster, profiles, trace):
         if n_aborted:
             assert res.stall_seconds[job_id] >= 0.0
     assert set(res.migrations) == set(res.stall_seconds)
+    for job_id, n_vol in res.voluntary_migrations.items():
+        assert 0 < n_vol <= res.migrations[job_id]
+    assert sum(res.forced_migrations.values()) + sum(
+        res.voluntary_migrations.values()
+    ) == res.total_migrations
+
+    # -- cost monotone in time: every settled segment cost is >= 0 (the
+    #    per-job cumulative ledger is then non-decreasing by construction)
+    #    and segment costs partition the per-job Eq. 4 total
+    for job_id, segs in by_job.items():
+        for s in segs:
+            assert s.cost >= 0.0
+        assert sum(s.cost for s in segs) == pytest.approx(
+            res.costs[job_id], rel=1e-9, abs=1e-12
+        )
+        assert res.costs[job_id] >= 0.0
+
+    # -- migration (forced or voluntary) never increases owed work: replay
+    #    the checkpoint floor over the segments; remaining is non-increasing
+    #    and the final segment's duration is exactly the owed work plus the
+    #    restart restore window
+    prof_by_id = {p.spec.job_id: p for p in profiles}
+    penalty = DEFAULT_RESTART_PENALTY_S
+    for job_id, segs in by_job.items():
+        remaining = prof_by_id[job_id].spec.iterations
+        for i, s in enumerate(segs[:-1]):
+            restore = penalty if i > 0 else 0.0
+            trained = max(0.0, (s.finish - s.start) - restore)
+            done = int(trained // s.iteration_seconds)
+            new_remaining = max(1, remaining - max(0, done))
+            assert new_remaining <= remaining
+            remaining = new_remaining
+        final = segs[-1]
+        restore = penalty if len(segs) > 1 else 0.0
+        assert final.execution == pytest.approx(
+            remaining * final.iteration_seconds + restore, rel=1e-9
+        )
 
     # -- released == reserved: the ledgers are back at their initial state
     assert sim.cluster.total_free_gpus() == sim.cluster.total_gpus()
@@ -107,7 +158,6 @@ def check_dynamic_invariants(cluster, profiles, trace):
         assert reserved == pytest.approx(0.0, abs=1e-6), link
 
     # -- memory floor + continuity + per-region capacity, every segment
-    prof_by_id = {p.spec.job_id: p for p in profiles}
     for r in res.records:
         prof = prof_by_id[r.job_id]
         assert r.placement.total_gpus >= prof.min_gpus
@@ -128,11 +178,14 @@ def check_dynamic_invariants(cluster, profiles, trace):
         assert usage[region] <= cluster.regions[region].gpu_capacity
         assert usage[region] >= 0 or abs(usage[region]) == 0
 
-    # -- event log is chronological and internally consistent
+    # -- event log is chronological and internally consistent ("preempt" =
+    #    forced eviction, "migrate" = price-reactive voluntary checkpoint)
     times = [t for t, _, _ in res.events]
     assert times == sorted(times)
-    n_preempts = sum(1 for _, k, _ in res.events if k == "preempt")
-    assert n_preempts == res.total_migrations
+    n_forced = sum(1 for _, k, _ in res.events if k == "preempt")
+    n_vol = sum(1 for _, k, _ in res.events if k == "migrate")
+    assert n_forced + n_vol == res.total_migrations
+    assert n_vol == res.total_voluntary_migrations
 
     return res
 
@@ -163,15 +216,42 @@ FIXED_CASES = [
             (5000.0, [0, 1, 2, 3, 4, 5], 1.0, [1], 1.0),
         ],
     ),
+    # Voluntary-migration exerciser: a long job on the cheap region whose
+    # price quintuples mid-run with the (now cheaper) other region idle —
+    # under threshold=0.1 this produces exactly the voluntary checkpoint
+    # path (see test_fixed_cases_reach_voluntary_migration).
+    (
+        [(8, 0.05), (8, 0.15)],
+        [(8e9, 4, 1024, 16, 5000, 0.0)],
+        [(1000.0, [], 1.0, [0], 5.0)],
+    ),
 ]
 
 
+@pytest.mark.parametrize("threshold", [None, 0.1], ids=["stay", "migrate"])
 @pytest.mark.parametrize("caps_prices,raw_jobs,raw_updates", FIXED_CASES)
-def test_dynamic_invariants_fixed(caps_prices, raw_jobs, raw_updates):
+def test_dynamic_invariants_fixed(caps_prices, raw_jobs, raw_updates, threshold):
     cluster = build_cluster(caps_prices)
     profiles = build_profiles(raw_jobs)
     trace = build_trace(cluster, raw_updates)
-    check_dynamic_invariants(cluster, profiles, trace)
+    check_dynamic_invariants(cluster, profiles, trace, threshold=threshold)
+
+
+def test_fixed_cases_reach_voluntary_migration():
+    """The 'migrate' parametrization above must not be vacuous: at least one
+    fixed case has to actually take the voluntary checkpoint path (the
+    hypothesis sweep is an optional extra, so without this the voluntary
+    preempt/settle path could regress with the unit suite green)."""
+    total = 0
+    for caps_prices, raw_jobs, raw_updates in FIXED_CASES:
+        cluster = build_cluster(caps_prices)
+        profiles = build_profiles(raw_jobs)
+        trace = build_trace(cluster, raw_updates)
+        res = check_dynamic_invariants(
+            cluster, profiles, trace, threshold=0.1
+        )
+        total += res.total_voluntary_migrations
+    assert total > 0
 
 
 def test_dead_links_still_complete_via_single_region():
@@ -242,6 +322,20 @@ if given is not None:
         profiles = build_profiles(raw_jobs)
         trace = build_trace(cluster, raw_updates)
         check_dynamic_invariants(cluster, profiles, trace)
+
+
+    @settings(max_examples=25, deadline=None)
+    @given(regions_st, jobs_st, updates_st)
+    def test_dynamic_invariants_hold_with_voluntary_migration(
+        caps_prices, raw_jobs, raw_updates
+    ):
+        """Same sweep with the price-reactive voluntary pass armed: cost
+        monotonicity and the remaining-iterations replay must survive
+        arbitrary combinations of forced and voluntary checkpoints."""
+        cluster = build_cluster(caps_prices)
+        profiles = build_profiles(raw_jobs)
+        trace = build_trace(cluster, raw_updates)
+        check_dynamic_invariants(cluster, profiles, trace, threshold=0.05)
 
 
     @settings(max_examples=25, deadline=None)

@@ -31,9 +31,11 @@ GOLDEN_DIR = Path(__file__).parent / "golden"
 
 ALL_POLICIES = [BACEPipePolicy, LCFPolicy, LDFPolicy, CRLCFPolicy, CRLDFPolicy]
 
-#: One static scenario (the engine-parity surface) and one dynamic scenario
-#: (bandwidth flap + preemptive migration) per policy.
-GOLDEN_SCENARIOS = ("static-paper", "link-flap")
+#: One static scenario (the engine-parity surface) plus the dynamic regimes:
+#: link-flap (forced preemptive migration), price-spike (piecewise
+#: repricing + voluntary migration), and diurnal (dense bandwidth-breakpoint
+#: stream under Poisson arrivals), per policy.
+GOLDEN_SCENARIOS = ("static-paper", "link-flap", "price-spike", "diurnal")
 
 SEED = 0
 
