@@ -19,6 +19,7 @@ def main() -> None:
         dynamic_scenarios,
         main_results,
         motivation,
+        schedule_ablation,
         scheduler_scaling,
         sensitivity_bandwidth,
         sensitivity_capacity,
@@ -39,6 +40,10 @@ def main() -> None:
         "scheduler_scaling": lambda: scheduler_scaling.run(quick=True),
         # Dynamic-environment regimes (PR 2): scenario registry × policies.
         "dynamic_scenarios": lambda: dynamic_scenarios.run(smoke=True),
+        # Microbatch schedule ablation (microplan timing backend): quick
+        # smoke via the driver; the full sweep (python -m
+        # benchmarks.schedule_ablation) (re)writes BENCH_schedules.json.
+        "schedule_ablation": lambda: schedule_ablation.run(smoke=True),
     }
     try:
         from . import roofline

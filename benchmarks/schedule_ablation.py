@@ -1,0 +1,234 @@
+"""Schedule ablation: microbatch schedule × policy × bandwidth tier.
+
+For every cell the static-paper simulation runs under the default analytic
+backend, the placements it actually produced are re-priced by the microplan
+subsystem for each pipeline schedule, and the cell reports mean iteration
+time, mean bubble fraction, and worst-case peak in-flight activations per
+schedule.  Policies are the Pathfinder-based trio (BACE-Pipe and the two
+ablations that keep Alg. 1's ``t_comm ≤ t_comp`` invariant) so every
+placement is in the regime where the paper's claims live.
+
+Each cell asserts the cross-backend invariants the microplan subsystem
+guarantees:
+
+* the ``gpipe`` plan reproduces Eq. (1) to ≤1e-9 relative on every placement
+  (float association is the only slack — see DESIGN.md);
+* ``1f1b`` and ``gpipe-overlap`` iteration times never exceed ``gpipe``;
+* ``1f1b`` peak in-flight activations never exceed GPipe's.
+
+One end-to-end row additionally runs the *whole simulation* with
+``timing_model="microplan"`` threaded through the ``JobSpec``s: the
+``gpipe`` schedule must land on the analytic avg JCT (≤1e-9 relative) and
+``1f1b``/``gpipe-overlap`` must not exceed it.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.schedule_ablation [--smoke]
+        [--seed N] [--out PATH]
+
+The full sweep writes ``BENCH_schedules.json`` at the repo root (``--out``
+overrides); ``--smoke`` trims the grid for CI and skips the file unless
+``--out`` is given explicitly.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from repro.core import (
+    PIPELINE_SCHEDULES,
+    BACEPipePolicy,
+    SimulationResult,
+    plan_schedule,
+    simulate,
+)
+from repro.core.ablations import WithoutCostMin, WithoutPriority
+from repro.core.timing import analytic_iteration_time
+from repro.core.workloads import paper_cluster, paper_jobs, paper_profiles
+
+from .common import BENCH_GPU_FLOPS
+
+#: Pathfinder-based policies (placements keep ``t_comm <= t_comp``).
+POLICIES = {
+    "bace-pipe": BACEPipePolicy,
+    "wo-priority": WithoutPriority,
+    "wo-costmin": WithoutCostMin,
+}
+
+FULL_TIERS = (0.25, 1.0, 4.0)
+SMOKE_TIERS = (0.25, 1.0)
+REL_TOL = 1e-9
+
+_JSON_PATH = Path(__file__).resolve().parent.parent / "BENCH_schedules.json"
+
+
+def _run_sim(
+    policy_name: str,
+    tier: float,
+    *,
+    seed: int,
+    n_jobs: int,
+    timing_model: str = "analytic",
+    pipeline_schedule: str = "gpipe",
+):
+    cluster = paper_cluster(bandwidth_factor=tier)
+    jobs = paper_jobs(
+        n_jobs=n_jobs,
+        seed=seed,
+        timing_model=timing_model,
+        pipeline_schedule=pipeline_schedule,
+    )
+    profiles = paper_profiles(jobs, gpu_flops=BENCH_GPU_FLOPS)
+    res: SimulationResult = simulate(
+        cluster, profiles, POLICIES[policy_name]()
+    )
+    return res, profiles
+
+
+def _cell(
+    policy_name: str, tier: float, *, seed: int, n_jobs: int
+) -> Dict[str, Dict[str, float]]:
+    """Plan every schedule over the placements one simulation produced."""
+    res, profiles = _run_sim(policy_name, tier, seed=seed, n_jobs=n_jobs)
+    by_id = {p.spec.job_id: p for p in profiles}
+    placements = [
+        (by_id[r.job_id], r.placement) for r in res.completed_records
+    ]
+    cell: Dict[str, Dict[str, float]] = {}
+    per_job: Dict[str, List[float]] = {s: [] for s in PIPELINE_SCHEDULES}
+    for schedule in PIPELINE_SCHEDULES:
+        iters, bubbles, peaks = [], [], []
+        for prof, placement in placements:
+            plan = plan_schedule(prof, placement, schedule)
+            iters.append(plan.iteration_time)
+            bubbles.append(plan.bubble_fraction)
+            peaks.append(plan.peak_activations)
+            per_job[schedule].append(plan.iteration_time)
+            if schedule == "gpipe":
+                eq1 = analytic_iteration_time(prof, placement)
+                if abs(plan.iteration_time - eq1) > REL_TOL * eq1:
+                    raise AssertionError(
+                        f"gpipe plan diverged from Eq. (1) for job "
+                        f"{prof.spec.job_id}: {plan.iteration_time} vs {eq1}"
+                    )
+            if schedule == "1f1b":
+                gp = plan_schedule(prof, placement, "gpipe")
+                if plan.peak_activations > gp.peak_activations:
+                    raise AssertionError(
+                        f"1f1b stashes more than gpipe for job "
+                        f"{prof.spec.job_id}"
+                    )
+        n = len(iters)
+        cell[schedule] = {
+            "mean_iteration_s": sum(iters) / n,
+            "mean_bubble": sum(bubbles) / n,
+            "max_peak_activations": max(peaks),
+        }
+    for schedule in ("1f1b", "gpipe-overlap"):
+        for t_sched, t_gpipe in zip(per_job[schedule], per_job["gpipe"]):
+            if t_sched > t_gpipe * (1.0 + REL_TOL):
+                raise AssertionError(
+                    f"{schedule} slower than gpipe in cell "
+                    f"{policy_name}/bw{tier}: {t_sched} vs {t_gpipe}"
+                )
+    return cell
+
+
+def run(*, smoke: bool = False, seed: int = 0, out: Optional[str] = None):
+    rows: List[str] = []
+    tiers = SMOKE_TIERS if smoke else FULL_TIERS
+    policies = ("bace-pipe",) if smoke else tuple(POLICIES)
+    n_jobs = 6 if smoke else 8
+    results: Dict[str, Dict] = {}
+    for policy_name in policies:
+        for tier in tiers:
+            t0 = time.perf_counter()
+            cell = _cell(policy_name, tier, seed=seed, n_jobs=n_jobs)
+            lap = time.perf_counter() - t0
+            key = f"{policy_name}/bw{tier:g}"
+            results[key] = cell
+            for schedule in PIPELINE_SCHEDULES:
+                m = cell[schedule]
+                rows.append(
+                    f"schedules/{key}/{schedule},{1e6 * lap:.1f},"
+                    f"iter_s={m['mean_iteration_s']:.4f};"
+                    f"bubble={m['mean_bubble']:.4f};"
+                    f"peak_acts={m['max_peak_activations']:.1f}"
+                )
+            rows.append(
+                f"# {key}: 1f1b/gpipe-overlap <= gpipe on all "
+                f"{n_jobs} placements, gpipe == Eq.(1)"
+            )
+
+    # End-to-end: the microplan backend threaded through the simulator.
+    base, _ = _run_sim("bace-pipe", 1.0, seed=seed, n_jobs=n_jobs)
+    e2e: Dict[str, float] = {"analytic": base.average_jct}
+    for schedule in ("gpipe", "1f1b", "gpipe-overlap"):
+        res, _ = _run_sim(
+            "bace-pipe",
+            1.0,
+            seed=seed,
+            n_jobs=n_jobs,
+            timing_model="microplan",
+            pipeline_schedule=schedule,
+        )
+        e2e[schedule] = res.average_jct
+        rows.append(
+            f"schedules/e2e/microplan-{schedule},0.0,"
+            f"jct_h={res.average_jct / 3600:.4f};"
+            f"jct_vs_analytic={res.average_jct / base.average_jct:.6f}"
+        )
+    if abs(e2e["gpipe"] - e2e["analytic"]) > REL_TOL * e2e["analytic"]:
+        raise AssertionError(
+            "microplan/gpipe end-to-end JCT diverged from analytic: "
+            f"{e2e['gpipe']} vs {e2e['analytic']}"
+        )
+    for schedule in ("1f1b", "gpipe-overlap"):
+        if e2e[schedule] > e2e["analytic"] * (1.0 + REL_TOL):
+            raise AssertionError(
+                f"microplan/{schedule} end-to-end JCT exceeds analytic: "
+                f"{e2e[schedule]} vs {e2e['analytic']}"
+            )
+    rows.append(
+        "# e2e: microplan/gpipe == analytic JCT, 1f1b and gpipe-overlap <= it"
+    )
+
+    out_path = out if out is not None else (None if smoke else _JSON_PATH)
+    if out_path is not None:
+        payload = {
+            "seed": seed,
+            "n_jobs": n_jobs,
+            "gpu_flops": BENCH_GPU_FLOPS,
+            "tiers": list(tiers),
+            "policies": list(policies),
+            "cells": results,
+            "e2e_avg_jct_s": e2e,
+        }
+        Path(out_path).write_text(
+            json.dumps(payload, indent=2, sort_keys=True) + "\n"
+        )
+        rows.append(f"# wrote {out_path}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="JSON output path (default: BENCH_schedules.json at the repo "
+        "root for the full sweep; no file in --smoke mode)",
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, seed=args.seed, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

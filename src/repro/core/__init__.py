@@ -9,6 +9,10 @@ Public API:
     priority_scores                — Eqs. (9)–(12)
     BACEPipePolicy / baselines / ablations — pluggable policies
     simulate                       — event-driven multi-job simulator
+    TimingModel / plan_schedule    — pluggable timing backends: closed-form
+                                     Eq. (1) (``analytic``) or the discrete
+                                     microbatch schedule planner
+                                     (``microplan``, ``core/microplan``)
 """
 
 from .accounting import SegmentLedger  # noqa: F401
@@ -33,7 +37,21 @@ from .cluster import (  # noqa: F401
     EnvUpdate,
     Region,
 )
-from .job import JobProfile, JobSpec, ModelSpec  # noqa: F401
+from .job import (  # noqa: F401
+    PIPELINE_SCHEDULES,
+    TIMING_MODELS as TIMING_MODEL_NAMES,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+)
+from .microplan import (  # noqa: F401
+    PipelineTopology,
+    PlanEvent,
+    SchedulePlan,
+    plan_from_topology,
+    plan_schedule,
+    topology_from_placement,
+)
 from .legacy import (  # noqa: F401
     legacy_find_placement,
     legacy_order_by_priority,
@@ -59,10 +77,16 @@ from .scheduler import (  # noqa: F401
     simulate,
 )
 from .timing import (  # noqa: F401
+    TIMING_MODELS,
+    AnalyticTimingModel,
+    MicroplanTimingModel,
+    TimingModel,
+    analytic_iteration_time,
     average_price,
     bottleneck_delta,
     electricity_cost,
     execution_time,
+    get_timing_model,
     iteration_time,
     placement_power_rate,
 )

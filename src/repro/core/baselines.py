@@ -17,6 +17,14 @@ BACE-Pipe's Pathfinder they do *not* insist on ``t_comm ≤ t_comp``, so their
 pipelines can come out communication-bound ("throttled by suboptimal
 inter-region links", §IV-B).
 
+Under a non-default timing backend (``JobSpec.timing_model``), the
+per-edge heuristic gains a schedule-aware companion: the finished chain is
+priced by the active ``TimingModel`` and rejected when the modeled iteration
+exceeds ``(1 + bubble_tolerance) ×`` the zero-communication ideal — the same
+tolerance, applied to the *planned* bubble instead of a per-edge proxy.
+With the default ``analytic`` backend behavior is unchanged (golden/parity
+surface).
+
 The cross-region baselines model the *rigid* job abstraction the paper
 ascribes to them (§II-A, on TanGo-style schedulers: "fixed resource
 requirements per job... prevents schedulers from dynamically leveraging
@@ -34,6 +42,7 @@ from .cluster import ClusterState
 from .job import JobProfile
 from .placement import Placement, build_placement
 from .scheduler import SchedulingPolicy, fcfs_order
+from .timing import iteration_time
 
 #: A naive scheduler still refuses edges slower than this many compute slots.
 DEFAULT_BUBBLE_TOLERANCE = 8.0
@@ -125,9 +134,19 @@ def _chain_placement(
     if g < k:
         return None  # rigid demand: the chain must reach the full K*
     try:
-        return build_placement(profile, cluster, path, alloc)
+        placement = build_placement(profile, cluster, path, alloc)
     except ValueError:
         return None
+    if profile.spec.timing_model != "analytic":
+        # Schedule-aware bubble gate (see module docstring): the active
+        # timing backend prices the whole chain; a pipeline whose planned
+        # iteration blows past the tolerance-scaled zero-comm ideal is as
+        # unusable as a chain the per-edge heuristic would have refused.
+        if iteration_time(profile, placement) > (
+            1.0 + bubble_tolerance
+        ) * profile.t_iter_ideal(g):
+            return None
+    return placement
 
 
 class CRLCFPolicy(SchedulingPolicy):

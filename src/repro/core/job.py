@@ -53,6 +53,13 @@ DEFAULT_GPU_MEMORY = 44e9
 #: + fp32 master copy (4).
 BYTES_PER_PARAM = 16.0
 
+#: Timing backends a ``JobSpec`` may select (the ``TimingModel`` seam in
+#: ``core/timing.py``): the closed-form Eq. (1) model, or the discrete
+#: microbatch-level planner (``core/microplan``).
+TIMING_MODELS = ("analytic", "microplan")
+#: Pipeline schedules the microplan backend can price (``core/microplan``).
+PIPELINE_SCHEDULES = ("gpipe", "1f1b", "interleaved", "gpipe-overlap")
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelSpec:
@@ -66,10 +73,24 @@ class ModelSpec:
     seq_len: int = 2048
     microbatch_seqs: int = 1  # sequences per micro-batch (GPipe grain)
 
+    def __post_init__(self) -> None:
+        if self.batch_size < 1:
+            raise ValueError("batch_size must be positive")
+        if self.microbatch_seqs < 1:
+            raise ValueError("microbatch_seqs must be positive")
+        if self.batch_size % self.microbatch_seqs:
+            raise ValueError(
+                f"batch_size={self.batch_size} is not divisible by "
+                f"microbatch_seqs={self.microbatch_seqs}: "
+                f"{self.batch_size % self.microbatch_seqs} sequences per "
+                "iteration would be silently dropped"
+            )
+
     @property
     def microbatches(self) -> int:
-        """``M_j``: micro-batches per iteration."""
-        return max(1, self.batch_size // self.microbatch_seqs)
+        """``M_j``: micro-batches per iteration (exact — divisibility is
+        validated at construction)."""
+        return self.batch_size // self.microbatch_seqs
 
     @property
     def tokens_per_microbatch(self) -> int:
@@ -83,16 +104,34 @@ class ModelSpec:
 
 @dataclasses.dataclass(frozen=True)
 class JobSpec:
-    """A training job: model + dataset scale (+ submission time)."""
+    """A training job: model + dataset scale (+ submission time).
+
+    ``timing_model`` selects the backend that prices this job's placements
+    (the ``TimingModel`` seam, ``core/timing.py``); ``pipeline_schedule``
+    picks the microbatch schedule the ``microplan`` backend plans.  The
+    defaults reproduce the seed's closed-form Eq. (1) behavior bit-exactly.
+    """
 
     job_id: int
     model: ModelSpec
     iterations: int
     submit_time: float = 0.0
+    timing_model: str = "analytic"
+    pipeline_schedule: str = "gpipe"
 
     def __post_init__(self) -> None:
         if self.iterations <= 0:
             raise ValueError("iterations must be positive")
+        if self.timing_model not in TIMING_MODELS:
+            raise ValueError(
+                f"unknown timing model {self.timing_model!r} "
+                f"(have: {TIMING_MODELS})"
+            )
+        if self.pipeline_schedule not in PIPELINE_SCHEDULES:
+            raise ValueError(
+                f"unknown pipeline schedule {self.pipeline_schedule!r} "
+                f"(have: {PIPELINE_SCHEDULES})"
+            )
 
 
 class JobProfile:

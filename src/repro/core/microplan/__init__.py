@@ -1,0 +1,16 @@
+"""Microbatch-level schedule planner (pluggable timing backend).
+
+See ``planner.py`` for the event model and ``core/timing.py`` for the
+``TimingModel`` seam that selects between the closed-form Eq. (1) backend
+(``analytic``, the default) and this planner (``microplan``).
+"""
+
+from .planner import (  # noqa: F401
+    DEFAULT_VIRTUAL_STAGES,
+    PipelineTopology,
+    PlanEvent,
+    SchedulePlan,
+    plan_from_topology,
+    plan_schedule,
+    topology_from_placement,
+)

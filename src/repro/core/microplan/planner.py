@@ -1,0 +1,753 @@
+"""Microbatch-level schedule planner: bubble-accurate pipeline timelines.
+
+Where ``core/timing.py`` prices a placement with the closed-form GPipe
+fill-drain formula of Eq. (1), this module *executes* the schedule: every
+(stage, microbatch) compute slot and every stage-boundary transfer becomes an
+operation on a resource, and iteration time is the makespan of the resulting
+dependency graph.  That turns the paper's central quantity — the pipeline
+bubble under heterogeneous per-hop WAN bandwidth — from an analytic scalar
+into an inspectable event timeline, and opens schedule-level questions
+(CrossPipe-style comm-overlapped cross-DC schedules, OptPipe-style
+memory/schedule trade-offs) that a closed form cannot express.
+
+Resource model
+--------------
+A placement maps to a :class:`PipelineTopology`:
+
+* ``L`` pipeline stages (``JobProfile.pipeline_depth``), each a serially
+  reused compute resource with per-microbatch forward/backward times;
+* ``L-1`` stage boundaries, each an ordered group of *serial hop* resources —
+  one hop per GPU boundary it covers (store-and-forward: hop ``h`` can carry
+  microbatch ``i+1`` while hop ``h+1`` carries ``i``).  Intra-region hops
+  ride the intra-region fabric; region crossings ride the WAN share the
+  placement reserved.  Tensor-parallel-widened placements (``g > L``) fold
+  their surplus per-GPU hops into the last boundary group, so the planner
+  pays exactly the ``g-1`` transfers Eq. (1)'s fill term pays.
+* Links are full duplex: forward activations and backward gradients on the
+  same boundary use independent per-direction resources.
+
+Schedules
+---------
+``gpipe``          fill/steady/drain, all forwards then all backwards; the
+                   deterministic-tandem makespan reproduces Eq. (1)
+                   (``analytic_iteration_time``) up to float association.
+``1f1b``           one-forward-one-backward with the standard per-stage
+                   warmup of ``min(M, L-1-s)``; same bubble as GPipe but the
+                   per-stage activation stash drops from ``M`` to ``~L-s``.
+``interleaved``    virtual stages: each physical stage runs ``v`` chunks of
+                   ``1/v`` of its layers, microbatches group-cycled
+                   (Megatron-style groups of ``L``); chunk wrap-around
+                   transfers traverse a dedicated store-and-forward return
+                   path over every hop (the WAN cost that makes interleaving
+                   unattractive cross-region).
+``gpipe-overlap``  the lockstep tick schedule the jax data plane
+                   (``pipeline/gpipe.py``) executes by construction: ticks of
+                   length ``Δ = max(t_comp, max hop)``, transfer of
+                   microbatch ``i`` overlapping compute of ``i+1``;
+                   ``M + L - 1`` ticks per direction (the data-plane parity
+                   surface).
+
+The op-level simulator is deterministic: per-resource FIFO order is fixed by
+the schedule, an op starts at ``max(resource free, dependency finishes)``,
+and an unexecutable schedule (a FIFO/dependency cycle) raises instead of
+hanging.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import lru_cache
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+from ..cluster import INTRA_REGION_BANDWIDTH
+from ..job import PIPELINE_SCHEDULES, JobProfile
+from ..placement import Placement
+
+#: Default virtual-stage (chunk) count for the ``interleaved`` schedule.
+DEFAULT_VIRTUAL_STAGES = 2
+
+
+class PlanEvent(NamedTuple):
+    """One timeline slot: a compute op or a single-hop transfer."""
+
+    kind: str        # fwd | bwd | fwd_comm | bwd_comm | wrap_fwd | wrap_bwd
+    stage: int       # compute stage; boundary index for *_comm; -1 for wrap
+    microbatch: int
+    chunk: int       # virtual-stage chunk (0 outside `interleaved`)
+    hop: int         # serial hop index within the boundary (-1 for compute)
+    start: float
+    end: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineTopology:
+    """Schedule-independent description of one placed pipeline.
+
+    ``boundaries[s]`` is the ordered tuple of serial hop times between stage
+    ``s`` and ``s+1``.  ``egress`` is only populated for the degenerate
+    single-stage-with-hops case (``max_stages == 1`` but several GPUs): the
+    hops trail the stage so the tandem total still pays them, as Eq. (1)
+    does.
+    """
+
+    n_microbatches: int
+    stage_time_fwd: Tuple[float, ...]
+    stage_time_bwd: Tuple[float, ...]
+    boundaries: Tuple[Tuple[float, ...], ...]
+    stage_overhead: float = 0.0
+    egress: Tuple[float, ...] = ()
+
+    def __post_init__(self) -> None:
+        if self.n_microbatches < 1:
+            raise ValueError("need at least one microbatch")
+        if not self.stage_time_fwd:
+            raise ValueError("need at least one stage")
+        if len(self.stage_time_bwd) != len(self.stage_time_fwd):
+            raise ValueError("fwd/bwd stage-time length mismatch")
+        if len(self.boundaries) != max(0, len(self.stage_time_fwd) - 1):
+            raise ValueError("need exactly n_stages - 1 boundary groups")
+        if self.egress and len(self.stage_time_fwd) != 1:
+            raise ValueError("egress hops only model the single-stage case")
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stage_time_fwd)
+
+    @property
+    def all_hops(self) -> Tuple[float, ...]:
+        """Every serial hop time, boundary-major (the Eq. (1) fill multiset)."""
+        flat: List[float] = []
+        for group in self.boundaries:
+            flat.extend(group)
+        flat.extend(self.egress)
+        return tuple(flat)
+
+    @property
+    def bottleneck(self) -> float:
+        """Slowest slot (compute or single hop) — Eq. (1)'s Δ with symmetric
+        backward."""
+        slots = list(self.stage_time_fwd) + list(self.stage_time_bwd)
+        slots.extend(self.all_hops)
+        return max(slots)
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulePlan:
+    """Materialized timeline + the summary the scheduler consumes."""
+
+    schedule: str
+    n_stages: int
+    n_microbatches: int
+    iteration_time: float
+    #: Busy seconds per stage (compute only), forward + backward.
+    stage_busy: Tuple[float, ...]
+    #: Per-stage bubble fraction: 1 - busy / makespan.
+    stage_bubble: Tuple[float, ...]
+    #: Peak concurrently-stashed activations per stage, in units of one full
+    #: per-stage microbatch activation (interleaved chunks count 1/v each).
+    peak_activations_per_stage: Tuple[float, ...]
+    #: Lockstep schedules only: ticks per direction (gpipe-overlap), matching
+    #: the data plane's ``M + S - 1``.
+    n_ticks: Optional[int] = None
+    #: Materialized timeline (empty unless planned with keep_events=True).
+    events: Tuple[PlanEvent, ...] = ()
+    #: Dependency edges as (producer, consumer) indices into ``events``.
+    #: Lockstep plans (``gpipe-overlap``) have no explicit edges: the global
+    #: tick barrier is their entire dependency structure.
+    edges: Tuple[Tuple[int, int], ...] = ()
+
+    @property
+    def bubble_fraction(self) -> float:
+        """Aggregate bubble: idle fraction of all stage-seconds."""
+        total = self.n_stages * self.iteration_time
+        return 1.0 - sum(self.stage_busy) / total if total > 0.0 else 0.0
+
+    @property
+    def peak_activations(self) -> float:
+        return max(self.peak_activations_per_stage)
+
+    def summary(self) -> str:
+        return (
+            f"{self.schedule}: t_iter={self.iteration_time:.3f}s, "
+            f"bubble={self.bubble_fraction:.3f}, "
+            f"peak_acts={self.peak_activations:.1f}"
+        )
+
+
+# ---------------------------------------------------------------- op machine
+class _OpSim:
+    """Deterministic resource/dependency simulator.
+
+    Ops are appended in per-resource FIFO order (the *schedule*); deps may be
+    filled in later (``set_deps``) because cross-stage producers are built in
+    a different pass.  ``run`` computes start/finish in O(ops + edges): an op
+    executes once it is at the head of its resource queue and all its deps
+    have finished, starting at ``max(resource free, dep finishes)``.
+    """
+
+    def __init__(self) -> None:
+        self.dur: List[float] = []
+        self.deps: List[Tuple[int, ...]] = []
+        self.meta: List[Tuple[str, int, int, int, int]] = []
+        self._res: List[int] = []
+        self._res_ids: Dict[object, int] = {}
+        self._queues: List[List[int]] = []
+
+    def add(
+        self,
+        resource: object,
+        duration: float,
+        deps: Sequence[int],
+        meta: Tuple[str, int, int, int, int],
+    ) -> int:
+        rid = self._res_ids.get(resource)
+        if rid is None:
+            rid = len(self._queues)
+            self._res_ids[resource] = rid
+            self._queues.append([])
+        i = len(self.dur)
+        self.dur.append(duration)
+        self.deps.append(tuple(deps))
+        self.meta.append(meta)
+        self._res.append(rid)
+        self._queues[rid].append(i)
+        return i
+
+    def set_deps(self, op: int, deps: Sequence[int]) -> None:
+        self.deps[op] = tuple(deps)
+
+    def run(self) -> Tuple[List[float], List[float]]:
+        n = len(self.dur)
+        dur, deps, res_of = self.dur, self.deps, self._res
+        n_unmet = [len(d) for d in deps]
+        dependents: List[List[int]] = [[] for _ in range(n)]
+        for i, ds in enumerate(deps):
+            for d in ds:
+                dependents[d].append(i)
+        pos = [0] * n
+        for q in self._queues:
+            for idx, i in enumerate(q):
+                pos[i] = idx
+        head = [0] * len(self._queues)
+        res_free = [0.0] * len(self._queues)
+        start = [0.0] * n
+        finish = [0.0] * n
+        stack = [q[0] for q in self._queues if q and n_unmet[q[0]] == 0]
+        done = 0
+        while stack:
+            i = stack.pop()
+            r = res_of[i]
+            s = res_free[r]
+            for d in deps[i]:
+                f = finish[d]
+                if f > s:
+                    s = f
+            start[i] = s
+            f = s + dur[i]
+            finish[i] = f
+            res_free[r] = f
+            done += 1
+            head[r] += 1
+            q = self._queues[r]
+            if head[r] < len(q):
+                j = q[head[r]]
+                if n_unmet[j] == 0:
+                    stack.append(j)
+            for k in dependents[i]:
+                n_unmet[k] -= 1
+                if n_unmet[k] == 0 and pos[k] == head[res_of[k]]:
+                    stack.append(k)
+        if done != n:
+            raise RuntimeError(
+                f"unexecutable schedule: {n - done} of {n} ops deadlocked "
+                "(FIFO order inconsistent with dependencies)"
+            )
+        return start, finish
+
+
+# ----------------------------------------------------------- topology mapping
+def topology_from_placement(
+    profile: JobProfile, placement: Placement
+) -> PipelineTopology:
+    """Derive the planner topology from a concrete placement.
+
+    Per-GPU boundary hops are reconstructed in *stage order* from
+    ``Placement.stage_regions()`` (``Placement.comm_times`` is an unordered
+    multiset); the multisets are identical, which is what keeps the gpipe
+    plan on Eq. (1).  GPU slot ``i`` belongs to stage ``min(i, L-1)``, so a
+    tensor-parallel-widened placement folds its surplus hops into the last
+    boundary group.
+    """
+    g = placement.total_gpus
+    depth = profile.pipeline_depth(g)
+    t_comp = profile.t_comp(g)
+    act = profile.spec.model.activation_bytes
+    regions = placement.stage_regions()
+    intra_hop = act / INTRA_REGION_BANDWIDTH
+    hops: List[float] = []
+    for i in range(g - 1):
+        u, v = regions[i], regions[i + 1]
+        hops.append(
+            intra_hop if u == v else act / placement.reserved_bw[(u, v)]
+        )
+    if depth == 1:
+        boundaries: Tuple[Tuple[float, ...], ...] = ()
+        egress = tuple(hops)
+    else:
+        groups: List[List[float]] = [[] for _ in range(depth - 1)]
+        for i, h in enumerate(hops):
+            groups[min(i, depth - 2)].append(h)
+        boundaries = tuple(tuple(grp) for grp in groups)
+        egress = ()
+    stage_times = (t_comp,) * depth
+    return PipelineTopology(
+        n_microbatches=profile.spec.model.microbatches,
+        stage_time_fwd=stage_times,
+        stage_time_bwd=stage_times,  # Eq. (1)'s symmetric backward
+        boundaries=boundaries,
+        stage_overhead=profile.stage_overhead,
+        egress=egress,
+    )
+
+
+# ------------------------------------------------------------------ builders
+def _build_gpipe(sim: _OpSim, topo: PipelineTopology) -> None:
+    """Fill/steady/drain: all forwards (microbatch-ascending), then all
+    backwards (descending, so drain starts the instant the last forward
+    leaves the tail stage)."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    fwd_tail: Dict[int, int] = {}    # m -> loss-producing op (incl. egress)
+    arrive: Dict[int, int] = {}      # m -> last fwd hop into the next stage
+    for m in range(m_count):
+        for s in range(depth):
+            deps = [arrive[m]] if s > 0 else []
+            op = sim.add(("S", s), tf[s], deps, ("fwd", s, m, 0, -1))
+            if s < depth - 1:
+                prev = op
+                for h, hop in enumerate(topo.boundaries[s]):
+                    prev = sim.add(
+                        ("F", s, h), hop, [prev], ("fwd_comm", s, m, 0, h)
+                    )
+                arrive[m] = prev
+        op_tail = op
+        for h, hop in enumerate(topo.egress):
+            op_tail = sim.add(
+                ("F", 0, h), hop, [op_tail], ("fwd_comm", 0, m, 0, h)
+            )
+        fwd_tail[m] = op_tail
+    barrive: Dict[int, int] = {}
+    for m in reversed(range(m_count)):
+        op_in = fwd_tail[m]
+        for h in reversed(range(len(topo.egress))):
+            op_in = sim.add(
+                ("B", 0, h), topo.egress[h], [op_in], ("bwd_comm", 0, m, 0, h)
+            )
+        for s in reversed(range(depth)):
+            deps = [op_in] if s == depth - 1 else [barrive[m]]
+            op = sim.add(("S", s), tb[s], deps, ("bwd", s, m, 0, -1))
+            if s > 0:
+                prev = op
+                group = topo.boundaries[s - 1]
+                for h in reversed(range(len(group))):
+                    prev = sim.add(
+                        ("B", s - 1, h),
+                        group[h],
+                        [prev],
+                        ("bwd_comm", s - 1, m, 0, h),
+                    )
+                barrive[m] = prev
+
+
+def _build_1f1b(sim: _OpSim, topo: PipelineTopology) -> None:
+    """One-forward-one-backward with *latency-aware warmup*.
+
+    The textbook warmup of ``L-1-s`` forwards per stage assumes transfers
+    are free.  With strict 1F/1B alternation, a boundary whose warmup
+    *difference* is the classic 1 inflates the steady-state period by the
+    boundary's full communication round trip — even a fast intra-region hop
+    costs ``2·C_s`` per microbatch, and a WAN hop as slow as a compute slot
+    doubles the period (the CrossPipe observation).  The no-stall condition
+    is per boundary: ``w_s - w_{s+1} >= 1 + ceil(2·C_s / (t_f + t_b))``.
+    Warmups accumulate those differences tail-to-head, capped at ``M`` —
+    so the schedule degrades gracefully to the classic one as comm
+    vanishes, and stage by stage toward GPipe (whose phase-decoupled
+    fill/drain hides comm for free) as the comm debt grows."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    if depth == 1:
+        if topo.egress:
+            # Alternating f,b would stall every pair on the egress round
+            # trip; the phase-decoupled GPipe order hides it and costs the
+            # same M·(t_f+t_b) of stage time.
+            _build_gpipe(sim, topo)
+            return
+        # True single-stage 1F1B: f,b alternation, one activation in flight.
+        for m in range(m_count):
+            f = sim.add(("S", 0), tf[0], [], ("fwd", 0, m, 0, -1))
+            sim.add(("S", 0), tb[0], [f], ("bwd", 0, m, 0, -1))
+        return
+    need = [0] * depth  # warmup demand of stage s (before the M cap)
+    for s in reversed(range(depth - 1)):
+        roundtrip = 2.0 * sum(topo.boundaries[s])
+        need[s] = need[s + 1] + 1 + math.ceil(
+            roundtrip / (tf[s] + tb[s]) - 1e-12
+        )
+    fwd_id: Dict[Tuple[int, int], int] = {}
+    f_arrive: Dict[Tuple[int, int], int] = {}
+    b_arrive: Dict[Tuple[int, int], int] = {}
+    pending: List[Tuple[int, str, int, int]] = []  # (op, kind, m, s)
+    for s in range(depth):
+        warmup = min(m_count, need[s])
+        order: List[Tuple[str, int]] = [("f", m) for m in range(warmup)]
+        nf, nb = warmup, 0
+        while nf < m_count:
+            order.append(("f", nf))
+            nf += 1
+            order.append(("b", nb))
+            nb += 1
+        while nb < m_count:
+            order.append(("b", nb))
+            nb += 1
+        for kind, m in order:
+            if kind == "f":
+                op = sim.add(("S", s), tf[s], [], ("fwd", s, m, 0, -1))
+                fwd_id[(m, s)] = op
+                pending.append((op, "f", m, s))
+                if s < depth - 1:
+                    prev = op
+                    for h, hop in enumerate(topo.boundaries[s]):
+                        prev = sim.add(
+                            ("F", s, h), hop, [prev], ("fwd_comm", s, m, 0, h)
+                        )
+                    f_arrive[(m, s + 1)] = prev
+            else:
+                op = sim.add(("S", s), tb[s], [], ("bwd", s, m, 0, -1))
+                pending.append((op, "b", m, s))
+                if s > 0:
+                    prev = op
+                    group = topo.boundaries[s - 1]
+                    for h in reversed(range(len(group))):
+                        prev = sim.add(
+                            ("B", s - 1, h),
+                            group[h],
+                            [prev],
+                            ("bwd_comm", s - 1, m, 0, h),
+                        )
+                    b_arrive[(m, s - 1)] = prev
+    for op, kind, m, s in pending:
+        if kind == "f":
+            if s > 0:
+                sim.set_deps(op, [f_arrive[(m, s)]])
+        elif s == depth - 1:
+            sim.set_deps(op, [fwd_id[(m, s)]])
+        else:
+            sim.set_deps(op, [b_arrive[(m, s)]])
+
+
+def _chunk_times(
+    times: Sequence[float], overhead: float, v: int
+) -> List[float]:
+    """Split a stage time into ``v`` chunks; each chunk re-pays the fixed
+    per-stage overhead (more, smaller kernels)."""
+    out = []
+    for t in times:
+        out.append((t - overhead) / v + overhead if t > overhead else t / v)
+    return out
+
+
+def _build_interleaved(sim: _OpSim, topo: PipelineTopology, v: int) -> None:
+    """Virtual stages, GPipe-flavour fill-drain: each physical stage runs
+    ``v`` chunks, microbatches cycled in Megatron-style groups of ``L``.
+    Chunk wrap-around (tail stage chunk ``c`` -> head stage chunk ``c+1``)
+    traverses a dedicated store-and-forward return path over every hop."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    if depth == 1 or v <= 1:
+        _build_gpipe(sim, topo)
+        return
+    tfc = _chunk_times(topo.stage_time_fwd, topo.stage_overhead, v)
+    tbc = _chunk_times(topo.stage_time_bwd, topo.stage_overhead, v)
+    wrap_hops = topo.all_hops
+    groups = [
+        range(g0, min(g0 + depth, m_count))
+        for g0 in range(0, m_count, depth)
+    ]
+    fwd_id: Dict[Tuple[int, int, int], int] = {}
+    f_arrive: Dict[Tuple[int, int, int], int] = {}
+    wf_arrive: Dict[Tuple[int, int], int] = {}
+    b_arrive: Dict[Tuple[int, int, int], int] = {}
+    wb_arrive: Dict[Tuple[int, int], int] = {}
+    pending: List[Tuple[int, str, int, int, int]] = []
+    for s in range(depth):
+        for grp in groups:
+            for c in range(v):
+                for m in grp:
+                    op = sim.add(
+                        ("S", s), tfc[s], [], ("fwd", s, m, c, -1)
+                    )
+                    fwd_id[(m, c, s)] = op
+                    pending.append((op, "f", m, c, s))
+                    if s < depth - 1:
+                        prev = op
+                        for h, hop in enumerate(topo.boundaries[s]):
+                            prev = sim.add(
+                                ("F", s, h),
+                                hop,
+                                [prev],
+                                ("fwd_comm", s, m, c, h),
+                            )
+                        f_arrive[(m, c, s + 1)] = prev
+                    elif c < v - 1:
+                        prev = op
+                        for h in reversed(range(len(wrap_hops))):
+                            prev = sim.add(
+                                ("WF", h),
+                                wrap_hops[h],
+                                [prev],
+                                ("wrap_fwd", -1, m, c, h),
+                            )
+                        wf_arrive[(m, c + 1)] = prev
+    for s in range(depth):
+        for grp in reversed(groups):
+            for c in reversed(range(v)):
+                for m in reversed(grp):
+                    op = sim.add(
+                        ("S", s), tbc[s], [], ("bwd", s, m, c, -1)
+                    )
+                    pending.append((op, "b", m, c, s))
+                    if s > 0:
+                        prev = op
+                        group = topo.boundaries[s - 1]
+                        for h in reversed(range(len(group))):
+                            prev = sim.add(
+                                ("B", s - 1, h),
+                                group[h],
+                                [prev],
+                                ("bwd_comm", s - 1, m, c, h),
+                            )
+                        b_arrive[(m, c, s - 1)] = prev
+                    elif c > 0:
+                        prev = op
+                        for h in range(len(wrap_hops)):
+                            prev = sim.add(
+                                ("WB", h),
+                                wrap_hops[h],
+                                [prev],
+                                ("wrap_bwd", -1, m, c, h),
+                            )
+                        wb_arrive[(m, c - 1)] = prev
+    for op, kind, m, c, s in pending:
+        if kind == "f":
+            if s > 0:
+                sim.set_deps(op, [f_arrive[(m, c, s)]])
+            elif c > 0:
+                sim.set_deps(op, [wf_arrive[(m, c)]])
+        elif s == depth - 1:
+            if c == v - 1:
+                sim.set_deps(op, [fwd_id[(m, c, s)]])
+            else:
+                sim.set_deps(op, [wb_arrive[(m, c)]])
+        else:
+            sim.set_deps(op, [b_arrive[(m, c, s)]])
+
+
+# ----------------------------------------------------------------- summaries
+def _summarize(
+    sim: _OpSim,
+    start: List[float],
+    finish: List[float],
+    topo: PipelineTopology,
+    schedule: str,
+    v: int,
+    keep_events: bool,
+) -> SchedulePlan:
+    depth = topo.n_stages
+    makespan = max(finish)
+    busy = [0.0] * depth
+    acts: List[List[Tuple[float, float]]] = [[] for _ in range(depth)]
+    weight = 1.0 / v
+    for i, (kind, stage, _m, _c, _h) in enumerate(sim.meta):
+        if kind == "fwd":
+            busy[stage] += sim.dur[i]
+            acts[stage].append((finish[i], weight))
+        elif kind == "bwd":
+            busy[stage] += sim.dur[i]
+            acts[stage].append((finish[i], -weight))
+    peaks = []
+    for deltas in acts:
+        # Decrements first at equal timestamps: a stash freed at t makes room
+        # for one created at t.
+        deltas.sort(key=lambda e: (e[0], e[1]))
+        level = peak = 0.0
+        for _t, d in deltas:
+            level += d
+            if level > peak:
+                peak = level
+        peaks.append(peak)
+    events: Tuple[PlanEvent, ...] = ()
+    edges: Tuple[Tuple[int, int], ...] = ()
+    if keep_events:
+        events = tuple(
+            PlanEvent(*sim.meta[i], start=start[i], end=finish[i])
+            for i in range(len(sim.meta))
+        )
+        edges = tuple(
+            (d, i) for i, deps in enumerate(sim.deps) for d in deps
+        )
+    return SchedulePlan(
+        schedule=schedule,
+        n_stages=depth,
+        n_microbatches=topo.n_microbatches,
+        iteration_time=makespan,
+        stage_busy=tuple(busy),
+        stage_bubble=tuple(
+            1.0 - b / makespan if makespan > 0.0 else 0.0 for b in busy
+        ),
+        peak_activations_per_stage=tuple(peaks),
+        events=events,
+        edges=edges,
+    )
+
+
+def _plan_gpipe_overlap(
+    topo: PipelineTopology, keep_events: bool
+) -> SchedulePlan:
+    """Lockstep tick schedule (the jax data plane's by-construction behavior):
+    every stage advances once per tick, the boundary transfer of microbatch
+    ``i`` riding alongside the compute of ``i+1``, so the tick length is the
+    bottleneck slot Δ and each direction takes ``M + L - 1`` ticks.  In the
+    degenerate single-stage-with-hops case the trailing egress round trip is
+    not hidden by any tick and is charged on top.
+
+    The event timeline is a rendering of the lockstep model: hop chains are
+    store-and-forward serial, anchored to the tick whose compute emitted
+    them (a long chain may spill into later ticks), and there is no explicit
+    dependency graph — the tick barrier *is* the structure, so ``edges``
+    stays empty."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    delta = topo.bottleneck
+    n_ticks = m_count + depth - 1
+    egress_rt = 2.0 * sum(topo.egress)
+    makespan = 2.0 * n_ticks * delta + egress_rt
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    busy = tuple(m_count * (tf[s] + tb[s]) for s in range(depth))
+    events: List[PlanEvent] = []
+    if keep_events:
+        half = n_ticks * delta + egress_rt / 2.0
+
+        def emit(kind, boundary, m, hops, start):
+            cur = start
+            for h, hop in enumerate(hops):
+                events.append(
+                    PlanEvent(kind, boundary, m, 0, h, cur, cur + hop)
+                )
+                cur += hop
+
+        for tick in range(n_ticks):
+            for s in range(depth):
+                m = tick - s
+                if 0 <= m < m_count:
+                    t0 = tick * delta
+                    events.append(
+                        PlanEvent("fwd", s, m, 0, -1, t0, t0 + tf[s])
+                    )
+                    if s < depth - 1:
+                        emit("fwd_comm", s, m, topo.boundaries[s], t0 + tf[s])
+                    elif topo.egress:  # 1-stage degenerate case
+                        emit("fwd_comm", 0, m, topo.egress, t0 + tf[s])
+        for tick in range(n_ticks):
+            for s in range(depth):
+                mi = tick - (depth - 1 - s)
+                if 0 <= mi < m_count:
+                    m = m_count - 1 - mi
+                    t0 = half + tick * delta
+                    events.append(
+                        PlanEvent("bwd", s, m, 0, -1, t0, t0 + tb[s])
+                    )
+                    if s > 0:
+                        emit(
+                            "bwd_comm", s - 1, m,
+                            topo.boundaries[s - 1], t0 + tb[s],
+                        )
+                    elif topo.egress:
+                        # Ingress: the loss gradient arrives through the
+                        # trailing hops *before* this backward slot.
+                        emit(
+                            "bwd_comm", 0, m, topo.egress,
+                            t0 - sum(topo.egress),
+                        )
+    return SchedulePlan(
+        schedule="gpipe-overlap",
+        n_stages=depth,
+        n_microbatches=m_count,
+        iteration_time=makespan,
+        stage_busy=busy,
+        stage_bubble=tuple(
+            1.0 - b / makespan if makespan > 0.0 else 0.0 for b in busy
+        ),
+        peak_activations_per_stage=(float(m_count),) * depth,
+        n_ticks=n_ticks,
+        events=tuple(events),
+    )
+
+
+# ------------------------------------------------------------------ front end
+def plan_from_topology(
+    topo: PipelineTopology,
+    schedule: str,
+    *,
+    virtual_stages: int = DEFAULT_VIRTUAL_STAGES,
+    keep_events: bool = False,
+) -> SchedulePlan:
+    """Plan one iteration of ``schedule`` over an explicit topology."""
+    if schedule not in PIPELINE_SCHEDULES:
+        raise ValueError(
+            f"unknown schedule {schedule!r} (have: {PIPELINE_SCHEDULES})"
+        )
+    if virtual_stages < 1:
+        raise ValueError("virtual_stages must be >= 1")
+    if schedule == "gpipe-overlap":
+        return _plan_gpipe_overlap(topo, keep_events)
+    sim = _OpSim()
+    v = 1
+    if schedule == "gpipe":
+        _build_gpipe(sim, topo)
+    elif schedule == "1f1b":
+        _build_1f1b(sim, topo)
+    else:  # interleaved
+        v = virtual_stages if topo.n_stages > 1 else 1
+        _build_interleaved(sim, topo, v)
+    start, finish = sim.run()
+    return _summarize(sim, start, finish, topo, schedule, v, keep_events)
+
+
+@lru_cache(maxsize=256)
+def _plan_cached(
+    topo: PipelineTopology, schedule: str, virtual_stages: int
+) -> SchedulePlan:
+    return plan_from_topology(topo, schedule, virtual_stages=virtual_stages)
+
+
+def plan_schedule(
+    profile: JobProfile,
+    placement: Placement,
+    schedule: Optional[str] = None,
+    *,
+    virtual_stages: int = DEFAULT_VIRTUAL_STAGES,
+    keep_events: bool = False,
+) -> SchedulePlan:
+    """Plan one training iteration of ``profile`` under ``placement``.
+
+    ``schedule`` defaults to the job's ``JobSpec.pipeline_schedule``.  Plans
+    without event materialization are memoized on the (topology, schedule)
+    pair — the timing backend prices identical placements repeatedly.
+    """
+    if schedule is None:
+        schedule = profile.spec.pipeline_schedule
+    topo = topology_from_placement(profile, placement)
+    if keep_events:
+        return plan_from_topology(
+            topo, schedule, virtual_stages=virtual_stages, keep_events=True
+        )
+    return _plan_cached(topo, schedule, virtual_stages)

@@ -49,9 +49,13 @@ from .workloads import (
     random_fluctuation_trace,
 )
 
-#: A builder maps (seed, n_jobs, profile_kwargs) to the scenario's inputs.
+#: A builder maps (seed, n_jobs, profile_kwargs, job_kwargs) to the
+#: scenario's inputs.  ``job_kwargs`` reaches ``paper_jobs`` (per-``JobSpec``
+#: knobs — e.g. ``timing_model="microplan"``, ``pipeline_schedule="1f1b"``
+#: to price the whole scenario with the discrete schedule planner);
+#: ``profile_kwargs`` reaches ``JobProfile`` as before.
 _Builder = Callable[
-    [int, int, dict],
+    [int, int, dict, dict],
     Tuple[ClusterState, List[JobProfile], Optional[BandwidthTrace]],
 ]
 
@@ -82,9 +86,12 @@ class Scenario:
         seed: int = 0,
         n_jobs: Optional[int] = None,
         profile_kwargs: Optional[dict] = None,
+        job_kwargs: Optional[dict] = None,
     ) -> Tuple[ClusterState, List[JobProfile], Optional[BandwidthTrace]]:
         n = self.default_n_jobs if n_jobs is None else n_jobs
-        return self.builder(seed, n, dict(profile_kwargs or {}))
+        return self.builder(
+            seed, n, dict(profile_kwargs or {}), dict(job_kwargs or {})
+        )
 
     def run(
         self,
@@ -94,10 +101,14 @@ class Scenario:
         n_jobs: Optional[int] = None,
         engine: str = "vectorized",
         profile_kwargs: Optional[dict] = None,
+        job_kwargs: Optional[dict] = None,
         voluntary_migration_threshold: object = _UNSET,
     ) -> SimulationResult:
         cluster, profiles, trace = self.build(
-            seed=seed, n_jobs=n_jobs, profile_kwargs=profile_kwargs
+            seed=seed,
+            n_jobs=n_jobs,
+            profile_kwargs=profile_kwargs,
+            job_kwargs=job_kwargs,
         )
         threshold = (
             self.voluntary_migration_threshold
@@ -139,18 +150,18 @@ def scenario_names() -> List[str]:
 
 
 # ------------------------------------------------------------------ builders
-def _static_paper(seed: int, n_jobs: int, pk: dict):
+def _static_paper(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
-    profiles = paper_profiles(paper_jobs(n_jobs=n_jobs, seed=seed), **pk)
+    profiles = paper_profiles(paper_jobs(n_jobs=n_jobs, seed=seed, **jk), **pk)
     return cluster, profiles, None
 
 
-def _diurnal(seed: int, n_jobs: int, pk: dict):
+def _diurnal(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
     submits = poisson_submit_times(
         n_jobs, mean_interarrival_s=1800.0, seed=seed
     )
-    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits)
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits, **jk)
     trace = diurnal_trace(
         cluster,
         period_s=86_400.0,
@@ -161,9 +172,9 @@ def _diurnal(seed: int, n_jobs: int, pk: dict):
     return cluster, paper_profiles(jobs, **pk), trace
 
 
-def _link_flap(seed: int, n_jobs: int, pk: dict):
+def _link_flap(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
-    jobs = paper_jobs(n_jobs=n_jobs, seed=seed)
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, **jk)
     # The fattest WAN pair (Table II: us-east-2 <-> ea-east carries
     # (90+70)/2 Gbps) collapses to 5% half an hour in — mid-flight for every
     # multi-region pipeline that grabbed it at t=0 — and recovers at 4 h.
@@ -176,18 +187,18 @@ def _link_flap(seed: int, n_jobs: int, pk: dict):
     return cluster, paper_profiles(jobs, **pk), trace
 
 
-def _burst_arrival(seed: int, n_jobs: int, pk: dict):
+def _burst_arrival(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
     submits = bursty_submit_times(
         n_jobs, burst_size=4, burst_gap_s=14_400.0, seed=seed
     )
-    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits)
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits, **jk)
     return cluster, paper_profiles(jobs, **pk), None
 
 
-def _price_spike(seed: int, n_jobs: int, pk: dict):
+def _price_spike(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
-    jobs = paper_jobs(n_jobs=n_jobs, seed=seed)
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, **jk)
     # The two cheapest regions (where Cost-Min pours surplus GPUs) triple in
     # price from t=30 min to t=6 h; placements made during the spike shift.
     trace = price_spike_trace(
@@ -197,12 +208,12 @@ def _price_spike(seed: int, n_jobs: int, pk: dict):
     return cluster, paper_profiles(jobs, **pk), trace
 
 
-def _mixed_stress(seed: int, n_jobs: int, pk: dict):
+def _mixed_stress(seed: int, n_jobs: int, pk: dict, jk: dict):
     cluster = paper_cluster()
     submits = bursty_submit_times(
         n_jobs, burst_size=4, burst_gap_s=10_800.0, seed=seed
     )
-    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits)
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits, **jk)
     trace = random_fluctuation_trace(
         cluster,
         seed=seed + 1000,  # decoupled from the job stream, still seeded

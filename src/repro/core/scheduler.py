@@ -45,6 +45,14 @@ breakpoint a running job whose remaining-work cost on its current placement
 exceeds the best feasible live-priced alternative by more than the threshold
 checkpoints and re-queues (event kind ``"migrate"``; counted separately from
 forced ``"preempt"`` evictions).
+
+Timing backend: every completion projection, remaining-work estimate, and
+voluntary-migration probe prices placements through ``timing.iteration_time``
+— the ``TimingModel`` seam.  A job whose ``JobSpec.timing_model`` is
+``"microplan"`` is therefore scheduled against the discrete per-microbatch
+timeline of its ``pipeline_schedule`` (``core/microplan``) end to end, while
+the default ``analytic`` spec keeps the seed's closed-form Eq. (1) path
+bit-identical (golden-trace and engine-parity surface).
 """
 
 from __future__ import annotations

@@ -9,11 +9,20 @@
 GPipe fill-drain semantics (Fig. 3): the fill term pays every stage-boundary
 transfer once plus one compute slot per stage; steady state pays (M−1)
 bottleneck slots; the trailing ·2 is the symmetric backward pass.
+
+``iteration_time`` is a *seam*: the job's ``JobSpec.timing_model`` selects
+the backend that prices a placement.  ``analytic`` (the default) is the
+closed form above, bit-identical to the seed; ``microplan`` materializes the
+discrete per-microbatch timeline (``core/microplan``) for the schedule named
+by ``JobSpec.pipeline_schedule`` and returns its makespan.  Everything
+downstream of ``iteration_time`` — Eq. (2)–(4), the simulator's completion
+projections, the piecewise cost ledger — inherits the selected backend.
 """
 
 from __future__ import annotations
 
-from typing import Mapping
+import abc
+from typing import Dict, Mapping
 
 from .cluster import ClusterState
 from .job import JobProfile
@@ -27,7 +36,9 @@ def bottleneck_delta(profile: JobProfile, placement: Placement) -> float:
     return max(t_comp, t_comm_max)
 
 
-def iteration_time(profile: JobProfile, placement: Placement) -> float:
+def analytic_iteration_time(
+    profile: JobProfile, placement: Placement
+) -> float:
     """Eq. (1) under a concrete placement.  The fill term pays one compute
     slot per pipeline *stage* (GPUs beyond one-per-layer widen stages rather
     than deepening the pipeline)."""
@@ -37,6 +48,77 @@ def iteration_time(profile: JobProfile, placement: Placement) -> float:
     fill_comm = sum(placement.comm_times)
     delta = bottleneck_delta(profile, placement)
     return (fill_comm + profile.pipeline_depth(g) * t_comp + (m - 1) * delta) * 2.0
+
+
+# ------------------------------------------------------------ timing backends
+class TimingModel(abc.ABC):
+    """Pluggable backend pricing one iteration of a placed pipeline."""
+
+    name: str = "base"
+
+    @abc.abstractmethod
+    def iteration_time(
+        self, profile: JobProfile, placement: Placement
+    ) -> float:
+        ...
+
+
+class AnalyticTimingModel(TimingModel):
+    """The closed-form Eq. (1) backend (seed semantics, the default)."""
+
+    name = "analytic"
+
+    def iteration_time(self, profile, placement):
+        return analytic_iteration_time(profile, placement)
+
+
+class MicroplanTimingModel(TimingModel):
+    """Discrete microbatch-level planner backend: iteration time is the
+    makespan of the executable event timeline for the job's
+    ``pipeline_schedule`` (see ``core/microplan``)."""
+
+    name = "microplan"
+
+    def iteration_time(self, profile, placement):
+        from .microplan import plan_schedule
+
+        return plan_schedule(profile, placement).iteration_time
+
+
+TIMING_MODELS: Dict[str, TimingModel] = {
+    m.name: m for m in (AnalyticTimingModel(), MicroplanTimingModel())
+}
+
+# ``JobSpec`` validates against ``job.TIMING_MODELS`` (job.py cannot import
+# this module — timing builds on job); fail loudly at import if the two
+# sources of truth ever drift.
+from .job import TIMING_MODELS as _SPEC_TIMING_MODELS  # noqa: E402
+
+if set(TIMING_MODELS) != set(_SPEC_TIMING_MODELS):
+    raise ImportError(
+        "timing backend registry drifted from job.TIMING_MODELS: "
+        f"{sorted(TIMING_MODELS)} vs {sorted(_SPEC_TIMING_MODELS)}"
+    )
+
+
+def get_timing_model(name: str) -> TimingModel:
+    try:
+        return TIMING_MODELS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown timing model {name!r} "
+            f"(have: {', '.join(sorted(TIMING_MODELS))})"
+        ) from None
+
+
+def iteration_time(profile: JobProfile, placement: Placement) -> float:
+    """Iteration time under the job's selected timing backend.  The default
+    ``analytic`` spec takes the closed-form path directly (zero dispatch
+    overhead, bit-identical to the seed)."""
+    name = profile.spec.timing_model
+    if name == "analytic":
+        return analytic_iteration_time(profile, placement)
+    return get_timing_model(name).iteration_time(profile, placement)
 
 
 def execution_time(profile: JobProfile, placement: Placement) -> float:

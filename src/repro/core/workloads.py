@@ -80,9 +80,14 @@ def paper_jobs(
     n_jobs: int = 8,
     seed: int = 0,
     submit_times: Optional[Sequence[float]] = None,
+    timing_model: str = "analytic",
+    pipeline_schedule: str = "gpipe",
 ) -> List[JobSpec]:
     """Table III jobs with the paper's random dataset assignment.  For
-    ``n_jobs > 8`` (Fig. 7 workload-intensity study) the model list cycles."""
+    ``n_jobs > 8`` (Fig. 7 workload-intensity study) the model list cycles.
+    ``timing_model`` / ``pipeline_schedule`` select the per-job timing
+    backend (``core/timing.py`` seam); the defaults are the seed's
+    closed-form Eq. (1)."""
     rng = random.Random(seed)
     jobs: List[JobSpec] = []
     datasets = list(DATASETS.items())
@@ -105,6 +110,8 @@ def paper_jobs(
                 model=spec,
                 iterations=iters,
                 submit_time=0.0 if submit_times is None else submit_times[i],
+                timing_model=timing_model,
+                pipeline_schedule=pipeline_schedule,
             )
         )
     return jobs

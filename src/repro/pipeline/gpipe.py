@@ -55,6 +55,15 @@ def _shift_perm(n: int):
     return [(i, i + 1) for i in range(n - 1)]
 
 
+def schedule_ticks(n_microbatches: int, n_stages: int) -> int:
+    """Tick count of the lockstep GPipe schedule this data plane executes:
+    fill + steady = ``M + S - 1`` scan steps per direction.  The control
+    plane's microplan ``gpipe-overlap`` plan must report the same count —
+    ``tests/test_microplan_parity.py`` pins the two together so the
+    schedule the scheduler prices can't drift from the one XLA runs."""
+    return n_microbatches + n_stages - 1
+
+
 def stack_pipeline_params(blocks: Any, n_stages: int) -> Any:
     """[L, ...]-stacked block params -> [S, L/S, ...] stage-major stacking."""
     def reshape(x):
@@ -82,7 +91,7 @@ def pipeline_forward(
     names = _axis_tuple(axis)
     stage = linear_stage_index(axis)
     perm = _shift_perm(n_stages)
-    n_ticks = m + n_stages - 1
+    n_ticks = schedule_ticks(m, n_stages)
 
     params_local = jax.tree.map(lambda x: x[0], stage_params)
 
@@ -125,7 +134,7 @@ def pipeline_decode(
     names = _axis_tuple(axis)
     stage = linear_stage_index(axis)
     perm = _shift_perm(n_stages)
-    n_ticks = m + n_stages - 1
+    n_ticks = schedule_ticks(m, n_stages)
     params_local = jax.tree.map(lambda x: x[0], stage_params)
     caches_local = jax.tree.map(lambda x: x[0], caches)
 

@@ -1,0 +1,378 @@
+"""Microplan subsystem tests: planner semantics, analytic agreement, the
+TimingModel seam, and the JobSpec/ModelSpec validation satellites.
+
+The analytic↔microplan agreement suite runs fixed cases always and widens
+into a randomized sweep when hypothesis is installed (dev extra), mirroring
+the repo's other property tests.
+"""
+
+import math
+
+import pytest
+
+from repro.core import (
+    PIPELINE_SCHEDULES,
+    BACEPipePolicy,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    PipelineTopology,
+    plan_from_topology,
+    plan_schedule,
+    simulate,
+    topology_from_placement,
+)
+from repro.core.scenarios import SCENARIOS
+from repro.core.timing import (
+    analytic_iteration_time,
+    get_timing_model,
+    iteration_time,
+)
+
+REL = 1e-9
+
+
+def eq1(topo: PipelineTopology) -> float:
+    """Closed-form Eq. (1) recomputed from a raw topology."""
+    fill_comm = sum(topo.all_hops)
+    t = topo.stage_time_fwd[0]
+    m = topo.n_microbatches
+    return (fill_comm + topo.n_stages * t + (m - 1) * topo.bottleneck) * 2.0
+
+
+def uniform_topo(m, stages, t, hops=(), egress=()):
+    return PipelineTopology(
+        n_microbatches=m,
+        stage_time_fwd=(t,) * stages,
+        stage_time_bwd=(t,) * stages,
+        boundaries=tuple(tuple(h) for h in hops),
+        egress=tuple(egress),
+    )
+
+
+# ------------------------------------------------------------ fixed topologies
+def test_gpipe_no_comm_matches_closed_form():
+    topo = uniform_topo(8, 4, 0.5, hops=[(), (), ()])
+    plan = plan_from_topology(topo, "gpipe")
+    expect = (4 * 0.5 + 7 * 0.5) * 2.0
+    assert math.isclose(plan.iteration_time, expect, rel_tol=REL)
+    assert plan.peak_activations == 8.0
+
+
+def test_gpipe_with_hops_matches_eq1():
+    topo = uniform_topo(6, 3, 0.4, hops=[(0.1, 0.05), (0.4,)])
+    plan = plan_from_topology(topo, "gpipe")
+    assert math.isclose(plan.iteration_time, eq1(topo), rel_tol=REL)
+
+
+def test_gpipe_comm_bound_delta():
+    # A hop slower than compute dominates the steady state.
+    topo = uniform_topo(5, 2, 0.2, hops=[(0.7,)])
+    plan = plan_from_topology(topo, "gpipe")
+    assert math.isclose(plan.iteration_time, eq1(topo), rel_tol=REL)
+    assert topo.bottleneck == 0.7
+
+
+def test_single_stage_gpipe():
+    topo = uniform_topo(4, 1, 0.3)
+    plan = plan_from_topology(topo, "gpipe")
+    assert math.isclose(plan.iteration_time, 2 * 4 * 0.3, rel_tol=REL)
+
+
+def test_single_stage_with_egress_hops_matches_eq1():
+    # Degenerate 1-layer model spread over several GPUs: the trailing hops
+    # are still paid, exactly as Eq. (1)'s fill term pays them.
+    topo = uniform_topo(4, 1, 0.3, egress=(0.1, 0.1))
+    plan = plan_from_topology(topo, "gpipe")
+    assert math.isclose(plan.iteration_time, eq1(topo), rel_tol=REL)
+
+
+def test_single_stage_1f1b_alternates():
+    # One stage, no hops: true 1F1B alternation — one activation in flight,
+    # same total stage time as GPipe.
+    topo = uniform_topo(4, 1, 0.3)
+    ofb = plan_from_topology(topo, "1f1b")
+    gp = plan_from_topology(topo, "gpipe")
+    assert math.isclose(ofb.iteration_time, gp.iteration_time, rel_tol=REL)
+    assert ofb.peak_activations == 1.0
+    # With egress hops, alternation would stall on the round trip per pair;
+    # the planner falls back to the phase-decoupled GPipe order.
+    hop_topo = uniform_topo(4, 1, 0.3, egress=(0.1,))
+    ofb2 = plan_from_topology(hop_topo, "1f1b")
+    gp2 = plan_from_topology(hop_topo, "gpipe")
+    assert ofb2.iteration_time <= gp2.iteration_time * (1 + REL)
+
+
+def test_single_stage_overlap_egress_events_within_makespan():
+    topo = uniform_topo(4, 1, 0.3, egress=(0.1, 0.1))
+    plan = plan_from_topology(topo, "gpipe-overlap", keep_events=True)
+    # The trailing round trip is not hidden by any lockstep tick.
+    assert math.isclose(
+        plan.iteration_time, 2 * 4 * 0.3 + 2 * 0.2, rel_tol=REL
+    )
+    assert {e.kind for e in plan.events} == {
+        "fwd", "bwd", "fwd_comm", "bwd_comm",
+    }
+    for e in plan.events:
+        assert -1e-12 <= e.start <= e.end <= plan.iteration_time + 1e-12
+    # Hop chains are serial, not simultaneous.
+    fwd_hops = [
+        e for e in plan.events if e.kind == "fwd_comm" and e.microbatch == 0
+    ]
+    assert fwd_hops[0].end <= fwd_hops[1].start + 1e-12
+
+
+def test_1f1b_no_comm_equals_gpipe_time_with_smaller_stash():
+    topo = uniform_topo(16, 4, 0.5, hops=[(), (), ()])
+    gp = plan_from_topology(topo, "gpipe")
+    ofb = plan_from_topology(topo, "1f1b")
+    assert math.isclose(ofb.iteration_time, gp.iteration_time, rel_tol=REL)
+    # Classic 1F1B stash: ~L-s in flight, not M.
+    assert ofb.peak_activations <= 4.0
+    assert gp.peak_activations == 16.0
+
+
+def test_1f1b_never_slower_than_gpipe_with_wan_hop():
+    topo = uniform_topo(12, 4, 0.5, hops=[(0.01,), (0.5,), (0.01,)])
+    gp = plan_from_topology(topo, "gpipe")
+    ofb = plan_from_topology(topo, "1f1b")
+    assert ofb.iteration_time <= gp.iteration_time * (1 + REL)
+    assert ofb.peak_activations <= gp.peak_activations
+
+
+def test_gpipe_overlap_ticks_and_time():
+    topo = uniform_topo(6, 3, 0.4, hops=[(0.1,), (0.2,)])
+    plan = plan_from_topology(topo, "gpipe-overlap")
+    assert plan.n_ticks == 6 + 3 - 1
+    assert math.isclose(
+        plan.iteration_time, 2 * plan.n_ticks * 0.4, rel_tol=REL
+    )
+
+
+def test_interleaved_reduces_to_gpipe_when_unchunked():
+    topo = uniform_topo(8, 3, 0.4, hops=[(0.01,), (0.01,)])
+    il1 = plan_from_topology(topo, "interleaved", virtual_stages=1)
+    gp = plan_from_topology(topo, "gpipe")
+    assert math.isclose(il1.iteration_time, gp.iteration_time, rel_tol=REL)
+
+
+def test_interleaved_pays_wrap_transfers():
+    # With a fat WAN hop, the v-1 extra wrap round trips make interleaving a
+    # net loss — the cross-DC observation the ablation benchmark surfaces.
+    wan = uniform_topo(8, 3, 0.4, hops=[(0.01,), (0.4,)])
+    il = plan_from_topology(wan, "interleaved", virtual_stages=2)
+    gp = plan_from_topology(wan, "gpipe")
+    assert il.iteration_time > gp.iteration_time
+
+
+def test_planner_rejects_bad_inputs():
+    with pytest.raises(ValueError):
+        plan_from_topology(uniform_topo(4, 2, 0.1, hops=[()]), "nope")
+    with pytest.raises(ValueError):
+        uniform_topo(0, 2, 0.1, hops=[()])
+    with pytest.raises(ValueError):
+        PipelineTopology(
+            n_microbatches=2,
+            stage_time_fwd=(0.1, 0.1),
+            stage_time_bwd=(0.1, 0.1),
+            boundaries=(),  # needs exactly one boundary group
+        )
+
+
+def test_plan_events_materialization():
+    topo = uniform_topo(3, 2, 0.5, hops=[(0.1,)])
+    plan = plan_from_topology(topo, "gpipe", keep_events=True)
+    assert plan.events and plan.edges
+    kinds = {e.kind for e in plan.events}
+    assert kinds == {"fwd", "bwd", "fwd_comm", "bwd_comm"}
+    # 3 fwd + 3 bwd per stage, 3 transfers per direction on the boundary.
+    assert len(plan.events) == 2 * (3 * 2) + 2 * 3
+    for prod, cons in plan.edges:
+        assert plan.events[cons].start >= plan.events[prod].end - 1e-12
+    # Events cover the makespan.
+    assert math.isclose(
+        max(e.end for e in plan.events), plan.iteration_time, rel_tol=REL
+    )
+    # Without keep_events the timeline is not materialized.
+    assert plan_from_topology(topo, "gpipe").events == ()
+
+
+def test_overlap_events_cover_both_directions():
+    topo = uniform_topo(3, 2, 0.5, hops=[(0.1,)])
+    plan = plan_from_topology(topo, "gpipe-overlap", keep_events=True)
+    kinds = {e.kind for e in plan.events}
+    assert kinds == {"fwd", "bwd", "fwd_comm", "bwd_comm"}
+    # Same slot counts as the op-simulated gpipe timeline; lockstep plans
+    # carry no explicit dependency edges (the tick barrier is the structure).
+    assert len(plan.events) == 2 * (3 * 2) + 2 * 3
+    assert plan.edges == ()
+    for e in plan.events:
+        assert 0.0 <= e.start <= e.end
+
+
+# ----------------------------------------------- static-paper placement sweep
+@pytest.fixture(scope="module")
+def static_placements():
+    scen = SCENARIOS["static-paper"]
+    cluster, profiles, _ = scen.build(seed=0)
+    res = simulate(cluster, profiles, BACEPipePolicy())
+    profs = {p.spec.job_id: p for p in profiles}
+    return [(profs[r.job_id], r.placement) for r in res.completed_records]
+
+
+def test_topology_hop_multiset_matches_placement(static_placements):
+    for prof, placement in static_placements:
+        topo = topology_from_placement(prof, placement)
+        assert sorted(topo.all_hops) == pytest.approx(
+            sorted(placement.comm_times)
+        )
+        assert topo.n_stages == prof.pipeline_depth(placement.total_gpus)
+
+
+def test_gpipe_plan_reproduces_eq1_on_all_static_placements(
+    static_placements,
+):
+    for prof, placement in static_placements:
+        plan = plan_schedule(prof, placement, "gpipe")
+        expect = analytic_iteration_time(prof, placement)
+        assert math.isclose(plan.iteration_time, expect, rel_tol=REL), (
+            prof.spec.job_id
+        )
+
+
+def test_schedule_orderings_on_all_static_placements(static_placements):
+    for prof, placement in static_placements:
+        gp = plan_schedule(prof, placement, "gpipe")
+        ofb = plan_schedule(prof, placement, "1f1b")
+        ov = plan_schedule(prof, placement, "gpipe-overlap")
+        assert ofb.iteration_time <= gp.iteration_time * (1 + REL)
+        assert ov.iteration_time <= gp.iteration_time * (1 + REL)
+        assert ofb.peak_activations <= gp.peak_activations
+
+
+def test_all_schedules_plan_on_all_static_placements(static_placements):
+    for prof, placement in static_placements:
+        for schedule in PIPELINE_SCHEDULES:
+            plan = plan_schedule(prof, placement, schedule)
+            assert plan.iteration_time > 0.0
+            assert 0.0 <= plan.bubble_fraction < 1.0
+            assert len(plan.stage_bubble) == plan.n_stages
+
+
+# ------------------------------------------------------------ timing backends
+def _tiny_spec(**kw):
+    return JobSpec(
+        0, ModelSpec("m", 2e9, 8, 1024, batch_size=8), iterations=5, **kw
+    )
+
+
+def test_timing_seam_analytic_default_is_closed_form(static_placements):
+    prof, placement = static_placements[0]
+    assert prof.spec.timing_model == "analytic"
+    assert iteration_time(prof, placement) == analytic_iteration_time(
+        prof, placement
+    )
+
+
+def test_timing_seam_microplan_backend(static_placements):
+    import dataclasses
+
+    prof, placement = static_placements[0]
+    for schedule in ("gpipe", "1f1b"):
+        spec = dataclasses.replace(
+            prof.spec, timing_model="microplan", pipeline_schedule=schedule
+        )
+        mp = JobProfile(spec, gpu_flops=prof.gpu_flops)
+        expect = plan_schedule(mp, placement, schedule).iteration_time
+        assert iteration_time(mp, placement) == expect
+
+
+def test_get_timing_model_unknown_raises():
+    with pytest.raises(KeyError):
+        get_timing_model("nope")
+
+
+def test_microplan_simulation_matches_analytic():
+    """End-to-end seam check: the whole static-paper simulation under the
+    microplan/gpipe backend lands on the analytic schedule (Eq. (1)
+    agreement), and 1f1b never does worse."""
+    scen = SCENARIOS["static-paper"]
+    base = scen.run(BACEPipePolicy(), seed=0, n_jobs=4)
+    gp = scen.run(
+        BACEPipePolicy(),
+        seed=0,
+        n_jobs=4,
+        job_kwargs={"timing_model": "microplan", "pipeline_schedule": "gpipe"},
+    )
+    assert math.isclose(gp.average_jct, base.average_jct, rel_tol=REL)
+    assert math.isclose(gp.makespan, base.makespan, rel_tol=REL)
+    ofb = scen.run(
+        BACEPipePolicy(),
+        seed=0,
+        n_jobs=4,
+        job_kwargs={"timing_model": "microplan", "pipeline_schedule": "1f1b"},
+    )
+    assert ofb.average_jct <= base.average_jct * (1 + REL)
+
+
+def test_jobspec_rejects_unknown_backend_and_schedule():
+    with pytest.raises(ValueError):
+        _tiny_spec(timing_model="nope")
+    with pytest.raises(ValueError):
+        _tiny_spec(pipeline_schedule="nope")
+    spec = _tiny_spec(timing_model="microplan", pipeline_schedule="1f1b")
+    assert spec.pipeline_schedule == "1f1b"
+
+
+# ------------------------------------------- ModelSpec microbatch validation
+def test_microbatch_divisibility_validated():
+    with pytest.raises(ValueError, match="not divisible"):
+        ModelSpec("m", 2e9, 8, 1024, batch_size=10, microbatch_seqs=3)
+    with pytest.raises(ValueError):
+        ModelSpec("m", 2e9, 8, 1024, batch_size=0)
+    with pytest.raises(ValueError):
+        ModelSpec("m", 2e9, 8, 1024, batch_size=8, microbatch_seqs=0)
+
+
+def test_microbatch_count_exact_when_divisible():
+    spec = ModelSpec("m", 2e9, 8, 1024, batch_size=12, microbatch_seqs=3)
+    assert spec.microbatches == 4
+    assert ModelSpec("m", 2e9, 8, 1024, batch_size=1).microbatches == 1
+
+
+# --------------------------------------------------- hypothesis widening
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=24),
+        stages=st.integers(min_value=1, max_value=8),
+        t=st.floats(min_value=1e-3, max_value=1.0),
+        hop_scale=st.floats(min_value=0.0, max_value=2.0),
+        data=st.data(),
+    )
+    def test_hypothesis_gpipe_matches_eq1_and_orderings(
+        m, stages, t, hop_scale, data
+    ):
+        hops = tuple(
+            tuple(
+                data.draw(
+                    st.floats(min_value=0.0, max_value=max(hop_scale * t, 1e-9))
+                )
+                for _ in range(data.draw(st.integers(1, 3)))
+            )
+            for _ in range(stages - 1)
+        )
+        topo = uniform_topo(m, stages, t, hops=hops)
+        gp = plan_from_topology(topo, "gpipe")
+        assert math.isclose(gp.iteration_time, eq1(topo), rel_tol=1e-9)
+        ofb = plan_from_topology(topo, "1f1b")
+        assert ofb.iteration_time <= gp.iteration_time * (1 + 1e-9)
+        assert ofb.peak_activations <= gp.peak_activations
+        il = plan_from_topology(topo, "interleaved")
+        assert il.iteration_time > 0.0
+
+except ImportError:  # hypothesis is a dev extra; fixed cases always run
+    pass

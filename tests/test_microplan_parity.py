@@ -1,0 +1,55 @@
+"""Control-plane ↔ data-plane schedule parity.
+
+The jax data plane (``repro.pipeline.gpipe``) executes a lockstep GPipe
+schedule of ``M + S - 1`` scan ticks per direction by construction; the
+control plane's microplan ``gpipe-overlap`` plan models exactly that
+schedule.  These tests pin the two tick counts together — through the
+shared ``schedule_ticks`` helper the data plane actually calls — so the
+schedule the scheduler prices cannot drift from the one XLA runs.
+"""
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    plan_from_topology,
+    plan_schedule,
+    simulate,
+)
+from repro.core.scenarios import SCENARIOS
+from tests.test_microplan import uniform_topo
+
+gpipe_data_plane = pytest.importorskip(
+    "repro.pipeline.gpipe", reason="jax data plane unavailable"
+)
+
+
+def test_schedule_ticks_formula():
+    assert gpipe_data_plane.schedule_ticks(8, 4) == 11
+    assert gpipe_data_plane.schedule_ticks(1, 1) == 1
+
+
+@pytest.mark.parametrize("m,stages", [(1, 1), (4, 2), (8, 4), (16, 3)])
+def test_overlap_plan_ticks_match_data_plane(m, stages):
+    topo = uniform_topo(m, stages, 0.25, hops=[(0.1,)] * (stages - 1))
+    plan = plan_from_topology(topo, "gpipe-overlap")
+    assert plan.n_ticks == gpipe_data_plane.schedule_ticks(m, stages)
+
+
+def test_overlap_plan_ticks_match_data_plane_on_static_placements():
+    """Every placement the static-paper scenario produces: the microplan
+    gpipe-overlap tick count equals the n_ticks the data plane would scan
+    for that (microbatch count, pipeline depth)."""
+    scen = SCENARIOS["static-paper"]
+    cluster, profiles, _ = scen.build(seed=0)
+    res = simulate(cluster, profiles, BACEPipePolicy())
+    profs = {p.spec.job_id: p for p in profiles}
+    for rec in res.completed_records:
+        prof = profs[rec.job_id]
+        plan = plan_schedule(prof, rec.placement, "gpipe-overlap")
+        m = prof.spec.model.microbatches
+        depth = prof.pipeline_depth(rec.placement.total_gpus)
+        assert plan.n_ticks == gpipe_data_plane.schedule_ticks(m, depth)
+        # Other microplan schedules report no tick count: they are not
+        # lockstep, so claiming data-plane parity for them would be wrong.
+        assert plan_schedule(prof, rec.placement, "gpipe").n_ticks is None
