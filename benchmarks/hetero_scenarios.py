@@ -1,0 +1,208 @@
+"""Heterogeneous-fleet + spot-capacity scenario sweep.
+
+Runs the typed-pool scenarios (``hetero-fleet``, ``spot-churn`` — the ones
+``benchmarks/dynamic_scenarios.py`` deliberately skips) across all five
+policies and emits the usual ``name,us_per_call,derived`` CSV rows.  Every
+cell asserts:
+
+* determinism — the same seed twice yields byte-identical
+  ``SimulationResult``\\ s (the contract the golden traces pin elsewhere);
+* the piecewise-accounting invariants (segment costs non-negative and
+  partitioning the per-job totals);
+* the typed-grant invariants — every placement on a typed cluster carries a
+  ``typed_alloc`` that partitions its per-region counts, and forced
+  spot-reclaim evictions never appear on the reclaim-free scenario.
+
+Two headline acceptance gates run at the registry's default seed (the
+surface the scenarios were tuned for; other seeds just report):
+
+* **spot beats on-demand**: BACE-Pipe on the spot fleet — reclaim churn,
+  restart penalties and all — lands strictly cheaper than the same job set
+  on the all-on-demand Table II cluster;
+* **hetero-fleet JCT**: BACE-Pipe's average JCT is the minimum across all
+  policies (typed-aware Pathfinder + Cost-Min earn their keep when the
+  fleet mixes generations).
+
+``--out FILE`` writes the per-cell metrics as JSON; the checked-in
+``BENCH_hetero.json`` (generated with ``--smoke --out``) is the baseline
+``scripts/bench_compare.py --metrics`` gates against in CI — the metrics
+are deterministic, so any drift is a semantic regression, not noise.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.hetero_scenarios [--smoke]
+                                                         [--seed N]
+                                                         [--out FILE]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core import BACEPipePolicy, SCENARIOS, SimulationResult, simulate
+from repro.core.workloads import paper_cluster
+
+from .common import BENCH_GPU_FLOPS, POLICY_FACTORIES
+from .dynamic_scenarios import assert_cost_invariants
+
+#: Smoke-mode job count (CI-sized, ~seconds).
+SMOKE_N_JOBS = 6
+
+
+def assert_typed_invariants(
+    res: SimulationResult, cell: str, *, expect_spot_evictions: bool
+) -> None:
+    """Typed-grant invariants every heterogeneous simulation must satisfy."""
+    for rec in res.records:
+        typed = rec.placement.typed_alloc
+        if not typed:
+            raise AssertionError(
+                f"untyped placement on a typed cluster in {cell}: "
+                f"{rec.placement.describe()}"
+            )
+        for region, n in rec.placement.alloc.items():
+            if sum(typed.get(region, {}).values()) != n:
+                raise AssertionError(
+                    f"typed grant does not partition alloc[{region}] "
+                    f"in {cell}"
+                )
+    if not expect_spot_evictions and res.forced_migrations:
+        raise AssertionError(
+            f"forced evictions on a reclaim-free scenario in {cell}: "
+            f"{res.forced_migrations}"
+        )
+
+
+def run(
+    *, smoke: bool = False, seed: int = 0, out: Optional[str] = None
+) -> List[str]:
+    rows: List[str] = []
+    cells: List[Dict] = []
+    pk = {"gpu_flops": BENCH_GPU_FLOPS}
+    n_jobs = SMOKE_N_JOBS if smoke else None
+    results: Dict[Tuple[str, str], SimulationResult] = {}
+    for scen_name, scenario in SCENARIOS.items():
+        if not scenario.hetero:
+            continue
+        for pol_name, factory in POLICY_FACTORIES.items():
+            t0 = time.perf_counter()
+            res = scenario.run(
+                factory(), seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+            )
+            lap = time.perf_counter() - t0
+            rerun = scenario.run(
+                factory(), seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+            )
+            if res.to_jsonable() != rerun.to_jsonable():
+                raise AssertionError(
+                    f"non-deterministic result: {scen_name}/{pol_name} "
+                    f"(seed={seed})"
+                )
+            cell = f"{scen_name}/{pol_name}"
+            assert_cost_invariants(res, cell)
+            assert_typed_invariants(
+                res, cell, expect_spot_evictions=scenario.dynamic
+            )
+            results[(scen_name, pol_name)] = res
+            rows.append(
+                f"hetero/{cell},{1e6 * lap:.1f},"
+                f"jct_h={res.average_jct / 3600:.3f};"
+                f"cost=${res.total_cost:.2f};"
+                f"migrations={res.total_migrations};"
+                f"stall_h={res.total_stall_seconds / 3600:.3f}"
+            )
+            cells.append(
+                {
+                    "name": cell,
+                    "us_per_call": 1e6 * lap,
+                    "jct_s": res.average_jct,
+                    "cost": res.total_cost,
+                    "migrations": res.total_migrations,
+                }
+            )
+
+    # ---- acceptance gate 1: spot pricing beats the on-demand-only fleet.
+    # Same jobs, same Table II capacities/links — one fleet carries 40%
+    # discounted-but-reclaimable spot capacity (churn included), the other
+    # is all on-demand and churn-free.
+    spot_scen = SCENARIOS["spot-churn"]
+    cluster, profiles, trace = spot_scen.build(
+        seed=seed, n_jobs=n_jobs, profile_kwargs=pk
+    )
+    on = simulate(
+        cluster,
+        profiles,
+        BACEPipePolicy(),
+        trace=trace,
+        restart_penalty_s=spot_scen.restart_penalty_s,
+    )
+    off = simulate(paper_cluster(), profiles, BACEPipePolicy())
+    if seed == 0 and not on.total_cost < off.total_cost:
+        raise AssertionError(
+            "BACE-Pipe on the spot fleet did not beat on-demand-only at "
+            f"the default seed: ${on.total_cost:.2f} vs ${off.total_cost:.2f}"
+        )
+    rows.append(
+        f"# spot-churn: spot fleet ${on.total_cost:.2f} "
+        f"({on.total_migrations} reclaim evictions) vs on-demand-only "
+        f"${off.total_cost:.2f}"
+    )
+    cells.append(
+        {
+            "name": "spot-churn/on-demand-counterfactual",
+            "us_per_call": 0.0,
+            "jct_s": off.average_jct,
+            "cost": off.total_cost,
+            "migrations": off.total_migrations,
+        }
+    )
+
+    # ---- acceptance gate 2: on the mixed-generation fleet BACE-Pipe's
+    # typed-aware Pathfinder + Cost-Min deliver the best average JCT.
+    jcts = {
+        pol: results[("hetero-fleet", pol)].average_jct
+        for pol in POLICY_FACTORIES
+    }
+    best = min(jcts, key=jcts.get)
+    if seed == 0 and best != "bace-pipe":
+        raise AssertionError(
+            f"BACE-Pipe lost the hetero-fleet JCT race to {best}: {jcts}"
+        )
+    rows.append(
+        "# hetero-fleet: avg JCT "
+        + ", ".join(f"{p}={t / 3600:.3f}h" for p, t in jcts.items())
+    )
+
+    if out is not None:
+        payload = {
+            "benchmark": "hetero_scenarios",
+            "smoke": smoke,
+            "seed": seed,
+            "cells": cells,
+        }
+        with open(out, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        rows.append(f"# wrote {len(cells)} cells to {out}")
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--out",
+        default=None,
+        help="write per-cell metrics JSON (bench_compare --metrics input)",
+    )
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    for row in run(smoke=args.smoke, seed=args.seed, out=args.out):
+        print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -17,6 +17,7 @@ def main() -> None:
     from . import (
         ablation,
         dynamic_scenarios,
+        hetero_scenarios,
         main_results,
         motivation,
         schedule_ablation,
@@ -44,6 +45,11 @@ def main() -> None:
         # smoke via the driver; the full sweep (python -m
         # benchmarks.schedule_ablation) (re)writes BENCH_schedules.json.
         "schedule_ablation": lambda: schedule_ablation.run(smoke=True),
+        # Typed GPU pools: mixed accelerator generations + spot reclaim
+        # churn (the scenarios dynamic_scenarios skips).  The --smoke --out
+        # invocation is what (re)writes the BENCH_hetero.json metrics
+        # baseline CI gates on — the driver must not clobber it.
+        "hetero_scenarios": lambda: hetero_scenarios.run(smoke=True),
     }
     try:
         from . import roofline

@@ -17,6 +17,12 @@ absolute timings.  Speedup is machine-portable, so this is the mode for CI,
 where NEW comes from a shared runner while the checked-in baseline was
 measured elsewhere: the gate fails only when NEW's speedup falls more than
 ``threshold`` below OLD's on a matched cell.
+
+``--metrics`` compares *named* cells (payloads whose cells carry a ``name``
+key, e.g. ``BENCH_hetero.json``) on their simulation metrics (``jct_s``,
+``cost``, ``migrations``) instead of timings.  The metrics are fully
+deterministic, so the gate is a tight relative tolerance (``--metric-tol``,
+default 1e-6): any drift is a semantic regression, not machine noise.
 """
 
 from __future__ import annotations
@@ -28,6 +34,9 @@ from pathlib import Path
 from typing import Dict, Tuple
 
 Key = Tuple[int, int, str]
+
+#: Deterministic per-cell metrics the --metrics mode gates on (when present).
+METRIC_FIELDS = ("jct_s", "cost", "migrations")
 
 
 def load_cells(path: Path) -> Dict[Key, dict]:
@@ -41,6 +50,57 @@ def load_cells(path: Path) -> Dict[Key, dict]:
     if not out:
         raise SystemExit(f"{path}: no cells found")
     return out
+
+
+def load_named_cells(path: Path) -> Dict[str, dict]:
+    """Cells keyed by their ``name`` field (metric-gated benchmarks)."""
+    if not path.is_file():
+        raise SystemExit(f"{path}: no such file")
+    payload = json.loads(path.read_text())
+    cells = payload.get("cells", [])
+    out: Dict[str, dict] = {}
+    for c in cells:
+        if "name" not in c:
+            raise SystemExit(f"{path}: cell without a name (not a metrics file)")
+        out[str(c["name"])] = c
+    if not out:
+        raise SystemExit(f"{path}: no cells found")
+    return out
+
+
+def compare_metrics(
+    old: Dict[str, dict], new: Dict[str, dict], tol: float
+) -> int:
+    """Unlike the timing modes (where sweeps may grow), the metric sweep's
+    *cell population* is itself deterministic: a cell present on only one
+    side means a scenario/policy vanished or appeared without the baseline
+    being regenerated, which is exactly the silent drift this gate exists to
+    catch — so asymmetric cells fail, not just metric drift."""
+    regressions = []
+    print(f"{'cell':42s} {'metric':>10s} {'old':>14s} {'new':>14s}")
+    for name in sorted(set(old) & set(new)):
+        for field in METRIC_FIELDS:
+            if field not in old[name] or field not in new[name]:
+                continue
+            o, n = float(old[name][field]), float(new[name][field])
+            drift = abs(n - o) > tol * max(abs(o), abs(n), 1e-12)
+            tag = "  << DRIFT" if drift else ""
+            if drift:
+                regressions.append((name, field))
+            print(f"{name:42s} {field:>10s} {o:14.6g} {n:14.6g}{tag}")
+    missing = sorted(set(old) ^ set(new))
+    for name in missing:
+        side = "old only" if name in old else "new only"
+        print(f"{name}: {side}  << CELL MISMATCH")
+    if regressions or missing:
+        print(
+            f"FAIL: {len(regressions)} metric(s) drifted beyond {tol:g} "
+            f"relative, {len(missing)} cell(s) unmatched (regenerate the "
+            "baseline if the sweep population changed intentionally)"
+        )
+        return 1
+    print(f"OK: all metric cells match within {tol:g} relative")
+    return 0
 
 
 def speedups(cells: Dict[Key, dict]) -> Dict[Tuple[int, int], float]:
@@ -98,7 +158,26 @@ def main() -> int:
         help="gate on per-cell engine speedup (machine-portable) instead of "
         "absolute us_per_call",
     )
+    ap.add_argument(
+        "--metrics",
+        action="store_true",
+        help="gate name-keyed cells on deterministic simulation metrics "
+        "(jct_s/cost/migrations) instead of timings",
+    )
+    ap.add_argument(
+        "--metric-tol",
+        type=float,
+        default=1e-6,
+        help="relative tolerance for --metrics drift (default 1e-6)",
+    )
     args = ap.parse_args()
+
+    if args.metrics:
+        return compare_metrics(
+            load_named_cells(args.old),
+            load_named_cells(args.new),
+            args.metric_tol,
+        )
 
     old = load_cells(args.old)
     new = load_cells(args.new)

@@ -31,10 +31,12 @@ from .baselines import (  # noqa: F401
     LDFPolicy,
 )
 from .cluster import (  # noqa: F401
+    DEFAULT_GPU_TYPE,
     GBPS,
     BandwidthTrace,
     ClusterState,
     EnvUpdate,
+    GpuPool,
     Region,
 )
 from .job import (  # noqa: F401
@@ -92,10 +94,12 @@ from .timing import (  # noqa: F401
 )
 from .workloads import (  # noqa: F401
     DATASETS,
+    GPU_CATALOG,
     TABLE_II_REGIONS,
     TABLE_III_MODELS,
     bursty_submit_times,
     diurnal_trace,
+    hetero_fleet_cluster,
     link_flap_trace,
     motivation_cluster,
     motivation_profiles,
@@ -105,6 +109,8 @@ from .workloads import (  # noqa: F401
     poisson_submit_times,
     price_spike_trace,
     random_fluctuation_trace,
+    spot_fleet_cluster,
+    spot_reclaim_trace,
 )
 from .scenarios import (  # noqa: F401
     SCENARIOS,

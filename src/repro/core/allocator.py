@@ -3,6 +3,15 @@
 Given an ordered region path and a target GPU count ``g``: first pin one GPU
 per path region (pipeline continuity), then pour the surplus into the
 cheapest regions first, capped by each region's *free* capacity.
+
+On a heterogeneous cluster the pour is (region, type)-granular: the surplus
+fills the globally cheapest *pool cells* along the path first — effective
+cell price = live regional $/kWh × the pool's spot discount × board kW —
+which is what lets Cost-Min prefer a remote region's spot pool over the
+local on-demand one.  Within any region the cells fill in the cluster's
+deterministic assign order, so the typed grant ``build_placement`` later
+derives (``ClusterState.assign_types``) matches what was priced here.
+Single-type clusters keep the seed's exact region-granular code path.
 """
 
 from __future__ import annotations
@@ -10,6 +19,43 @@ from __future__ import annotations
 from typing import Dict, List, Mapping
 
 from .cluster import ClusterState
+
+
+def _cost_min_allocate_typed(
+    cluster: ClusterState, path: List[str], g: int
+) -> Dict[str, int]:
+    """(region, type)-granular Alg. 2 pour; returns region totals (the typed
+    split is re-derived deterministically by ``assign_types``)."""
+    # Step 1: pipeline continuity — one GPU per traversed region, taken from
+    # the region's cheapest cell (assign order).
+    alloc = {r: 1 for r in path}
+    remaining = g - len(path)
+
+    # Step 2: surplus to the globally cheapest (region, type) cells.  Each
+    # region's first cell already holds the pinned GPU.
+    cells = []
+    for r in path:
+        free_t = cluster.free_gpus_typed(r)
+        first = True
+        for gtype in cluster.gpu_types(r):
+            avail = free_t[gtype]
+            if first and avail > 0:
+                avail -= 1  # the pinned continuity GPU
+                first = False
+            if avail > 0:
+                cells.append(
+                    (cluster.pool_rate(r, gtype), r, gtype, avail)
+                )
+    cells.sort(key=lambda c: (c[0], c[1], c[2]))
+    for _, r, _, avail in cells:
+        if remaining == 0:
+            break
+        add = min(avail, remaining)
+        alloc[r] += add
+        remaining -= add
+    if remaining != 0:  # unreachable given the capacity pre-check
+        raise ValueError("allocator failed to place all GPUs")
+    return alloc
 
 
 def cost_min_allocate(
@@ -26,6 +72,9 @@ def cost_min_allocate(
             raise ValueError(f"region {r} has no free GPU for its stage")
     if sum(free.values()) < g:
         raise ValueError("path capacity below target g")
+
+    if cluster.is_heterogeneous:
+        return _cost_min_allocate_typed(cluster, path, g)
 
     # Step 1: pipeline continuity — one GPU per traversed region.
     alloc = {r: 1 for r in path}

@@ -15,15 +15,30 @@ ranker operate on arrays instead of per-key dict lookups.  ``free_gpus`` and
 all seed-era call sites (and tests that poke the ledgers directly) keep
 working unchanged.  ``congestion_alpha`` is maintained as an O(1) running sum
 updated on every reserve/release instead of being re-summed per call.
+
+Heterogeneous accelerators (see DESIGN.md "heterogeneity model"): a region
+may declare typed :class:`GpuPool`\\ s — per-type capacity, FLOPS, memory,
+board power, and an on-demand vs. *spot* price multiplier.  The GPU ledger is
+then (region, type)-shaped: ``_cap_t``/``_used_t`` are R×T integer arrays and
+the per-region free vector is the derived aggregate ``Σ_t max(0, cap − used)``.
+A cluster whose regions declare no pools collapses to a single implicit
+default column, and every aggregate quantity (and therefore every scheduling
+decision) is bit-identical to the homogeneous layout.  Spot capacity is
+reclaimable at runtime (``set_spot_multipliers`` /
+``EnvUpdate.spot``): a reclaim may shrink a pool below its in-use count, in
+which case ``oversubscribed_pools`` reports the deficit for the simulator's
+forced-preemption pass — the GPU-side analogue of ``oversubscribed_links``.
 """
 
 from __future__ import annotations
 
 import dataclasses
 from collections.abc import MutableMapping
-from typing import Dict, Iterable, Iterator, List, Mapping, Tuple
+from typing import Dict, Iterable, Iterator, List, Mapping, Optional, Tuple
 
 import numpy as np
+
+from .job import DEFAULT_GPU_KW
 
 GBPS = 1e9 / 8.0  # bytes/sec per Gbit/s
 
@@ -33,24 +48,103 @@ GBPS = 1e9 / 8.0  # bytes/sec per Gbit/s
 INTRA_REGION_BANDWIDTH = 600.0 * GBPS
 
 
+#: Type name of the implicit pool a plain (pool-less) region exposes.
+DEFAULT_GPU_TYPE = "default"
+
+
+@dataclasses.dataclass(frozen=True)
+class GpuPool:
+    """One typed accelerator pool inside a region.
+
+    ``flops``/``memory``/``gpu_kw`` of ``None`` inherit the job profile's
+    reference hardware (``JobProfile.gpu_flops`` etc.), which is what keeps a
+    cluster built without explicit pools bit-identical to the homogeneous
+    model.  ``spot`` marks reclaimable capacity: the pool's count may be
+    rescaled at runtime (``ClusterState.set_spot_multipliers``) and its
+    electricity draw is billed at ``price_mult ×`` the regional price — the
+    spot discount.
+    """
+
+    gpu_type: str
+    count: int
+    flops: Optional[float] = None    # FLOP/s per GPU; None = profile default
+    memory: Optional[float] = None   # usable bytes per GPU; None = default
+    gpu_kw: Optional[float] = None   # board power draw; None = default
+    spot: bool = False
+    price_mult: float = 1.0
+
+    def __post_init__(self) -> None:
+        if not self.gpu_type:
+            raise ValueError("empty GPU type name")
+        if self.count < 0:
+            raise ValueError(f"negative count for GPU pool {self.gpu_type}")
+        if self.price_mult < 0.0:
+            raise ValueError(f"negative price_mult for pool {self.gpu_type}")
+        for field in ("flops", "memory", "gpu_kw"):
+            v = getattr(self, field)
+            if v is not None and v <= 0.0:
+                raise ValueError(
+                    f"non-positive {field} for GPU pool {self.gpu_type}"
+                )
+
+    @property
+    def kw_or_default(self) -> float:
+        """Board power for *ordering* decisions (cheapest-pool-first); the
+        actual billed kW still honours the job profile when unset."""
+        return self.gpu_kw if self.gpu_kw is not None else DEFAULT_GPU_KW
+
+
 @dataclasses.dataclass(frozen=True)
 class Region:
-    """A cloud region: GPU pool + electricity price.
+    """A cloud region: GPU pool(s) + electricity price.
 
     ``price_kwh`` is the regional electricity price in $/kWh (paper Table II);
     the $/GPU-hour rate is ``price_kwh * gpu_kw`` with ``gpu_kw`` owned by the
     simulation config (one value per accelerator generation).
+
+    ``pools`` optionally splits the capacity into typed accelerator pools
+    (heterogeneous fleets, spot capacity); when given, the pool counts must
+    partition ``gpu_capacity`` exactly.  A pool-less region behaves as one
+    implicit :data:`DEFAULT_GPU_TYPE` pool at the profile's reference
+    hardware — the homogeneous paper setup.
     """
 
     name: str
     gpu_capacity: int
     price_kwh: float
+    pools: Tuple[GpuPool, ...] = ()
 
     def __post_init__(self) -> None:
         if self.gpu_capacity < 0:
             raise ValueError(f"negative GPU capacity for region {self.name}")
         if self.price_kwh < 0:
             raise ValueError(f"negative electricity price for region {self.name}")
+        if self.pools:
+            object.__setattr__(self, "pools", tuple(self.pools))
+            names = [p.gpu_type for p in self.pools]
+            if len(set(names)) != len(names):
+                raise ValueError(
+                    f"duplicate GPU pool types in region {self.name}"
+                )
+            total = sum(p.count for p in self.pools)
+            if total != self.gpu_capacity:
+                raise ValueError(
+                    f"GPU pools of region {self.name} sum to {total}, not "
+                    f"gpu_capacity={self.gpu_capacity}"
+                )
+
+    @classmethod
+    def with_pools(
+        cls, name: str, price_kwh: float, pools: Iterable[GpuPool]
+    ) -> "Region":
+        """Region whose capacity is the sum of its typed pools."""
+        pools = tuple(pools)
+        return cls(
+            name=name,
+            gpu_capacity=sum(p.count for p in pools),
+            price_kwh=price_kwh,
+            pools=pools,
+        )
 
 
 Link = Tuple[str, str]
@@ -62,14 +156,19 @@ class EnvUpdate:
 
     At ``time`` the listed links take bandwidth multiplier ``bandwidth[link]``
     (absolute against the *installed* capacity, not against the previous
-    value) and the listed regions take electricity-price multiplier
-    ``prices[region]`` (absolute against the construction-time price).
-    Links/regions not listed keep their current multiplier.
+    value), the listed regions take electricity-price multiplier
+    ``prices[region]`` (absolute against the construction-time price), and
+    the listed spot pools take capacity multiplier ``spot[(region, type)]``
+    (absolute against the installed pool count — a *spot reclaim* when < 1).
+    Links/regions/pools not listed keep their current multiplier.
     """
 
     time: float
     bandwidth: Mapping[Link, float] = dataclasses.field(default_factory=dict)
     prices: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    spot: Mapping[Tuple[str, str], float] = dataclasses.field(
+        default_factory=dict
+    )
 
     def __post_init__(self) -> None:
         if self.time < 0.0:
@@ -80,6 +179,9 @@ class EnvUpdate:
         for region, m in self.prices.items():
             if m < 0.0:
                 raise ValueError(f"negative price multiplier for {region}")
+        for pool, m in self.spot.items():
+            if m < 0.0:
+                raise ValueError(f"negative spot-capacity multiplier for {pool}")
 
 
 class BandwidthTrace:
@@ -133,8 +235,24 @@ class _FreeGpuLedger(MutableMapping):
         cs = self._cs
         i = cs._idx[region]  # KeyError for unknown regions
         n = int(count)
-        cs._free_total += n - int(cs._free[i])
-        cs._free[i] = n
+        if n < 0:
+            # A negative free count is always a double-release (or similar)
+            # bug; silently accepting it corrupts ``_free_total`` and every
+            # downstream placement decision — raise like ``release_bandwidth``
+            # does for over-release.
+            raise ValueError(
+                f"negative free-GPU count for region {region}: {n}"
+            )
+        cells = cs._region_cells[i]
+        if len(cells) != 1:
+            raise TypeError(
+                f"region {region} has {len(cells)} typed GPU pools; an "
+                "aggregate free count is ambiguous — mutate per type via "
+                "reserve_gpus_typed/release_gpus_typed"
+            )
+        t = cells[0]
+        cs._used_t[i, t] = int(cs._cap_t[i, t]) - n
+        cs._refresh_free(i)
 
     def __delitem__(self, region: str) -> None:
         raise TypeError("region ledger entries cannot be deleted")
@@ -221,13 +339,63 @@ class ClusterState:
         self._price_base = self._price.copy()
         self._cap_total = int(self._cap.sum())
 
-        provided_free = dict(self.free_gpus) if self.free_gpus else None
-        if provided_free is None:
-            self._free = self._cap.copy()
-        else:
-            self._free = np.array(
-                [int(provided_free.get(r, 0)) for r in names], dtype=np.int64
+        # ---- typed GPU pools (heterogeneity model): a plain region exposes
+        # one implicit default column, so the homogeneous layout is the T=1
+        # special case and every aggregate below is bit-identical to it.
+        pools_by_region: List[Tuple[GpuPool, ...]] = []
+        for r in names:
+            reg = self.regions[r]
+            pools_by_region.append(
+                reg.pools
+                if reg.pools
+                else (GpuPool(DEFAULT_GPU_TYPE, reg.gpu_capacity),)
             )
+        self._hetero = any(bool(self.regions[r].pools) for r in names)
+        type_names = sorted({p.gpu_type for ps in pools_by_region for p in ps})
+        self._gpu_types: List[str] = type_names
+        self._tidx: Dict[str, int] = {t: j for j, t in enumerate(type_names)}
+        self._cap_t = np.zeros((n, len(type_names)), dtype=np.int64)
+        self._pools: Dict[Tuple[str, str], GpuPool] = {}
+        #: Per-region type-column indices in *assign order*: cheapest
+        #: $/GPU-hour first (spot discounts first), ties by type name — the
+        #: one deterministic rule reserve_gpus, cost_min_allocate, and
+        #: assign_types all share.
+        self._region_cells: List[List[int]] = []
+        for i, r in enumerate(names):
+            cells: List[int] = []
+            for p in pools_by_region[i]:
+                t = self._tidx[p.gpu_type]
+                self._cap_t[i, t] = p.count
+                self._pools[(r, p.gpu_type)] = p
+                cells.append(t)
+            cells.sort(
+                key=lambda t: (
+                    self._pools[(r, type_names[t])].price_mult
+                    * self._pools[(r, type_names[t])].kw_or_default,
+                    type_names[t],
+                )
+            )
+            self._region_cells.append(cells)
+        self._cap_t_base = self._cap_t.copy()
+        self._used_t = np.zeros_like(self._cap_t)
+        self._spot_mult: Dict[Tuple[str, str], float] = {}
+
+        provided_free = dict(self.free_gpus) if self.free_gpus else None
+        if provided_free is not None:
+            # Aggregate free counts distribute over a region's pools in
+            # assign order (``snapshot`` overwrites the typed arrays
+            # wholesale afterwards, so this only matters for hand-built
+            # states); a free total above capacity — the old unchecked
+            # aggregate-set backdoor — lands on the last cell.
+            for i, r in enumerate(names):
+                want = int(provided_free.get(r, 0))
+                for t in self._region_cells[i]:
+                    take = min(int(self._cap_t[i, t]), want)
+                    self._used_t[i, t] = int(self._cap_t[i, t]) - take
+                    want -= take
+                if want > 0:
+                    self._used_t[i, self._region_cells[i][-1]] -= want
+        self._free = np.maximum(self._cap_t - self._used_t, 0).sum(axis=1)
         self._free_total = int(self._free.sum())
 
         self._bw_mat = np.zeros((n, n), dtype=float)
@@ -301,6 +469,14 @@ class ClusterState:
         scaled by any live multiplier (see ``set_price_multipliers``)."""
         return float(self._price[self._idx[region]])
 
+    def _refresh_free(self, i: int) -> None:
+        """Re-derive one region's aggregate free count from the typed ledger
+        (``Σ_t max(0, cap − used)``: pools a spot reclaim shrank below their
+        in-use count contribute nothing) and patch the running total."""
+        new = int(np.maximum(self._cap_t[i] - self._used_t[i], 0).sum())
+        self._free_total += new - int(self._free[i])
+        self._free[i] = new
+
     def reserve_gpus(self, alloc: Mapping[str, int]) -> None:
         idx, free = self._idx, self._free
         for r, n in alloc.items():
@@ -310,20 +486,238 @@ class ClusterState:
                 raise ValueError(
                     f"cannot reserve {n} GPUs in {r} (free={have})"
                 )
-        taken = 0
-        for r, n in alloc.items():
-            free[idx[r]] -= n
-            taken += n
-        self._free_total -= taken
-
-    def release_gpus(self, alloc: Mapping[str, int]) -> None:
-        idx, free = self._idx, self._free
         for r, n in alloc.items():
             i = idx[r]
-            free[i] += n
-            self._free_total += n
-            if free[i] > self._cap[i]:
+            left = int(n)
+            for t in self._region_cells[i]:
+                if left == 0:
+                    break
+                avail = int(self._cap_t[i, t]) - int(self._used_t[i, t])
+                if avail <= 0:
+                    continue
+                take = min(avail, left)
+                self._used_t[i, t] += take
+                left -= take
+            if left:  # unreachable given the aggregate pre-check
+                raise ValueError(f"cannot reserve {n} GPUs in {r}")
+            self._refresh_free(i)
+
+    def release_gpus(self, alloc: Mapping[str, int]) -> None:
+        """Release untyped per-region counts.  All-or-nothing: releasing
+        more than a region has in use is a double-release bug and raises
+        before any mutation (the ``release_bandwidth`` convention)."""
+        idx = self._idx
+        for r, n in alloc.items():
+            i = idx[r]
+            in_use = int(
+                self._used_t[i][self._used_t[i] > 0].sum()
+            )
+            if n > in_use:
                 raise ValueError(f"GPU over-release in {r}")
+        for r, n in alloc.items():
+            i = idx[r]
+            # Untyped release returns GPUs to pools in reverse assign order
+            # (LIFO against reserve_gpus); typed placements go through
+            # release_gpus_typed instead and never hit this heuristic.
+            left = int(n)
+            for t in reversed(self._region_cells[i]):
+                if left == 0:
+                    break
+                used = int(self._used_t[i, t])
+                if used <= 0:
+                    continue
+                give = min(used, left)
+                self._used_t[i, t] -= give
+                left -= give
+            self._refresh_free(i)
+
+    # ----------------------------------------------------------- typed pools
+    @property
+    def is_heterogeneous(self) -> bool:
+        """True when any region declares explicit typed pools — the flag that
+        routes the allocator/Pathfinder/timing onto the (region, type) paths.
+        Plain clusters keep the seed's exact homogeneous code paths."""
+        return self._hetero
+
+    def gpu_types(self, region: str) -> List[str]:
+        """The region's pool types in assign (cheapest-first) order."""
+        i = self._idx[region]
+        return [self._gpu_types[t] for t in self._region_cells[i]]
+
+    def pool(self, region: str, gpu_type: str) -> GpuPool:
+        try:
+            return self._pools[(region, gpu_type)]
+        except KeyError:
+            raise KeyError(
+                f"no GPU pool {gpu_type!r} in region {region!r}"
+            ) from None
+
+    def pool_rate(self, region: str, gpu_type: str) -> float:
+        """Cost-ordering rate of one pool cell: live regional $/kWh × spot
+        price multiplier × board kW (reference kW for pools inheriting the
+        profile's hardware) — the quantity the typed Cost-Min pour sorts."""
+        p = self.pool(region, gpu_type)
+        return self.price(region) * p.price_mult * p.kw_or_default
+
+    def free_gpus_typed(self, region: str) -> Dict[str, int]:
+        i = self._idx[region]
+        return {
+            self._gpu_types[t]: max(
+                0, int(self._cap_t[i, t]) - int(self._used_t[i, t])
+            )
+            for t in self._region_cells[i]
+        }
+
+    def capacity_typed(self, region: str) -> Dict[str, int]:
+        """Current (possibly spot-shrunk) per-type capacity of a region."""
+        i = self._idx[region]
+        return {
+            self._gpu_types[t]: int(self._cap_t[i, t])
+            for t in self._region_cells[i]
+        }
+
+    def assign_types(self, region: str, n: int) -> Dict[str, int]:
+        """Deterministically type an untyped grant of ``n`` GPUs in
+        ``region``: cheapest $/GPU-hour pools first (spot discounts first),
+        ties by type name — the identical fill order ``cost_min_allocate``
+        prices, so the typed grant matches what the allocator assumed.
+        Raises when the region lacks ``n`` free GPUs."""
+        i = self._idx[region]
+        out: Dict[str, int] = {}
+        left = int(n)
+        for t in self._region_cells[i]:
+            if left == 0:
+                break
+            avail = int(self._cap_t[i, t]) - int(self._used_t[i, t])
+            if avail <= 0:
+                continue
+            take = min(avail, left)
+            out[self._gpu_types[t]] = take
+            left -= take
+        if left > 0:
+            raise ValueError(
+                f"cannot type {n} GPUs in {region}: only {n - left} free"
+            )
+        return out
+
+    def min_available_flops(self, region: str, default_flops: float) -> float:
+        """Most conservative per-GPU FLOPS among the region's pools that
+        still have free GPUs (Pathfinder admission heuristic); pools that
+        inherit the profile's reference hardware count as ``default_flops``,
+        which is also returned when the region has nothing free."""
+        i = self._idx[region]
+        best: Optional[float] = None
+        for t in self._region_cells[i]:
+            if int(self._cap_t[i, t]) - int(self._used_t[i, t]) > 0:
+                p = self._pools[(self._names[i], self._gpu_types[t])]
+                f = p.flops if p.flops is not None else default_flops
+                best = f if best is None else min(best, f)
+        return default_flops if best is None else best
+
+    def reserve_gpus_typed(
+        self, alloc: Mapping[str, Mapping[str, int]]
+    ) -> None:
+        """Reserve per-(region, type) counts.  All-or-nothing: every cell is
+        validated against its free count before any mutation."""
+        resolved: List[Tuple[int, int, int]] = []
+        for r, types in alloc.items():
+            i = self._idx[r]
+            for gtype, n in types.items():
+                if (r, gtype) not in self._pools:
+                    raise KeyError(f"no GPU pool {gtype!r} in region {r!r}")
+                t = self._tidx[gtype]
+                have = max(
+                    0, int(self._cap_t[i, t]) - int(self._used_t[i, t])
+                )
+                if n < 0 or n > have:
+                    raise ValueError(
+                        f"cannot reserve {n} {gtype} GPUs in {r} "
+                        f"(free={have})"
+                    )
+                resolved.append((i, t, int(n)))
+        for i, t, n in resolved:
+            self._used_t[i, t] += n
+        for i in {i for i, _, _ in resolved}:
+            self._refresh_free(i)
+
+    def release_gpus_typed(
+        self, alloc: Mapping[str, Mapping[str, int]]
+    ) -> None:
+        """Release per-(region, type) counts; releasing more than a cell has
+        in use is a double-release bug and raises (all-or-nothing)."""
+        resolved: List[Tuple[int, int, int]] = []
+        for r, types in alloc.items():
+            i = self._idx[r]
+            for gtype, n in types.items():
+                if (r, gtype) not in self._pools:
+                    raise KeyError(f"no GPU pool {gtype!r} in region {r!r}")
+                t = self._tidx[gtype]
+                used = int(self._used_t[i, t])
+                if n < 0 or n > used:
+                    raise ValueError(
+                        f"GPU over-release in {r} ({gtype}): releasing {n} "
+                        f"with {used} in use"
+                    )
+                resolved.append((i, t, int(n)))
+        for i, t, n in resolved:
+            self._used_t[i, t] -= n
+        for i in {i for i, _, _ in resolved}:
+            self._refresh_free(i)
+
+    def spot_pools(self) -> List[Tuple[str, str]]:
+        """All (region, type) cells marked reclaimable, sorted."""
+        return sorted(k for k, p in self._pools.items() if p.spot)
+
+    def set_spot_multipliers(
+        self, multipliers: Mapping[Tuple[str, str], float]
+    ) -> None:
+        """Rescale listed *spot* pools to ``multiplier × installed count``
+        (absolute against the construction-time count, no compounding — the
+        same convention as ``set_link_multipliers``).  A reclaim may shrink a
+        pool below its in-use count; reservations are left untouched and the
+        deficit is reported by ``oversubscribed_pools`` until the simulator's
+        preemption pass resolves it.  All-or-nothing validation."""
+        resolved: List[Tuple[str, str, float]] = []
+        for (region, gtype), m in multipliers.items():
+            if m < 0.0:
+                raise ValueError(
+                    f"negative spot multiplier for {(region, gtype)}"
+                )
+            pool = self._pools.get((region, gtype))
+            if pool is None:
+                raise KeyError(
+                    f"no GPU pool {gtype!r} in region {region!r}"
+                )
+            if not pool.spot:
+                raise ValueError(
+                    f"pool {gtype!r} in {region!r} is not spot capacity"
+                )
+            resolved.append((region, gtype, m))
+        for region, gtype, m in resolved:
+            i, t = self._idx[region], self._tidx[gtype]
+            new_cap = int(round(int(self._cap_t_base[i, t]) * m))
+            delta = new_cap - int(self._cap_t[i, t])
+            self._spot_mult[(region, gtype)] = m
+            if delta == 0:
+                continue
+            self._cap_t[i, t] = new_cap
+            self._cap[i] += delta
+            self._cap_total += delta
+            self._refresh_free(i)
+
+    def oversubscribed_pools(self) -> List[Tuple[str, str]]:
+        """(region, type) cells holding more in-use GPUs than their (possibly
+        spot-shrunk) capacity — the Eq. 5 violations a spot reclaim can
+        introduce; the GPU analogue of ``oversubscribed_links``.  Sorted for
+        deterministic preemption resolution."""
+        out = [
+            (region, gtype)
+            for (region, gtype) in self._pools
+            if int(self._used_t[self._idx[region], self._tidx[gtype]])
+            > int(self._cap_t[self._idx[region], self._tidx[gtype]])
+        ]
+        out.sort()
+        return out
 
     # ---------------------------------------------------------------- network
     def link_bandwidth(self, u: str, v: str) -> float:
@@ -350,12 +744,17 @@ class ClusterState:
         return np.maximum(0.0, self._bw_mat - self._res_mat)
 
     def reserve_bandwidth(self, edges: Mapping[Link, float]) -> None:
-        """Eq. (6): reservations on a link may never exceed its capacity."""
+        """Eq. (6): reservations on a link may never exceed its capacity.
+
+        The float-drift slack is purely *relative* to the link's capacity: an
+        absolute epsilon would let tiny reservations slip onto near-zero- or
+        zero-capacity links (e.g. after a full-outage multiplier), silently
+        violating Eq. (6) exactly where it matters most."""
         for (u, v), b in edges.items():
             if u == v:
                 continue
             avail = self.available_bandwidth(u, v)
-            if b > avail + 1e-6:
+            if b > avail + 1e-9 * self.link_bandwidth(u, v):
                 raise ValueError(
                     f"bandwidth over-subscription on {u}->{v}: "
                     f"want {b:.3e}, have {avail:.3e}"
@@ -452,24 +851,35 @@ class ClusterState:
         for i, m in resolved:
             self._price[i] = self._price_base[i] * m
 
-    def apply_env_update(self, update: EnvUpdate) -> Tuple[bool, bool]:
+    def apply_env_update(
+        self, update: EnvUpdate
+    ) -> Tuple[bool, bool, bool]:
         """Apply one trace breakpoint; returns ``(bandwidth_changed,
-        prices_changed)`` — the first triggers the simulator's placement
-        re-validation (forced preemption), the second its segment repricing
-        and price-aware voluntary-migration passes.
-        All-or-nothing across both halves: unknown links/regions are rejected
-        before either multiplier set mutates."""
+        prices_changed, spot_changed)`` — the first triggers the simulator's
+        placement re-validation (forced preemption), the second its segment
+        repricing and price-aware voluntary-migration passes, the third its
+        spot-reclaim preemption pass (``oversubscribed_pools``).
+        All-or-nothing across all three: unknown links/regions/pools are
+        rejected before any multiplier set mutates."""
         for link in update.bandwidth:
             if link not in self._link_idx:
                 raise KeyError(f"link {link} is not installed")
         for region in update.prices:
             if region not in self._idx:
                 raise KeyError(f"unknown region {region}")
+        for pool_key in update.spot:
+            pool = self._pools.get(pool_key)
+            if pool is None:
+                raise KeyError(f"no GPU pool {pool_key!r}")
+            if not pool.spot:
+                raise ValueError(f"pool {pool_key!r} is not spot capacity")
         if update.prices:
             self.set_price_multipliers(update.prices)
         if update.bandwidth:
             self.set_link_multipliers(update.bandwidth)
-        return bool(update.bandwidth), bool(update.prices)
+        if update.spot:
+            self.set_spot_multipliers(update.spot)
+        return bool(update.bandwidth), bool(update.prices), bool(update.spot)
 
     def oversubscribed_links(self, *, rel_tol: float = 1e-9) -> List[Link]:
         """Links whose reserved bandwidth exceeds their (possibly shrunk)
@@ -507,15 +917,31 @@ class ClusterState:
         new cluster — base and dynamic state stay separated instead of the
         live bandwidth silently becoming the new cluster's installed baseline
         next to construction-time prices.  Reservations are not carried over
-        (same as before: a scaled cluster starts empty)."""
-        regs = [
-            Region(
-                name=r.name,
-                gpu_capacity=max(1, int(round(r.gpu_capacity * capacity_factor))),
-                price_kwh=r.price_kwh,
-            )
-            for r in self.regions.values()
-        ]
+        (same as before: a scaled cluster starts empty).  Typed pools scale
+        per pool (rounded; a region that would vanish keeps one GPU in its
+        first pool, matching the plain-region ``max(1, ...)`` floor)."""
+        regs: List[Region] = []
+        for r in self.regions.values():
+            if r.pools:
+                pools = [
+                    dataclasses.replace(
+                        p, count=int(round(p.count * capacity_factor))
+                    )
+                    for p in r.pools
+                ]
+                if sum(p.count for p in pools) < 1:
+                    pools[0] = dataclasses.replace(pools[0], count=1)
+                regs.append(Region.with_pools(r.name, r.price_kwh, pools))
+            else:
+                regs.append(
+                    Region(
+                        name=r.name,
+                        gpu_capacity=max(
+                            1, int(round(r.gpu_capacity * capacity_factor))
+                        ),
+                        price_kwh=r.price_kwh,
+                    )
+                )
         bw = {
             l: b * bandwidth_factor / GBPS
             for l, b in self._bw_dict_base.items()
@@ -539,6 +965,9 @@ class ClusterState:
             out.set_link_multipliers(link_mults)
         if price_mults:
             out.set_price_multipliers(price_mults)
+        spot_mults = {k: m for k, m in self._spot_mult.items() if m != 1.0}
+        if spot_mults:
+            out.set_spot_multipliers(spot_mults)
         return out
 
     def snapshot(self) -> "ClusterState":
@@ -557,4 +986,15 @@ class ClusterState:
         snap.bandwidth.clear()
         snap.bandwidth.update(self.bandwidth)
         np.copyto(snap._price, self._price)
+        # Typed-ledger state: exact per-(region, type) capacities / in-use
+        # counts (the aggregate free dict the constructor consumed cannot
+        # reconstruct a multi-pool split, and spot reclaims may have moved
+        # capacities off their installed baseline).
+        np.copyto(snap._cap_t, self._cap_t)
+        np.copyto(snap._used_t, self._used_t)
+        np.copyto(snap._cap, self._cap)
+        snap._cap_total = self._cap_total
+        np.copyto(snap._free, self._free)
+        snap._free_total = self._free_total
+        snap._spot_mult = dict(self._spot_mult)
         return snap

@@ -179,6 +179,11 @@ class JobProfile:
         self._t_comp_cache: dict = {}
         self._bw_req_cache: dict = {}
         self._single_exec: Optional[float] = None
+        # Hardware-override memo tables: heterogeneous placements evaluate
+        # t_comp / b_j / the memory floor against the accelerator type
+        # actually granted (keyed by the override value).
+        self._t_comp_hw_cache: dict = {}
+        self._min_gpus_hw_cache: dict = {}
 
     # ------------------------------------------------------------- primitives
     @property
@@ -213,7 +218,7 @@ class JobProfile:
             self._t_comp_cache[k] = cached
         return cached
 
-    def _t_comp_raw(self, k: int) -> float:
+    def _t_comp_raw(self, k: int, gpu_flops: Optional[float] = None) -> float:
         """Per-stage forward time of one micro-batch with ``k`` GPUs total.
 
         The trailing ``·2`` of Eq. (1) accounts for the (symmetric) backward
@@ -221,18 +226,56 @@ class JobProfile:
         efficiency terms bracket the useful regime: a linear decay for many
         skinny stages (diminishing returns, §III-B2), a memory-pressure ramp
         near the floor (remat/offload), and a tensor-parallel tax once stages
-        widen past one GPU.
+        widen past one GPU.  ``gpu_flops`` overrides the profile's reference
+        throughput (heterogeneous placements evaluate against the granted
+        accelerator type); ``None`` keeps the reference hardware.
         """
         if k < 1:
             raise ValueError("GPU count must be >= 1")
+        flops = self.gpu_flops if gpu_flops is None else gpu_flops
         depth = self.pipeline_depth(k)
         decay = 1.0 + self.efficiency_decay * (depth - 1)
         decay *= self._memory_pressure(k)
         if k > depth:  # tensor-parallel widening
             decay *= 1.0 + self.tp_penalty * (k / depth - 1.0)
         return (
-            self.fwd_flops_per_microbatch / (k * self.gpu_flops)
+            self.fwd_flops_per_microbatch / (k * flops)
         ) * decay + self.stage_overhead
+
+    def t_comp_hw(self, k: int, gpu_flops: Optional[float] = None) -> float:
+        """``t_comp(k)`` under an accelerator-type FLOPS override; ``None``
+        (or the reference value itself) takes the memoized default path
+        bit-exactly — the homogeneous-parity guarantee."""
+        if gpu_flops is None or gpu_flops == self.gpu_flops:
+            return self.t_comp(k)
+        key = (k, gpu_flops)
+        cached = self._t_comp_hw_cache.get(key)
+        if cached is None:
+            cached = self._t_comp_raw(k, gpu_flops)
+            self._t_comp_hw_cache[key] = cached
+        return cached
+
+    def bandwidth_requirement_hw(
+        self, k: int, gpu_flops: Optional[float] = None
+    ) -> float:
+        """``b_j = A_j / t_comp^j(k)`` against the granted hardware."""
+        if gpu_flops is None or gpu_flops == self.gpu_flops:
+            return self.bandwidth_requirement(k)
+        return self.spec.model.activation_bytes / self.t_comp_hw(k, gpu_flops)
+
+    def min_gpus_for_memory(self, gpu_memory: Optional[float] = None) -> int:
+        """Memory floor against a granted accelerator type's usable memory;
+        ``None`` (or the reference value) is the memoized ``min_gpus``."""
+        if gpu_memory is None or gpu_memory == self.gpu_memory:
+            return self.min_gpus
+        cached = self._min_gpus_hw_cache.get(gpu_memory)
+        if cached is None:
+            need = self.spec.model.n_params * BYTES_PER_PARAM
+            cached = max(
+                1, min(self.max_stages, math.ceil(need / gpu_memory))
+            )
+            self._min_gpus_hw_cache[gpu_memory] = cached
+        return cached
 
     def t_iter_ideal(self, k: int) -> float:
         """Eq. (1) with zero inter-stage communication (placement-agnostic)."""
@@ -306,6 +349,14 @@ class JobProfile:
         """``b_j`` recomputed from scratch (legacy-engine cost profile)."""
         return self.spec.model.activation_bytes / self._t_comp_raw(k)
 
-    def power_cost_rate(self, price_kwh: float, n_gpus: int) -> float:
-        """$/second of ``n_gpus`` drawing board power at ``price_kwh``."""
-        return price_kwh * self.gpu_kw * n_gpus / 3600.0
+    def power_cost_rate(
+        self,
+        price_kwh: float,
+        n_gpus: int,
+        gpu_kw: Optional[float] = None,
+    ) -> float:
+        """$/second of ``n_gpus`` drawing board power at ``price_kwh``;
+        ``gpu_kw`` overrides the reference board power (per-type draw on
+        heterogeneous placements)."""
+        kw = self.gpu_kw if gpu_kw is None else gpu_kw
+        return price_kwh * kw * n_gpus / 3600.0

@@ -281,7 +281,9 @@ def topology_from_placement(
     """
     g = placement.total_gpus
     depth = profile.pipeline_depth(g)
-    t_comp = profile.t_comp(g)
+    # Typed grants price stages at the bottleneck granted hardware (None on
+    # single-type clusters: the bit-exact reference path).
+    t_comp = profile.t_comp_hw(g, placement.eff_flops)
     act = profile.spec.model.activation_bytes
     regions = placement.stage_regions()
     intra_hop = act / INTRA_REGION_BANDWIDTH

@@ -53,10 +53,15 @@ def placement_feasible(
     (control-plane tooling, examples).  Note the engine's actual preemption
     trigger is the *aggregate* check across jobs sharing a link —
     ``ClusterState.oversubscribed_links`` — which subsumes this per-job
-    condition."""
+    condition.
+
+    The tolerance is purely *relative*: an absolute epsilon on top of it
+    would let any sub-epsilon overage pass on a low-capacity link and any
+    tiny reservation pass on a zero-capacity one — masking genuine Eq. 6
+    violations exactly where links are thinnest."""
     for (u, v), share in placement.reserved_bw.items():
         cap = cluster.link_bandwidth(u, v)
-        if share > cap * (1.0 + rel_tol) + 1e-6:
+        if share > cap * (1.0 + rel_tol):
             return False
     return True
 
@@ -84,6 +89,8 @@ def find_placement(
     names = cluster._names
     name_rank = cluster._name_rank
 
+    hetero = cluster.is_heterogeneous
+
     # ---------------------------------------------- Phase 1: single region
     single_mask = free >= k
     if single_mask.any():
@@ -92,9 +99,19 @@ def find_placement(
         cheapest = idxs[prices == prices.min()]
         # min by (price, name): among equal-price regions take the smallest name
         best = names[cheapest[np.argmin(name_rank[cheapest])]]
-        return build_placement(
-            profile, cluster, [best], {best: k}, require_comm_fits_comp=True
-        )
+        if not hetero:
+            return build_placement(
+                profile, cluster, [best], {best: k}, require_comm_fits_comp=True
+            )
+        # Heterogeneous: the cheapest region's granted types may sit below
+        # the job's memory floor (build_placement validates against the
+        # grant); fall through to Phase 2 rather than failing the job.
+        try:
+            return build_placement(
+                profile, cluster, [best], {best: k}, require_comm_fits_comp=True
+            )
+        except ValueError:
+            pass
 
     # ------------------------------------------ Phase 2: greedy expansion
     act = profile.spec.model.activation_bytes
@@ -139,6 +156,15 @@ def find_placement(
         tail = si
         g = min(free_seed, k)
         b_min = float("inf")
+        # Admission heuristic on heterogeneous clusters: evaluate t_comp at
+        # the most conservative (slowest) FLOPS a region along the path
+        # could grant — slower stages tolerate slower links.  The final
+        # build_placement gate re-checks against the actual typed grant.
+        f_min = (
+            cluster.min_available_flops(names[si], profile.gpu_flops)
+            if hetero
+            else None
+        )
         while len(path_idx) < n_regions and g < k:
             # Highest-bandwidth (residual) outgoing link to a fresh region.
             row = avail[tail]
@@ -152,13 +178,25 @@ def find_placement(
             nxt = int(top[np.argmax(name_rank[top])])
             b_tmp = min(b_min, float(row[nxt]))
             g_new = min(g + int(free[nxt]), k)
+            if hetero:
+                f_new = min(
+                    f_min,
+                    cluster.min_available_flops(
+                        names[nxt], profile.gpu_flops
+                    ),
+                )
+                t_cmp = profile.t_comp_hw(g_new, f_new)
+            else:
+                f_new = None
+                t_cmp = profile.t_comp(g_new)
             # Alg. 1 line 13: communication must keep up with compute.
-            if act / b_tmp > profile.t_comp(g_new):
+            if act / b_tmp > t_cmp:
                 break
             path_idx.append(nxt)
             visited[nxt] = True
             tail = nxt
             b_min, g = b_tmp, g_new
+            f_min = f_new
 
         if g < profile.min_gpus or g < len(path_idx):
             continue

@@ -9,7 +9,7 @@ reservations that Eq. (6) accounts for.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Mapping, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 from .cluster import INTRA_REGION_BANDWIDTH, ClusterState
 from .job import JobProfile
@@ -17,12 +17,31 @@ from .job import JobProfile
 
 @dataclasses.dataclass(frozen=True)
 class Placement:
-    """Ordered pipeline path + per-region GPU counts for one job."""
+    """Ordered pipeline path + per-region GPU counts for one job.
+
+    On heterogeneous clusters the grant is additionally *typed*:
+    ``typed_alloc[r]`` splits ``alloc[r]`` over the region's GPU pools (the
+    cluster's deterministic cheapest-first assignment), and
+    ``eff_flops``/``eff_memory`` record the bottleneck hardware of the grant
+    — the slowest granted type gates every stage (Eq. 1 is homogeneous per
+    pipeline), so timing and the memory floor evaluate against it.  On
+    single-type clusters all three stay empty/None and every quantity is
+    bit-identical to the homogeneous model.
+    """
 
     path: Tuple[str, ...]           # ordered regions hosting the stages
     alloc: Mapping[str, int]        # n_{j,r} for r in path (>=1 each)
     comm_times: Tuple[float, ...]   # t_comm(s) for each of the g-1 boundaries
     reserved_bw: Mapping[Tuple[str, str], float]  # per crossing edge, bytes/s
+    #: Per-region typed grant {region: {gpu_type: count}}; empty on
+    #: single-type clusters.
+    typed_alloc: Mapping[str, Mapping[str, int]] = dataclasses.field(
+        default_factory=dict
+    )
+    #: Bottleneck FLOPS / memory of the granted types (None = profile
+    #: reference hardware).
+    eff_flops: Optional[float] = None
+    eff_memory: Optional[float] = None
 
     @property
     def total_gpus(self) -> int:
@@ -57,6 +76,7 @@ def build_placement(
     alloc: Mapping[str, int],
     *,
     require_comm_fits_comp: bool = False,
+    typed_alloc: Optional[Mapping[str, Mapping[str, int]]] = None,
 ) -> Placement:
     """Materialize a placement: derive comm times + bandwidth reservations.
 
@@ -66,6 +86,12 @@ def build_placement(
     the full ``b_j`` is available, *longer* when a baseline squeezed the job
     onto a thin link.  With ``require_comm_fits_comp`` (BACE-Pipe's Alg. 1
     line 13 invariant) a thin edge raises instead.
+
+    On a heterogeneous cluster the grant is typed (``typed_alloc``, or the
+    cluster's deterministic cheapest-first assignment when omitted), and
+    ``t_comp``/``b_j``/the memory floor evaluate against the *bottleneck*
+    granted hardware: an allocation below the floor for its granted types
+    raises even when the reference hardware would have fit.
     """
     g = sum(alloc[r] for r in path)
     if g < 1:
@@ -73,8 +99,42 @@ def build_placement(
     for r in path:
         if alloc[r] < 1:
             raise ValueError(f"pipeline continuity violated: {r} has no GPU")
-    b_need = profile.bandwidth_requirement(g)
-    t_comp = profile.t_comp(g)
+
+    eff_flops = eff_memory = None
+    typed: Dict[str, Mapping[str, int]] = {}
+    if typed_alloc is not None or cluster.is_heterogeneous:
+        if typed_alloc is not None:
+            typed = {r: dict(typed_alloc[r]) for r in path}
+            for r in path:
+                if sum(typed[r].values()) != alloc[r]:
+                    raise ValueError(
+                        f"typed allocation for {r} does not sum to alloc"
+                    )
+        else:
+            typed = {r: cluster.assign_types(r, alloc[r]) for r in path}
+        flops_vals: List[float] = []
+        mem_vals: List[float] = []
+        for r, types in typed.items():
+            for gtype in types:
+                pool = cluster.pool(r, gtype)
+                flops_vals.append(
+                    pool.flops if pool.flops is not None else profile.gpu_flops
+                )
+                mem_vals.append(
+                    pool.memory
+                    if pool.memory is not None
+                    else profile.gpu_memory
+                )
+        eff_flops = min(flops_vals)
+        eff_memory = min(mem_vals)
+        floor = profile.min_gpus_for_memory(eff_memory)
+        if g < floor:
+            raise ValueError(
+                f"allocation of {g} GPUs is below the memory floor {floor} "
+                "for the granted accelerator types"
+            )
+    b_need = profile.bandwidth_requirement_hw(g, eff_flops)
+    t_comp = profile.t_comp_hw(g, eff_flops)
     act = profile.spec.model.activation_bytes
 
     comm_times: List[float] = []
@@ -105,4 +165,7 @@ def build_placement(
         alloc=dict(alloc),
         comm_times=tuple(comm_times),
         reserved_bw=reserved,
+        typed_alloc=typed,
+        eff_flops=eff_flops,
+        eff_memory=eff_memory,
     )

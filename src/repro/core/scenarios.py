@@ -22,6 +22,12 @@ The registry names the regimes the paper's headline claims live in:
   eviction).
 - ``mixed-stress``   — bursty arrivals + random link fluctuation + a price
   spike, all at once.
+- ``hetero-fleet``   — Table II capacities split across mixed accelerator
+  generations (typed h100/a100/v100 pools); timing, memory floors, and
+  Cost-Min pricing run against the granted types.
+- ``spot-churn``     — 40% of every region is discounted spot capacity under
+  seeded hourly reclaim churn; reclaims preempt through the Eq. 5 pool
+  ledger exactly like Eq. 6 bandwidth drops.
 """
 
 from __future__ import annotations
@@ -40,6 +46,7 @@ from .scheduler import (
 from .workloads import (
     bursty_submit_times,
     diurnal_trace,
+    hetero_fleet_cluster,
     link_flap_trace,
     paper_cluster,
     paper_jobs,
@@ -47,6 +54,8 @@ from .workloads import (
     poisson_submit_times,
     price_spike_trace,
     random_fluctuation_trace,
+    spot_fleet_cluster,
+    spot_reclaim_trace,
 )
 
 #: A builder maps (seed, n_jobs, profile_kwargs, job_kwargs) to the
@@ -75,6 +84,12 @@ class Scenario:
     default_n_jobs: int
     builder: _Builder
     restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S
+    #: True ⇒ the cluster has typed GPU pools (heterogeneous generations
+    #: and/or spot capacity).  These scenarios are swept by
+    #: ``benchmarks/hetero_scenarios.py``; ``benchmarks/dynamic_scenarios.py``
+    #: skips them so its single-type CI cells (and the legacy-engine parity
+    #: surface) stay exactly as before.
+    hetero: bool = False
     #: Scenario-default price-aware voluntary-migration threshold (None =
     #: off).  ``run(voluntary_migration_threshold=...)`` overrides it either
     #: way, which is how the benchmarks A/B the stay-put baseline.
@@ -281,6 +296,30 @@ _register(
         voluntary_migration_threshold=0.10,
     )
 )
+def _hetero_fleet(seed: int, n_jobs: int, pk: dict, jk: dict):
+    cluster = hetero_fleet_cluster()
+    submits = poisson_submit_times(
+        n_jobs, mean_interarrival_s=1800.0, seed=seed
+    )
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, submit_times=submits, **jk)
+    return cluster, paper_profiles(jobs, **pk), None
+
+
+def _spot_churn(seed: int, n_jobs: int, pk: dict, jk: dict):
+    cluster = spot_fleet_cluster()
+    jobs = paper_jobs(n_jobs=n_jobs, seed=seed, **jk)
+    # Hourly seeded spot churn: each region's spot pool is independently
+    # reclaimed (fully or half) with probability 25% per hour, restored
+    # otherwise.  Seed decoupled from the job stream, still deterministic.
+    trace = spot_reclaim_trace(
+        cluster,
+        seed=seed + 2000,
+        interval_s=3600.0,
+        horizon_s=86_400.0,
+    )
+    return cluster, paper_profiles(jobs, **pk), trace
+
+
 _register(
     Scenario(
         name="mixed-stress",
@@ -289,5 +328,27 @@ _register(
         dynamic=True,
         default_n_jobs=12,
         builder=_mixed_stress,
+    )
+)
+_register(
+    Scenario(
+        name="hetero-fleet",
+        description="Table II capacities split across mixed accelerator "
+        "generations (h100/a100/v100 typed pools), Poisson arrivals",
+        dynamic=False,
+        default_n_jobs=10,
+        builder=_hetero_fleet,
+        hetero=True,
+    )
+)
+_register(
+    Scenario(
+        name="spot-churn",
+        description="40% of every region is discounted spot capacity under "
+        "hourly seeded reclaim churn (forced preemption via Eq. 5 pools)",
+        dynamic=True,
+        default_n_jobs=8,
+        builder=_spot_churn,
+        hetero=True,
     )
 )

@@ -80,6 +80,22 @@ from .timing import iteration_time, placement_power_rate
 DEFAULT_RESTART_PENALTY_S = 600.0
 
 
+def _reserve_placement(cluster: ClusterState, placement: Placement) -> None:
+    """Reserve a placement's GPUs — per (region, type) when the grant is
+    typed (heterogeneous clusters), by region otherwise."""
+    if placement.typed_alloc:
+        cluster.reserve_gpus_typed(placement.typed_alloc)
+    else:
+        cluster.reserve_gpus(placement.alloc)
+
+
+def _release_placement(cluster: ClusterState, placement: Placement) -> None:
+    if placement.typed_alloc:
+        cluster.release_gpus_typed(placement.typed_alloc)
+    else:
+        cluster.release_gpus(placement.alloc)
+
+
 class SchedulingPolicy(abc.ABC):
     """Order + place: the two decisions every scheduler makes.
 
@@ -285,32 +301,7 @@ class SimulationResult:
             "stall_seconds": {
                 str(j): s for j, s in sorted(self.stall_seconds.items())
             },
-            "records": [
-                {
-                    "job_id": r.job_id,
-                    "model_name": r.model_name,
-                    "submit": r.submit,
-                    "start": r.start,
-                    "finish": r.finish,
-                    "preempted": r.preempted,
-                    "iteration_seconds": r.iteration_seconds,
-                    "placement": {
-                        "path": list(r.placement.path),
-                        "alloc": {
-                            reg: int(n)
-                            for reg, n in sorted(r.placement.alloc.items())
-                        },
-                        "comm_times": list(r.placement.comm_times),
-                        "reserved_bw": {
-                            f"{u}->{v}": b
-                            for (u, v), b in sorted(
-                                r.placement.reserved_bw.items()
-                            )
-                        },
-                    },
-                }
-                for r in self.records
-            ],
+            "records": [self._record_jsonable(r) for r in self.records],
             "events": [[t, kind, i] for t, kind, i in self.events],
         }
         if self.voluntary_migrations:
@@ -319,6 +310,37 @@ class SimulationResult:
                 for j, n in sorted(self.voluntary_migrations.items())
             }
         return out
+
+    @staticmethod
+    def _record_jsonable(r: "JobRecord") -> Dict:
+        placement = {
+            "path": list(r.placement.path),
+            "alloc": {
+                reg: int(n) for reg, n in sorted(r.placement.alloc.items())
+            },
+            "comm_times": list(r.placement.comm_times),
+            "reserved_bw": {
+                f"{u}->{v}": b
+                for (u, v), b in sorted(r.placement.reserved_bw.items())
+            },
+        }
+        # Typed grants serialize only when present, so single-type clusters
+        # keep their historical (golden-pinned) serialization byte-for-byte.
+        if r.placement.typed_alloc:
+            placement["typed_alloc"] = {
+                reg: {t: int(n) for t, n in sorted(types.items())}
+                for reg, types in sorted(r.placement.typed_alloc.items())
+            }
+        return {
+            "job_id": r.job_id,
+            "model_name": r.model_name,
+            "submit": r.submit,
+            "start": r.start,
+            "finish": r.finish,
+            "preempted": r.preempted,
+            "iteration_seconds": r.iteration_seconds,
+            "placement": placement,
+        }
 
 
 # --------------------------------------------------------------- pending set
@@ -354,6 +376,19 @@ class _PendingLedger:
         self._demands.append(profile.demand_at_cap(self._cap))
         self._submits.append(profile.spec.submit_time)
         self._ids.append(job_id)
+
+    def set_cap(self, cluster_cap: int) -> None:
+        """Re-anchor the cached ``b_j`` at ``K*(cluster_cap)``: a spot
+        reclaim moves ``total_gpus`` mid-run, and the Eq. 10 demands were
+        gathered against the old fleet size.  O(n) over the pending queue,
+        and the profiles memoize per-cap, so repeated breakpoints at the
+        same capacity cost dict lookups only.  Static clusters never move
+        their capacity, so this is never called on the parity surface."""
+        if cluster_cap == self._cap:
+            return
+        self._cap = cluster_cap
+        for i, p in enumerate(self._profiles):
+            self._demands[i] = p.demand_at_cap(cluster_cap)
 
     def remove(self, job_id: int) -> None:
         i = self._pos.pop(job_id)
@@ -437,8 +472,11 @@ class Simulator:
     (progress floors to whole finished iterations), releases its GPUs and
     bandwidth, pays ``restart_penalty_s`` of extra execution on its next
     placement, and re-enters the pending queue at its original submit time.
-    Dynamic scenarios are vectorized-engine-only; the legacy reference
-    predates the event types and refuses them.
+    A *spot reclaim* (``EnvUpdate.spot`` shrinking a typed spot pool below
+    its in-use count — the GPU-side Eq. 5 violation) resolves through the
+    identical preempt/settle path, walking ``oversubscribed_pools()`` in
+    sorted order.  Dynamic scenarios are vectorized-engine-only; the legacy
+    reference predates the event types and refuses them.
 
     Price breakpoints reprice every affected running segment's ledger
     (piecewise accounting, ``core/accounting.py``) and — when
@@ -561,7 +599,7 @@ class Simulator:
 
         def preempt(job_id: int, t: float, *, voluntary: bool = False) -> None:
             run = running.pop(job_id)
-            cluster.release_gpus(run.placement.alloc)
+            _release_placement(cluster, run.placement)
             cluster.release_bandwidth(run.placement.reserved_bw)
             rec = run.record
             # Progress floors to whole checkpointed iterations (the leading
@@ -589,6 +627,7 @@ class Simulator:
             now = events[0][0]
             env_changed = False
             prices_changed = False
+            spot_changed = False
             # Drain all events at this timestamp before acting (atomic drain;
             # see the kind-order comment above).  Completions drain before
             # env updates, so a segment finishing exactly at a price
@@ -609,15 +648,19 @@ class Simulator:
                     if run is None or run.gen != ev_gen:
                         continue  # stale: the segment was preempted
                     running.pop(job_id)
-                    cluster.release_gpus(run.placement.alloc)
+                    _release_placement(cluster, run.placement)
                     cluster.release_bandwidth(run.placement.reserved_bw)
                     settle(job_id, run, run.record.finish)
                     log.append((t_ev, "complete", job_id))
                 else:  # _ENV_CHANGE
                     upd = self.trace.updates[payload]
-                    bw_moved, prices_moved = cluster.apply_env_update(upd)
+                    bw_moved, prices_moved, spot_moved = (
+                        cluster.apply_env_update(upd)
+                    )
                     if bw_moved:
                         env_changed = True
+                    if spot_moved:
+                        spot_changed = True
                     if prices_moved:
                         prices_changed = True
                         # Split every affected running segment's ledger at
@@ -661,6 +704,49 @@ class Simulator:
                     )
                     preempt(victim, now)
 
+            # A spot reclaim (or restore) moves the fleet size the Eq. 10
+            # priority demands were normalized against; re-anchor the pending
+            # ledger before anything re-ranks.
+            if spot_changed and ledger is not None:
+                ledger.set_cap(cluster.total_gpus())
+
+            # Spot reclaim: a capacity drop that leaves a (region, type) pool
+            # holding more in-use GPUs than it now has is the GPU-side Eq. 5
+            # violation; resolve it exactly like an over-subscribed link —
+            # walk over-subscribed pools in sorted order, preempt the
+            # latest-started job using each (ties: highest id) until the pool
+            # fits.  Victims route through the same preempt() → SegmentLedger
+            # settle path as bandwidth evictions.
+            if spot_changed:
+                unresolvable_pools: set = set()
+                while True:
+                    over = [
+                        p
+                        for p in cluster.oversubscribed_pools()
+                        if p not in unresolvable_pools
+                    ]
+                    if not over:
+                        break
+                    region, gtype = over[0]
+                    users = [
+                        j
+                        for j, run in running.items()
+                        if run.placement.typed_alloc.get(region, {}).get(
+                            gtype, 0
+                        )
+                        > 0
+                    ]
+                    if not users:
+                        # A pool whose deficit no running job owns (e.g. a
+                        # hand-built used count) cannot be resolved by
+                        # preemption: skip it instead of spinning.
+                        unresolvable_pools.add((region, gtype))
+                        continue
+                    victim = max(
+                        users, key=lambda j: (running[j].record.start, j)
+                    )
+                    preempt(victim, now)
+
             # Price-aware voluntary migration: after a price breakpoint (and
             # after any forced evictions above), each still-running job is
             # offered its best live-priced alternative.  The probe releases
@@ -684,7 +770,7 @@ class Simulator:
                     rem = run.acct.remaining_after_checkpoint(
                         now, remaining[job_id]
                     )
-                    cluster.release_gpus(run.placement.alloc)
+                    _release_placement(cluster, run.placement)
                     cluster.release_bandwidth(run.placement.reserved_bw)
                     alt = place(prof, cluster)
                     move_cost = None
@@ -696,7 +782,7 @@ class Simulator:
                         move_cost = e_alt * placement_power_rate(
                             prof, alt, cluster
                         )
-                    cluster.reserve_gpus(run.placement.alloc)
+                    _reserve_placement(cluster, run.placement)
                     cluster.reserve_bandwidth(run.placement.reserved_bw)
                     if (
                         move_cost is not None
@@ -718,7 +804,7 @@ class Simulator:
                             break  # HoL: the stuck head job blocks the queue
                         continue
                     job_id = prof.spec.job_id
-                    cluster.reserve_gpus(placement.alloc)
+                    _reserve_placement(cluster, placement)
                     cluster.reserve_bandwidth(placement.reserved_bw)
                     t_it = iteration_time(prof, placement)
                     e = remaining[job_id] * t_it  # Eq. (2), remaining work

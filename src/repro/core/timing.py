@@ -30,8 +30,10 @@ from .placement import Placement
 
 
 def bottleneck_delta(profile: JobProfile, placement: Placement) -> float:
-    """Δ_j: the slowest pipeline slot (compute or communication)."""
-    t_comp = profile.t_comp(placement.total_gpus)
+    """Δ_j: the slowest pipeline slot (compute or communication).  Typed
+    placements evaluate compute against the grant's bottleneck hardware
+    (``Placement.eff_flops``); ``None`` is the reference path bit-exactly."""
+    t_comp = profile.t_comp_hw(placement.total_gpus, placement.eff_flops)
     t_comm_max = max(placement.comm_times, default=0.0)
     return max(t_comp, t_comm_max)
 
@@ -43,7 +45,7 @@ def analytic_iteration_time(
     slot per pipeline *stage* (GPUs beyond one-per-layer widen stages rather
     than deepening the pipeline)."""
     g = placement.total_gpus
-    t_comp = profile.t_comp(g)
+    t_comp = profile.t_comp_hw(g, placement.eff_flops)
     m = profile.spec.model.microbatches
     fill_comm = sum(placement.comm_times)
     delta = bottleneck_delta(profile, placement)
@@ -131,7 +133,17 @@ def placement_power_rate(
 ) -> float:
     """Eq. (4)'s $/s term ``Σ_r n_{j,r} · P_r`` at the cluster's *current*
     (live-multiplier) prices — the rate the piecewise segment ledger
-    integrates between env breakpoints."""
+    integrates between env breakpoints.  Typed grants bill each (region,
+    type) cell at its own board power and spot discount (``price_mult``)."""
+    if placement.typed_alloc:
+        total = 0.0
+        for r, types in placement.typed_alloc.items():
+            for gtype, n in types.items():
+                pool = cluster.pool(r, gtype)
+                total += profile.power_cost_rate(
+                    cluster.price(r) * pool.price_mult, n, pool.gpu_kw
+                )
+        return total
     return sum(
         profile.power_cost_rate(cluster.price(r), n)
         for r, n in placement.alloc.items()
@@ -156,8 +168,21 @@ def electricity_cost(
 
 
 def average_price(placement: Placement, cluster: ClusterState) -> float:
-    """Per-GPU mean electricity price of a placement (Alg. 1 line 19)."""
+    """Per-GPU mean electricity price of a placement (Alg. 1 line 19).
+
+    Typed grants rank by the mean *billed* cell rate
+    (``ClusterState.pool_rate``: price × spot discount × board kW) so the
+    Pathfinder's tie-break agrees with the typed Cost-Min pour and with
+    Eq. 4 billing — a cheap-kWh pool of power-hungry boards must not outrank
+    a frugal one.  Candidates are only ever compared within one cluster, so
+    the unit difference against the homogeneous branch (plain $/kWh, the
+    seed-exact path) never mixes."""
     total = 0.0
+    if placement.typed_alloc:
+        for r, types in placement.typed_alloc.items():
+            for gtype, n in types.items():
+                total += cluster.pool_rate(r, gtype) * n
+        return total / placement.total_gpus
     for r, n in placement.alloc.items():
         total += cluster.price(r) * n
     return total / placement.total_gpus

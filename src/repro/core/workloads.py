@@ -13,7 +13,14 @@ import math
 import random
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
-from .cluster import BandwidthTrace, ClusterState, EnvUpdate, Link, Region
+from .cluster import (
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    GpuPool,
+    Link,
+    Region,
+)
 from .job import JobProfile, JobSpec, ModelSpec
 
 # ------------------------------------------------------------------- Table II
@@ -48,6 +55,76 @@ def paper_cluster(
             bandwidth_factor=bandwidth_factor, capacity_factor=capacity_factor
         )
     return cluster
+
+
+# ----------------------------------------------------- heterogeneous fleets
+#: Accelerator generation catalog for the heterogeneous scenarios: effective
+#: FLOP/s, usable memory, and board power per GPU.  "a100" matches the
+#: profile's reference hardware (``job.DEFAULT_GPU_*``); the others bracket
+#: it one generation up/down.
+GPU_CATALOG = {
+    "h100": dict(flops=300e12, memory=80e9, gpu_kw=0.70),
+    "a100": dict(flops=140e12, memory=44e9, gpu_kw=0.30),
+    "v100": dict(flops=60e12, memory=28e9, gpu_kw=0.25),
+}
+
+#: Per-region generation mix of the ``hetero-fleet`` scenario: Table II
+#: capacities split between two generations (fractions of the region's
+#: capacity, newest generation first).  Big cheap regions got refreshed
+#: first; the small expensive ones still run the previous generation.
+HETERO_FLEET_MIX = {
+    "eu-west": (("h100", 0.25), ("a100", 0.75)),
+    "us-east-2": (("h100", 0.50), ("a100", 0.50)),
+    "eu-central": (("v100", 1.0),),
+    "ea-east": (("a100", 0.50), ("v100", 0.50)),
+    "sea-south": (("a100", 0.50), ("v100", 0.50)),
+    "oc-east": (("h100", 0.25), ("a100", 0.75)),
+}
+
+
+def hetero_fleet_cluster() -> ClusterState:
+    """Table II regions/prices/links with mixed accelerator generations: each
+    region's GPU capacity is split per :data:`HETERO_FLEET_MIX` into typed
+    pools drawn from :data:`GPU_CATALOG` (all on-demand)."""
+    regions = []
+    for base in TABLE_II_REGIONS:
+        mix = HETERO_FLEET_MIX[base.name]
+        pools, left = [], base.gpu_capacity
+        for gtype, frac in mix[:-1]:
+            count = int(round(base.gpu_capacity * frac))
+            pools.append(GpuPool(gtype, count, **GPU_CATALOG[gtype]))
+            left -= count
+        gtype = mix[-1][0]
+        pools.append(GpuPool(gtype, left, **GPU_CATALOG[gtype]))
+        regions.append(Region.with_pools(base.name, base.price_kwh, pools))
+    return ClusterState.from_region_bandwidths(regions, TABLE_II_REGION_GBPS)
+
+
+#: Spot discount of the ``spot-churn`` scenario: spot capacity bills at this
+#: fraction of the regional on-demand electricity rate.
+DEFAULT_SPOT_DISCOUNT = 0.35
+
+
+def spot_fleet_cluster(
+    *, spot_fraction: float = 0.4, spot_discount: float = DEFAULT_SPOT_DISCOUNT
+) -> ClusterState:
+    """Table II cluster where ``spot_fraction`` of every region's capacity is
+    reclaimable spot capacity at ``spot_discount ×`` the on-demand rate; the
+    hardware itself is uniform (reference a100-class), so the scenario
+    isolates the spot price/reclaim trade-off from generation mixing."""
+    if not 0.0 < spot_fraction < 1.0:
+        raise ValueError("spot_fraction must be in (0, 1)")
+    regions = []
+    for base in TABLE_II_REGIONS:
+        n_spot = int(round(base.gpu_capacity * spot_fraction))
+        pools = [
+            GpuPool("a100", base.gpu_capacity - n_spot),
+            GpuPool(
+                "a100-spot", n_spot, spot=True, price_mult=spot_discount
+            ),
+        ]
+        regions.append(Region.with_pools(base.name, base.price_kwh, pools))
+    return ClusterState.from_region_bandwidths(regions, TABLE_II_REGION_GBPS)
 
 
 # ------------------------------------------------------------------ Table III
@@ -245,6 +322,48 @@ def random_fluctuation_trace(
                 bandwidth={l: rng.uniform(lo, hi) for l in links},
             )
         )
+        t += interval_s
+    return BandwidthTrace(updates)
+
+
+def spot_reclaim_trace(
+    cluster: ClusterState,
+    *,
+    seed: int = 0,
+    interval_s: float = 3600.0,
+    horizon_s: float = 86_400.0,
+    reclaim_prob: float = 0.25,
+    reclaim_levels: Sequence[float] = (0.0, 0.5),
+) -> BandwidthTrace:
+    """Seeded spot-capacity churn: every ``interval_s`` each spot pool of the
+    cluster independently either gets (partially) reclaimed — multiplier
+    drawn from ``reclaim_levels`` with probability ``reclaim_prob`` — or is
+    restored to its full installed count.  Multipliers are absolute against
+    the installed pool count (no compounding), mirroring the bandwidth
+    traces; reclaims that strand running jobs route through the simulator's
+    forced-preemption pass.  Same seed ⇒ the identical trace (pools are
+    visited in sorted (region, type) order)."""
+    if not 0.0 <= reclaim_prob <= 1.0:
+        raise ValueError("reclaim_prob must be in [0, 1]")
+    for lvl in reclaim_levels:
+        if not 0.0 <= lvl <= 1.0:
+            raise ValueError("reclaim levels must be in [0, 1]")
+    pools = cluster.spot_pools()
+    if not pools:
+        raise ValueError("cluster has no spot pools to reclaim")
+    rng = random.Random(seed)
+    updates: List[EnvUpdate] = []
+    t = interval_s
+    while t <= horizon_s + 1e-9:
+        spot = {}
+        for key in pools:
+            if rng.random() < reclaim_prob:
+                spot[key] = reclaim_levels[
+                    rng.randrange(len(reclaim_levels))
+                ]
+            else:
+                spot[key] = 1.0
+        updates.append(EnvUpdate(time=t, spot=spot))
         t += interval_s
     return BandwidthTrace(updates)
 

@@ -376,3 +376,119 @@ def test_oversubscribed_links_probe():
     assert cluster.oversubscribed_links() == [("a", "b")]
     cluster.set_link_multipliers({("a", "b"): 1.0})
     assert cluster.oversubscribed_links() == []
+
+
+# ------------------------------------------- zero/near-zero-capacity hazards
+def test_placement_feasible_tolerance_is_purely_relative():
+    """Regression: the old ``cap * (1+tol) + 1e-6`` slack let any sub-1e-6
+    overage pass on a 1 B/s link — and *any* tiny reservation pass on a
+    zero-capacity link — masking genuine Eq. 6 violations."""
+    from repro.core import Placement, placement_feasible
+
+    regions = [Region("a", 2, 0.1), Region("b", 2, 0.1)]
+    cluster = ClusterState(
+        regions={r.name: r for r in regions},
+        bandwidth={("a", "b"): 1.0},  # a 1 B/s link, installed directly
+    )
+    over = Placement(
+        path=("a", "b"),
+        alloc={"a": 1, "b": 1},
+        comm_times=(1.0,),
+        reserved_bw={("a", "b"): 1.0 + 5e-7},  # > cap, < old absolute slack
+    )
+    assert not placement_feasible(over, cluster)
+    exact = Placement(
+        path=("a", "b"),
+        alloc={"a": 1, "b": 1},
+        comm_times=(1.0,),
+        reserved_bw={("a", "b"): 1.0},
+    )
+    assert placement_feasible(exact, cluster)
+    # zero-capacity (fully-outaged) link: any positive reservation is
+    # infeasible, however tiny
+    cluster.set_link_multipliers({("a", "b"): 0.0})
+    tiny = Placement(
+        path=("a", "b"),
+        alloc={"a": 1, "b": 1},
+        comm_times=(1.0,),
+        reserved_bw={("a", "b"): 1e-9},
+    )
+    assert not placement_feasible(tiny, cluster)
+
+
+def test_zero_capacity_link_rejects_reservations():
+    """Regression: ``reserve_bandwidth``'s absolute 1e-6 slack admitted tiny
+    reservations onto links a full-outage multiplier had zeroed."""
+    cluster = two_region_cluster()
+    cluster.set_link_multipliers({("a", "b"): 0.0})
+    assert cluster.link_bandwidth("a", "b") == 0.0
+    assert cluster.available_bandwidth("a", "b") == 0.0
+    with pytest.raises(ValueError, match="over-subscription"):
+        cluster.reserve_bandwidth({("a", "b"): 5e-7})
+
+
+def test_full_outage_multiplier_is_division_safe():
+    """A multiplier of exactly 0.0 on every link (or a region's whole
+    installed total) must never divide by zero anywhere in the admission or
+    congestion paths, and the Pathfinder must simply refuse WAN paths."""
+    from repro.core import find_placement
+
+    cluster = two_region_cluster()
+    prof = spanning_profile()
+
+    # total outage: every installed link to zero
+    cluster.set_link_multipliers(
+        {("a", "b"): 0.0, ("b", "a"): 0.0}
+    )
+    assert (cluster.available_matrix() == 0.0).all()
+    # alpha's denominator (the installed total) is now 0: defined as 0.0
+    assert cluster._bw_total == 0.0
+    assert cluster.congestion_alpha() == 0.0
+    # the spanning job needs both regions; with the WAN dark there is no
+    # admissible path and the Pathfinder must return None, not crash
+    assert find_placement(prof, cluster) is None
+    # single-region jobs still place
+    small = JobProfile(
+        JobSpec(9, ModelSpec("s", 4e9, 8, 2048, 8), 5), gpu_flops=300e12
+    )
+    placement = find_placement(small, cluster)
+    assert placement is not None and placement.n_regions == 1
+
+
+def test_outage_trace_preempts_without_division_errors():
+    """End-to-end: a mid-run EnvUpdate zeroing the only WAN link (bandwidth
+    == 0.0 is legal in a trace) must preempt the spanning pipeline through
+    the normal path and leave the job parked until recovery."""
+    prof = spanning_profile()
+    static = simulate(two_region_cluster(), [prof], BACEPipePolicy())
+    finish0 = static.records[0].finish
+    t_drop = 0.4 * finish0
+    t_up = finish0 * 2.0
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(
+                time=t_drop, bandwidth={("a", "b"): 0.0, ("b", "a"): 0.0}
+            ),
+            EnvUpdate(time=t_up, bandwidth=RESTORE_LINKS),
+        ]
+    )
+    res = simulate(
+        two_region_cluster(), [prof], BACEPipePolicy(), trace=trace
+    )
+    kinds = [k for _, k, _ in res.events]
+    assert "preempt" in kinds
+    assert res.migrations == {0: 1}
+    final = [r for r in res.records if not r.preempted][0]
+    assert final.start >= t_up  # nothing placeable while the WAN was dark
+    assert res.costs[0] >= 0.0
+    res2 = simulate(
+        two_region_cluster(), [prof], BACEPipePolicy(), trace=trace
+    )
+    assert res.to_jsonable() == res2.to_jsonable()
+
+
+def test_oversubscribed_links_reports_zeroed_link():
+    cluster = two_region_cluster()
+    cluster.reserve_bandwidth({("a", "b"): cluster.bandwidth[("a", "b")] * 0.5})
+    cluster.set_link_multipliers({("a", "b"): 0.0})
+    assert cluster.oversubscribed_links() == [("a", "b")]

@@ -1,0 +1,456 @@
+"""Typed GPU pools: heterogeneous accelerators + spot capacity.
+
+Covers the (region, type) ledger layout (single-type round-trip bit-exact,
+per-type reserve/release conservation), the typed Cost-Min/Pathfinder
+pricing, granted-hardware timing and memory floors, spot reclaim through the
+forced-preemption path, and the ledger edge-case regressions this PR fixes
+(negative free-count writes, zero-capacity-link tolerances).
+
+Fixed cases always run; a hypothesis sweep widens the conservation property
+when the library is installed (same convention as the other property
+suites).
+"""
+
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    GpuPool,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    build_placement,
+    cost_min_allocate,
+    find_placement,
+    simulate,
+)
+from repro.core.cluster import DEFAULT_GPU_TYPE
+from repro.core.job import (
+    DEFAULT_GPU_FLOPS,
+    DEFAULT_GPU_KW,
+    DEFAULT_GPU_MEMORY,
+)
+from repro.core.timing import (
+    average_price,
+    iteration_time,
+    placement_power_rate,
+)
+from repro.core.workloads import (
+    hetero_fleet_cluster,
+    paper_cluster,
+    spot_fleet_cluster,
+    spot_reclaim_trace,
+)
+
+
+def _plain_cluster() -> ClusterState:
+    regions = [Region("a", 8, 0.10), Region("b", 6, 0.20), Region("c", 4, 0.15)]
+    gbps = {("a", "b"): 50.0, ("b", "c"): 50.0, ("a", "c"): 50.0}
+    return ClusterState.build(regions, gbps, symmetric=True)
+
+
+def _hetero_cluster() -> ClusterState:
+    regions = [
+        Region.with_pools(
+            "a",
+            0.10,
+            [
+                GpuPool("h100", 4, flops=300e12, memory=80e9, gpu_kw=0.7),
+                GpuPool("spot", 4, spot=True, price_mult=0.35),
+            ],
+        ),
+        Region.with_pools("b", 0.20, [GpuPool("a100", 6)]),
+        Region("c", 4, 0.15),
+    ]
+    gbps = {("a", "b"): 50.0, ("b", "c"): 50.0, ("a", "c"): 50.0}
+    return ClusterState.build(regions, gbps, symmetric=True)
+
+
+def _profile(iters: int = 20) -> JobProfile:
+    return JobProfile(
+        JobSpec(0, ModelSpec("m", 8e9, 24, 4096, 32), iters),
+        gpu_memory=400e9,
+    )
+
+
+# ---------------------------------------------------- typed-ledger round-trip
+def test_single_type_layout_is_one_default_column():
+    cluster = _plain_cluster()
+    assert not cluster.is_heterogeneous
+    assert cluster._cap_t.shape == (3, 1)
+    for r in cluster.region_names():
+        assert cluster.gpu_types(r) == [DEFAULT_GPU_TYPE]
+        assert cluster.capacity_typed(r) == {
+            DEFAULT_GPU_TYPE: cluster.regions[r].gpu_capacity
+        }
+        assert cluster.free_gpus_typed(r) == {
+            DEFAULT_GPU_TYPE: cluster.free_gpus[r]
+        }
+
+
+def _reference_ledger_walk(ops):
+    """Drive the same op sequence through the typed cluster and a pure dict
+    model; the aggregates must stay bit-identical (ints, so bit == value)."""
+    cluster = _plain_cluster()
+    ref = {r: cluster.regions[r].gpu_capacity for r in cluster.regions}
+    for kind, region, n in ops:
+        if kind == "reserve":
+            ok_ref = 0 <= n <= ref[region]
+            try:
+                cluster.reserve_gpus({region: n})
+                assert ok_ref
+                ref[region] -= n
+            except ValueError:
+                assert not ok_ref
+        else:
+            cap = cluster.regions[region].gpu_capacity
+            ok_ref = ref[region] + n <= cap
+            try:
+                cluster.release_gpus({region: n})
+                assert ok_ref
+                ref[region] += n
+            except ValueError:
+                assert not ok_ref
+    for r, free in ref.items():
+        assert cluster.free_gpus[r] == free
+        assert cluster.free_gpus_typed(r) == {DEFAULT_GPU_TYPE: free}
+    assert cluster.total_free_gpus() == sum(ref.values())
+
+
+FIXED_OP_SEQUENCES = [
+    [("reserve", "a", 3), ("reserve", "b", 6), ("release", "a", 3)],
+    [("reserve", "a", 8), ("release", "a", 9)],  # over-release rejected
+    [("reserve", "c", 4), ("release", "c", 2), ("reserve", "c", 2)],
+    [("reserve", "a", 9)],  # over-reserve rejected
+    [("reserve", "b", 2), ("reserve", "b", 2), ("release", "b", 4)],
+]
+
+
+@pytest.mark.parametrize("ops", FIXED_OP_SEQUENCES)
+def test_single_type_round_trip_fixed(ops):
+    _reference_ledger_walk(ops)
+
+
+def test_single_type_round_trip_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        st.lists(
+            st.tuples(
+                st.sampled_from(["reserve", "release"]),
+                st.sampled_from(["a", "b", "c"]),
+                st.integers(min_value=0, max_value=10),
+            ),
+            max_size=30,
+        )
+    )
+    @hyp.settings(deadline=None, max_examples=100)
+    def run(ops):
+        _reference_ledger_walk(ops)
+
+    run()
+
+
+def test_snapshot_round_trips_typed_state():
+    cluster = _hetero_cluster()
+    cluster.reserve_gpus_typed({"a": {"spot": 3, "h100": 1}, "b": {"a100": 2}})
+    cluster.set_spot_multipliers({("a", "spot"): 0.5})
+    snap = cluster.snapshot()
+    assert (snap._cap_t == cluster._cap_t).all()
+    assert (snap._used_t == cluster._used_t).all()
+    assert snap.total_gpus() == cluster.total_gpus()
+    assert snap.total_free_gpus() == cluster.total_free_gpus()
+    for r in cluster.region_names():
+        assert snap.free_gpus_typed(r) == cluster.free_gpus_typed(r)
+    assert snap.oversubscribed_pools() == cluster.oversubscribed_pools()
+
+
+# -------------------------------------------------- per-type conservation
+def test_typed_reserve_release_conservation():
+    cluster = _hetero_cluster()
+    cap0 = {r: cluster.capacity_typed(r) for r in cluster.region_names()}
+    rng = random.Random(7)
+    held = []
+    for _ in range(50):
+        if held and rng.random() < 0.4:
+            alloc = held.pop(rng.randrange(len(held)))
+            cluster.release_gpus_typed(alloc)
+            continue
+        r = rng.choice(cluster.region_names())
+        free = cluster.free_gpus_typed(r)
+        types = [t for t, f in free.items() if f > 0]
+        if not types:
+            continue
+        t = rng.choice(types)
+        n = rng.randint(1, free[t])
+        alloc = {r: {t: n}}
+        cluster.reserve_gpus_typed(alloc)
+        held.append(alloc)
+    # conservation: free + in-use == capacity, per (region, type)
+    for r in cluster.region_names():
+        free = cluster.free_gpus_typed(r)
+        used = {}
+        for alloc in held:
+            for t, n in alloc.get(r, {}).items():
+                used[t] = used.get(t, 0) + n
+        for t, cap in cap0[r].items():
+            assert free[t] + used.get(t, 0) == cap
+    for alloc in held:
+        cluster.release_gpus_typed(alloc)
+    for r in cluster.region_names():
+        assert cluster.free_gpus_typed(r) == cap0[r]
+    assert cluster.total_free_gpus() == cluster.total_gpus()
+
+
+def test_typed_over_release_raises():
+    cluster = _hetero_cluster()
+    cluster.reserve_gpus_typed({"a": {"h100": 2}})
+    with pytest.raises(ValueError, match="over-release"):
+        cluster.release_gpus_typed({"a": {"h100": 3}})
+    # all-or-nothing: the failed release left the ledger untouched
+    assert cluster.free_gpus_typed("a")["h100"] == 2
+    with pytest.raises(KeyError):
+        cluster.release_gpus_typed({"a": {"nope": 1}})
+
+
+def test_untyped_reserve_takes_cheapest_cells_first():
+    cluster = _hetero_cluster()
+    # region a: spot (0.35 * 0.30 kW) is cheaper than h100 (1.0 * 0.7 kW)
+    assert cluster.gpu_types("a") == ["spot", "h100"]
+    cluster.reserve_gpus({"a": 5})
+    assert cluster.free_gpus_typed("a") == {"spot": 0, "h100": 3}
+    cluster.release_gpus({"a": 5})
+    assert cluster.free_gpus_typed("a") == {"spot": 4, "h100": 4}
+
+
+# ----------------------------------------------------- ledger regressions
+def test_free_gpu_setitem_rejects_negative_counts():
+    cluster = _plain_cluster()
+    with pytest.raises(ValueError, match="negative free-GPU count"):
+        cluster.free_gpus["a"] = -1
+    # the running total survived the rejected write
+    assert cluster.total_free_gpus() == 18
+    cluster.free_gpus["a"] = 0  # zero stays legal (region-outage tests)
+    assert cluster.total_free_gpus() == 10
+
+
+def test_free_gpu_setitem_ambiguous_on_multi_pool_region():
+    cluster = _hetero_cluster()
+    with pytest.raises(TypeError, match="typed"):
+        cluster.free_gpus["a"] = 3
+    cluster.free_gpus["b"] = 2  # single-pool regions keep the aggregate API
+    assert cluster.free_gpus_typed("b") == {"a100": 2}
+
+
+# --------------------------------------------------- typed pricing/timing
+def test_cost_min_pours_into_cheapest_cells_globally():
+    cluster = _hetero_cluster()
+    # cell rates: a/spot 0.0105 < b/a100 0.060 < a/h100 0.070 — the surplus
+    # drains a's spot pool, then overflows into b's cheaper a100s, leaving
+    # a's pricey h100s for the pinned continuity GPU only.
+    alloc = cost_min_allocate(cluster, ["b", "a"], 8)
+    assert alloc == {"b": 4, "a": 4}
+    placement = build_placement(cluster=cluster, profile=_profile(),
+                                path=["b", "a"], alloc=alloc)
+    assert placement.typed_alloc["a"] == {"spot": 4}
+    assert placement.typed_alloc["b"] == {"a100": 4}
+
+
+def test_placement_effective_hardware_is_bottleneck():
+    cluster = _hetero_cluster()
+    prof = _profile()
+    placement = build_placement(
+        cluster=cluster, profile=prof, path=["a"], alloc={"a": 8}
+    )
+    # granted: 4 spot (profile-default hw) + 4 h100 -> bottleneck flops is
+    # the profile default, bottleneck memory is the h100's 80 GB
+    assert placement.eff_flops == prof.gpu_flops
+    assert placement.eff_memory == 80e9
+    # h100-only grant runs faster than the same GPU count at reference hw
+    fast = build_placement(
+        cluster=cluster,
+        profile=prof,
+        path=["a"],
+        alloc={"a": 4},
+        typed_alloc={"a": {"h100": 4}},
+    )
+    assert fast.eff_flops == 300e12
+    ref = build_placement(
+        cluster=cluster,
+        profile=prof,
+        path=["a"],
+        alloc={"a": 4},
+        typed_alloc={"a": {"spot": 4}},
+    )
+    assert iteration_time(prof, fast) < iteration_time(prof, ref)
+
+
+def test_power_rate_honours_spot_discount_and_board_power():
+    cluster = _hetero_cluster()
+    prof = _profile()
+    spot = build_placement(
+        cluster=cluster, profile=prof, path=["a"], alloc={"a": 4},
+        typed_alloc={"a": {"spot": 4}},
+    )
+    h100 = build_placement(
+        cluster=cluster, profile=prof, path=["a"], alloc={"a": 4},
+        typed_alloc={"a": {"h100": 4}},
+    )
+    rate_spot = placement_power_rate(prof, spot, cluster)
+    rate_h100 = placement_power_rate(prof, h100, cluster)
+    assert rate_spot == pytest.approx(
+        0.10 * 0.35 * DEFAULT_GPU_KW * 4 / 3600.0
+    )
+    assert rate_h100 == pytest.approx(0.10 * 1.0 * 0.7 * 4 / 3600.0)
+    assert average_price(spot, cluster) < average_price(h100, cluster)
+
+
+def test_memory_floor_evaluates_against_granted_type():
+    # 28 GB v100s cannot hold what reference-memory GPUs can at the same k.
+    regions = [
+        Region.with_pools(
+            "v", 0.10, [GpuPool("v100", 8, flops=60e12, memory=28e9,
+                                gpu_kw=0.25)]
+        ),
+        Region("ref", 8, 0.10),
+    ]
+    cluster = ClusterState.build(regions, {("v", "ref"): 50.0}, symmetric=True)
+    prof = JobProfile(JobSpec(0, ModelSpec("m", 20e9, 40, 4096, 32), 10))
+    floor_ref = prof.min_gpus
+    floor_v100 = prof.min_gpus_for_memory(28e9)
+    assert floor_v100 > floor_ref
+    k = floor_ref
+    build_placement(  # reference pool fits at its floor
+        cluster=cluster, profile=prof, path=["ref"], alloc={"ref": k}
+    )
+    with pytest.raises(ValueError, match="memory floor"):
+        build_placement(
+            cluster=cluster, profile=prof, path=["v"], alloc={"v": k}
+        )
+
+
+def test_find_placement_on_hetero_cluster_is_typed_and_feasible():
+    cluster = hetero_fleet_cluster()
+    prof = _profile()
+    placement = find_placement(prof, cluster)
+    assert placement is not None and placement.typed_alloc
+    for r, n in placement.alloc.items():
+        assert sum(placement.typed_alloc[r].values()) == n
+    # granted cells actually exist and fit their free counts
+    for r, types in placement.typed_alloc.items():
+        free = cluster.free_gpus_typed(r)
+        for t, n in types.items():
+            assert 0 < n <= free[t]
+
+
+# --------------------------------------------------------- spot reclaim
+def test_spot_multiplier_validation_and_oversubscription():
+    cluster = _hetero_cluster()
+    with pytest.raises(ValueError, match="not spot"):
+        cluster.set_spot_multipliers({("a", "h100"): 0.5})
+    with pytest.raises(KeyError):
+        cluster.set_spot_multipliers({("a", "nope"): 0.5})
+    cluster.reserve_gpus_typed({"a": {"spot": 4}})
+    cluster.set_spot_multipliers({("a", "spot"): 0.25})  # cap 4 -> 1
+    assert cluster.capacity_typed("a")["spot"] == 1
+    assert cluster.oversubscribed_pools() == [("a", "spot")]
+    assert cluster.free_gpus_typed("a")["spot"] == 0
+    assert cluster.total_gpus() == 8 + 6 + 4 - 3
+    # the running job still owns 4; releasing settles the deficit
+    cluster.release_gpus_typed({"a": {"spot": 4}})
+    assert cluster.oversubscribed_pools() == []
+    assert cluster.free_gpus_typed("a")["spot"] == 1
+    cluster.set_spot_multipliers({("a", "spot"): 1.0})
+    assert cluster.free_gpus_typed("a")["spot"] == 4
+
+
+def test_env_update_spot_routes_through_forced_preemption():
+    regs = [
+        Region.with_pools(
+            "a",
+            0.10,
+            [
+                GpuPool("h100", 8, flops=300e12, memory=80e9, gpu_kw=0.7),
+                GpuPool("spot", 8, spot=True, price_mult=0.35),
+            ],
+        ),
+        Region.with_pools("b", 0.20, [GpuPool("a100", 12)]),
+    ]
+    cluster = ClusterState.build(regs, {("a", "b"): 50.0}, symmetric=True)
+    prof = JobProfile(
+        JobSpec(0, ModelSpec("m", 8e9, 24, 4096, 32), 2000),
+        gpu_memory=400e9,
+    )
+    trace = BandwidthTrace(
+        [
+            EnvUpdate(time=200.0, spot={("a", "spot"): 0.0}),
+            EnvUpdate(time=5000.0, spot={("a", "spot"): 1.0}),
+        ]
+    )
+    res = simulate(cluster, [prof], BACEPipePolicy(), trace=trace)
+    kinds = [k for _, k, _ in res.events]
+    assert "preempt" in kinds  # the reclaim evicted the running segment
+    assert res.migrations == {0: 1}
+    assert res.forced_migrations == {0: 1}
+    # the re-placed segment avoided the reclaimed pool
+    final = [r for r in res.records if not r.preempted][0]
+    assert final.placement.typed_alloc.get("a", {}).get("spot", 0) == 0
+    # settle-path invariants: non-negative segment costs partitioning totals
+    for rec in res.records:
+        assert rec.cost >= 0.0
+    assert sum(r.cost for r in res.records) == pytest.approx(
+        res.total_cost, rel=1e-9
+    )
+    # determinism
+    res2 = simulate(cluster, [prof], BACEPipePolicy(), trace=trace)
+    assert res.to_jsonable() == res2.to_jsonable()
+
+
+def test_spot_reclaim_trace_is_seeded_and_absolute():
+    cluster = spot_fleet_cluster()
+    t1 = spot_reclaim_trace(cluster, seed=3, horizon_s=4 * 3600.0)
+    t2 = spot_reclaim_trace(cluster, seed=3, horizon_s=4 * 3600.0)
+    assert [u.spot for u in t1] == [u.spot for u in t2]
+    assert all(
+        0.0 <= m <= 1.0 for u in t1 for m in u.spot.values()
+    )
+    with pytest.raises(ValueError, match="no spot pools"):
+        spot_reclaim_trace(paper_cluster())
+
+
+def test_scaled_and_single_type_parity_of_hetero_machinery():
+    # scaled() carries pools and spot multipliers through
+    cluster = _hetero_cluster()
+    cluster.set_spot_multipliers({("a", "spot"): 0.5})
+    half = cluster.scaled(capacity_factor=0.5)
+    assert half.capacity_typed("a") == {"spot": 1, "h100": 2}
+    assert half.pool("a", "spot").price_mult == 0.35
+    # a plain cluster stays on the homogeneous (untyped) paths end to end
+    plain = paper_cluster()
+    prof = _profile()
+    placement = find_placement(prof, plain)
+    assert placement is not None
+    assert placement.typed_alloc == {}
+    assert placement.eff_flops is None and placement.eff_memory is None
+
+
+def test_gpu_pool_and_region_validation():
+    with pytest.raises(ValueError):
+        GpuPool("x", -1)
+    with pytest.raises(ValueError):
+        GpuPool("x", 1, flops=-1.0)
+    with pytest.raises(ValueError):
+        Region.with_pools("r", 0.1, [GpuPool("x", 1), GpuPool("x", 2)])
+    with pytest.raises(ValueError, match="sum to"):
+        Region("r", 5, 0.1, pools=(GpuPool("x", 1), GpuPool("y", 2)))
+    with pytest.raises(ValueError):
+        EnvUpdate(time=0.0, spot={("a", "x"): -0.5})
