@@ -1,31 +1,52 @@
-"""Scheduler scaling sweep: vectorized vs legacy engine (BENCH trajectory).
+"""Scheduler scaling sweep: engines × decision backends (BENCH trajectory).
 
 Sweeps the control-plane simulator over jobs ∈ {64, 256, 1024} × regions ∈
-{9, 32, 64} with the BACE-Pipe policy, timing one full ``simulate()`` per
-(cell, engine).  ``us_per_call`` is wall-clock microseconds per *scheduled
+{9, 32, 64} plus one large cell at 10 000 jobs × 256 regions with the
+BACE-Pipe policy, timing one full ``Simulator.run()`` per (cell, engine,
+backend, seed).  ``us_per_call`` is wall-clock microseconds per *scheduled
 job* — the online decision an operator's control plane makes at every
-arrival/completion — so cells of different sizes are comparable.
+arrival/completion — so cells of different sizes are comparable.  The timer
+covers ``run()`` only: cluster/workload construction and ``Simulator``
+setup (including the cluster snapshot) happen outside it.
 
-Emits the usual CSV rows plus ``BENCH_scheduler.json`` at the repo root with
-per-cell timings for both engines; ``scripts/bench_compare.py`` diffs two
-such files and gates on regression.  The legacy engine is the seed
-implementation preserved in ``repro.core.legacy`` (recompute-per-call
-ordering, dict-ledger Prim pathfinding); per-cell makespans are asserted
-identical across engines, so the speedup is measured on provably equivalent
-work.
+Three variants are timed per cell:
 
-Usage:  PYTHONPATH=src python -m benchmarks.scheduler_scaling [--quick]
+- ``vectorized``/``numpy``  — incremental engine, numpy decision kernels;
+- ``vectorized``/``jax``    — same engine, jitted kernels from
+  ``core/kernels_decide`` (skipped when jax is not importable);
+- ``legacy``/``numpy``      — the preserved seed implementation
+  (``repro.core.legacy``), timed only up to 1024 jobs × 64 regions: its
+  per-pass recomputation is quadratic-or-worse, so the 10k × 256 cell is
+  intractable and recorded under ``skipped`` in the JSON instead.
+
+Per-cell, per-seed makespans are asserted identical across every variant
+run, so the speedups are measured on provably equivalent work.  ``--seeds
+N`` repeats each cell over workload seeds 0..N-1 and reports the mean;
+``--quick`` restricts the grid for CI smoke runs (and does not rewrite the
+checked-in baseline).
+
+Emits the usual CSV rows plus ``BENCH_scheduler.json`` at the repo root;
+``scripts/bench_compare.py`` diffs two such files and gates on regression.
+
+Usage:  PYTHONPATH=src python -m benchmarks.scheduler_scaling
+            [--quick] [--seeds N]
 """
 
 from __future__ import annotations
 
+import argparse
 import json
-import sys
 import time
 from pathlib import Path
-from typing import Dict, List
+from typing import Dict, List, Tuple
 
-from repro.core import BACEPipePolicy, ClusterState, Region, simulate
+from repro.core import (
+    BACEPipePolicy,
+    ClusterState,
+    Region,
+    Simulator,
+    jax_available,
+)
 from repro.core.job import JobProfile
 from repro.core.workloads import paper_jobs
 
@@ -35,6 +56,14 @@ JOB_COUNTS = (64, 256, 1024)
 REGION_COUNTS = (9, 32, 64)
 QUICK_JOB_COUNTS = (64, 256)
 QUICK_REGION_COUNTS = (9, 32)
+
+#: The large-regime cell (jobs, regions) appended after the dense grid.
+BIG_CELL = (10_000, 256)
+
+#: Largest (jobs, regions) the legacy seed engine is still timed at.  Above
+#: this the cell is recorded under ``skipped`` in the JSON.
+LEGACY_MAX_JOBS = 1024
+LEGACY_MAX_REGIONS = 64
 
 #: Inter-arrival gap (s).  Short against multi-hour job runtimes, so the
 #: pending queue builds toward the job count — the regime where the seed
@@ -53,7 +82,7 @@ BENCH_PATH = Path(__file__).resolve().parents[1] / "BENCH_scheduler.json"
 def synth_cluster(n_regions: int) -> ClusterState:
     regions = [
         Region(
-            name=f"r{i:02d}",
+            name=f"r{i:03d}",
             gpu_capacity=_CAPACITIES[i % len(_CAPACITIES)],
             price_kwh=_PRICES[i % len(_PRICES)],
         )
@@ -63,87 +92,232 @@ def synth_cluster(n_regions: int) -> ClusterState:
     return ClusterState.from_region_bandwidths(regions, gbps)
 
 
-def synth_profiles(n_jobs: int) -> List[JobProfile]:
+def synth_profiles(n_jobs: int, seed: int = 0) -> List[JobProfile]:
     jobs = paper_jobs(
         n_jobs=n_jobs,
-        seed=0,
+        seed=seed,
         submit_times=[i * ARRIVAL_GAP_S for i in range(n_jobs)],
     )
     return [JobProfile(j, gpu_flops=BENCH_GPU_FLOPS) for j in jobs]
 
 
-def _time_cell(n_jobs: int, n_regions: int, engine: str) -> Dict[str, float]:
+def _warm_jax(n_regions: int) -> None:
+    """Trigger jit compilation for this region count before any timed run.
+
+    The jitted Prim kernel compiles per (region count, decay-table bucket),
+    so invoke it once untimed for every distinct bucket the workload's
+    model mix produces at this cluster size; the timed cell then measures
+    steady-state dispatch, not one-off tracing.  (A tiny warm-up
+    *simulation* would not do: on an empty cluster every job places via
+    the numpy Phase 1 and the Prim kernel never runs.)"""
+    import numpy as np
+
+    from repro.core.kernels_decide import decay_table_len, prim_expand
+
     cluster = synth_cluster(n_regions)
-    profiles = synth_profiles(n_jobs)
-    t0 = time.perf_counter()
-    res = simulate(cluster, profiles, BACEPipePolicy(), engine=engine)
-    wall = time.perf_counter() - t0
-    assert len(res.records) == n_jobs
+    total = cluster.total_gpus()
+    # find_placement compacts the frontier to the free-region subgraph,
+    # padded to buckets of 32 (capped at the region count), so the kernel
+    # is compiled per (padded shape, decay-table bucket) — warm them all.
+    pads = sorted(
+        {min(n_regions, p) for p in range(32, n_regions + 32, 32)}
+        | {n_regions}
+    )
+    warmed = set()
+    for prof in synth_profiles(8):
+        k = max(prof.optimal_gpus(total), prof.min_gpus)
+        table_len = decay_table_len(k)
+        for pad in pads:
+            if (table_len, pad) in warmed:
+                continue
+            warmed.add((table_len, pad))
+            prim_expand(
+                np.zeros((pad, pad)),
+                np.ones(pad, dtype=cluster._free.dtype),
+                np.arange(pad, dtype=cluster._name_rank.dtype),
+                np.full(pad, prof.gpu_flops),
+                prof.decay_table(table_len),
+                prof.fwd_flops_per_microbatch,
+                prof.stage_overhead,
+                prof.spec.model.activation_bytes,
+                k,
+                backend="jax",
+            )
+
+
+def _time_cell(
+    n_jobs: int,
+    n_regions: int,
+    engine: str,
+    backend: str,
+    seeds: Tuple[int, ...],
+) -> Dict[str, object]:
+    walls: List[float] = []
+    makespans: List[float] = []
+    avg_jct = 0.0
+    for seed in seeds:
+        cluster = synth_cluster(n_regions)
+        profiles = synth_profiles(n_jobs, seed=seed)
+        sim = Simulator(
+            cluster,
+            profiles,
+            BACEPipePolicy(),
+            engine=engine,
+            decision_backend=backend,
+        )
+        t0 = time.perf_counter()
+        res = sim.run()
+        walls.append(time.perf_counter() - t0)
+        assert len(res.records) == n_jobs
+        makespans.append(res.makespan)
+        if seed == seeds[0]:
+            avg_jct = res.average_jct
+    mean_wall = sum(walls) / len(walls)
     return {
         "jobs": n_jobs,
         "regions": n_regions,
         "engine": engine,
-        "wall_s": wall,
-        "us_per_call": 1e6 * wall / n_jobs,
-        "makespan_s": res.makespan,
-        "avg_jct_s": res.average_jct,
+        "backend": backend,
+        "seeds": len(seeds),
+        "wall_s": mean_wall,
+        "us_per_call": 1e6 * mean_wall / n_jobs,
+        "makespan_s": makespans[0],
+        "makespans_by_seed": makespans,
+        "avg_jct_s": avg_jct,
     }
 
 
-def run(*, quick: bool = False) -> List[str]:
+def _cell_variants(n_jobs: int, n_regions: int, have_jax: bool):
+    """(engine, backend) variants timed for a cell, reference path first."""
+    variants = [("vectorized", "numpy")]
+    if have_jax:
+        variants.append(("vectorized", "jax"))
+    if n_jobs <= LEGACY_MAX_JOBS and n_regions <= LEGACY_MAX_REGIONS:
+        variants.append(("legacy", "numpy"))
+    return variants
+
+
+def run(*, quick: bool = False, n_seeds: int = 1) -> List[str]:
     job_counts = QUICK_JOB_COUNTS if quick else JOB_COUNTS
     region_counts = QUICK_REGION_COUNTS if quick else REGION_COUNTS
+    grid = [(j, r) for j in job_counts for r in region_counts]
+    if not quick:
+        grid.append(BIG_CELL)
+    seeds = tuple(range(n_seeds))
+    have_jax = jax_available()
     rows: List[str] = []
-    cells: List[Dict[str, float]] = []
-    for n_jobs in job_counts:
-        for n_regions in region_counts:
-            vec = _time_cell(n_jobs, n_regions, "vectorized")
-            leg = _time_cell(n_jobs, n_regions, "legacy")
-            if vec["makespan_s"] != leg["makespan_s"]:
+    cells: List[Dict[str, object]] = []
+    skipped: List[Dict[str, object]] = []
+    warmed: set = set()
+    for n_jobs, n_regions in grid:
+        measured: List[Dict[str, object]] = []
+        for engine, backend in _cell_variants(n_jobs, n_regions, have_jax):
+            if backend == "jax" and n_regions not in warmed:
+                _warm_jax(n_regions)
+                warmed.add(n_regions)
+            measured.append(
+                _time_cell(n_jobs, n_regions, engine, backend, seeds)
+            )
+        base = measured[0]
+        for m in measured[1:]:
+            if m["makespans_by_seed"] != base["makespans_by_seed"]:
                 raise AssertionError(
-                    f"engine divergence at jobs={n_jobs} regions={n_regions}: "
-                    f"{vec['makespan_s']} != {leg['makespan_s']}"
+                    f"variant divergence at jobs={n_jobs} "
+                    f"regions={n_regions}: {m['engine']}/{m['backend']} "
+                    f"{m['makespans_by_seed']} != vectorized/numpy "
+                    f"{base['makespans_by_seed']}"
                 )
-            cells.extend([vec, leg])
-            speedup = leg["us_per_call"] / vec["us_per_call"]
-            for m in (vec, leg):
-                rows.append(
-                    f"scheduler_scaling/j{n_jobs}xr{n_regions}/{m['engine']},"
-                    f"{m['us_per_call']:.1f},"
-                    f"wall_s={m['wall_s']:.3f};speedup={speedup:.2f}"
-                )
+        if n_jobs > LEGACY_MAX_JOBS or n_regions > LEGACY_MAX_REGIONS:
+            skipped.append(
+                {
+                    "jobs": n_jobs,
+                    "regions": n_regions,
+                    "engine": "legacy",
+                    "reason": (
+                        "legacy seed engine recomputes per pass "
+                        "(quadratic-or-worse); intractable above "
+                        f"{LEGACY_MAX_JOBS}x{LEGACY_MAX_REGIONS}"
+                    ),
+                }
+            )
+        cells.extend(measured)
+        for m in measured:
+            speedup = base["us_per_call"] / m["us_per_call"]
+            rows.append(
+                f"scheduler_scaling/j{n_jobs}xr{n_regions}"
+                f"/{m['engine']}-{m['backend']},"
+                f"{m['us_per_call']:.1f},"
+                f"wall_s={m['wall_s']:.3f};vs_vec_numpy={speedup:.2f}"
+            )
     if quick:
         # Quick mode is a smoke run: don't clobber the full-sweep baseline
         # that bench_compare gates against.
         rows.append(f"# quick mode: {BENCH_PATH.name} not written")
         return rows
-    payload = {
+    payload: Dict[str, object] = {
         "benchmark": "scheduler_scaling",
         "policy": "bace-pipe",
-        "us_per_call_definition": "1e6 * simulate_wall_s / n_jobs",
+        "us_per_call_definition": (
+            "1e6 * run_wall_s / n_jobs; wall clock covers Simulator.run() "
+            "only (cluster/workload/Simulator construction excluded); "
+            "mean over seeds"
+        ),
         "arrival_gap_s": ARRIVAL_GAP_S,
+        "seeds": n_seeds,
         "cells": cells,
+        "skipped": skipped,
     }
-    big = [
-        c
-        for c in cells
-        if c["jobs"] == max(job_counts) and c["regions"] == max(region_counts)
-    ]
-    if len(big) == 2:
-        by_engine = {c["engine"]: c for c in big}
+
+    def _find(jobs: int, regions: int, engine: str, backend: str):
+        for c in cells:
+            if (c["jobs"], c["regions"], c["engine"], c["backend"]) == (
+                jobs,
+                regions,
+                engine,
+                backend,
+            ):
+                return c
+        return None
+
+    # Engine speedup at the biggest cell where legacy is still timed.
+    leg = _find(LEGACY_MAX_JOBS, LEGACY_MAX_REGIONS, "legacy", "numpy")
+    vec = _find(LEGACY_MAX_JOBS, LEGACY_MAX_REGIONS, "vectorized", "numpy")
+    if leg and vec:
         payload["speedup_biggest_cell"] = (
-            by_engine["legacy"]["us_per_call"]
-            / by_engine["vectorized"]["us_per_call"]
+            leg["us_per_call"] / vec["us_per_call"]
         )
+    # Backend speedup at the large-regime cell (numpy / jax us_per_call).
+    if have_jax:
+        np_big = _find(*BIG_CELL, "vectorized", "numpy")
+        jx_big = _find(*BIG_CELL, "vectorized", "jax")
+        if np_big and jx_big:
+            payload["jax_speedup_biggest_cell"] = (
+                np_big["us_per_call"] / jx_big["us_per_call"]
+            )
     BENCH_PATH.write_text(json.dumps(payload, indent=2) + "\n")
     rows.append(f"# wrote {BENCH_PATH}")
     return rows
 
 
 def main() -> None:
-    quick = "--quick" in sys.argv[1:]
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--quick",
+        action="store_true",
+        help="small grid, no BENCH_scheduler.json rewrite (CI smoke)",
+    )
+    ap.add_argument(
+        "--seeds",
+        type=int,
+        default=1,
+        metavar="N",
+        help="workload seeds 0..N-1 per cell; us_per_call is the mean",
+    )
+    args = ap.parse_args()
+    if args.seeds < 1:
+        ap.error("--seeds must be >= 1")
     print("name,us_per_call,derived")
-    for row in run(quick=quick):
+    for row in run(quick=args.quick, n_seeds=args.seeds):
         print(row)
 
 

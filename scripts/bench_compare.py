@@ -3,26 +3,34 @@
 
 Usage:
     python scripts/bench_compare.py OLD.json NEW.json [--threshold 0.20]
-                                    [--relative]
+                                    [--relative] [--new-cells-ok]
 
-Matches cells by (jobs, regions, engine) and compares ``us_per_call``.  Any
-matched cell in NEW that is more than ``threshold`` (default 20%) slower than
-in OLD fails the gate: the script prints a per-cell table and exits nonzero,
-so CI (or the next PR's driver) can refuse the change.  Cells present in only
-one file are reported but do not fail the gate — sweeps are allowed to grow.
+Matches cells by (jobs, regions, engine, backend) and compares
+``us_per_call``.  Cells written before the decision-backend seam carry no
+``backend`` field and default to ``"numpy"``, so old baselines keep
+matching.  Any matched cell in NEW that is more than ``threshold`` (default
+20%) slower than in OLD fails the gate: the script prints a per-cell table
+and exits nonzero, so CI (or the next PR's driver) can refuse the change.
+Cells present in only one file are reported but do not fail the gate —
+sweeps are allowed to grow.
 
-``--relative`` compares the per-(jobs, regions) *speedup* (legacy /
-vectorized ``us_per_call``, both measured within the same run) instead of
-absolute timings.  Speedup is machine-portable, so this is the mode for CI,
-where NEW comes from a shared runner while the checked-in baseline was
-measured elsewhere: the gate fails only when NEW's speedup falls more than
-``threshold`` below OLD's on a matched cell.
+``--relative`` compares machine-portable per-(jobs, regions) *speedups*
+(both sides of each ratio measured within the same run) instead of absolute
+timings: the ``engine`` family (legacy / vectorized ``us_per_call``, numpy
+backend) and the ``backend`` family (vectorized numpy / vectorized jax).
+This is the mode for CI, where NEW comes from a shared runner while the
+checked-in baseline was measured elsewhere: the gate fails only when NEW's
+speedup falls more than ``threshold`` below OLD's on a matched cell.
 
 ``--metrics`` compares *named* cells (payloads whose cells carry a ``name``
 key, e.g. ``BENCH_hetero.json``) on their simulation metrics (``jct_s``,
 ``cost``, ``migrations``) instead of timings.  The metrics are fully
 deterministic, so the gate is a tight relative tolerance (``--metric-tol``,
-default 1e-6): any drift is a semantic regression, not machine noise.
+default 1e-6) and cells present on only one side fail too (a silently
+vanished or appeared scenario is drift).  ``--new-cells-ok`` relaxes only
+the *new-only* half of that: cells added since the baseline pass (a PR may
+grow the sweep before regenerating it), while cells *removed* from the
+baseline still fail.
 """
 
 from __future__ import annotations
@@ -33,7 +41,7 @@ import sys
 from pathlib import Path
 from typing import Dict, Tuple
 
-Key = Tuple[int, int, str]
+Key = Tuple[int, int, str, str]
 
 #: Deterministic per-cell metrics the --metrics mode gates on (when present).
 METRIC_FIELDS = ("jct_s", "cost", "migrations")
@@ -46,7 +54,13 @@ def load_cells(path: Path) -> Dict[Key, dict]:
     cells = payload.get("cells", [])
     out: Dict[Key, dict] = {}
     for c in cells:
-        out[(int(c["jobs"]), int(c["regions"]), str(c["engine"]))] = c
+        key = (
+            int(c["jobs"]),
+            int(c["regions"]),
+            str(c["engine"]),
+            str(c.get("backend", "numpy")),
+        )
+        out[key] = c
     if not out:
         raise SystemExit(f"{path}: no cells found")
     return out
@@ -69,13 +83,18 @@ def load_named_cells(path: Path) -> Dict[str, dict]:
 
 
 def compare_metrics(
-    old: Dict[str, dict], new: Dict[str, dict], tol: float
+    old: Dict[str, dict],
+    new: Dict[str, dict],
+    tol: float,
+    new_cells_ok: bool = False,
 ) -> int:
     """Unlike the timing modes (where sweeps may grow), the metric sweep's
     *cell population* is itself deterministic: a cell present on only one
     side means a scenario/policy vanished or appeared without the baseline
     being regenerated, which is exactly the silent drift this gate exists to
-    catch — so asymmetric cells fail, not just metric drift."""
+    catch — so asymmetric cells fail, not just metric drift.  With
+    ``new_cells_ok`` the new-only half is waived (a PR may grow the sweep
+    ahead of its baseline); removed cells always fail."""
     regressions = []
     print(f"{'cell':42s} {'metric':>10s} {'old':>14s} {'new':>14s}")
     for name in sorted(set(old) & set(new)):
@@ -88,14 +107,20 @@ def compare_metrics(
             if drift:
                 regressions.append((name, field))
             print(f"{name:42s} {field:>10s} {o:14.6g} {n:14.6g}{tag}")
-    missing = sorted(set(old) ^ set(new))
-    for name in missing:
-        side = "old only" if name in old else "new only"
-        print(f"{name}: {side}  << CELL MISMATCH")
-    if regressions or missing:
+    removed = sorted(set(old) - set(new))
+    added = sorted(set(new) - set(old))
+    for name in removed:
+        print(f"{name}: old only  << CELL MISMATCH")
+    for name in added:
+        if new_cells_ok:
+            print(f"{name}: new only (allowed by --new-cells-ok)")
+        else:
+            print(f"{name}: new only  << CELL MISMATCH")
+    mismatched = len(removed) + (0 if new_cells_ok else len(added))
+    if regressions or mismatched:
         print(
             f"FAIL: {len(regressions)} metric(s) drifted beyond {tol:g} "
-            f"relative, {len(missing)} cell(s) unmatched (regenerate the "
+            f"relative, {mismatched} cell(s) unmatched (regenerate the "
             "baseline if the sweep population changed intentionally)"
         )
         return 1
@@ -103,23 +128,39 @@ def compare_metrics(
     return 0
 
 
-def speedups(cells: Dict[Key, dict]) -> Dict[Tuple[int, int], float]:
-    """legacy/vectorized us_per_call per (jobs, regions) cell, where both
-    engines are present."""
-    out: Dict[Tuple[int, int], float] = {}
-    for (jobs, regions, engine), c in cells.items():
-        if engine != "vectorized":
+def speedups(cells: Dict[Key, dict]) -> Dict[Tuple[str, int, int], float]:
+    """Machine-portable speedups per (jobs, regions) cell, both sides of
+    each ratio measured within the same run:
+
+    - ``("engine", jobs, regions)``  — legacy / vectorized ``us_per_call``
+      on the numpy backend;
+    - ``("backend", jobs, regions)`` — vectorized numpy / vectorized jax
+      ``us_per_call``.
+
+    Only cells where both sides are present contribute."""
+    out: Dict[Tuple[str, int, int], float] = {}
+    for (jobs, regions, engine, backend), c in cells.items():
+        if engine != "vectorized" or backend != "numpy":
             continue
-        leg = cells.get((jobs, regions, "legacy"))
-        if leg and c["us_per_call"] > 0:
-            out[(jobs, regions)] = leg["us_per_call"] / c["us_per_call"]
+        if c["us_per_call"] <= 0:
+            continue
+        leg = cells.get((jobs, regions, "legacy", "numpy"))
+        if leg:
+            out[("engine", jobs, regions)] = (
+                leg["us_per_call"] / c["us_per_call"]
+            )
+        jx = cells.get((jobs, regions, "vectorized", "jax"))
+        if jx and jx["us_per_call"] > 0:
+            out[("backend", jobs, regions)] = (
+                c["us_per_call"] / jx["us_per_call"]
+            )
     return out
 
 
 def compare_relative(old, new, threshold: float) -> int:
     old_s, new_s = speedups(old), speedups(new)
     regressions = []
-    print(f"{'cell':16s} {'old x':>8s} {'new x':>8s} {'ratio':>7s}")
+    print(f"{'cell':26s} {'old x':>8s} {'new x':>8s} {'ratio':>7s}")
     for key in sorted(set(old_s) & set(new_s)):
         o, n = old_s[key], new_s[key]
         ratio = n / o
@@ -127,15 +168,16 @@ def compare_relative(old, new, threshold: float) -> int:
         if ratio < 1.0 - threshold:
             regressions.append((key, ratio))
             tag = "  << REGRESSION"
-        print(f"j{key[0]}xr{key[1]:<8d} {o:8.2f} {n:8.2f} {ratio:7.3f}{tag}")
+        label = f"j{key[1]}xr{key[2]}/{key[0]}"
+        print(f"{label:26s} {o:8.2f} {n:8.2f} {ratio:7.3f}{tag}")
     for key in sorted(set(old_s) ^ set(new_s)):
         side = "old only" if key in old_s else "new only"
-        print(f"j{key[0]}xr{key[1]}: {side} (not compared)")
+        print(f"j{key[1]}xr{key[2]}/{key[0]}: {side} (not compared)")
     if regressions:
         worst = min(r for _, r in regressions)
         print(
             f"FAIL: {len(regressions)} cell(s) lost more than "
-            f"{threshold:.0%} of their engine speedup (worst {worst:.2f}x)"
+            f"{threshold:.0%} of their speedup (worst {worst:.2f}x)"
         )
         return 1
     print(f"OK: no cell lost more than {threshold:.0%} of its speedup")
@@ -155,8 +197,8 @@ def main() -> int:
     ap.add_argument(
         "--relative",
         action="store_true",
-        help="gate on per-cell engine speedup (machine-portable) instead of "
-        "absolute us_per_call",
+        help="gate on per-cell engine/backend speedups (machine-portable) "
+        "instead of absolute us_per_call",
     )
     ap.add_argument(
         "--metrics",
@@ -170,13 +212,26 @@ def main() -> int:
         default=1e-6,
         help="relative tolerance for --metrics drift (default 1e-6)",
     )
+    ap.add_argument(
+        "--new-cells-ok",
+        action="store_true",
+        help="--metrics only: cells present only in NEW pass (sweep grew "
+        "ahead of its baseline); cells removed from OLD still fail",
+    )
     args = ap.parse_args()
+
+    if args.new_cells_ok and not args.metrics:
+        ap.error(
+            "--new-cells-ok only applies to --metrics mode (the timing "
+            "modes never fail on unmatched cells)"
+        )
 
     if args.metrics:
         return compare_metrics(
             load_named_cells(args.old),
             load_named_cells(args.new),
             args.metric_tol,
+            new_cells_ok=args.new_cells_ok,
         )
 
     old = load_cells(args.old)
@@ -186,22 +241,20 @@ def main() -> int:
         return compare_relative(old, new, args.threshold)
 
     regressions = []
-    print(f"{'cell':28s} {'old us':>10s} {'new us':>10s} {'ratio':>7s}")
+    print(f"{'cell':34s} {'old us':>10s} {'new us':>10s} {'ratio':>7s}")
     for key in sorted(set(old) & set(new)):
-        jobs, regions, engine = key
+        jobs, regions, engine, backend = key
         o, n = old[key]["us_per_call"], new[key]["us_per_call"]
         ratio = n / o if o > 0 else float("inf")
         tag = ""
         if ratio > 1.0 + args.threshold:
             regressions.append((key, ratio))
             tag = "  << REGRESSION"
-        print(
-            f"j{jobs}xr{regions}/{engine:10s} {o:10.1f} {n:10.1f} "
-            f"{ratio:7.3f}{tag}"
-        )
+        label = f"j{jobs}xr{regions}/{engine}-{backend}"
+        print(f"{label:34s} {o:10.1f} {n:10.1f} {ratio:7.3f}{tag}")
     for key in sorted(set(old) ^ set(new)):
         side = "old only" if key in old else "new only"
-        print(f"j{key[0]}xr{key[1]}/{key[2]}: {side} (not compared)")
+        print(f"j{key[0]}xr{key[1]}/{key[2]}-{key[3]}: {side} (not compared)")
 
     if regressions:
         worst = max(r for _, r in regressions)

@@ -39,6 +39,12 @@ from .cluster import (  # noqa: F401
     GpuPool,
     Region,
 )
+from .kernels_decide import (  # noqa: F401
+    DECISION_BACKENDS,
+    DEFAULT_DECISION_BACKEND,
+    jax_available,
+    resolve_backend,
+)
 from .job import (  # noqa: F401
     PIPELINE_SCHEDULES,
     TIMING_MODELS as TIMING_MODEL_NAMES,

@@ -48,7 +48,12 @@ class WithoutCostMin(SchedulingPolicy):
         return order_by_priority(pending, cluster)
 
     def place(self, profile, cluster):
-        return find_placement(profile, cluster, allocator=uniform_allocate)
+        return find_placement(
+            profile,
+            cluster,
+            allocator=uniform_allocate,
+            backend=self.decision_backend,
+        )
 
     def legacy_order(self, pending, cluster, now):
         return legacy_order_by_priority(pending, cluster)

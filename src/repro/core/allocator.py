@@ -18,7 +18,10 @@ from __future__ import annotations
 
 from typing import Dict, List, Mapping
 
+import numpy as np
+
 from .cluster import ClusterState
+from .kernels_decide import cheapest_fill_order
 
 
 def _cost_min_allocate_typed(
@@ -32,8 +35,15 @@ def _cost_min_allocate_typed(
     remaining = g - len(path)
 
     # Step 2: surplus to the globally cheapest (region, type) cells.  Each
-    # region's first cell already holds the pinned GPU.
-    cells = []
+    # region's first cell already holds the pinned GPU.  The kW-inclusive
+    # rate / region-name / type-name ordering runs as one vectorized lexsort
+    # (``cheapest_fill_order``): region names sort exactly as their
+    # ``_name_rank`` and type names as their (sorted) column index, so the
+    # order is identical to the scalar ``sorted(..., (rate, region, type))``.
+    cells: List[tuple] = []
+    rates: List[float] = []
+    rranks: List[int] = []
+    tranks: List[int] = []
     for r in path:
         free_t = cluster.free_gpus_typed(r)
         first = True
@@ -43,13 +53,17 @@ def _cost_min_allocate_typed(
                 avail -= 1  # the pinned continuity GPU
                 first = False
             if avail > 0:
-                cells.append(
-                    (cluster.pool_rate(r, gtype), r, gtype, avail)
-                )
-    cells.sort(key=lambda c: (c[0], c[1], c[2]))
-    for _, r, _, avail in cells:
+                cells.append((r, avail))
+                rates.append(cluster.pool_rate(r, gtype))
+                rranks.append(int(cluster._name_rank[cluster._idx[r]]))
+                tranks.append(cluster._tidx[gtype])
+    order = cheapest_fill_order(
+        np.asarray(rates), np.asarray(rranks), np.asarray(tranks)
+    )
+    for ci in order:
         if remaining == 0:
             break
+        r, avail = cells[ci]
         add = min(avail, remaining)
         alloc[r] += add
         remaining -= add
@@ -80,11 +94,19 @@ def cost_min_allocate(
     alloc = {r: 1 for r in path}
     remaining = g - len(path)
 
-    # Step 2: surplus to the cheapest regions first.
-    prices = {r: cluster.price(r) for r in path}
-    for r in sorted(path, key=lambda r: (prices[r], r)):
+    # Step 2: surplus to the cheapest regions first — the same vectorized
+    # (rate, region-name) lexsort the typed pour uses (type rank degenerate);
+    # identical order to the scalar ``sorted(path, key=(price, name))``.
+    prices = np.asarray([cluster.price(r) for r in path])
+    rranks = np.asarray(
+        [int(cluster._name_rank[cluster._idx[r]]) for r in path]
+    )
+    for pi in cheapest_fill_order(
+        prices, rranks, np.zeros(len(path), dtype=np.int64)
+    ):
         if remaining == 0:
             break
+        r = path[pi]
         add = min(free[r] - alloc[r], remaining)
         alloc[r] += add
         remaining -= add

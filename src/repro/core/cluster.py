@@ -295,6 +295,7 @@ class _ReservedBwLedger(MutableMapping):
             return
         cs._res_total += v - float(cs._res_mat[ij])
         cs._res_mat[ij] = v
+        cs._avail_touch(ij)
 
     def __delitem__(self, link: Link) -> None:
         raise TypeError("link ledger entries cannot be deleted")
@@ -379,6 +380,17 @@ class ClusterState:
         self._cap_t_base = self._cap_t.copy()
         self._used_t = np.zeros_like(self._cap_t)
         self._spot_mult: Dict[Tuple[str, str], float] = {}
+        # Dense per-(region, type) FLOPS for the batched decision kernels.
+        # NaN marks a pool inheriting the job profile's reference hardware
+        # (resolved against the caller's default at query time); cells with
+        # no pool at all are masked separately via ``_cell_exists``.
+        self._flops_t = np.full((n, len(type_names)), np.nan)
+        self._cell_exists = np.zeros((n, len(type_names)), dtype=bool)
+        for (r, tname), p in self._pools.items():
+            i, t = self._idx[r], self._tidx[tname]
+            self._cell_exists[i, t] = True
+            if p.flops is not None:
+                self._flops_t[i, t] = p.flops
 
         provided_free = dict(self.free_gpus) if self.free_gpus else None
         if provided_free is not None:
@@ -415,6 +427,12 @@ class ClusterState:
         self._res_mat = np.zeros((n, n), dtype=float)
         self._res_extra: Dict[Link, float] = {}
         self._res_total = 0.0
+        # Memoized ``available_matrix`` storage: built once on first use,
+        # then maintained entry-wise by every _bw_mat/_res_mat write (the
+        # writes are per-link, so upkeep is O(1) per mutation).  Callers get
+        # a read-only view of the same buffer.
+        self._avail_base: Optional[np.ndarray] = None
+        self._avail_view: Optional[np.ndarray] = None
         provided_res = dict(self.reserved_bw) if self.reserved_bw else None
         self.free_gpus = _FreeGpuLedger(self)
         self.reserved_bw = _ReservedBwLedger(self)
@@ -614,6 +632,16 @@ class ClusterState:
                 best = f if best is None else min(best, f)
         return default_flops if best is None else best
 
+    def min_available_flops_vector(self, default_flops: float) -> np.ndarray:
+        """``min_available_flops`` for every region at once — the (R,)-shaped
+        input of the batched Pathfinder admission kernel.  One masked min over
+        the typed ledger; per-element results are bit-identical to the scalar
+        method (min over exact float64 values is order-independent)."""
+        free_cell = ((self._cap_t - self._used_t) > 0) & self._cell_exists
+        fl = np.where(np.isnan(self._flops_t), default_flops, self._flops_t)
+        m = np.where(free_cell, fl, np.inf).min(axis=1)
+        return np.where(np.isinf(m), default_flops, m)
+
     def reserve_gpus_typed(
         self, alloc: Mapping[str, Mapping[str, int]]
     ) -> None:
@@ -738,10 +766,28 @@ class ClusterState:
             return 0.0
         return max(0.0, float(self._bw_mat[ij]) - float(self._res_mat[ij]))
 
+    def _avail_touch(self, ij: Tuple[int, int]) -> None:
+        """Keep the memoized residual matrix in sync after a single-link
+        capacity or reservation write."""
+        base = self._avail_base
+        if base is not None:
+            base[ij] = max(0.0, float(self._bw_mat[ij]) - float(self._res_mat[ij]))
+
     def available_matrix(self) -> np.ndarray:
         """Dense R×R residual WAN bandwidth (bytes/s); the diagonal is 0 — use
-        ``available_bandwidth`` for intra-region hops."""
-        return np.maximum(0.0, self._bw_mat - self._res_mat)
+        ``available_bandwidth`` for intra-region hops.
+
+        Built once, then maintained incrementally by the per-link ledger
+        writes (``_avail_touch``) and returned as a read-only view — it is
+        the scheduling hot path's largest per-decision allocation, and the
+        entry-wise ``max(0, bw - res)`` upkeep is bit-identical to a full
+        recompute."""
+        if self._avail_base is None:
+            self._avail_base = np.maximum(0.0, self._bw_mat - self._res_mat)
+            view = self._avail_base.view()
+            view.setflags(write=False)
+            self._avail_view = view
+        return self._avail_view
 
     def reserve_bandwidth(self, edges: Mapping[Link, float]) -> None:
         """Eq. (6): reservations on a link may never exceed its capacity.
@@ -768,6 +814,7 @@ class ClusterState:
             else:
                 self._res_mat[ij] += b
                 self._res_total += b
+                self._avail_touch(ij)
 
     def release_bandwidth(self, edges: Mapping[Link, float]) -> None:
         """Releasing more than is reserved (beyond float-drift tolerance) is a
@@ -797,6 +844,7 @@ class ClusterState:
             else:
                 self._res_mat[ij] = new
                 self._res_total += new - cur
+                self._avail_touch(ij)
         if self._res_total < 0.0:  # guard accumulated float drift
             self._res_total = 0.0
 
@@ -835,6 +883,7 @@ class ClusterState:
             self._bw_total += new - float(self._bw_mat[ij])
             self._bw_mat[ij] = new
             self.bandwidth[link] = new
+            self._avail_touch(ij)
 
     def set_price_multipliers(self, multipliers: Mapping[str, float]) -> None:
         """Rescale listed regions' electricity prices against their

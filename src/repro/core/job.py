@@ -21,6 +21,8 @@ import math
 from functools import cached_property, lru_cache
 from typing import Optional
 
+import numpy as np
+
 #: Effective per-GPU throughput (FLOP/s) used by the simulator's timing model.
 #: The paper's Fig. 1 arithmetic (50 ms/μbatch for Llama-70B stages) implies
 #: A100-class effective throughput; see DESIGN.md "assumptions changed".
@@ -52,6 +54,14 @@ DEFAULT_GPU_MEMORY = 44e9
 #: Bytes of state per parameter: bf16 weights+grads (4) + fp32 Adam m/v (8)
 #: + fp32 master copy (4).
 BYTES_PER_PARAM = 16.0
+
+#: Process-wide memo tables for invariants that are pure functions of the
+#: model architecture + hardware knobs (``JobProfile._timing_key``), not of
+#: job identity: the ``K*`` argmin scan and the decision-kernel decay
+#: tables.  Workloads cycle a handful of model templates across thousands
+#: of jobs, so sharing these turns O(jobs) scalar scans into O(templates).
+_KSTAR_CACHE: dict = {}
+_DECAY_TAB_CACHE: dict = {}
 
 #: Timing backends a ``JobSpec`` may select (the ``TimingModel`` seam in
 #: ``core/timing.py``): the closed-form Eq. (1) model, or the discrete
@@ -184,6 +194,36 @@ class JobProfile:
         # actually granted (keyed by the override value).
         self._t_comp_hw_cache: dict = {}
         self._min_gpus_hw_cache: dict = {}
+        # Decay-factor tables for the batched decision kernels, keyed by
+        # table length (``core/kernels_decide`` pads lengths to buckets so
+        # the jitted kernels compile once per bucket, not once per K*).
+        self._decay_tab_cache: dict = {}
+
+    @cached_property
+    def _timing_key(self) -> tuple:
+        """Everything the placement-agnostic timing invariants (``t_comp``,
+        ``t_iter_ideal``, ``K*``, the decay table) depend on — the model
+        architecture plus the hardware/efficiency knobs, *not* the job
+        identity (submit time, iterations, dataset).  Workloads cycle a
+        handful of model templates across thousands of jobs, so these
+        invariants are shared process-wide under this key."""
+        m = self.spec.model
+        return (
+            m.n_params,
+            m.n_layers,
+            m.hidden,
+            m.batch_size,
+            m.seq_len,
+            m.microbatch_seqs,
+            self.gpu_flops,
+            self.stage_overhead,
+            self.efficiency_decay,
+            self.remat_penalty,
+            self.memory_comfort,
+            self.tp_max,
+            self.tp_penalty,
+            self.gpu_memory,
+        )
 
     # ------------------------------------------------------------- primitives
     @property
@@ -233,14 +273,42 @@ class JobProfile:
         if k < 1:
             raise ValueError("GPU count must be >= 1")
         flops = self.gpu_flops if gpu_flops is None else gpu_flops
+        return (
+            self.fwd_flops_per_microbatch / (k * flops)
+        ) * self._decay_factor(k) + self.stage_overhead
+
+    def _decay_factor(self, k: int) -> float:
+        """Combined efficiency multiplier of ``t_comp`` at ``k`` GPUs: linear
+        skinny-stage decay × memory-pressure ramp × tensor-parallel tax.
+        Factored out of ``_t_comp_raw`` (identical float operations) so the
+        batched decision kernels can evaluate ``t_comp`` at any (k, FLOPS)
+        pair from a per-job table built by this scalar code — the
+        bit-exactness anchor for ``core/kernels_decide``."""
         depth = self.pipeline_depth(k)
         decay = 1.0 + self.efficiency_decay * (depth - 1)
         decay *= self._memory_pressure(k)
         if k > depth:  # tensor-parallel widening
             decay *= 1.0 + self.tp_penalty * (k / depth - 1.0)
-        return (
-            self.fwd_flops_per_microbatch / (k * flops)
-        ) * decay + self.stage_overhead
+        return decay
+
+    def decay_table(self, length: int) -> np.ndarray:
+        """Read-only vector of ``_decay_factor(g)`` for ``g`` in
+        ``[1, length)`` (entry 0 is an unused placeholder: allocations are
+        never empty).  Memoized per length — the decision kernels request
+        bucket-padded lengths, so a profile typically builds one table ever."""
+        tab = self._decay_tab_cache.get(length)
+        if tab is None:
+            key = (self._timing_key, length)
+            tab = _DECAY_TAB_CACHE.get(key)
+            if tab is None:
+                tab = np.empty(length, dtype=np.float64)
+                tab[0] = 1.0
+                for g in range(1, length):
+                    tab[g] = self._decay_factor(g)
+                tab.setflags(write=False)
+                _DECAY_TAB_CACHE[key] = tab
+            self._decay_tab_cache[length] = tab
+        return tab
 
     def t_comp_hw(self, k: int, gpu_flops: Optional[float] = None) -> float:
         """``t_comp(k)`` under an accelerator-type FLOPS override; ``None``
@@ -302,19 +370,26 @@ class JobProfile:
     @lru_cache(maxsize=None)
     def optimal_gpus(self, cluster_cap: Optional[int] = None) -> int:
         """``K* = argmin_k t_iter(k)`` (Eq. 13), capped by ``max_gpus`` and,
-        optionally, total cluster size."""
+        optionally, total cluster size.  The scan is shared process-wide
+        across profiles with the same model/hardware invariants
+        (``_timing_key``): ``t_iter_ideal`` never reads job identity, so
+        ten thousand jobs cycling eight model templates pay eight scans."""
         hi = self.max_gpus if cluster_cap is None else min(
             self.max_gpus, max(1, cluster_cap)
         )
         lo = self.min_gpus
         if lo >= hi:
             return hi
-        best_k, best_t = lo, self.t_iter_ideal(lo)
-        for k in range(lo + 1, hi + 1):
-            t = self.t_iter_ideal(k)
-            if t < best_t:
-                best_k, best_t = k, t
-        return best_k
+        key = (self._timing_key, lo, hi)
+        cached = _KSTAR_CACHE.get(key)
+        if cached is None:
+            best_k, best_t = lo, self.t_iter_ideal(lo)
+            for k in range(lo + 1, hi + 1):
+                t = self.t_iter_ideal(k)
+                if t < best_t:
+                    best_k, best_t = k, t
+            cached = _KSTAR_CACHE[key] = best_k
+        return cached
 
     def bandwidth_requirement(self, k: int) -> float:
         """``b_j = A_j / t_comp^j(k)`` (bytes/s) — the minimum per-link rate at

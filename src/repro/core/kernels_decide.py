@@ -1,0 +1,335 @@
+"""Batched decision kernels for the scheduling hot path.
+
+The Pathfinder (Alg. 1) makes two kinds of decisions thousands of times per
+simulated second of control-plane time: *candidate scoring* (which regions
+can host a job at all — free-GPU / FLOPS / memory feasibility, electricity
+pricing) and the *Prim frontier walk* (grow a pipeline path from every seed
+region along the highest-residual-bandwidth links while Eq. 6 admission
+``A / b_tmp <= t_comp`` holds).  PR 1 vectorized the per-seed walk's inner
+lookups but kept one Python loop per seed; this module batches the walk
+itself — **all seed regions advance one hop per step** against the dense
+R×R residual matrix, so a full Alg. 1 Phase 2 is a handful of array steps
+instead of O(R) Python walks.
+
+Two interchangeable backends implement the same kernels:
+
+* ``numpy`` (default) — plain float64 array programs, no dependencies.
+* ``jax``  — the identical program staged through ``jax.jit`` so the whole
+  frontier loop runs as one fused XLA call per placement decision.  Kernels
+  trace under ``jax.experimental.enable_x64`` (scoped, never the global
+  flag — the data-plane tests rely on jax's float32 default), so every
+  arithmetic op is the same IEEE float64 op the numpy twin executes, and
+  decisions — including all tie-breaks — are bit-identical.  When jax is
+  missing the backend degrades gracefully to numpy (one warning).
+
+Bit-exactness contract (enforced by ``tests/test_decision_backend.py`` and
+the engine-parity suite): for any inputs, both backends return identical
+arrays, and the Pathfinder built on them makes the exact decisions of the
+seed reference in ``legacy.py``.  To that end the kernels reproduce the
+scalar code's operation *order*: ``t_comp`` is evaluated as
+``fwd / (g · flops) · decay(g) + overhead`` (the expression in
+``JobProfile._t_comp_raw``) with ``decay(g)`` read from a per-job table the
+profile computes with the scalar code itself.
+"""
+
+from __future__ import annotations
+
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+#: Decision backends the Pathfinder/scheduler seam accepts.
+DECISION_BACKENDS = ("numpy", "jax")
+DEFAULT_DECISION_BACKEND = "numpy"
+
+#: Pad per-job decay tables to multiples of this many entries so the jax
+#: kernels compile once per (region count, table bucket) instead of once per
+#: distinct ``K*``.
+TABLE_BUCKET = 64
+
+
+def decay_table_len(k: int) -> int:
+    """Bucket-padded decay-table length covering GPU counts ``0..k``."""
+    return (k // TABLE_BUCKET + 1) * TABLE_BUCKET
+
+_jax_state: Optional[tuple] = None  # (prim_jit, jnp, enable_x64) or ()
+_warned_no_jax = False
+
+
+def jax_available() -> bool:
+    """True when the jax decision kernels can be used in this process."""
+    return _load_jax() is not None
+
+
+def resolve_backend(name: str) -> str:
+    """Validate a backend name; ``"jax"`` degrades to ``"numpy"`` (with a
+    one-time warning) when jax is not importable."""
+    if name not in DECISION_BACKENDS:
+        raise ValueError(
+            f"unknown decision backend {name!r} (have: {DECISION_BACKENDS})"
+        )
+    if name == "jax" and _load_jax() is None:
+        global _warned_no_jax
+        if not _warned_no_jax:
+            warnings.warn(
+                'decision_backend="jax" requested but jax is not '
+                "installed; falling back to the numpy kernels",
+                RuntimeWarning,
+                stacklevel=2,
+            )
+            _warned_no_jax = True
+        return "numpy"
+    return name
+
+
+# ------------------------------------------------------------- phase 1 score
+def phase1_pick(
+    free: np.ndarray, prices: np.ndarray, name_rank: np.ndarray, k: int
+) -> int:
+    """Fused single-region scoring (Alg. 1 Phase 1): among regions with
+    ``free >= k`` pick the cheapest, ties broken by smallest region name.
+    Returns the region index, or -1 when no single region fits.
+
+    One masked argmin over the region axis; already a single fused array
+    program on the numpy backend, and cheaper than a device dispatch at
+    control-plane sizes — both backends share it.
+    """
+    mask = free >= k
+    if not mask.any():
+        return -1
+    idxs = np.flatnonzero(mask)
+    p = prices[idxs]
+    cheapest = idxs[p == p.min()]
+    return int(cheapest[np.argmin(name_rank[cheapest])])
+
+
+# -------------------------------------------------------- prim frontier walk
+def _prim_expand_numpy(
+    avail: np.ndarray,
+    free: np.ndarray,
+    name_rank: np.ndarray,
+    flops_vec: np.ndarray,
+    decay_tab: np.ndarray,
+    fwd: float,
+    overhead: float,
+    act: float,
+    k: int,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """All-seeds Prim expansion, numpy backend.  See ``prim_expand``."""
+    n = avail.shape[0]
+    seeds = np.arange(n)
+    has_free = free > 0
+
+    visited = np.eye(n, dtype=bool)
+    tail = seeds.copy()
+    g = np.minimum(free, k)
+    b_min = np.full(n, np.inf)
+    f_min = flops_vec.copy()
+    path_len = np.where(has_free, 1, 0).astype(np.int64)
+    paths = np.full((n, n), -1, dtype=np.int64)
+    paths[:, 0] = seeds
+    # A seed keeps expanding while it has free GPUs, still wants more than it
+    # aggregated, and has room for another hop (the scalar loop's condition
+    # ``len(path) < n_regions and g < k``).
+    active = has_free & (g < k) & (n > 1)
+
+    col = seeds[None, :]
+    # Lanes without a candidate this step compute garbage (nxt=0, b_tmp=0,
+    # g_new=g) that the ``adv`` mask discards; silence the float warnings
+    # those masked divisions would emit.
+    with np.errstate(divide="ignore", invalid="ignore"):
+        return _prim_steps_numpy(
+            avail, free, name_rank, flops_vec, decay_tab, fwd, overhead, act,
+            k, has_free, visited, tail, g, b_min, f_min, path_len, paths,
+            active, seeds, col,
+        )
+
+
+def _prim_steps_numpy(
+    avail, free, name_rank, flops_vec, decay_tab, fwd, overhead, act, k,
+    has_free, visited, tail, g, b_min, f_min, path_len, paths, active, seeds,
+    col,
+):
+    n = avail.shape[0]
+    while active.any():
+        rows = avail[tail]  # (S, R) residual bandwidth out of each tail
+        cand = has_free[None, :] & ~visited & (rows > 0.0)
+        vals = np.where(cand, rows, -np.inf)
+        vmax = vals.max(axis=1)
+        has_cand = np.isfinite(vmax)
+        # max by (bandwidth, name): equal-bandwidth ties take the largest name
+        tie = cand & (vals == vmax[:, None])
+        nxt = np.where(tie, name_rank[None, :], -1).argmax(axis=1)
+        b_tmp = np.minimum(b_min, rows[seeds, nxt])
+        g_new = np.minimum(g + free[nxt], k)
+        f_new = np.minimum(f_min, flops_vec[nxt])
+        # Scalar op order (JobProfile._t_comp_raw): fwd/(g·f) · decay + ovh.
+        t_cmp = fwd / (g_new * f_new) * decay_tab[g_new] + overhead
+        # Alg. 1 line 13: communication must keep up with compute.
+        admit = ~(act / b_tmp > t_cmp)
+        adv = active & has_cand & admit
+        if not adv.any():
+            break
+        sel = adv[:, None] & (col == nxt[:, None])
+        visited |= sel
+        paths = np.where(adv[:, None] & (col == path_len[:, None]),
+                         nxt[:, None], paths)
+        tail = np.where(adv, nxt, tail)
+        b_min = np.where(adv, b_tmp, b_min)
+        g = np.where(adv, g_new, g)
+        f_min = np.where(adv, f_new, f_min)
+        path_len = path_len + adv
+        active = adv & (g < k) & (path_len < n)
+    return g, path_len, paths
+
+
+def _load_jax():
+    """Lazy jax import + jit construction; caches (prim_jit, helpers)."""
+    global _jax_state
+    if _jax_state is not None:
+        return _jax_state or None
+    try:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from jax.experimental import enable_x64
+    except Exception:  # pragma: no cover - exercised on jax-less installs
+        _jax_state = ()
+        return None
+
+    def _prim(avail, free, name_rank, flops_vec, decay_tab, fwd, overhead,
+              act, k):
+        n = avail.shape[0]
+        seeds = jnp.arange(n)
+        has_free = free > 0
+
+        visited0 = jnp.eye(n, dtype=bool)
+        g0 = jnp.minimum(free, k)
+        path_len0 = jnp.where(has_free, 1, 0).astype(jnp.int64)
+        paths0 = jnp.full((n, n), -1, dtype=jnp.int64).at[:, 0].set(seeds)
+        active0 = has_free & (g0 < k) & (n > 1)
+        state0 = (
+            active0, visited0, seeds, g0, jnp.full(n, jnp.inf),
+            flops_vec, path_len0, paths0,
+        )
+
+        def cond(state):
+            return jnp.any(state[0])
+
+        def body(state):
+            active, visited, tail, g, b_min, f_min, path_len, paths = state
+            rows = avail[tail]
+            cand = has_free[None, :] & ~visited & (rows > 0.0)
+            vals = jnp.where(cand, rows, -jnp.inf)
+            vmax = vals.max(axis=1)
+            has_cand = jnp.isfinite(vmax)
+            tie = cand & (vals == vmax[:, None])
+            nxt = jnp.where(tie, name_rank[None, :], -1).argmax(axis=1)
+            b_tmp = jnp.minimum(b_min, rows[seeds, nxt])
+            g_new = jnp.minimum(g + free[nxt], k)
+            f_new = jnp.minimum(f_min, flops_vec[nxt])
+            t_cmp = fwd / (g_new * f_new) * decay_tab[g_new] + overhead
+            admit = ~(act / b_tmp > t_cmp)
+            adv = active & has_cand & admit
+            col = seeds[None, :]
+            visited = visited | (adv[:, None] & (col == nxt[:, None]))
+            paths = jnp.where(
+                adv[:, None] & (col == path_len[:, None]),
+                nxt[:, None], paths,
+            )
+            tail = jnp.where(adv, nxt, tail)
+            b_min = jnp.where(adv, b_tmp, b_min)
+            g = jnp.where(adv, g_new, g)
+            f_min = jnp.where(adv, f_new, f_min)
+            path_len = path_len + adv
+            active = adv & (g < k) & (path_len < n)
+            return (
+                active, visited, tail, g, b_min, f_min, path_len, paths,
+            )
+
+        _, _, _, g, _, _, path_len, paths = lax.while_loop(
+            cond, body, state0
+        )
+        return g, path_len, paths
+
+    prim_jit = jax.jit(_prim)
+    _jax_state = (prim_jit, jnp, enable_x64)
+    return _jax_state
+
+
+def _prim_expand_jax(avail, free, name_rank, flops_vec, decay_tab, fwd,
+                     overhead, act, k):
+    prim_jit, jnp, enable_x64 = _load_jax()
+    # The x64 scope is per-call (it participates in the jit cache key), so
+    # the kernels run in IEEE float64 without flipping jax's process-global
+    # default dtype out from under the float32 data plane.
+    with enable_x64():
+        g, path_len, paths = prim_jit(
+            avail, free, name_rank, flops_vec, decay_tab,
+            float(fwd), float(overhead), float(act), int(k),
+        )
+        return (
+            np.asarray(g, dtype=np.int64),
+            np.asarray(path_len, dtype=np.int64),
+            np.asarray(paths, dtype=np.int64),
+        )
+
+
+def prim_expand(
+    avail: np.ndarray,
+    free: np.ndarray,
+    name_rank: np.ndarray,
+    flops_vec: np.ndarray,
+    decay_tab: np.ndarray,
+    fwd: float,
+    overhead: float,
+    act: float,
+    k: int,
+    *,
+    backend: str = DEFAULT_DECISION_BACKEND,
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized Prim frontier: advance **every** seed region one hop per
+    step via masked argmax on the residual R×R bandwidth matrix ``avail``.
+
+    Per step and per seed: among unvisited regions with free GPUs and a
+    positive-residual link out of the seed's current tail, follow the
+    highest-bandwidth link (ties to the largest region name — the reference
+    tie-break), provisionally extend the path, and admit the hop only while
+    Eq. 6 holds: ``act / b_tmp <= t_comp(g_new)`` with ``b_tmp`` the running
+    path-bottleneck bandwidth and ``t_comp`` evaluated at the running
+    most-conservative granted FLOPS ``f_min`` (``flops_vec`` is constant =
+    reference FLOPS on homogeneous clusters, making this exactly the
+    homogeneous admission).  Seeds stop independently (masked updates); the
+    walk ends when every seed has stopped or aggregated ``k`` GPUs.
+
+    Returns ``(g, path_len, paths)`` aligned with the region axis: aggregated
+    GPUs per seed, the seed's path length, and the visited region indices in
+    hop order (``paths[s, :path_len[s]]``; -1 padding).  Seeds without free
+    GPUs have ``path_len == 0`` and must be ignored by the caller.
+
+    Decision-identical to the per-seed scalar walk in ``legacy.py`` — same
+    float ops in the same order, same tie-breaks.  PR 1's per-seed early-exit
+    bound (skip seeds that cannot beat the incumbent) is superseded by the
+    caller masking finished candidates on their exact ``g`` — batching makes
+    the *bound* obsolete but the *mask* exact.
+    """
+    if backend == "jax":
+        return _prim_expand_jax(
+            avail, free, name_rank, flops_vec, decay_tab, fwd, overhead, act,
+            k,
+        )
+    return _prim_expand_numpy(
+        avail, free, name_rank, flops_vec, decay_tab, fwd, overhead, act, k
+    )
+
+
+# ------------------------------------------------------- allocator cell order
+def cheapest_fill_order(
+    rates: np.ndarray, region_rank: np.ndarray, type_rank: np.ndarray
+) -> np.ndarray:
+    """Index permutation ordering allocator cells by (kW-inclusive $/s rate,
+    region name, type name) — the deterministic pour order Alg. 2 shares with
+    ``ClusterState.assign_types``.  Exact float compares, so the order is
+    identical to the scalar ``sorted(..., key=(rate, region, type))``."""
+    return np.lexsort((type_rank, region_rank, rates))

@@ -11,13 +11,19 @@ that keeps communication off the pipeline's critical path).  Each candidate
 path is priced by the Cost-Min Allocator; the path aggregating the most GPUs
 wins, ties broken by mean electricity price.
 
-This implementation runs over the cluster's dense numpy ledgers: one residual
-R×R bandwidth matrix snapshot per call, argmax-based neighbor selection, and
-two early exits — an O(1) rejection when the whole cluster cannot reach the
-job's memory floor, and a per-seed bound that skips seeds whose reachable
-free-GPU total cannot strictly beat the incumbent candidate.  Decisions
-(including all tie-breaks) are identical to the reference implementation in
-``legacy.py``; the engine-parity test enforces that.
+Phase 2 runs as one *batched* frontier (``core/kernels_decide``): every seed
+region advances one hop per step via masked argmax on the residual R×R
+bandwidth matrix, on either the numpy or the jitted jax backend — the
+per-seed walks are state-independent, so batching them is exact.  Candidate
+finalization (Cost-Min pricing, ``build_placement``, ``average_price``) stays
+on the scalar path per surviving seed: those sums iterate dicts, and
+re-associating them vectorized could flip a last-ulp price tie-break.  The
+O(1) whole-cluster rejection is kept; PR 1's per-seed reachability bound is
+superseded by an exact incumbent mask (a walked seed whose aggregated GPU
+count falls strictly below the incumbent's cannot win and skips
+finalization).  Decisions (including all tie-breaks) are identical to the
+reference implementation in ``legacy.py`` on either backend; the
+engine-parity and decision-backend suites enforce that.
 """
 
 from __future__ import annotations
@@ -30,6 +36,12 @@ import numpy as np
 from .allocator import cost_min_allocate
 from .cluster import ClusterState
 from .job import JobProfile
+from .kernels_decide import (
+    DEFAULT_DECISION_BACKEND,
+    decay_table_len,
+    phase1_pick,
+    prim_expand,
+)
 from .placement import Placement, build_placement
 from .timing import average_price
 
@@ -72,9 +84,14 @@ def find_placement(
     *,
     k_star: Optional[int] = None,
     allocator: AllocatorFn = cost_min_allocate,
+    backend: str = DEFAULT_DECISION_BACKEND,
 ) -> Optional[Placement]:
     """Alg. 1 end to end.  Returns None when even the best path cannot reach
-    the job's memory floor (``min_gpus``) — the job must wait."""
+    the job's memory floor (``min_gpus``) — the job must wait.
+
+    ``backend`` selects the kernel implementation for the batched Phase 2
+    frontier (``"numpy"`` or ``"jax"``); decisions are bit-identical either
+    way (see module docstring)."""
     k = k_star if k_star is not None else profile.optimal_gpus(cluster.total_gpus())
     k = max(k, profile.min_gpus)
 
@@ -92,13 +109,9 @@ def find_placement(
     hetero = cluster.is_heterogeneous
 
     # ---------------------------------------------- Phase 1: single region
-    single_mask = free >= k
-    if single_mask.any():
-        idxs = np.flatnonzero(single_mask)
-        prices = cluster._price[idxs]
-        cheapest = idxs[prices == prices.min()]
-        # min by (price, name): among equal-price regions take the smallest name
-        best = names[cheapest[np.argmin(name_rank[cheapest])]]
+    single = phase1_pick(free, cluster._price, name_rank, k)
+    if single >= 0:
+        best = names[single]
         if not hetero:
             return build_placement(
                 profile, cluster, [best], {best: k}, require_comm_fits_comp=True
@@ -113,94 +126,76 @@ def find_placement(
         except ValueError:
             pass
 
-    # ------------------------------------------ Phase 2: greedy expansion
+    # ------------------------------------------ Phase 2: batched expansion
     act = profile.spec.model.activation_bytes
     avail = cluster.available_matrix()
     n_regions = len(names)
-    has_free = free > 0
+    # Admission heuristic on heterogeneous clusters: evaluate t_comp at the
+    # most conservative (slowest) FLOPS a region along the path could grant —
+    # slower stages tolerate slower links.  The final build_placement gate
+    # re-checks against the actual typed grant.  Homogeneous clusters pass a
+    # constant reference vector, whose running min is the reference FLOPS —
+    # the kernel's one t_comp formula covers both cases bit-exactly.
+    if hetero:
+        flops_vec = cluster.min_available_flops_vector(profile.gpu_flops)
+    else:
+        flops_vec = np.full(n_regions, profile.gpu_flops)
 
-    # Per-seed early-exit bound: a path can only aggregate GPUs from regions
-    # reachable over positive-residual links, so a seed whose reachable free
-    # total lands strictly below the incumbent candidate cannot win (equal
-    # totals still compete on price and must expand).  Reachability is lazy —
-    # computed only once an incumbent exists to prune against.
-    adjacency = (avail > 0.0) & has_free[None, :]
-    reach_free: Dict[int, int] = {}
+    # Free-region compaction: seeds and every admissible hop of the Prim
+    # walk require free GPUs (the kernels' candidate mask is
+    # ``has_free & ...``), so the whole Phase 2 frontier lives in the
+    # free-region subgraph.  On a saturated cluster F << R and the kernels'
+    # O(R²)-per-step cost collapses to O(F²) without changing a single
+    # decision: the submatrix preserves bandwidth values, relative name
+    # ranks, and seed order (ascending region index), and the skipped seeds
+    # all have path_len == 0.  The compacted side is padded up to a bucket
+    # of 32 (capped at R) so the jax backend sees a bounded set of shapes;
+    # pad lanes have no free GPUs and no bandwidth, so they never activate.
+    free_idx = np.flatnonzero(free > 0)
+    n_sub = free_idx.size
+    if n_sub < n_regions:
+        pad = min(n_regions, ((n_sub + 31) // 32) * 32)
+        avail_c = np.zeros((pad, pad))
+        avail_c[:n_sub, :n_sub] = avail[np.ix_(free_idx, free_idx)]
+        free_c = np.zeros(pad, dtype=free.dtype)
+        free_c[:n_sub] = free[free_idx]
+        rank_c = np.full(pad, -1, dtype=name_rank.dtype)
+        rank_c[:n_sub] = name_rank[free_idx]
+        flops_c = np.ones(pad)
+        flops_c[:n_sub] = flops_vec[free_idx]
+    else:
+        avail_c, free_c, rank_c, flops_c = avail, free, name_rank, flops_vec
 
-    def reachable_free_total(si: int) -> int:
-        cached = reach_free.get(si)
-        if cached is None:
-            reach = np.zeros(n_regions, dtype=bool)
-            reach[si] = True
-            frontier = reach.copy()
-            while frontier.any():
-                frontier = adjacency[frontier].any(axis=0) & ~reach
-                reach |= frontier
-            cached = int(free[reach].sum())
-            reach_free[si] = cached
-        return cached
+    g_arr, len_arr, paths = prim_expand(
+        avail_c,
+        free_c,
+        rank_c,
+        flops_c,
+        profile.decay_table(decay_table_len(k)),
+        profile.fwd_flops_per_microbatch,
+        profile.stage_overhead,
+        act,
+        k,
+        backend=backend,
+    )
+    if n_sub < n_regions:
+        seed_regions = free_idx
+    else:
+        seed_regions = np.arange(n_regions)
 
+    # Scalar finalization in seed order (first-seed-wins on exact ties, as
+    # in the reference).  The incumbent mask is exact: a seed whose walk
+    # aggregated strictly fewer GPUs than the incumbent cannot win.
     best_cand: Optional[PathCandidate] = None
-    for si in range(n_regions):
-        free_seed = int(free[si])
-        if free_seed < 1:
+    for si in range(seed_regions.size):
+        g = int(g_arr[si])
+        path_len = int(len_arr[si])
+        if g < profile.min_gpus or g < path_len or path_len == 0:
             continue
-        if (
-            best_cand is not None
-            and min(reachable_free_total(si), k) < best_cand.gpus
-        ):
+        if best_cand is not None and g < best_cand.gpus:
             continue
-        visited = np.zeros(n_regions, dtype=bool)
-        visited[si] = True
-        path_idx: List[int] = [si]
-        tail = si
-        g = min(free_seed, k)
-        b_min = float("inf")
-        # Admission heuristic on heterogeneous clusters: evaluate t_comp at
-        # the most conservative (slowest) FLOPS a region along the path
-        # could grant — slower stages tolerate slower links.  The final
-        # build_placement gate re-checks against the actual typed grant.
-        f_min = (
-            cluster.min_available_flops(names[si], profile.gpu_flops)
-            if hetero
-            else None
-        )
-        while len(path_idx) < n_regions and g < k:
-            # Highest-bandwidth (residual) outgoing link to a fresh region.
-            row = avail[tail]
-            cand_mask = has_free & ~visited & (row > 0.0)
-            cand_idx = np.flatnonzero(cand_mask)
-            if cand_idx.size == 0:
-                break
-            vals = row[cand_idx]
-            top = cand_idx[vals == vals.max()]
-            # max by (bandwidth, name): equal-bandwidth ties take the largest name
-            nxt = int(top[np.argmax(name_rank[top])])
-            b_tmp = min(b_min, float(row[nxt]))
-            g_new = min(g + int(free[nxt]), k)
-            if hetero:
-                f_new = min(
-                    f_min,
-                    cluster.min_available_flops(
-                        names[nxt], profile.gpu_flops
-                    ),
-                )
-                t_cmp = profile.t_comp_hw(g_new, f_new)
-            else:
-                f_new = None
-                t_cmp = profile.t_comp(g_new)
-            # Alg. 1 line 13: communication must keep up with compute.
-            if act / b_tmp > t_cmp:
-                break
-            path_idx.append(nxt)
-            visited[nxt] = True
-            tail = nxt
-            b_min, g = b_tmp, g_new
-            f_min = f_new
-
-        if g < profile.min_gpus or g < len(path_idx):
-            continue
-        path = [names[i] for i in path_idx]
+        path = [names[int(seed_regions[int(paths[si, j])])]
+                for j in range(path_len)]
         try:
             alloc = allocator(cluster, path, g)
         except ValueError:

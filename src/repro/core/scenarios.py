@@ -118,6 +118,7 @@ class Scenario:
         profile_kwargs: Optional[dict] = None,
         job_kwargs: Optional[dict] = None,
         voluntary_migration_threshold: object = _UNSET,
+        decision_backend: str = "numpy",
     ) -> SimulationResult:
         cluster, profiles, trace = self.build(
             seed=seed,
@@ -138,6 +139,7 @@ class Scenario:
             trace=trace,
             restart_penalty_s=self.restart_penalty_s,
             voluntary_migration_threshold=threshold,
+            decision_backend=decision_backend,
         )
 
 

@@ -68,6 +68,11 @@ from .accounting import SegmentLedger
 from .allocator import cost_min_allocate
 from .cluster import BandwidthTrace, ClusterState
 from .job import JobProfile
+from .kernels_decide import (
+    DECISION_BACKENDS,
+    DEFAULT_DECISION_BACKEND,
+    resolve_backend,
+)
 from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .placement import Placement
@@ -109,11 +114,18 @@ class SchedulingPolicy(abc.ABC):
     "fcfs" for submit-time order, None for anything else) so the vectorized
     engine can maintain the rank incrementally; policies with ``None`` fall
     back to ``order()`` every pass.
+
+    ``decision_backend`` names the kernel backend placement decisions should
+    run on (``core/kernels_decide``); the ``Simulator`` stamps it from its
+    own ``decision_backend=`` argument, and policies built on the Pathfinder
+    pass it through to ``find_placement``.  Policies that ignore it (the
+    baselines' region-local placers have no batched kernels) are unaffected.
     """
 
     name: str = "base"
     strict_fcfs: bool = False
     ordering_kind: Optional[str] = None
+    decision_backend: str = DEFAULT_DECISION_BACKEND
 
     @abc.abstractmethod
     def order(
@@ -161,7 +173,12 @@ class BACEPipePolicy(SchedulingPolicy):
         return fcfs_order(pending, cluster, now)
 
     def place(self, profile, cluster):
-        return find_placement(profile, cluster, allocator=cost_min_allocate)
+        return find_placement(
+            profile,
+            cluster,
+            allocator=cost_min_allocate,
+            backend=self.decision_backend,
+        )
 
     def legacy_order(self, pending, cluster, now):
         if self.use_priority:
@@ -348,34 +365,59 @@ class _PendingLedger:
     """Pending queue with its scheduling invariants held in aligned arrays.
 
     Per-job quantities that never change while a job waits — ``E_j(1)``,
-    ``b_j`` at ``K*(cluster)``, submit time, id — are gathered once on
-    arrival (O(1) amortized; the profile memoizes the math).  A re-rank after
-    a placement therefore only recombines the arrays under the new ``alpha``
+    ``b_j`` at ``K*(cluster)``, submit time, id, the ``min_gpus`` memory
+    floor — are gathered once on arrival into preallocated numpy arrays
+    (amortized O(1); capacity doubles on growth, so a 10k-job queue never
+    re-gathers or converts Python lists per pass).  A re-rank after a
+    placement therefore only recombines the arrays under the new ``alpha``
     and normalization maxima: O(n) numpy arithmetic + one O(n log n) lexsort,
     versus the seed's O(n · K) invariant recomputation per pass.  Removal is
     a swap-pop, keeping the arrays dense.
+
+    ``ordered(..., gpu_floor=...)`` additionally masks out jobs whose memory
+    floor exceeds the cluster-wide free-GPU total *before* sorting and
+    materializing profiles.  The mask is exact, not heuristic: the engine
+    discards any placement with ``total_gpus < min_gpus``, and no placement
+    can exceed the free total, so a masked job's ``place()`` attempt could
+    never have started it — skipping the attempt is unobservable (scores
+    still normalize over the *full* pending queue, per Eqs. 9–10).  On a
+    saturated cluster this turns each no-progress pass from O(pending)
+    Python placement probes into one numpy mask.
     """
+
+    _ARRAYS = ("_singles", "_demands", "_submits", "_ids", "_min_gpus")
 
     def __init__(self, cluster_cap: int) -> None:
         self._cap = cluster_cap
         self._profiles: List[JobProfile] = []
-        self._singles: List[float] = []
-        self._demands: List[float] = []
-        self._submits: List[float] = []
-        self._ids: List[int] = []
+        self._n = 0
+        self._singles = np.empty(16, dtype=np.float64)
+        self._demands = np.empty(16, dtype=np.float64)
+        self._submits = np.empty(16, dtype=np.float64)
+        self._ids = np.empty(16, dtype=np.int64)
+        self._min_gpus = np.empty(16, dtype=np.int64)
         self._pos: Dict[int, int] = {}
 
     def __len__(self) -> int:
-        return len(self._profiles)
+        return self._n
 
     def add(self, profile: JobProfile) -> None:
+        i = self._n
+        if i == len(self._ids):
+            for name in self._ARRAYS:
+                arr = getattr(self, name)
+                grown = np.empty(2 * len(arr), dtype=arr.dtype)
+                grown[:i] = arr
+                setattr(self, name, grown)
         job_id = profile.spec.job_id
-        self._pos[job_id] = len(self._profiles)
+        self._pos[job_id] = i
         self._profiles.append(profile)
-        self._singles.append(profile.single_gpu_execution())
-        self._demands.append(profile.demand_at_cap(self._cap))
-        self._submits.append(profile.spec.submit_time)
-        self._ids.append(job_id)
+        self._singles[i] = profile.single_gpu_execution()
+        self._demands[i] = profile.demand_at_cap(self._cap)
+        self._submits[i] = profile.spec.submit_time
+        self._ids[i] = job_id
+        self._min_gpus[i] = profile.min_gpus
+        self._n = i + 1
 
     def set_cap(self, cluster_cap: int) -> None:
         """Re-anchor the cached ``b_j`` at ``K*(cluster_cap)``: a spot
@@ -392,41 +434,50 @@ class _PendingLedger:
 
     def remove(self, job_id: int) -> None:
         i = self._pos.pop(job_id)
-        last = len(self._profiles) - 1
+        last = self._n - 1
         if i != last:
-            for arr in (
-                self._profiles,
-                self._singles,
-                self._demands,
-                self._submits,
-                self._ids,
-            ):
+            self._profiles[i] = self._profiles[last]
+            for name in self._ARRAYS:
+                arr = getattr(self, name)
                 arr[i] = arr[last]
-            self._pos[self._ids[i]] = i
-        for arr in (
-            self._profiles,
-            self._singles,
-            self._demands,
-            self._submits,
-            self._ids,
-        ):
-            arr.pop()
+            self._pos[int(self._ids[i])] = i
+        self._profiles.pop()
+        self._n = last
 
-    def ordered(self, kind: str, cluster: ClusterState) -> List[JobProfile]:
-        n = len(self._profiles)
-        if n <= 1:
-            return list(self._profiles)
-        submits = np.array(self._submits)
-        ids = np.array(self._ids, dtype=np.int64)
+    def ordered(
+        self,
+        kind: str,
+        cluster: ClusterState,
+        gpu_floor: Optional[int] = None,
+    ) -> List[JobProfile]:
+        n = self._n
+        if n == 0:
+            return []
+        submits = self._submits[:n]
+        ids = self._ids[:n]
+        sel: Optional[np.ndarray] = None
+        if gpu_floor is not None:
+            sel = np.flatnonzero(self._min_gpus[:n] <= gpu_floor)
+            if sel.size == 0:
+                return []
         if kind == "priority":
+            # Normalization maxima run over the FULL pending queue (Eqs.
+            # 9–10) — the floor mask only limits which jobs are *visited*,
+            # never what they normalize against.
             scores = _score_vector(
-                np.array(self._singles),
-                np.array(self._demands),
+                self._singles[:n],
+                self._demands[:n],
                 cluster.congestion_alpha(),
             )
-            perm = rank_order(scores, submits, ids)
+            if sel is None:
+                perm = rank_order(scores, submits, ids)
+            else:
+                perm = sel[rank_order(scores[sel], submits[sel], ids[sel])]
         else:  # fcfs: (submit, id)
-            perm = np.lexsort((ids, submits))
+            if sel is None:
+                perm = np.lexsort((ids, submits))
+            else:
+                perm = sel[np.lexsort((ids[sel], submits[sel]))]
         profiles = self._profiles
         return [profiles[i] for i in perm]
 
@@ -464,6 +515,13 @@ class Simulator:
     scheduling path; ``engine="legacy"`` runs the preserved seed path.  Both
     yield identical results on static scenarios (see module docstring).
 
+    ``decision_backend`` selects the kernel implementation for the batched
+    placement-decision path (``"numpy"`` default, or ``"jax"`` for the
+    jitted kernels in ``core/kernels_decide``; degrades to numpy with a
+    warning when jax is missing).  Decisions are bit-identical across
+    backends — the seam changes only how fast they are computed.  The legacy
+    engine predates the kernels and rejects ``"jax"``.
+
     ``trace`` switches on the dynamic environment: piecewise-constant
     bandwidth/price multipliers applied as ``_ENV_CHANGE`` events.  When a
     bandwidth drop leaves a link carrying more reserved bandwidth than its
@@ -500,6 +558,7 @@ class Simulator:
         trace: Optional[BandwidthTrace] = None,
         restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
         voluntary_migration_threshold: Optional[float] = None,
+        decision_backend: str = DEFAULT_DECISION_BACKEND,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (have: {ENGINES})")
@@ -508,6 +567,17 @@ class Simulator:
                 "dynamic scenarios (bandwidth/price traces) require "
                 'engine="vectorized"; the legacy seed engine only models '
                 "a static environment"
+            )
+        if decision_backend not in DECISION_BACKENDS:
+            raise ValueError(
+                f"unknown decision backend {decision_backend!r} "
+                f"(have: {DECISION_BACKENDS})"
+            )
+        if engine == "legacy" and decision_backend != "numpy":
+            raise ValueError(
+                'engine="legacy" is the seed reference path and does not '
+                "route through the decision kernels; it only accepts "
+                'decision_backend="numpy"'
             )
         if restart_penalty_s < 0.0:
             raise ValueError("restart_penalty_s must be >= 0")
@@ -523,6 +593,12 @@ class Simulator:
         self.trace = trace
         self.restart_penalty_s = restart_penalty_s
         self.voluntary_migration_threshold = voluntary_migration_threshold
+        # Degrades to "numpy" (with a one-time warning) when jax is absent;
+        # stamped onto the policy so Pathfinder-based ``place()`` calls (the
+        # engine's and the voluntary-migration probes alike) route through
+        # the selected kernels.
+        self.decision_backend = resolve_backend(decision_backend)
+        policy.decision_backend = self.decision_backend
 
     def run(self) -> SimulationResult:
         cluster = self.cluster
@@ -540,7 +616,19 @@ class Simulator:
             )
             place = policy.legacy_place
         elif ledger is not None:
-            order = lambda pend, now: ledger.ordered(kind, cluster)  # noqa: E731
+            # Non-strict policies skip unplaceable jobs anyway, so the exact
+            # memory-floor mask (see _PendingLedger.ordered) prunes them
+            # before any Python placement probe runs.  Strict-FCFS policies
+            # must still *visit* a stuck head job (it blocks the queue), so
+            # they order the full queue.
+            if policy.strict_fcfs:
+                order = lambda pend, now: ledger.ordered(  # noqa: E731
+                    kind, cluster
+                )
+            else:
+                order = lambda pend, now: ledger.ordered(  # noqa: E731
+                    kind, cluster, gpu_floor=cluster.total_free_gpus()
+                )
             place = policy.place
         else:
             order = lambda pend, now: policy.order(  # noqa: E731
@@ -880,6 +968,7 @@ def simulate(
     trace: Optional[BandwidthTrace] = None,
     restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
     voluntary_migration_threshold: Optional[float] = None,
+    decision_backend: str = DEFAULT_DECISION_BACKEND,
 ) -> SimulationResult:
     return Simulator(
         cluster,
@@ -889,4 +978,5 @@ def simulate(
         trace=trace,
         restart_penalty_s=restart_penalty_s,
         voluntary_migration_threshold=voluntary_migration_threshold,
+        decision_backend=decision_backend,
     ).run()

@@ -1,0 +1,364 @@
+"""Decision-backend parity: numpy vs jax kernels, both vs the seed reference.
+
+The batched decision kernels (``core/kernels_decide``) promise *bit-identical*
+decisions on either backend — same feasibility masks, same Eq. 6 admissions,
+same tie-break order — with the legacy scalar walk as the ground truth.  This
+suite enforces that promise at three levels:
+
+1. kernel level   — ``prim_expand`` returns identical arrays on both backends;
+2. decision level — ``find_placement`` yields identical placements across
+   backends and against ``legacy_find_placement``, on random clusters
+   including multi-pool heterogeneous regions and zero-capacity links;
+3. simulation level — full runs of every registered scenario serialize to
+   identical ``to_jsonable()`` payloads under ``decision_backend="jax"``.
+
+Fixed cases always run (jax-dependent ones skip cleanly when jax is absent);
+a hypothesis sweep widens the random-cluster coverage when the library is
+installed, same convention as the other property suites.
+"""
+
+from __future__ import annotations
+
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    BACEPipePolicy,
+    ClusterState,
+    GpuPool,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    Simulator,
+    find_placement,
+    jax_available,
+    legacy_find_placement,
+    resolve_backend,
+    scenario_names,
+    simulate,
+)
+from repro.core.kernels_decide import (
+    DECISION_BACKENDS,
+    decay_table_len,
+    phase1_pick,
+    prim_expand,
+)
+from repro.core.scenarios import get_scenario
+from repro.core.workloads import paper_cluster, paper_profiles
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+needs_jax = pytest.mark.skipif(
+    not jax_available(), reason="jax not installed"
+)
+
+
+# --------------------------------------------------------------- generators
+def random_cluster(rng: random.Random, *, hetero: bool = False) -> ClusterState:
+    """Random cluster; with ``hetero`` some regions carry multiple typed
+    pools (different FLOPS/memory/kW, spot discounts).  Some link capacities
+    are zero — the kernels must treat those edges as absent."""
+    n = rng.randint(2, 7)
+    regions = []
+    for i in range(n):
+        price = rng.uniform(0.05, 0.40)
+        cap = rng.choice([0, 2, 4, 8, 16, 32])
+        if hetero and rng.random() < 0.5:
+            pools = [GpuPool("h100", cap, flops=300e12, memory=80e9, gpu_kw=0.7)]
+            if rng.random() < 0.7:
+                pools.append(
+                    GpuPool(
+                        "spot",
+                        rng.choice([0, 2, 4, 8]),
+                        spot=True,
+                        price_mult=rng.uniform(0.2, 0.8),
+                    )
+                )
+            regions.append(Region.with_pools(f"r{i}", price, pools))
+        else:
+            regions.append(Region(f"r{i}", cap, price))
+    gbps = {}
+    for i, a in enumerate(regions):
+        for b in regions[i + 1 :]:
+            # Duplicated values provoke the bandwidth tie-break; zeros
+            # exercise absent links.
+            gbps[(a.name, b.name)] = rng.choice(
+                [0.0, 10.0, 10.0, 25.0, 50.0, 50.0, 100.0]
+            )
+    cluster = ClusterState.build(regions, gbps, symmetric=True)
+    # Pre-existing load: reserve a few GPUs so free != capacity.
+    for r in cluster.region_names():
+        free = int(cluster._free[cluster._idx[r]])
+        if free > 1 and rng.random() < 0.4:
+            cluster.reserve_gpus({r: rng.randint(1, free - 1)})
+    return cluster
+
+
+def random_profile(rng: random.Random, job_id: int = 0) -> JobProfile:
+    spec = JobSpec(
+        job_id=job_id,
+        model=ModelSpec(
+            f"m{job_id}",
+            rng.uniform(0.5e9, 40e9),
+            rng.choice([8, 16, 24, 32]),
+            rng.choice([1024, 2048, 4096]),
+            rng.choice([8, 16, 32]),
+        ),
+        iterations=rng.randint(1, 40),
+    )
+    return JobProfile(spec, gpu_flops=300e12, gpu_memory=400e9)
+
+
+def placement_key(p):
+    """Everything a placement decides, in comparable form (None passes
+    through so 'both infeasible' also counts as agreement)."""
+    if p is None:
+        return None
+    return (
+        tuple(p.path),
+        tuple(sorted(p.alloc.items())),
+        tuple((r, tuple(sorted(t.items()))) for r, t in sorted(p.typed_alloc.items())),
+        tuple(p.comm_times),
+        tuple(sorted(p.reserved_bw.items())),
+        p.eff_flops,
+        p.eff_memory,
+    )
+
+
+def _prim_inputs(cluster: ClusterState, profile: JobProfile):
+    k = max(profile.optimal_gpus(cluster.total_gpus()), profile.min_gpus)
+    if cluster.is_heterogeneous:
+        flops_vec = cluster.min_available_flops_vector(profile.gpu_flops)
+    else:
+        flops_vec = np.full(len(cluster._names), profile.gpu_flops)
+    return (
+        cluster.available_matrix(),
+        cluster._free,
+        cluster._name_rank,
+        flops_vec,
+        profile.decay_table(decay_table_len(k)),
+        profile.fwd_flops_per_microbatch,
+        profile.stage_overhead,
+        profile.spec.model.activation_bytes,
+        k,
+    )
+
+
+# ------------------------------------------------------------ backend seam
+def test_resolve_backend_rejects_unknown():
+    with pytest.raises(ValueError, match="unknown decision backend"):
+        resolve_backend("torch")
+
+
+def test_resolve_backend_numpy_identity():
+    assert resolve_backend("numpy") == "numpy"
+
+
+def test_simulator_rejects_unknown_backend():
+    cluster = paper_cluster()
+    profs = paper_profiles()
+    with pytest.raises(ValueError, match="decision backend"):
+        Simulator(cluster, profs, BACEPipePolicy(), decision_backend="torch")
+
+
+def test_simulator_rejects_legacy_engine_with_jax_backend():
+    cluster = paper_cluster()
+    profs = paper_profiles()
+    with pytest.raises(ValueError, match="legacy"):
+        Simulator(
+            cluster,
+            profs,
+            BACEPipePolicy(),
+            engine="legacy",
+            decision_backend="jax",
+        )
+
+
+@needs_jax
+def test_resolve_backend_jax_identity_when_available():
+    assert resolve_backend("jax") == "jax"
+
+
+def test_backends_registry():
+    assert DECISION_BACKENDS == ("numpy", "jax")
+
+
+# -------------------------------------------------------------- kernel level
+def test_decay_table_matches_scalar_factors():
+    rng = random.Random(5)
+    for job_id in range(6):
+        prof = random_profile(rng, job_id)
+        tab = prof.decay_table(decay_table_len(37))
+        assert len(tab) == 64
+        for g in range(1, len(tab)):
+            assert tab[g] == prof._decay_factor(g)
+
+
+def test_phase1_pick_matches_scalar_reference():
+    rng = random.Random(11)
+    for _ in range(200):
+        n = rng.randint(1, 12)
+        free = np.array([rng.choice([0, 1, 3, 8, 8, 16]) for _ in range(n)])
+        prices = np.array(
+            [rng.choice([0.1, 0.1, 0.2, 0.25]) for _ in range(n)]
+        )
+        names = [f"r{rng.randint(0, 99):02d}-{i}" for i in range(n)]
+        order = sorted(range(n), key=lambda i: names[i])
+        name_rank = np.empty(n, dtype=np.int64)
+        for rank, i in enumerate(order):
+            name_rank[i] = rank
+        k = rng.randint(1, 20)
+        # scalar reference: cheapest region with free >= k, ties by name
+        feas = [i for i in range(n) if free[i] >= k]
+        want = (
+            min(feas, key=lambda i: (prices[i], names[i])) if feas else -1
+        )
+        assert phase1_pick(free, prices, name_rank, k) == want
+
+
+@needs_jax
+def test_prim_expand_backends_bit_identical():
+    rng = random.Random(23)
+    for case in range(40):
+        cluster = random_cluster(rng, hetero=(case % 3 == 0))
+        prof = random_profile(rng, case)
+        inputs = _prim_inputs(cluster, prof)
+        g_np, len_np, paths_np = prim_expand(*inputs, backend="numpy")
+        g_jx, len_jx, paths_jx = prim_expand(*inputs, backend="jax")
+        np.testing.assert_array_equal(g_np, g_jx)
+        np.testing.assert_array_equal(len_np, len_jx)
+        np.testing.assert_array_equal(paths_np, paths_jx)
+
+
+@needs_jax
+def test_prim_expand_zero_capacity_links_bit_identical():
+    # All links zero: every seed must stop at its own region on both backends.
+    regions = [Region("a", 4, 0.1), Region("b", 8, 0.2), Region("c", 0, 0.3)]
+    gbps = {("a", "b"): 0.0, ("b", "c"): 0.0, ("a", "c"): 0.0}
+    cluster = ClusterState.build(regions, gbps, symmetric=True)
+    prof = random_profile(random.Random(1))
+    inputs = _prim_inputs(cluster, prof)
+    for backend in DECISION_BACKENDS:
+        g, path_len, paths = prim_expand(*inputs, backend=backend)
+        assert list(path_len) == [1, 1, 0]
+        assert list(g[:2]) == [
+            min(4, inputs[-1]),
+            min(8, inputs[-1]),
+        ]
+        assert paths[0, 0] == 0 and paths[1, 0] == 1
+
+
+# ------------------------------------------------------------ decision level
+@needs_jax
+def test_find_placement_backend_parity_random_clusters():
+    rng = random.Random(37)
+    for case in range(60):
+        cluster = random_cluster(rng, hetero=(case % 2 == 0))
+        prof = random_profile(rng, case)
+        p_np = find_placement(prof, cluster, backend="numpy")
+        p_jx = find_placement(prof, cluster, backend="jax")
+        assert placement_key(p_np) == placement_key(p_jx)
+
+
+def test_find_placement_numpy_matches_legacy_homogeneous():
+    rng = random.Random(41)
+    for case in range(60):
+        cluster = random_cluster(rng, hetero=False)
+        prof = random_profile(rng, case)
+        p_new = find_placement(prof, cluster, backend="numpy")
+        p_ref = legacy_find_placement(prof, cluster)
+        assert placement_key(p_new) == placement_key(p_ref)
+
+
+@needs_jax
+def test_find_placement_jax_matches_legacy_homogeneous():
+    rng = random.Random(43)
+    for case in range(30):
+        cluster = random_cluster(rng, hetero=False)
+        prof = random_profile(rng, case)
+        p_jx = find_placement(prof, cluster, backend="jax")
+        p_ref = legacy_find_placement(prof, cluster)
+        assert placement_key(p_jx) == placement_key(p_ref)
+
+
+# ---------------------------------------------------------- simulation level
+@needs_jax
+@pytest.mark.parametrize("scenario", scenario_names())
+def test_scenario_runs_identical_across_backends(scenario):
+    sc = get_scenario(scenario)
+    res_np = sc.run(BACEPipePolicy(), seed=0, decision_backend="numpy")
+    res_jx = sc.run(BACEPipePolicy(), seed=0, decision_backend="jax")
+    assert res_np.to_jsonable() == res_jx.to_jsonable()
+
+
+@needs_jax
+def test_paper_workload_identical_across_backends_and_engines():
+    from repro.core.workloads import paper_jobs
+
+    for seed in (0, 1, 2):
+        def fresh():
+            return paper_cluster(), paper_profiles(paper_jobs(seed=seed))
+
+        cluster, profs = fresh()
+        res_np = simulate(cluster, profs, BACEPipePolicy())
+        cluster, profs = fresh()
+        res_jx = simulate(
+            cluster, profs, BACEPipePolicy(), decision_backend="jax"
+        )
+        cluster, profs = fresh()
+        res_legacy = simulate(
+            cluster, profs, BACEPipePolicy(), engine="legacy"
+        )
+        assert res_np.to_jsonable() == res_jx.to_jsonable()
+        assert res_np.to_jsonable() == res_legacy.to_jsonable()
+
+
+# ------------------------------------------------------------ property sweep
+if HAVE_HYPOTHESIS:
+
+    cluster_seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+    job_seed_st = st.integers(min_value=0, max_value=2**31 - 1)
+
+    @settings(max_examples=40, deadline=None)
+    @given(cluster_seed_st, job_seed_st, st.booleans())
+    def test_property_numpy_matches_legacy(cseed, jseed, hetero):
+        cluster = random_cluster(random.Random(cseed), hetero=hetero)
+        prof = random_profile(random.Random(jseed))
+        p_new = find_placement(prof, cluster, backend="numpy")
+        if hetero:
+            # The legacy reference predates typed pools; on hetero clusters
+            # assert internal consistency instead: any placement respects
+            # the memory floor and only uses regions with free GPUs.
+            if p_new is not None:
+                assert p_new.total_gpus >= prof.min_gpus
+                for r, c in p_new.alloc.items():
+                    assert c >= 1
+        else:
+            p_ref = legacy_find_placement(prof, cluster)
+            assert placement_key(p_new) == placement_key(p_ref)
+
+    if jax_available():
+
+        @settings(max_examples=40, deadline=None)
+        @given(cluster_seed_st, job_seed_st, st.booleans())
+        def test_property_backends_bit_identical(cseed, jseed, hetero):
+            cluster = random_cluster(random.Random(cseed), hetero=hetero)
+            prof = random_profile(random.Random(jseed))
+            inputs = _prim_inputs(cluster, prof)
+            outs = {
+                b: prim_expand(*inputs, backend=b) for b in DECISION_BACKENDS
+            }
+            for a, b in zip(outs["numpy"], outs["jax"]):
+                np.testing.assert_array_equal(a, b)
+            assert placement_key(
+                find_placement(prof, cluster, backend="numpy")
+            ) == placement_key(find_placement(prof, cluster, backend="jax"))
