@@ -25,6 +25,12 @@ N`` repeats each cell over workload seeds 0..N-1 and reports the mean;
 ``--quick`` restricts the grid for CI smoke runs (and does not rewrite the
 checked-in baseline).
 
+A trailing *plan-cache probe* selects the microplan timing backend end to
+end and asserts the process-wide schedule-plan memo's hit-rate floor
+(``PLAN_CACHE_HIT_FLOOR``) over two identical back-to-back runs — the
+regression guard for the bounded-LRU thrash that re-planned every topology
+each decision round at fleet scale.
+
 Emits the usual CSV rows plus ``BENCH_scheduler.json`` at the repo root;
 ``scripts/bench_compare.py`` diffs two such files and gates on regression.
 
@@ -45,7 +51,9 @@ from repro.core import (
     ClusterState,
     Region,
     Simulator,
+    clear_plan_cache,
     jax_available,
+    plan_cache_info,
 )
 from repro.core.job import JobProfile
 from repro.core.workloads import paper_jobs
@@ -59,6 +67,16 @@ QUICK_REGION_COUNTS = (9, 32)
 
 #: The large-regime cell (jobs, regions) appended after the dense grid.
 BIG_CELL = (10_000, 256)
+
+#: Plan-memo probe (microplan timing backend): two identical back-to-back
+#: simulations of one cell; the second pass re-prices topologies the first
+#: already planned, so with a process-wide memo the overall hit rate has a
+#: hard floor.  The old ``lru_cache(maxsize=256)`` failed exactly this at
+#: the full probe size — its ~350 distinct topologies cycle through a
+#: 256-slot LRU, evicting every entry before its re-use.
+PLAN_CACHE_PROBE_QUICK = (256, 32)
+PLAN_CACHE_PROBE_FULL = (1024, 64)
+PLAN_CACHE_HIT_FLOOR = 0.75
 
 #: Largest (jobs, regions) the legacy seed engine is still timed at.  Above
 #: this the cell is recorded under ``skipped`` in the JSON.
@@ -92,11 +110,16 @@ def synth_cluster(n_regions: int) -> ClusterState:
     return ClusterState.from_region_bandwidths(regions, gbps)
 
 
-def synth_profiles(n_jobs: int, seed: int = 0) -> List[JobProfile]:
+def synth_profiles(
+    n_jobs: int, seed: int = 0, **job_kwargs
+) -> List[JobProfile]:
+    """Deterministic workload; ``job_kwargs`` (e.g. ``timing_model``,
+    ``pipeline_schedule``) pass through to every ``JobSpec``."""
     jobs = paper_jobs(
         n_jobs=n_jobs,
         seed=seed,
         submit_times=[i * ARRIVAL_GAP_S for i in range(n_jobs)],
+        **job_kwargs,
     )
     return [JobProfile(j, gpu_flops=BENCH_GPU_FLOPS) for j in jobs]
 
@@ -187,6 +210,50 @@ def _time_cell(
     }
 
 
+def _plan_cache_cell(n_jobs: int, n_regions: int) -> Dict[str, object]:
+    """Microplan-backend probe asserting the plan memo's hit-rate floor.
+
+    Runs the same cell twice without clearing the cache between passes; the
+    topologies the second pass prices were all planned in the first, so any
+    memo that actually holds them (process-wide, unbounded) clears
+    ``PLAN_CACHE_HIT_FLOOR`` easily and a bounded thrashing one does not."""
+    clear_plan_cache()
+    walls: List[float] = []
+    for _pass in range(2):
+        cluster = synth_cluster(n_regions)
+        profiles = synth_profiles(n_jobs, seed=0, timing_model="microplan")
+        sim = Simulator(
+            cluster,
+            profiles,
+            BACEPipePolicy(),
+            engine="vectorized",
+            decision_backend="numpy",
+        )
+        t0 = time.perf_counter()
+        res = sim.run()
+        walls.append(time.perf_counter() - t0)
+        assert len(res.records) == n_jobs
+    info = plan_cache_info()
+    if info.hit_rate < PLAN_CACHE_HIT_FLOOR:
+        raise AssertionError(
+            f"microplan plan-cache hit rate {info.hit_rate:.3f} below the "
+            f"{PLAN_CACHE_HIT_FLOOR} floor at jobs={n_jobs} "
+            f"regions={n_regions} ({info.hits} hits / {info.misses} misses; "
+            "the plan memo is evicting topologies that are still live)"
+        )
+    return {
+        "jobs": n_jobs,
+        "regions": n_regions,
+        "passes": 2,
+        "wall_s_per_pass": walls,
+        "hits": info.hits,
+        "misses": info.misses,
+        "distinct_topologies": info.size,
+        "hit_rate": info.hit_rate,
+        "floor": PLAN_CACHE_HIT_FLOOR,
+    }
+
+
 def _cell_variants(n_jobs: int, n_regions: int, have_jax: bool):
     """(engine, backend) variants timed for a cell, reference path first."""
     variants = [("vectorized", "numpy")]
@@ -249,6 +316,20 @@ def run(*, quick: bool = False, n_seeds: int = 1) -> List[str]:
                 f"{m['us_per_call']:.1f},"
                 f"wall_s={m['wall_s']:.3f};vs_vec_numpy={speedup:.2f}"
             )
+    # Plan-memo probe: the microplan timing backend selected end to end,
+    # with the hit-rate floor asserted inside.
+    probe_jobs, probe_regions = (
+        PLAN_CACHE_PROBE_QUICK if quick else PLAN_CACHE_PROBE_FULL
+    )
+    cache_cell = _plan_cache_cell(probe_jobs, probe_regions)
+    rows.append(
+        f"scheduler_scaling/j{probe_jobs}xr{probe_regions}/plan-cache,"
+        f"{1e6 * sum(cache_cell['wall_s_per_pass']) / (2 * probe_jobs):.1f},"
+        f"hit_rate={cache_cell['hit_rate']:.3f};"
+        f"topologies={cache_cell['distinct_topologies']};"
+        f"floor={PLAN_CACHE_HIT_FLOOR}"
+    )
+
     if quick:
         # Quick mode is a smoke run: don't clobber the full-sweep baseline
         # that bench_compare gates against.
@@ -266,6 +347,9 @@ def run(*, quick: bool = False, n_seeds: int = 1) -> List[str]:
         "seeds": n_seeds,
         "cells": cells,
         "skipped": skipped,
+        # Not a timing cell: the microplan plan-memo probe (hit-rate floor
+        # asserted in-process, recorded here for the paper trail).
+        "plan_cache": cache_cell,
     }
 
     def _find(jobs: int, regions: int, engine: str, backend: str):

@@ -44,7 +44,16 @@ from typing import Dict, Tuple
 Key = Tuple[int, int, str, str]
 
 #: Deterministic per-cell metrics the --metrics mode gates on (when present).
-METRIC_FIELDS = ("jct_s", "cost", "migrations")
+#: Absent fields are skipped per cell, so files from different benchmarks
+#: (hetero scenarios vs. the schedule ablation) share one gate.
+METRIC_FIELDS = (
+    "jct_s",
+    "cost",
+    "migrations",
+    "mean_iteration_s",
+    "mean_bubble",
+    "max_peak_activations",
+)
 
 
 def load_cells(path: Path) -> Dict[Key, dict]:

@@ -54,8 +54,11 @@ from .job import (  # noqa: F401
 )
 from .microplan import (  # noqa: F401
     PipelineTopology,
+    PlanCacheInfo,
     PlanEvent,
     SchedulePlan,
+    clear_plan_cache,
+    plan_cache_info,
     plan_from_topology,
     plan_schedule,
     topology_from_placement,

@@ -68,7 +68,11 @@ _DECAY_TAB_CACHE: dict = {}
 #: microbatch-level planner (``core/microplan``).
 TIMING_MODELS = ("analytic", "microplan")
 #: Pipeline schedules the microplan backend can price (``core/microplan``).
-PIPELINE_SCHEDULES = ("gpipe", "1f1b", "interleaved", "gpipe-overlap")
+#: ``synthesized`` is not a fixed template: the planner searches for a
+#: per-topology schedule (see ``core/microplan/planner.py``).
+PIPELINE_SCHEDULES = (
+    "gpipe", "1f1b", "interleaved", "gpipe-overlap", "synthesized"
+)
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,8 +8,11 @@ See ``planner.py`` for the event model and ``core/timing.py`` for the
 from .planner import (  # noqa: F401
     DEFAULT_VIRTUAL_STAGES,
     PipelineTopology,
+    PlanCacheInfo,
     PlanEvent,
     SchedulePlan,
+    clear_plan_cache,
+    plan_cache_info,
     plan_from_topology,
     plan_schedule,
     topology_from_placement,

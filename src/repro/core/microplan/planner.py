@@ -46,18 +46,35 @@ Schedules
                    microbatch ``i`` overlapping compute of ``i+1``;
                    ``M + L - 1`` ticks per direction (the data-plane parity
                    surface).
+``synthesized``    per-topology schedule *search* (CrossPipe/OptPipe
+                   flavour): greedy list-scheduling over (stage, microbatch,
+                   direction) ops with a critical-path lookahead, seeded from
+                   the best template order (GPipe plus a family of
+                   latency-/period-aware 1F1B warmup vectors) and locally
+                   improved by adjacent op-swap moves, under an optional
+                   per-stage peak-activation cap (``activation_cap``).  On
+                   compute-bound placements (the Alg. 1 regime, every hop
+                   ``≤ t_comp``) GPipe is provably makespan-optimal in this
+                   op model, so the search ties it; on long-latency
+                   boundaries (post-placement WAN degradation, Eq. 6's
+                   violation window) the capped template warmup degrades to
+                   GPipe's ``2·(M-1)·Δ`` steady state while the search keeps
+                   forward and backward transfers concurrent on the
+                   full-duplex link and pays ``(M-1)·Δ`` — strictly faster at
+                   a fraction of the stash.
 
 The op-level simulator is deterministic: per-resource FIFO order is fixed by
 the schedule, an op starts at ``max(resource free, dependency finishes)``,
 and an unexecutable schedule (a FIFO/dependency cycle) raises instead of
-hanging.
+hanging.  The synthesizer is deterministic too: a fixed candidate family, a
+fixed move order, and a fixed op-count budget — identical topologies yield
+identical plans.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from functools import lru_cache
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
 from ..cluster import INTRA_REGION_BANDWIDTH
@@ -268,7 +285,7 @@ class _OpSim:
 
 # ----------------------------------------------------------- topology mapping
 def topology_from_placement(
-    profile: JobProfile, placement: Placement
+    profile: JobProfile, placement: Placement, *, wan_stretch: float = 1.0
 ) -> PipelineTopology:
     """Derive the planner topology from a concrete placement.
 
@@ -278,7 +295,15 @@ def topology_from_placement(
     plan on Eq. (1).  GPU slot ``i`` belongs to stage ``min(i, L-1)``, so a
     tensor-parallel-widened placement folds its surplus hops into the last
     boundary group.
+
+    ``wan_stretch`` multiplies every *inter-region* hop time (intra-region
+    fabric hops are untouched): the post-placement bandwidth-contraction
+    regime of Eq. (6), where a placement admitted under ``t_comm ≤ t_comp``
+    runs comm-bound until the simulator migrates it — the long-latency
+    topologies the schedule synthesizer is gated on.
     """
+    if wan_stretch <= 0.0:
+        raise ValueError("wan_stretch must be positive")
     g = placement.total_gpus
     depth = profile.pipeline_depth(g)
     # Typed grants price stages at the bottleneck granted hardware (None on
@@ -291,7 +316,9 @@ def topology_from_placement(
     for i in range(g - 1):
         u, v = regions[i], regions[i + 1]
         hops.append(
-            intra_hop if u == v else act / placement.reserved_bw[(u, v)]
+            intra_hop
+            if u == v
+            else wan_stretch * (act / placement.reserved_bw[(u, v)])
         )
     if depth == 1:
         boundaries: Tuple[Tuple[float, ...], ...] = ()
@@ -390,20 +417,37 @@ def _build_1f1b(sim: _OpSim, topo: PipelineTopology) -> None:
             f = sim.add(("S", 0), tf[0], [], ("fwd", 0, m, 0, -1))
             sim.add(("S", 0), tb[0], [f], ("bwd", 0, m, 0, -1))
         return
-    need = [0] * depth  # warmup demand of stage s (before the M cap)
+    _build_from_orders(
+        sim, topo, _orders_from_warmup(m_count, depth, _warmup_demand(topo))
+    )
+
+
+def _warmup_demand(topo: PipelineTopology) -> List[int]:
+    """Uncapped latency-aware 1F1B warmup demand per stage: the per-boundary
+    no-stall condition ``w_s - w_{s+1} >= 1 + ceil(2·C_s / (t_f + t_b))``
+    accumulated tail-to-head (see ``_build_1f1b``)."""
+    depth = topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    need = [0] * depth
     for s in reversed(range(depth - 1)):
         roundtrip = 2.0 * sum(topo.boundaries[s])
         need[s] = need[s + 1] + 1 + math.ceil(
             roundtrip / (tf[s] + tb[s]) - 1e-12
         )
-    fwd_id: Dict[Tuple[int, int], int] = {}
-    f_arrive: Dict[Tuple[int, int], int] = {}
-    b_arrive: Dict[Tuple[int, int], int] = {}
-    pending: List[Tuple[int, str, int, int]] = []  # (op, kind, m, s)
+    return need
+
+
+def _orders_from_warmup(
+    m_count: int, depth: int, warmup: Sequence[int]
+) -> List[List[Tuple[str, int]]]:
+    """Per-stage op sequences of the 1F1B family: ``warmup[s]`` forwards,
+    strict f/b alternation, backward drain.  ``warmup = M`` everywhere is
+    the GPipe order; the classic schedule is ``warmup[s] = L-1-s``."""
+    orders: List[List[Tuple[str, int]]] = []
     for s in range(depth):
-        warmup = min(m_count, need[s])
-        order: List[Tuple[str, int]] = [("f", m) for m in range(warmup)]
-        nf, nb = warmup, 0
+        w = min(m_count, max(0, warmup[s]))
+        order: List[Tuple[str, int]] = [("f", m) for m in range(w)]
+        nf, nb = w, 0
         while nf < m_count:
             order.append(("f", nf))
             nf += 1
@@ -412,7 +456,29 @@ def _build_1f1b(sim: _OpSim, topo: PipelineTopology) -> None:
         while nb < m_count:
             order.append(("b", nb))
             nb += 1
-        for kind, m in order:
+        orders.append(order)
+    return orders
+
+
+def _build_from_orders(
+    sim: _OpSim,
+    topo: PipelineTopology,
+    orders: Sequence[Sequence[Tuple[str, int]]],
+) -> None:
+    """Materialize arbitrary per-stage ``("f"|"b", microbatch)`` sequences
+    into the op graph.  Each stage's sequence *is* its compute-resource FIFO
+    order; boundary transfers are enqueued in producer order, so the hop
+    FIFO follows the producing stage's sequence.  Inconsistent orders (a
+    FIFO/dependency cycle, or a missing producer) surface as
+    ``RuntimeError``/``KeyError`` when the sim runs or deps are wired."""
+    depth = topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    fwd_id: Dict[Tuple[int, int], int] = {}
+    f_arrive: Dict[Tuple[int, int], int] = {}
+    b_arrive: Dict[Tuple[int, int], int] = {}
+    pending: List[Tuple[int, str, int, int]] = []  # (op, kind, m, s)
+    for s in range(depth):
+        for kind, m in orders[s]:
             if kind == "f":
                 op = sim.add(("S", s), tf[s], [], ("fwd", s, m, 0, -1))
                 fwd_id[(m, s)] = op
@@ -452,11 +518,14 @@ def _chunk_times(
     times: Sequence[float], overhead: float, v: int
 ) -> List[float]:
     """Split a stage time into ``v`` chunks; each chunk re-pays the fixed
-    per-stage overhead (more, smaller kernels)."""
-    out = []
-    for t in times:
-        out.append((t - overhead) / v + overhead if t > overhead else t / v)
-    return out
+    per-stage overhead (more, smaller kernels), so no chunk ever prices
+    below the overhead floor.  The compute part ``max(t - overhead, 0)``
+    divides by ``v``; clamping it at zero keeps the split continuous at
+    ``t == overhead`` (the old ``t/v`` fallback priced a chunk *below* the
+    fixed per-kernel cost, a discontinuity interleaving could exploit)."""
+    if overhead <= 0.0:
+        return [t / v for t in times]
+    return [max(t - overhead, 0.0) / v + overhead for t in times]
 
 
 def _build_interleaved(sim: _OpSim, topo: PipelineTopology, v: int) -> None:
@@ -555,6 +624,31 @@ def _build_interleaved(sim: _OpSim, topo: PipelineTopology, v: int) -> None:
 
 
 # ----------------------------------------------------------------- summaries
+def _stage_peaks(
+    sim: _OpSim, finish: List[float], depth: int, v: int
+) -> List[float]:
+    """Peak concurrently-stashed activations per stage: +1/v at each fwd
+    finish, -1/v at each bwd finish, decrements first at equal timestamps
+    (a stash freed at t makes room for one created at t)."""
+    acts: List[List[Tuple[float, float]]] = [[] for _ in range(depth)]
+    weight = 1.0 / v
+    for i, (kind, stage, _m, _c, _h) in enumerate(sim.meta):
+        if kind == "fwd":
+            acts[stage].append((finish[i], weight))
+        elif kind == "bwd":
+            acts[stage].append((finish[i], -weight))
+    peaks = []
+    for deltas in acts:
+        deltas.sort(key=lambda e: (e[0], e[1]))
+        level = peak = 0.0
+        for _t, d in deltas:
+            level += d
+            if level > peak:
+                peak = level
+        peaks.append(peak)
+    return peaks
+
+
 def _summarize(
     sim: _OpSim,
     start: List[float],
@@ -567,26 +661,10 @@ def _summarize(
     depth = topo.n_stages
     makespan = max(finish)
     busy = [0.0] * depth
-    acts: List[List[Tuple[float, float]]] = [[] for _ in range(depth)]
-    weight = 1.0 / v
     for i, (kind, stage, _m, _c, _h) in enumerate(sim.meta):
-        if kind == "fwd":
+        if kind in ("fwd", "bwd"):
             busy[stage] += sim.dur[i]
-            acts[stage].append((finish[i], weight))
-        elif kind == "bwd":
-            busy[stage] += sim.dur[i]
-            acts[stage].append((finish[i], -weight))
-    peaks = []
-    for deltas in acts:
-        # Decrements first at equal timestamps: a stash freed at t makes room
-        # for one created at t.
-        deltas.sort(key=lambda e: (e[0], e[1]))
-        level = peak = 0.0
-        for _t, d in deltas:
-            level += d
-            if level > peak:
-                peak = level
-        peaks.append(peak)
+    peaks = _stage_peaks(sim, finish, depth, v)
     events: Tuple[PlanEvent, ...] = ()
     edges: Tuple[Tuple[int, int], ...] = ()
     if keep_events:
@@ -637,6 +715,22 @@ def _plan_gpipe_overlap(
     events: List[PlanEvent] = []
     if keep_events:
         half = n_ticks * delta + egress_rt / 2.0
+        bwd_base = half
+        if topo.egress:
+            # Causal anchor for the backward half: the first-drained
+            # microbatch's gradient can only start its ingress once that
+            # microbatch's *forward* egress chain has fully left the hops
+            # (its fwd starts at the last forward tick), and the ingress
+            # itself takes sum(egress).  Anchoring backwards at ``half``
+            # unconditionally rendered the first ingress *before* its own
+            # forward egress finished whenever ``t_f + sum(egress) > Δ``.
+            # The shift stays within the lockstep makespan: the last
+            # backward then ends at ``2(n-1)Δ + t_f + t_b + egress_rt
+            # <= 2nΔ + egress_rt`` since ``t_f + t_b <= 2Δ``.
+            fwd_egress_done = (
+                (n_ticks - 1) * delta + tf[0] + sum(topo.egress)
+            )
+            bwd_base = max(half, fwd_egress_done + sum(topo.egress))
 
         def emit(kind, boundary, m, hops, start):
             cur = start
@@ -663,7 +757,7 @@ def _plan_gpipe_overlap(
                 mi = tick - (depth - 1 - s)
                 if 0 <= mi < m_count:
                     m = m_count - 1 - mi
-                    t0 = half + tick * delta
+                    t0 = bwd_base + tick * delta
                     events.append(
                         PlanEvent("bwd", s, m, 0, -1, t0, t0 + tb[s])
                     )
@@ -694,6 +788,313 @@ def _plan_gpipe_overlap(
     )
 
 
+# ---------------------------------------------------------------- synthesizer
+#: Simulated-op budget for the op-swap local search: the number of candidate
+#: evaluations scales inversely with the op-graph size, so small topologies
+#: search deep and huge ones stay cheap.  Fixed budget => deterministic.
+_SWAP_SIM_BUDGET = 200_000
+
+#: Interpolation weights between the classic warmup vector and each anchor.
+_SEARCH_LAMBDAS = (0.25, 0.5, 0.75)
+
+
+def _evaluate_orders(
+    topo: PipelineTopology,
+    orders: Sequence[Sequence[Tuple[str, int]]],
+    activation_cap: Optional[float],
+) -> Optional[Tuple[float, float]]:
+    """Score one candidate on the exact op simulator.
+
+    Returns ``(iteration_time, max stage peak)`` — the search's ranking key —
+    or ``None`` if the orders are unexecutable (FIFO/dependency cycle,
+    missing producer) or bust the activation cap."""
+    sim = _OpSim()
+    try:
+        _build_from_orders(sim, topo, orders)
+        _start, finish = sim.run()
+    except (RuntimeError, KeyError):
+        return None
+    peak = max(_stage_peaks(sim, finish, topo.n_stages, 1))
+    if activation_cap is not None and peak > activation_cap + 1e-9:
+        return None
+    return (max(finish), peak)
+
+
+def _candidate_warmups(
+    topo: PipelineTopology,
+) -> List[Tuple[int, ...]]:
+    """Deterministic warmup-vector family seeding the search.
+
+    The 1F1B family generalizes both endpoints: ``warmup = M`` everywhere is
+    exactly the GPipe order and ``warmup[s] = L-1-s`` is the textbook
+    schedule.  Anchors: GPipe, the latency-aware demand (the ``1f1b``
+    template, whose per-boundary term divides the round trip by the *compute*
+    pair time and therefore explodes — and caps at ``M`` — once a hop
+    dominates), and a *period-aware* demand that divides by the true
+    steady-state period ``p = max(max_s(t_f+t_b), max hop)`` — on comm-bound
+    boundaries that is the vector that keeps forward and backward transfers
+    concurrent on the full-duplex link instead of degrading to GPipe's
+    serialized halves.  λ-interpolations from the classic vector toward each
+    anchor fill in the middle ground."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    max_hop = max((h for g in topo.boundaries for h in g), default=0.0)
+    period = max(max(tf[s] + tb[s] for s in range(depth)), max_hop)
+    per_need = [0] * depth
+    for s in reversed(range(depth - 1)):
+        per_need[s] = per_need[s + 1] + 1 + math.ceil(
+            2.0 * sum(topo.boundaries[s]) / period - 1e-12
+        )
+    classic = [depth - 1 - s for s in range(depth)]
+    anchors = [
+        [m_count] * depth,       # GPipe
+        _warmup_demand(topo),    # latency-aware (the 1f1b template)
+        per_need,                # period-aware
+        classic,
+    ]
+    seen: Dict[Tuple[int, ...], None] = {}
+    for anchor in anchors:
+        vec = tuple(min(m_count, max(0, w)) for w in anchor)
+        seen.setdefault(vec, None)
+    for anchor in anchors[:3]:
+        for lam in _SEARCH_LAMBDAS:
+            vec = tuple(
+                min(m_count, max(0, round(c + lam * (a - c))))
+                for c, a in zip(classic, anchor)
+            )
+            seen.setdefault(vec, None)
+    return list(seen)
+
+
+def _greedy_orders(
+    topo: PipelineTopology,
+    activation_cap: Optional[float],
+    prefer_bwd: bool,
+) -> Optional[List[List[Tuple[str, int]]]]:
+    """Greedy list-scheduling candidate with critical-path lookahead.
+
+    Event-driven: at each step every stage offers at most two *head* ops —
+    its next forward and next backward in ascending-microbatch order (heads
+    only, so the boundary-hop FIFOs stay consistent with the dependency
+    graph by construction) — and the op with the earliest feasible start
+    commits, ties broken by direction preference then by the static
+    b-level (remaining critical-path length to the microbatch's exit).
+    Forwards are withheld while a stage's stash sits at ``activation_cap``.
+    Boundary groups are approximated as single serial resources here; the
+    exact store-and-forward cost is re-measured by ``_OpSim`` when the
+    candidate is evaluated.  Returns ``None`` if the walk wedges (it cannot
+    for ``cap >= 1``, but the guard keeps the search total)."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    bsum = [sum(g) for g in topo.boundaries]
+    blev_b = [0.0] * depth
+    blev_b[0] = tb[0]
+    for s in range(1, depth):
+        blev_b[s] = tb[s] + bsum[s - 1] + blev_b[s - 1]
+    blev_f = [0.0] * depth
+    blev_f[depth - 1] = tf[depth - 1] + blev_b[depth - 1]
+    for s in reversed(range(depth - 1)):
+        blev_f[s] = tf[s] + bsum[s] + blev_f[s + 1]
+    orders: List[List[Tuple[str, int]]] = [[] for _ in range(depth)]
+    nf = [0] * depth
+    nb = [0] * depth
+    stage_free = [0.0] * depth
+    hop_free_f = [0.0] * depth
+    hop_free_b = [0.0] * depth
+    arr_f: Dict[Tuple[int, int], float] = {}
+    arr_b: Dict[Tuple[int, int], float] = {}
+    for _ in range(2 * m_count * depth):
+        best = None
+        for s in range(depth):
+            m = nf[s]
+            if (
+                m < m_count
+                and (s == 0 or nf[s - 1] > m)
+                and (
+                    activation_cap is None
+                    or nf[s] - nb[s] <= activation_cap - 1.0 + 1e-9
+                )
+            ):
+                est = max(stage_free[s], arr_f.get((m, s), 0.0))
+                cand = (est, 1 if prefer_bwd else 0, -blev_f[s], s, "f", m)
+                if best is None or cand < best:
+                    best = cand
+            m = nb[s]
+            if m < m_count and (
+                (s == depth - 1 and m < nf[s])
+                or (s < depth - 1 and nb[s + 1] > m)
+            ):
+                est = max(stage_free[s], arr_b.get((m, s), 0.0))
+                cand = (est, 0 if prefer_bwd else 1, -blev_b[s], s, "b", m)
+                if best is None or cand < best:
+                    best = cand
+        if best is None:
+            return None
+        est, _pref, _lev, s, kind, m = best
+        orders[s].append((kind, m))
+        if kind == "f":
+            fin = est + tf[s]
+            stage_free[s] = fin
+            nf[s] += 1
+            if s < depth - 1:
+                done = max(fin, hop_free_f[s]) + bsum[s]
+                hop_free_f[s] = done
+                arr_f[(m, s + 1)] = done
+            else:
+                arr_b[(m, s)] = fin
+        else:
+            fin = est + tb[s]
+            stage_free[s] = fin
+            nb[s] += 1
+            if s > 0:
+                done = max(fin, hop_free_b[s - 1]) + bsum[s - 1]
+                hop_free_b[s - 1] = done
+                arr_b[(m, s - 1)] = done
+    if any(nf[s] != m_count or nb[s] != m_count for s in range(depth)):
+        return None
+    return orders
+
+
+def _swap_improve(
+    topo: PipelineTopology,
+    orders: Sequence[Sequence[Tuple[str, int]]],
+    score: Tuple[float, float],
+    activation_cap: Optional[float],
+) -> List[List[Tuple[str, int]]]:
+    """Hill-climb by adjacent op swaps, deterministic order, fixed budget.
+
+    Only mixed-direction pairs are swappable — exchanging two same-direction
+    ops breaks the ascending-microbatch hop FIFO and can only deadlock.
+    Each candidate is re-scored on the exact simulator and adopted iff
+    strictly better on ``(iteration_time, peak)``; passes repeat until a
+    fixed point or the simulated-op budget runs out."""
+    cur = [list(o) for o in orders]
+    n_ops = 2 * topo.n_microbatches * (
+        topo.n_stages + sum(len(g) for g in topo.boundaries)
+    )
+    evals_left = max(8, _SWAP_SIM_BUDGET // max(1, n_ops))
+    improved = True
+    while improved and evals_left > 0:
+        improved = False
+        for seq in cur:
+            for i in range(len(seq) - 1):
+                if evals_left <= 0:
+                    break
+                a, b = seq[i], seq[i + 1]
+                if a[0] == b[0]:
+                    continue
+                seq[i], seq[i + 1] = b, a
+                res = _evaluate_orders(topo, cur, activation_cap)
+                evals_left -= 1
+                if res is not None and res < score:
+                    score = res
+                    improved = True
+                else:
+                    seq[i], seq[i + 1] = a, b
+    return cur
+
+
+def _build_single_stage_alt(sim: _OpSim, topo: PipelineTopology) -> None:
+    """Strict f/b alternation for the degenerate single-stage topology,
+    threading each microbatch through the egress round trip (peak stash 1;
+    GPipe's phase-decoupled order hides the round trip but stashes M)."""
+    tf, tb = topo.stage_time_fwd, topo.stage_time_bwd
+    for m in range(topo.n_microbatches):
+        tail = sim.add(("S", 0), tf[0], [], ("fwd", 0, m, 0, -1))
+        for h, hop in enumerate(topo.egress):
+            tail = sim.add(("F", 0, h), hop, [tail], ("fwd_comm", 0, m, 0, h))
+        for h in reversed(range(len(topo.egress))):
+            tail = sim.add(
+                ("B", 0, h), topo.egress[h], [tail], ("bwd_comm", 0, m, 0, h)
+            )
+        sim.add(("S", 0), tb[0], [tail], ("bwd", 0, m, 0, -1))
+
+
+def _plan_synthesized(
+    topo: PipelineTopology,
+    activation_cap: Optional[float],
+    keep_events: bool,
+    virtual_stages: int = DEFAULT_VIRTUAL_STAGES,
+) -> SchedulePlan:
+    """Per-topology schedule search (see the module docstring).
+
+    Seeds: the warmup-vector family (:func:`_candidate_warmups`) plus two
+    greedy list-scheduling walks (:func:`_greedy_orders`).  Every candidate
+    is scored on the exact op simulator; the best feasible one is locally
+    improved by adjacent op swaps.  The interleaved template lives on a
+    *chunked* op graph the (stage, microbatch) move set cannot reach, so it
+    is tried as one last candidate — synthesized must never lose to an
+    op-graph template.  Raises ``ValueError`` when no candidate satisfies
+    ``activation_cap``."""
+    m_count, depth = topo.n_microbatches, topo.n_stages
+    if depth == 1:
+        best = None
+        for build in (_build_single_stage_alt, _build_gpipe):
+            sim = _OpSim()
+            build(sim, topo)
+            _start, finish = sim.run()
+            peak = max(_stage_peaks(sim, finish, 1, 1))
+            if activation_cap is not None and peak > activation_cap + 1e-9:
+                continue
+            key = (max(finish), peak)
+            if best is None or key < best[0]:
+                best = (key, build)
+        if best is None:
+            raise ValueError(
+                f"activation_cap={activation_cap} infeasible for this "
+                "topology (no candidate schedule fits)"
+            )
+        sim = _OpSim()
+        best[1](sim, topo)
+        start, finish = sim.run()
+        return _summarize(sim, start, finish, topo, "synthesized", 1,
+                          keep_events)
+    candidates: List[List[List[Tuple[str, int]]]] = []
+    seen: Dict[Tuple[Tuple[Tuple[str, int], ...], ...], None] = {}
+    for warmup in _candidate_warmups(topo):
+        orders = _orders_from_warmup(m_count, depth, warmup)
+        key = tuple(tuple(o) for o in orders)
+        if key not in seen:
+            seen[key] = None
+            candidates.append(orders)
+    for prefer_bwd in (True, False):
+        greedy = _greedy_orders(topo, activation_cap, prefer_bwd)
+        if greedy is not None:
+            key = tuple(tuple(o) for o in greedy)
+            if key not in seen:
+                seen[key] = None
+                candidates.append(greedy)
+    best_score: Optional[Tuple[float, float]] = None
+    best_orders: Optional[List[List[Tuple[str, int]]]] = None
+    for orders in candidates:
+        res = _evaluate_orders(topo, orders, activation_cap)
+        if res is not None and (best_score is None or res < best_score):
+            best_score, best_orders = res, orders
+    if best_orders is None:
+        raise ValueError(
+            f"activation_cap={activation_cap} infeasible for this topology "
+            "(no candidate schedule fits)"
+        )
+    final = _swap_improve(topo, best_orders, best_score, activation_cap)
+    sim = _OpSim()
+    _build_from_orders(sim, topo, final)
+    start, finish = sim.run()
+    score = (max(finish), max(_stage_peaks(sim, finish, depth, 1)))
+    if virtual_stages > 1:
+        isim = _OpSim()
+        _build_interleaved(isim, topo, virtual_stages)
+        istart, ifinish = isim.run()
+        ipeak = max(_stage_peaks(isim, ifinish, depth, virtual_stages))
+        if (activation_cap is None or ipeak <= activation_cap + 1e-9) and (
+            max(ifinish), ipeak
+        ) < score:
+            return _summarize(
+                isim, istart, ifinish, topo, "synthesized",
+                virtual_stages, keep_events,
+            )
+    return _summarize(sim, start, finish, topo, "synthesized", 1, keep_events)
+
+
 # ------------------------------------------------------------------ front end
 def plan_from_topology(
     topo: PipelineTopology,
@@ -701,16 +1102,35 @@ def plan_from_topology(
     *,
     virtual_stages: int = DEFAULT_VIRTUAL_STAGES,
     keep_events: bool = False,
+    activation_cap: Optional[float] = None,
 ) -> SchedulePlan:
-    """Plan one iteration of ``schedule`` over an explicit topology."""
+    """Plan one iteration of ``schedule`` over an explicit topology.
+
+    ``activation_cap`` (OptPipe-style per-stage memory constraint) bounds the
+    peak number of concurrently-stashed activations on every stage; it is
+    only meaningful for the ``synthesized`` schedule, whose search treats it
+    as a feasibility constraint — templates have a fixed stash profile, so
+    passing a cap with one is an error rather than a silent no-op."""
     if schedule not in PIPELINE_SCHEDULES:
         raise ValueError(
             f"unknown schedule {schedule!r} (have: {PIPELINE_SCHEDULES})"
         )
     if virtual_stages < 1:
         raise ValueError("virtual_stages must be >= 1")
+    if activation_cap is not None:
+        if schedule != "synthesized":
+            raise ValueError(
+                "activation_cap applies only to schedule='synthesized' "
+                f"(got {schedule!r})"
+            )
+        if activation_cap < 1.0:
+            raise ValueError("activation_cap must be >= 1 (one stash)")
     if schedule == "gpipe-overlap":
         return _plan_gpipe_overlap(topo, keep_events)
+    if schedule == "synthesized":
+        return _plan_synthesized(
+            topo, activation_cap, keep_events, virtual_stages
+        )
     sim = _OpSim()
     v = 1
     if schedule == "gpipe":
@@ -724,11 +1144,44 @@ def plan_from_topology(
     return _summarize(sim, start, finish, topo, schedule, v, keep_events)
 
 
-@lru_cache(maxsize=256)
-def _plan_cached(
-    topo: PipelineTopology, schedule: str, virtual_stages: int
-) -> SchedulePlan:
-    return plan_from_topology(topo, schedule, virtual_stages=virtual_stages)
+class PlanCacheInfo(NamedTuple):
+    """Snapshot of the process-wide plan memo (:func:`plan_cache_info`)."""
+
+    hits: int
+    misses: int
+    size: int
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+# Process-wide, unbounded plan memo — the same shape as the k*-table and
+# decay-table memos in ``core/job.py``.  The old ``lru_cache(maxsize=256)``
+# thrashed at fleet scale: with thousands of live jobs the scheduler prices
+# far more than 256 distinct (topology, schedule) pairs per decision round,
+# so every round re-planned everything.  Entries are small frozen
+# ``SchedulePlan``s without event timelines, so an unbounded dict is cheap;
+# ``clear_plan_cache`` exists for tests and long-lived processes.
+_PLAN_CACHE: Dict[
+    Tuple[PipelineTopology, str, int, Optional[float]], SchedulePlan
+] = {}
+_PLAN_HITS = 0
+_PLAN_MISSES = 0
+
+
+def plan_cache_info() -> PlanCacheInfo:
+    """Hits/misses/size of the process-wide plan memo."""
+    return PlanCacheInfo(_PLAN_HITS, _PLAN_MISSES, len(_PLAN_CACHE))
+
+
+def clear_plan_cache() -> None:
+    """Drop all memoized plans and reset the hit/miss counters."""
+    global _PLAN_HITS, _PLAN_MISSES
+    _PLAN_CACHE.clear()
+    _PLAN_HITS = 0
+    _PLAN_MISSES = 0
 
 
 def plan_schedule(
@@ -738,18 +1191,39 @@ def plan_schedule(
     *,
     virtual_stages: int = DEFAULT_VIRTUAL_STAGES,
     keep_events: bool = False,
+    activation_cap: Optional[float] = None,
 ) -> SchedulePlan:
     """Plan one training iteration of ``profile`` under ``placement``.
 
     ``schedule`` defaults to the job's ``JobSpec.pipeline_schedule``.  Plans
-    without event materialization are memoized on the (topology, schedule)
-    pair — the timing backend prices identical placements repeatedly.
+    without event materialization are memoized process-wide on the
+    (topology, schedule, virtual_stages, activation_cap) key — the timing
+    backend prices identical placements repeatedly, across every job whose
+    profile maps to the same topology.
     """
+    global _PLAN_HITS, _PLAN_MISSES
     if schedule is None:
         schedule = profile.spec.pipeline_schedule
     topo = topology_from_placement(profile, placement)
     if keep_events:
         return plan_from_topology(
-            topo, schedule, virtual_stages=virtual_stages, keep_events=True
+            topo,
+            schedule,
+            virtual_stages=virtual_stages,
+            keep_events=True,
+            activation_cap=activation_cap,
         )
-    return _plan_cached(topo, schedule, virtual_stages)
+    key = (topo, schedule, virtual_stages, activation_cap)
+    plan = _PLAN_CACHE.get(key)
+    if plan is not None:
+        _PLAN_HITS += 1
+        return plan
+    _PLAN_MISSES += 1
+    plan = plan_from_topology(
+        topo,
+        schedule,
+        virtual_stages=virtual_stages,
+        activation_cap=activation_cap,
+    )
+    _PLAN_CACHE[key] = plan
+    return plan

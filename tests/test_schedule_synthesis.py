@@ -1,0 +1,413 @@
+"""Schedule-synthesis suite: the per-topology search, the planner bugfixes
+it would have inherited, and the timeline/property invariants over every
+schedule.
+
+Covers the synthesized-schedule contract (never loses to an op-graph
+template, wins on comm-bound boundaries, honors the activation cap), the
+``_chunk_times`` overhead-floor fix, the gpipe-overlap backward-egress
+causality fix, the process-wide plan memo, and a hypothesis-optional
+property sweep over random topologies (fixed cases always run).
+"""
+
+import dataclasses
+import math
+
+import pytest
+
+from repro.core import (
+    PIPELINE_SCHEDULES,
+    BACEPipePolicy,
+    JobProfile,
+    PipelineTopology,
+    clear_plan_cache,
+    plan_cache_info,
+    plan_from_topology,
+    plan_schedule,
+    simulate,
+    topology_from_placement,
+)
+from repro.core.microplan.planner import _chunk_times
+from repro.core.scenarios import SCENARIOS
+from repro.core.timing import iteration_time
+
+REL = 1e-9
+
+#: Schedules whose timeline runs on the shared `_OpSim` resource model —
+#: the family the synthesized search can never lose to.
+OP_GRAPH_TEMPLATES = ("gpipe", "1f1b", "interleaved")
+
+
+def uniform_topo(m, stages, t, hops=(), egress=(), overhead=0.0):
+    return PipelineTopology(
+        n_microbatches=m,
+        stage_time_fwd=(t,) * stages,
+        stage_time_bwd=(t,) * stages,
+        boundaries=tuple(tuple(h) for h in hops),
+        stage_overhead=overhead,
+        egress=tuple(egress),
+    )
+
+
+#: Fixed topologies the property assertions always run on: compute-bound
+#: (the admission regime), comm-bound (Eq. (6)'s violation window),
+#: degenerate single-stage with and without egress, multi-hop boundaries,
+#: and per-stage overhead.
+FIXED_TOPOLOGIES = (
+    uniform_topo(8, 4, 1.0, hops=[(0.6,), (0.9,), (0.3,)]),
+    uniform_topo(8, 4, 1.0, hops=[(2.4,), (3.6,), (1.2,)]),
+    uniform_topo(6, 3, 0.4, hops=[(0.1, 0.05), (0.4,)]),
+    uniform_topo(12, 2, 0.2, hops=[(0.7,)]),
+    uniform_topo(4, 1, 0.3),
+    uniform_topo(4, 1, 0.3, egress=(0.2, 0.2)),
+    uniform_topo(5, 3, 0.5, hops=[(1.5,), (0.01,)], overhead=0.05),
+)
+
+
+# ------------------------------------------------------------- synthesized
+def test_synthesized_never_loses_to_op_graph_templates():
+    for topo in FIXED_TOPOLOGIES:
+        synth = plan_from_topology(topo, "synthesized")
+        for schedule in OP_GRAPH_TEMPLATES:
+            tmpl = plan_from_topology(topo, schedule)
+            assert synth.iteration_time <= tmpl.iteration_time * (1 + REL), (
+                schedule,
+                topo,
+            )
+
+
+def test_synthesized_beats_all_templates_on_comm_bound_topology():
+    # The acceptance regime: hops several times the compute pair, where the
+    # capped 1f1b warmup degrades toward GPipe's serialized halves but the
+    # search keeps both directions of the full-duplex link busy.
+    topo = uniform_topo(8, 4, 1.0, hops=[(2.4,), (3.6,), (1.2,)])
+    synth = plan_from_topology(topo, "synthesized")
+    best_time = math.inf
+    best_peak = math.inf
+    for schedule in PIPELINE_SCHEDULES:
+        if schedule == "synthesized":
+            continue
+        plan = plan_from_topology(topo, schedule)
+        if plan.iteration_time < best_time:
+            best_time = plan.iteration_time
+            best_peak = plan.peak_activations
+    assert synth.iteration_time < best_time * (1 - 1e-6)
+    assert synth.peak_activations <= best_peak + 1e-9
+
+
+def test_synthesized_ties_gpipe_on_compute_bound_topology():
+    # In the admission regime (every hop <= t_comp) GPipe already meets the
+    # op-model makespan lower bound, so the search must tie it exactly —
+    # any "win" here would mean the simulator model drifted.
+    topo = uniform_topo(8, 4, 1.0, hops=[(0.6,), (0.9,), (0.3,)])
+    synth = plan_from_topology(topo, "synthesized")
+    gp = plan_from_topology(topo, "gpipe")
+    assert math.isclose(synth.iteration_time, gp.iteration_time, rel_tol=REL)
+    assert synth.peak_activations <= gp.peak_activations
+
+
+def test_synthesized_activation_cap_respected_and_monotone():
+    topo = uniform_topo(8, 4, 1.0, hops=[(2.4,), (3.6,), (1.2,)])
+    uncapped = plan_from_topology(topo, "synthesized")
+    prev_time = None
+    for cap in (8.0, 4.0, 2.0, 1.0):
+        plan = plan_from_topology(topo, "synthesized", activation_cap=cap)
+        assert plan.peak_activations <= cap + 1e-9
+        assert plan.iteration_time >= uncapped.iteration_time - 1e-9
+        if prev_time is not None:
+            # Tightening the cap can only cost time.
+            assert plan.iteration_time >= prev_time - 1e-9
+        prev_time = plan.iteration_time
+
+
+def test_synthesized_single_stage_and_egress():
+    plain = uniform_topo(4, 1, 0.3)
+    synth = plan_from_topology(plain, "synthesized")
+    gp = plan_from_topology(plain, "gpipe")
+    assert synth.iteration_time <= gp.iteration_time * (1 + REL)
+    # With egress hops, a cap of 1 forces the alternating order, which
+    # stalls on the round trip — strictly slower, but within the cap.
+    hop = uniform_topo(4, 1, 0.3, egress=(0.2, 0.2))
+    free = plan_from_topology(hop, "synthesized")
+    capped = plan_from_topology(hop, "synthesized", activation_cap=1.0)
+    assert capped.peak_activations <= 1.0 + 1e-9
+    assert capped.iteration_time >= free.iteration_time - 1e-9
+
+
+def test_synthesized_is_deterministic():
+    topo = uniform_topo(8, 4, 1.0, hops=[(2.4,), (3.6,), (1.2,)])
+    a = plan_from_topology(topo, "synthesized", keep_events=True)
+    b = plan_from_topology(topo, "synthesized", keep_events=True)
+    assert a.iteration_time == b.iteration_time
+    assert a.events == b.events
+
+
+def test_activation_cap_validation():
+    topo = uniform_topo(4, 2, 0.5, hops=[(0.1,)])
+    with pytest.raises(ValueError, match="activation_cap"):
+        plan_from_topology(topo, "gpipe", activation_cap=4.0)
+    with pytest.raises(ValueError, match="activation_cap"):
+        plan_from_topology(topo, "synthesized", activation_cap=0.5)
+
+
+def test_timing_seam_prices_synthesized(static_placements):
+    prof, placement = static_placements[0]
+    spec = dataclasses.replace(
+        prof.spec, timing_model="microplan", pipeline_schedule="synthesized"
+    )
+    mp = JobProfile(spec, gpu_flops=prof.gpu_flops)
+    expect = plan_schedule(mp, placement, "synthesized").iteration_time
+    assert iteration_time(mp, placement) == expect
+    gp = plan_schedule(mp, placement, "gpipe").iteration_time
+    assert expect <= gp * (1 + REL)
+
+
+# ------------------------------------------- bugfix: _chunk_times overhead
+def test_chunk_times_floor_and_continuity():
+    # Regression: the old split priced a chunk at t/v once t <= overhead,
+    # dropping below the fixed per-kernel cost with a jump at t == overhead.
+    oh = 0.3
+    for v in (2, 4):
+        below = _chunk_times([oh - 1e-9], oh, v)[0]
+        at = _chunk_times([oh], oh, v)[0]
+        above = _chunk_times([oh + 1e-9], oh, v)[0]
+        # Every chunk re-pays the overhead floor.
+        assert below >= oh - 1e-12
+        assert at == pytest.approx(oh)
+        # Continuity across the boundary.
+        assert abs(at - below) < 1e-8
+        assert abs(above - at) < 1e-8
+    # Zero overhead is a plain even split.
+    assert _chunk_times([1.0], 0.0, 4) == [0.25]
+
+
+def test_chunk_times_monotone_in_stage_time():
+    oh = 0.2
+    times = [oh * f for f in (0.25, 0.5, 1.0, 1.5, 3.0)]
+    chunks = [_chunk_times([t], oh, 2)[0] for t in times]
+    assert all(b >= a - 1e-12 for a, b in zip(chunks, chunks[1:]))
+    assert all(c >= oh - 1e-12 for c in chunks)
+
+
+def test_interleaved_never_prices_chunk_below_overhead():
+    # Public-surface version of the regression: a stage time equal to the
+    # overhead must still pay v overhead floors per stage pass, so the
+    # interleaved plan cannot undercut the un-chunked gpipe plan.
+    topo = uniform_topo(6, 3, 0.3, hops=[(0.01,), (0.01,)], overhead=0.3)
+    il = plan_from_topology(topo, "interleaved", virtual_stages=2)
+    gp = plan_from_topology(topo, "gpipe")
+    assert il.iteration_time >= gp.iteration_time - 1e-9
+
+
+# ----------------------------- bugfix: gpipe-overlap backward-egress anchor
+def test_overlap_egress_ingress_causality():
+    # Regression: the backward half used to anchor at the forward half's
+    # midpoint unconditionally, rendering the first gradient ingress
+    # *before* that microbatch's own forward egress had left the hops
+    # whenever t_f + sum(egress) > delta.
+    topo = uniform_topo(4, 1, 0.3, egress=(0.1, 0.1))
+    plan = plan_from_topology(topo, "gpipe-overlap", keep_events=True)
+    for m in range(topo.n_microbatches):
+        fwd_out = [
+            e for e in plan.events
+            if e.kind == "fwd_comm" and e.microbatch == m
+        ]
+        ingress = [
+            e for e in plan.events
+            if e.kind == "bwd_comm" and e.microbatch == m
+        ]
+        bwd = [
+            e for e in plan.events
+            if e.kind == "bwd" and e.microbatch == m
+        ]
+        assert fwd_out and ingress and bwd
+        # The gradient cannot enter the return hops before the forward
+        # egress chain has fully drained...
+        assert min(e.start for e in ingress) >= (
+            max(e.end for e in fwd_out) - 1e-12
+        )
+        # ...and must have arrived before the backward compute starts.
+        assert max(e.end for e in ingress) <= bwd[0].start + 1e-12
+
+
+def test_overlap_egress_events_stay_within_makespan():
+    # The causal shift must not leak past the lockstep makespan
+    # (t_f + t_b <= 2*delta keeps the drained tail inside it).
+    for egress in ((0.1, 0.1), (0.25,), (0.3, 0.15)):
+        topo = uniform_topo(4, 1, 0.3, egress=egress)
+        plan = plan_from_topology(topo, "gpipe-overlap", keep_events=True)
+        for e in plan.events:
+            assert -1e-12 <= e.start <= e.end <= plan.iteration_time + 1e-12
+
+
+# --------------------------------------------------- timeline invariants
+def _resource_of(event):
+    """The serially-reused resource an event occupies (mirrors the builder
+    naming: stage compute is shared by both directions, each boundary hop
+    is full-duplex, interleaved wrap paths are dedicated per direction)."""
+    if event.kind in ("fwd", "bwd"):
+        return ("S", event.stage)
+    if event.kind == "fwd_comm":
+        return ("F", event.stage, event.hop)
+    if event.kind == "bwd_comm":
+        return ("B", event.stage, event.hop)
+    if event.kind == "wrap_fwd":
+        return ("WF", event.hop)
+    if event.kind == "wrap_bwd":
+        return ("WB", event.hop)
+    raise AssertionError(f"unknown event kind {event.kind!r}")
+
+
+@pytest.mark.parametrize("schedule", PIPELINE_SCHEDULES)
+def test_timeline_invariants_per_schedule(schedule):
+    """Per-resource event intervals never overlap and every dependency
+    finishes before its consumer starts, for every schedule on every fixed
+    topology (the executability contract the synthesizer builds on)."""
+    for topo in FIXED_TOPOLOGIES:
+        plan = plan_from_topology(topo, schedule, keep_events=True)
+        by_resource = {}
+        for e in plan.events:
+            assert e.end >= e.start >= -1e-12
+            by_resource.setdefault(_resource_of(e), []).append(e)
+        for res, events in by_resource.items():
+            events.sort(key=lambda e: (e.start, e.end))
+            for a, b in zip(events, events[1:]):
+                assert b.start >= a.end - 1e-9, (
+                    f"{schedule}: overlap on {res}: {a} vs {b}"
+                )
+        for prod, cons in plan.edges:
+            assert (
+                plan.events[cons].start >= plan.events[prod].end - 1e-9
+            ), f"{schedule}: dep violated: {prod} -> {cons}"
+        # Op-graph schedules materialize their dependency edges.
+        if schedule != "gpipe-overlap" and topo.n_stages > 1:
+            assert plan.edges
+
+
+# ------------------------------------------------------- plan memoization
+@pytest.fixture(scope="module")
+def static_placements():
+    scen = SCENARIOS["static-paper"]
+    cluster, profiles, _ = scen.build(seed=0, n_jobs=4)
+    res = simulate(cluster, profiles, BACEPipePolicy())
+    profs = {p.spec.job_id: p for p in profiles}
+    return [(profs[r.job_id], r.placement) for r in res.completed_records]
+
+
+def test_plan_cache_is_process_wide_not_lru(static_placements):
+    """Regression for the 256-entry LRU: a working set larger than 256
+    distinct plan keys must still be fully served from the memo on its
+    second pass (the old cache evicted every entry before re-use)."""
+    clear_plan_cache()
+    # virtual_stages is part of the memo key even where it does not change
+    # the plan, so the lockstep schedule (closed-form, microseconds per
+    # plan) spans a >256-key working set without op-sim cost; a handful of
+    # op-graph keys ride along for realism.
+    keys = [
+        (prof, placement, "gpipe-overlap", v)
+        for prof, placement in static_placements
+        for v in range(1, 81)
+    ] + [
+        (prof, placement, schedule, 1)
+        for prof, placement in static_placements
+        for schedule in ("gpipe", "1f1b")
+    ]
+    assert len(keys) > 256
+    for prof, placement, schedule, v in keys:
+        plan_schedule(prof, placement, schedule, virtual_stages=v)
+    info = plan_cache_info()
+    assert info.hits == 0
+    assert info.misses == len(keys)
+    assert info.size == len(keys)
+    for prof, placement, schedule, v in keys:
+        plan_schedule(prof, placement, schedule, virtual_stages=v)
+    info = plan_cache_info()
+    assert info.hits == len(keys), (
+        f"second pass missed {len(keys) - info.hits} of {len(keys)} plans"
+    )
+    assert info.misses == len(keys)
+    clear_plan_cache()
+    assert plan_cache_info() == (0, 0, 0)
+
+
+def test_plan_cache_keeps_keep_events_uncached(static_placements):
+    clear_plan_cache()
+    prof, placement = static_placements[0]
+    plan_schedule(prof, placement, "gpipe", keep_events=True)
+    assert plan_cache_info().size == 0
+    clear_plan_cache()
+
+
+# ------------------------------------------------------------ wan_stretch
+def test_wan_stretch_scales_only_inter_region_hops(static_placements):
+    cross = [
+        (prof, placement)
+        for prof, placement in static_placements
+        if len(set(placement.stage_regions())) > 1
+    ]
+    assert cross, "static-paper seed 0 should place at least one job " \
+        "across regions"
+    for prof, placement in cross:
+        base = topology_from_placement(prof, placement)
+        stretched = topology_from_placement(prof, placement, wan_stretch=4.0)
+        saw_wan = False
+        for h1, h4 in zip(base.all_hops, stretched.all_hops):
+            if math.isclose(h4, 4.0 * h1, rel_tol=REL):
+                saw_wan = True
+            else:
+                assert math.isclose(h4, h1, rel_tol=REL)
+        assert saw_wan
+    prof, placement = static_placements[0]
+    with pytest.raises(ValueError, match="wan_stretch"):
+        topology_from_placement(prof, placement, wan_stretch=0.0)
+
+
+# --------------------------------------------------- hypothesis widening
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        m=st.integers(min_value=1, max_value=12),
+        stages=st.integers(min_value=1, max_value=5),
+        t=st.floats(min_value=1e-3, max_value=1.0),
+        hop_scale=st.floats(min_value=0.0, max_value=5.0),
+        cap=st.one_of(st.none(), st.integers(min_value=1, max_value=12)),
+        data=st.data(),
+    )
+    def test_hypothesis_all_schedules_execute_and_order(
+        m, stages, t, hop_scale, cap, data
+    ):
+        hops = tuple(
+            tuple(
+                data.draw(
+                    st.floats(
+                        min_value=0.0, max_value=max(hop_scale * t, 1e-9)
+                    )
+                )
+                for _ in range(data.draw(st.integers(1, 2)))
+            )
+            for _ in range(stages - 1)
+        )
+        topo = uniform_topo(m, stages, t, hops=hops)
+        # Every schedule executes without an _OpSim deadlock.
+        plans = {
+            s: plan_from_topology(topo, s) for s in PIPELINE_SCHEDULES
+        }
+        gp, ofb = plans["gpipe"], plans["1f1b"]
+        assert ofb.iteration_time <= gp.iteration_time * (1 + 1e-9)
+        best_op_graph = min(
+            plans[s].iteration_time for s in OP_GRAPH_TEMPLATES
+        )
+        synth = plans["synthesized"]
+        assert synth.iteration_time <= best_op_graph * (1 + 1e-9)
+        assert synth.peak_activations <= gp.peak_activations + 1e-9
+        if cap is not None:
+            capped = plan_from_topology(
+                topo, "synthesized", activation_cap=float(cap)
+            )
+            assert capped.peak_activations <= cap + 1e-9
+            assert capped.iteration_time >= synth.iteration_time - 1e-9
+
+except ImportError:  # hypothesis is a dev extra; fixed cases always run
+    pass
