@@ -10,13 +10,12 @@ from __future__ import annotations
 
 import statistics
 import time
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Callable, Dict, List, Sequence
 
 from repro.core import (
     BACEPipePolicy,
     CRLCFPolicy,
     CRLDFPolicy,
-    ClusterState,
     JobProfile,
     LCFPolicy,
     LDFPolicy,

@@ -55,14 +55,13 @@ import argparse
 import json
 import time
 from pathlib import Path
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
 from repro.core import (
     PIPELINE_SCHEDULES,
     BACEPipePolicy,
     SimulationResult,
     plan_from_topology,
-    plan_schedule,
     simulate,
     topology_from_placement,
 )

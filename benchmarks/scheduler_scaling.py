@@ -156,8 +156,8 @@ def _warm_jax(n_regions: int) -> None:
             warmed.add((table_len, pad))
             prim_expand(
                 np.zeros((pad, pad)),
-                np.ones(pad, dtype=cluster._free.dtype),
-                np.arange(pad, dtype=cluster._name_rank.dtype),
+                np.ones(pad, dtype=cluster.free_vector().dtype),
+                np.arange(pad, dtype=cluster.name_rank_vector().dtype),
                 np.full(pad, prof.gpu_flops),
                 prof.decay_table(table_len),
                 prof.fwd_flops_per_microbatch,

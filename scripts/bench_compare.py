@@ -56,38 +56,78 @@ METRIC_FIELDS = (
 )
 
 
-def load_cells(path: Path) -> Dict[Key, dict]:
+def _load_payload(path: Path) -> list:
+    """Read a BENCH_*.json and return its cell list, exiting with a clear
+    one-line error (not a traceback) on a missing, truncated, or malformed
+    file — CI artifacts get cut off mid-write often enough that the gate
+    must say *which* file is bad and why."""
     if not path.is_file():
         raise SystemExit(f"{path}: no such file")
-    payload = json.loads(path.read_text())
+    try:
+        text = path.read_text()
+    except (OSError, UnicodeDecodeError) as exc:
+        raise SystemExit(f"{path}: unreadable ({exc})")
+    try:
+        payload = json.loads(text)
+    except json.JSONDecodeError as exc:
+        raise SystemExit(
+            f"{path}: malformed JSON at line {exc.lineno} col {exc.colno} "
+            f"({exc.msg}) — truncated benchmark artifact?"
+        )
+    if not isinstance(payload, dict):
+        raise SystemExit(
+            f"{path}: expected a JSON object with a 'cells' list, got "
+            f"{type(payload).__name__}"
+        )
     cells = payload.get("cells", [])
+    if not isinstance(cells, list) or not all(
+        isinstance(c, dict) for c in cells
+    ):
+        raise SystemExit(f"{path}: 'cells' must be a list of objects")
+    if not cells:
+        raise SystemExit(f"{path}: no cells found")
+    return cells
+
+
+def _cell_field(c: dict, field: str, path: Path, cast=float):
+    try:
+        return cast(c[field])
+    except KeyError:
+        raise SystemExit(
+            f"{path}: cell {c.get('name') or c.get('jobs', '?')} is missing "
+            f"required field '{field}'"
+        )
+    except (TypeError, ValueError):
+        raise SystemExit(
+            f"{path}: cell field '{field}' is not a "
+            f"{cast.__name__}: {c[field]!r}"
+        )
+
+
+def load_cells(path: Path) -> Dict[Key, dict]:
     out: Dict[Key, dict] = {}
-    for c in cells:
+    for c in _load_payload(path):
         key = (
-            int(c["jobs"]),
-            int(c["regions"]),
-            str(c["engine"]),
+            _cell_field(c, "jobs", path, int),
+            _cell_field(c, "regions", path, int),
+            _cell_field(c, "engine", path, str),
             str(c.get("backend", "numpy")),
         )
+        _cell_field(c, "us_per_call", path, float)
         out[key] = c
-    if not out:
-        raise SystemExit(f"{path}: no cells found")
     return out
 
 
 def load_named_cells(path: Path) -> Dict[str, dict]:
     """Cells keyed by their ``name`` field (metric-gated benchmarks)."""
-    if not path.is_file():
-        raise SystemExit(f"{path}: no such file")
-    payload = json.loads(path.read_text())
-    cells = payload.get("cells", [])
     out: Dict[str, dict] = {}
-    for c in cells:
+    for c in _load_payload(path):
         if "name" not in c:
             raise SystemExit(f"{path}: cell without a name (not a metrics file)")
+        for field in METRIC_FIELDS:
+            if field in c:
+                _cell_field(c, field, path, float)
         out[str(c["name"])] = c
-    if not out:
-        raise SystemExit(f"{path}: no cells found")
     return out
 
 

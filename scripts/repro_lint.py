@@ -1,0 +1,21 @@
+#!/usr/bin/env python
+"""Convenience launcher for reprolint that works without PYTHONPATH.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis.staticcheck``;
+run from the repo root:
+
+    python scripts/repro_lint.py src benchmarks scripts tests
+"""
+
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+SRC = REPO_ROOT / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+from repro.analysis.staticcheck import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

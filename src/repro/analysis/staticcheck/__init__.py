@@ -1,0 +1,28 @@
+"""reprolint — repo-specific static analysis for the repro engine.
+
+AST visitors plus a lightweight intra-file call graph (stdlib ``ast`` only)
+enforcing the contracts the runtime suites can only sample: determinism
+(RPL1xx), ClusterState ledger encapsulation (RPL2xx), numpy/jax twin parity
+(RPL3xx), jit hygiene (RPL4xx), and settle-before-release accounting
+(RPL5xx).  Run with ``python -m repro.analysis.staticcheck`` or
+``scripts/repro_lint.py``; see DESIGN.md "Static contracts".
+"""
+
+from .baseline import apply as apply_baseline, load as load_baseline, save as save_baseline
+from .cli import main
+from .diagnostics import Diagnostic
+from .engine import Project, SourceFile, run_rules
+from .rules import all_rules, rule_catalog
+
+__all__ = [
+    "Diagnostic",
+    "Project",
+    "SourceFile",
+    "all_rules",
+    "apply_baseline",
+    "load_baseline",
+    "main",
+    "rule_catalog",
+    "run_rules",
+    "save_baseline",
+]

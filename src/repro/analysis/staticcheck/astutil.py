@@ -1,0 +1,128 @@
+"""Shared AST helpers for reprolint rules.
+
+Everything here is stdlib-``ast`` only.  The helpers cover the three
+mechanics every rule needs: resolving dotted names through per-file import
+aliases, walking a subtree without descending into nested function scopes,
+and locating the enclosing function for a node.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Tuple
+
+
+def import_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Map local names to the dotted module/object path they were imported
+    as, for every top-level or nested import statement in the file.
+
+    ``import numpy as np``            -> {"np": "numpy"}
+    ``from numpy import random``      -> {"random": "numpy.random"}
+    ``from datetime import datetime`` -> {"datetime": "datetime.datetime"}
+    """
+    aliases: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = (
+                    a.name if a.asname else a.name.split(".")[0]
+                )
+        elif isinstance(node, ast.ImportFrom):
+            if node.module is None or node.level:  # relative imports: local
+                continue
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                aliases[a.asname or a.name] = f"{node.module}.{a.name}"
+    return aliases
+
+
+def dotted_name(node: ast.expr, aliases: Optional[Dict[str, str]] = None) -> Optional[str]:
+    """Resolve an ``ast.Name``/``ast.Attribute`` chain to a dotted string,
+    substituting the root through ``aliases`` when given.  Returns None for
+    anything that is not a pure attribute chain (calls, subscripts, ...)."""
+    parts: List[str] = []
+    cur = node
+    while isinstance(cur, ast.Attribute):
+        parts.append(cur.attr)
+        cur = cur.value
+    if not isinstance(cur, ast.Name):
+        return None
+    root = cur.id
+    if aliases and root in aliases:
+        root = aliases[root]
+    parts.append(root)
+    return ".".join(reversed(parts))
+
+
+def call_name(node: ast.Call, aliases: Optional[Dict[str, str]] = None) -> Optional[str]:
+    """Dotted name of the callee, or None when it is not a name chain."""
+    return dotted_name(node.func, aliases)
+
+
+def walk_shallow(node: ast.AST) -> Iterator[ast.AST]:
+    """Yield descendants of ``node`` without entering nested function or
+    class definitions (the node itself is not yielded)."""
+    stack: List[ast.AST] = list(ast.iter_child_nodes(node))
+    while stack:
+        child = stack.pop()
+        yield child
+        if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(child))
+
+
+def function_defs(tree: ast.AST) -> Iterator[Tuple[str, ast.AST]]:
+    """Yield (qualname, def-node) for every function in the tree, including
+    nested ones and methods.  Qualnames use ``Outer.inner`` dotted form."""
+
+    def visit(node: ast.AST, prefix: str) -> Iterator[Tuple[str, ast.AST]]:
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                yield qual, child
+                yield from visit(child, f"{qual}.")
+            elif isinstance(child, ast.ClassDef):
+                yield from visit(child, f"{prefix}{child.name}.")
+            else:
+                yield from visit(child, prefix)
+
+    yield from visit(tree, "")
+
+
+def assigned_names(target: ast.expr) -> Iterator[str]:
+    """Names bound by an assignment target (handles tuple unpacking and
+    starred targets; attribute/subscript stores bind nothing new)."""
+    if isinstance(target, ast.Name):
+        yield target.id
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for elt in target.elts:
+            yield from assigned_names(elt)
+    elif isinstance(target, ast.Starred):
+        yield from assigned_names(target.value)
+
+
+def names_loaded(node: ast.AST) -> Iterator[str]:
+    """All Name identifiers read anywhere under ``node``."""
+    for child in ast.walk(node):
+        if isinstance(child, ast.Name) and isinstance(child.ctx, ast.Load):
+            yield child.id
+
+
+def first_arg(call: ast.Call) -> Optional[ast.expr]:
+    return call.args[0] if call.args else None
+
+
+def literal_str(node: ast.expr) -> Optional[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return node.value
+    return None
+
+
+def is_name_call(node: ast.AST, names: Sequence[str]) -> bool:
+    """True when ``node`` is a call to one of the bare ``names``."""
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in names
+    )

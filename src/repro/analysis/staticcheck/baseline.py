@@ -1,0 +1,71 @@
+"""Checked-in baseline of grandfathered findings.
+
+The baseline is a ratchet: findings recorded in it are reported as
+"baselined" and do not fail the run; findings *not* in it fail; entries in
+it that no longer occur are "stale" — celebrated in the summary, and a
+failure under ``--strict-baseline`` (CI) so the file shrinks monotonically.
+
+Entries match on ``(code, path, message)`` with a count, never on line
+numbers, so unrelated edits don't churn the file.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+from .diagnostics import Diagnostic
+
+BASELINE_VERSION = 1
+
+Key = Tuple[str, str, str]
+
+
+@dataclasses.dataclass
+class BaselineResult:
+    new: List[Diagnostic]
+    baselined: List[Diagnostic]
+    stale: List[Dict[str, object]]  # baseline entries with no matching finding
+
+
+def load(path: Path) -> Counter:
+    """Load a baseline file into a Counter over (code, path, message)."""
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict) or data.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: unsupported baseline format")
+    counts: Counter = Counter()
+    for entry in data.get("entries", []):
+        key = (str(entry["code"]), str(entry["path"]), str(entry["message"]))
+        counts[key] += int(entry.get("count", 1))
+    return counts
+
+
+def save(path: Path, diags: List[Diagnostic]) -> None:
+    counts: Counter = Counter(d.baseline_key for d in diags)
+    entries = [
+        {"code": code, "path": p, "message": msg, "count": n}
+        for (code, p, msg), n in sorted(counts.items())
+    ]
+    payload = {"version": BASELINE_VERSION, "entries": entries}
+    path.write_text(json.dumps(payload, indent=2) + "\n", encoding="utf-8")
+
+
+def apply(diags: List[Diagnostic], baseline: Counter) -> BaselineResult:
+    remaining = Counter(baseline)
+    new: List[Diagnostic] = []
+    baselined: List[Diagnostic] = []
+    for d in diags:
+        if remaining.get(d.baseline_key, 0) > 0:
+            remaining[d.baseline_key] -= 1
+            baselined.append(d)
+        else:
+            new.append(d)
+    stale = [
+        {"code": code, "path": p, "message": msg, "count": n}
+        for (code, p, msg), n in sorted(remaining.items())
+        if n > 0
+    ]
+    return BaselineResult(new=new, baselined=baselined, stale=stale)

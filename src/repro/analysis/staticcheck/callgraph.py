@@ -1,0 +1,96 @@
+"""Lightweight intra-file call graph.
+
+Resolution is by bare callee name: a call ``settle(...)`` or ``x.settle(...)``
+produces an edge to every function *named* ``settle`` known to the graph.
+That over-approximation is exactly what a reachability contract wants — if
+*any* plausible resolution reaches the target, the edge counts; a rename
+that breaks all resolutions breaks reachability and fails loudly.
+
+The graph is per-file because the settle-before-release contract is scoped
+to ``core/scheduler.py``; cross-module callees that the file merely imports
+(e.g. ``SegmentLedger.settle``) still appear as attribute-call *names*, so
+name-level targets match without needing import resolution.
+"""
+
+from __future__ import annotations
+
+import ast
+from collections import deque
+from typing import Dict, Iterator, List, Set, Tuple
+
+from .astutil import function_defs, walk_shallow
+
+
+class CallGraph:
+    def __init__(self, tree: ast.Module) -> None:
+        # bare function name -> def nodes (methods and nested defs included)
+        self.defs: Dict[str, List[ast.AST]] = {}
+        self.qualnames: Dict[int, str] = {}
+        for qual, node in function_defs(tree):
+            name = qual.rsplit(".", 1)[-1]
+            self.defs.setdefault(name, []).append(node)
+            self.qualnames[id(node)] = qual
+        # bare function name -> bare callee names reachable in one hop
+        self.edges: Dict[str, Set[str]] = {}
+        for name, nodes in self.defs.items():
+            callees: Set[str] = set()
+            for node in nodes:
+                callees |= set(self.callee_names(node))
+            self.edges[name] = callees
+
+    @staticmethod
+    def callee_names(func_node: ast.AST) -> Iterator[str]:
+        """Bare names of everything called directly inside ``func_node``
+        (not inside its nested defs — those have their own graph entries)."""
+        for child in walk_shallow(func_node):
+            if not isinstance(child, ast.Call):
+                continue
+            fn = child.func
+            if isinstance(fn, ast.Name):
+                yield fn.id
+            elif isinstance(fn, ast.Attribute):
+                yield fn.attr
+
+    def reaches(self, start: str, targets: Set[str]) -> bool:
+        """True when a call chain starting from function name ``start`` can
+        reach any function name in ``targets`` (including ``start`` itself
+        calling a target directly)."""
+        seen: Set[str] = set()
+        queue = deque([start])
+        while queue:
+            cur = queue.popleft()
+            if cur in seen:
+                continue
+            seen.add(cur)
+            for callee in self.edges.get(cur, set()):
+                if callee in targets:
+                    return True
+                if callee in self.edges and callee not in seen:
+                    queue.append(callee)
+        return False
+
+    def call_reaches(self, callee_name: str, targets: Set[str]) -> bool:
+        """True when a *call site* with bare name ``callee_name`` either is a
+        target itself or resolves to a local def that reaches a target."""
+        if callee_name in targets:
+            return True
+        return self.reaches(callee_name, targets)
+
+
+def ordered_calls(func_node: ast.AST) -> List[Tuple[Tuple[int, int], str, ast.Call]]:
+    """All direct call sites in ``func_node`` (nested defs excluded), as
+    ``((line, col), bare_name, node)`` sorted in source order."""
+    out: List[Tuple[Tuple[int, int], str, ast.Call]] = []
+    for child in walk_shallow(func_node):
+        if not isinstance(child, ast.Call):
+            continue
+        fn = child.func
+        if isinstance(fn, ast.Name):
+            name = fn.id
+        elif isinstance(fn, ast.Attribute):
+            name = fn.attr
+        else:
+            continue
+        out.append(((child.lineno, child.col_offset), name, child))
+    out.sort(key=lambda t: t[0])
+    return out

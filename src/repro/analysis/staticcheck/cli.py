@@ -1,0 +1,139 @@
+"""reprolint command line.
+
+``python -m repro.analysis.staticcheck [paths...]`` runs every rule over
+the given files/directories (default: ``src benchmarks scripts tests`` when
+run from the repo root) and exits non-zero on findings not covered by the
+baseline.
+
+Exit codes: 0 clean (or fully baselined), 1 findings / stale strict
+baseline, 2 usage or parse errors.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+from typing import List, Optional
+
+from . import baseline as baseline_mod
+from .diagnostics import Diagnostic
+from .engine import Project, SourceFileError, run_rules
+from .rules import all_rules, rule_catalog
+
+DEFAULT_PATHS = ("src", "benchmarks", "scripts", "tests")
+DEFAULT_BASELINE = "reprolint_baseline.json"
+
+
+def build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="reprolint",
+        description="Repo-specific static analysis for the repro engine's "
+        "determinism, ledger, twin-parity, jit, and accounting contracts.",
+    )
+    p.add_argument("paths", nargs="*", help="files or directories to check")
+    p.add_argument(
+        "--baseline", type=Path, default=None,
+        help=f"baseline file (default: ./{DEFAULT_BASELINE} when present)",
+    )
+    p.add_argument(
+        "--write-baseline", action="store_true",
+        help="write the current findings to the baseline file and exit 0",
+    )
+    p.add_argument(
+        "--strict-baseline", action="store_true",
+        help="fail when the baseline contains stale entries (CI ratchet)",
+    )
+    p.add_argument(
+        "--select", default=None,
+        help="comma-separated rule codes to run (default: all)",
+    )
+    p.add_argument(
+        "--list-rules", action="store_true", help="print the rule catalog"
+    )
+    p.add_argument(
+        "--include-fixtures", action="store_true",
+        help="also scan tests/fixtures/staticcheck (intentional violations)",
+    )
+    return p
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    args = build_parser().parse_args(argv)
+
+    if args.list_rules:
+        for code, name in rule_catalog().items():
+            print(f"{code}  {name}")
+        return 0
+
+    paths = [Path(p) for p in (args.paths or DEFAULT_PATHS)]
+    paths = [p for p in paths if p.exists()]
+    if not paths:
+        print("reprolint: no matching paths", file=sys.stderr)
+        return 2
+
+    try:
+        project = Project.collect(
+            paths, include_fixtures=args.include_fixtures
+        )
+    except SourceFileError as exc:
+        print(f"reprolint: {exc}", file=sys.stderr)
+        return 2
+
+    rules = all_rules()
+    if args.select:
+        wanted = {c.strip() for c in args.select.split(",") if c.strip()}
+        rules = [
+            r for r in rules
+            if r.code in wanted  # type: ignore[attr-defined]
+            or getattr(r, "structure_code", None) in wanted
+        ]
+
+    diags = run_rules(project, rules)
+
+    baseline_path = args.baseline
+    if baseline_path is None:
+        candidate = Path(DEFAULT_BASELINE)
+        baseline_path = candidate if candidate.exists() else None
+
+    if args.write_baseline:
+        target = args.baseline or Path(DEFAULT_BASELINE)
+        baseline_mod.save(target, diags)
+        print(f"reprolint: wrote {len(diags)} finding(s) to {target}")
+        return 0
+
+    if baseline_path is not None:
+        result = baseline_mod.apply(diags, baseline_mod.load(baseline_path))
+    else:
+        result = baseline_mod.BaselineResult(
+            new=diags, baselined=[], stale=[]
+        )
+
+    for d in result.new:
+        print(d.render())
+    status = 0
+    if result.new:
+        print(
+            f"reprolint: {len(result.new)} new finding(s)"
+            + (f", {len(result.baselined)} baselined" if result.baselined else "")
+        )
+        status = 1
+    elif result.baselined:
+        print(f"reprolint: clean ({len(result.baselined)} baselined)")
+    else:
+        print(f"reprolint: clean ({len(project.files)} files)")
+    if result.stale:
+        print(
+            f"reprolint: {len(result.stale)} baseline entr"
+            f"{'y is' if len(result.stale) == 1 else 'ies are'} stale — "
+            f"fixed findings! remove them from the baseline:"
+        )
+        for entry in result.stale:
+            print(f"  - {entry['code']} {entry['path']}: {entry['message']}")
+        if args.strict_baseline:
+            status = max(status, 1)
+    return status
+
+
+def render_all(diags: List[Diagnostic]) -> str:
+    return "\n".join(d.render() for d in diags)

@@ -1,0 +1,31 @@
+"""Diagnostic records emitted by reprolint rules.
+
+A diagnostic pins a rule code to a file/line/column plus a human message.
+Baseline matching deliberately ignores line numbers (they churn on every
+unrelated edit); the identity of a grandfathered finding is
+``(code, path, message)``, counted with multiplicity.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class Diagnostic:
+    code: str          # e.g. "RPL104"
+    path: str          # repo-relative posix path
+    line: int          # 1-based
+    col: int           # 0-based (ast convention)
+    message: str
+
+    @property
+    def baseline_key(self) -> Tuple[str, str, str]:
+        return (self.code, self.path, self.message)
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col + 1}: {self.code} {self.message}"
+
+    def sort_key(self) -> Tuple[str, int, int, str]:
+        return (self.path, self.line, self.col, self.code)

@@ -1,0 +1,139 @@
+"""File collection, suppression parsing, and rule dispatch for reprolint.
+
+A ``SourceFile`` owns one parsed module plus its per-line suppression table;
+a ``Project`` owns the set of files under analysis and the repo root used to
+render relative paths.  Rules receive the whole project so cross-file rules
+(ledger encapsulation, twin parity) and single-file rules share one pass.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+from .astutil import import_aliases
+from .diagnostics import Diagnostic
+
+SUPPRESS_RE = re.compile(r"#\s*reprolint:\s*disable=([A-Z0-9,\s*]+)")
+
+# Directory names never scanned: intentional-violation fixtures and
+# third-party/cache trees.
+EXCLUDED_DIR_NAMES = {
+    "__pycache__",
+    ".git",
+    ".venv",
+    "node_modules",
+    "golden",
+}
+# Path fragments excluded anywhere they appear (posix, relative).
+EXCLUDED_FRAGMENTS = ("fixtures/staticcheck",)
+
+
+class SourceFileError(Exception):
+    """Raised when a file under analysis cannot be parsed."""
+
+
+@dataclasses.dataclass
+class SourceFile:
+    path: Path                 # absolute
+    rel: str                   # posix path relative to project root
+    text: str
+    tree: ast.Module
+    suppressions: Dict[int, Set[str]]  # line -> codes ("*" = all)
+    aliases: Dict[str, str]
+
+    @classmethod
+    def load(cls, path: Path, root: Path) -> "SourceFile":
+        text = path.read_text(encoding="utf-8")
+        try:
+            tree = ast.parse(text, filename=str(path))
+        except SyntaxError as exc:  # surfaced as a hard error by the runner
+            raise SourceFileError(f"{path}: {exc}") from exc
+        suppressions: Dict[int, Set[str]] = {}
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            m = SUPPRESS_RE.search(line)
+            if m:
+                codes = {c.strip() for c in m.group(1).split(",") if c.strip()}
+                suppressions[lineno] = codes
+        try:
+            rel = path.relative_to(root).as_posix()
+        except ValueError:
+            rel = path.as_posix()
+        return cls(
+            path=path,
+            rel=rel,
+            text=text,
+            tree=tree,
+            suppressions=suppressions,
+            aliases=import_aliases(tree),
+        )
+
+    def suppressed(self, line: int, code: str) -> bool:
+        codes = self.suppressions.get(line)
+        if not codes:
+            return False
+        return "*" in codes or code in codes
+
+    @property
+    def parts(self) -> Sequence[str]:
+        return Path(self.rel).parts
+
+    def in_core(self) -> bool:
+        return "core" in self.parts
+
+
+@dataclasses.dataclass
+class Project:
+    root: Path
+    files: List[SourceFile]
+
+    @classmethod
+    def collect(
+        cls,
+        paths: Iterable[Path],
+        root: Optional[Path] = None,
+        *,
+        include_fixtures: bool = False,
+    ) -> "Project":
+        root = (root or Path.cwd()).resolve()
+        seen: Set[Path] = set()
+        files: List[SourceFile] = []
+        for p in paths:
+            p = Path(p).resolve()
+            candidates = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+            for f in candidates:
+                if f in seen or f.suffix != ".py":
+                    continue
+                if any(part in EXCLUDED_DIR_NAMES for part in f.parts):
+                    continue
+                posix = f.as_posix()
+                if not include_fixtures and any(
+                    frag in posix for frag in EXCLUDED_FRAGMENTS
+                ):
+                    continue
+                seen.add(f)
+                files.append(SourceFile.load(f, root))
+        files.sort(key=lambda sf: sf.rel)
+        return cls(root=root, files=files)
+
+    def by_rel(self, suffix: str) -> List[SourceFile]:
+        """Files whose relative path ends with ``suffix`` (posix)."""
+        return [f for f in self.files if f.rel.endswith(suffix)]
+
+
+def run_rules(project: Project, rules: Sequence[object]) -> List[Diagnostic]:
+    """Run every rule over the project, apply per-line suppressions, and
+    return the surviving diagnostics in deterministic order."""
+    by_path = {f.rel: f for f in project.files}
+    out: List[Diagnostic] = []
+    for rule in rules:
+        for diag in rule.check(project):  # type: ignore[attr-defined]
+            sf = by_path.get(diag.path)
+            if sf is not None and sf.suppressed(diag.line, diag.code):
+                continue
+            out.append(diag)
+    out.sort(key=Diagnostic.sort_key)
+    return out

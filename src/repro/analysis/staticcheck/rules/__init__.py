@@ -1,0 +1,38 @@
+"""Rule registry for reprolint."""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .determinism import (
+    DictReductionRule,
+    SetIterationRule,
+    UnseededRngRule,
+    WallClockRule,
+)
+from .jit import JitClosureRule, TracedBranchRule, X64ScopeRule
+from .ledger import LedgerEncapsulationRule
+from .settle import SettleBeforeReleaseRule
+from .twins import TwinParityRule
+
+
+def all_rules() -> List[object]:
+    return [
+        UnseededRngRule(),
+        WallClockRule(),
+        SetIterationRule(),
+        DictReductionRule(),
+        LedgerEncapsulationRule(),
+        TwinParityRule(),
+        JitClosureRule(),
+        TracedBranchRule(),
+        X64ScopeRule(),
+        SettleBeforeReleaseRule(),
+    ]
+
+
+def rule_catalog() -> Dict[str, str]:
+    """code -> rule name, including secondary codes."""
+    catalog = {r.code: r.name for r in all_rules()}  # type: ignore[attr-defined]
+    catalog["RPL302"] = "twin-structure"
+    return dict(sorted(catalog.items()))

@@ -1,0 +1,213 @@
+"""Determinism rules (RPL1xx).
+
+RPL101 — calls into process-global RNG state (``random.random()``,
+         ``np.random.rand()``, ...).  Seeded generator objects
+         (``random.Random(seed)``, ``np.random.default_rng(seed)``) are the
+         sanctioned idiom; module-level RNG makes trace replay depend on
+         import order and global seeding side effects.
+
+RPL102 — wall-clock reads inside ``core/``.  The engine is an event-driven
+         simulator: simulated time comes from the event queue, and any
+         ``time.time()``/``datetime.now()`` in core logic silently couples
+         decisions to the host.
+
+RPL103 — iteration over a set-valued expression without ``sorted()``.
+         Set iteration order is hash-seed dependent; feeding it into loops,
+         comprehensions, or reductions makes tie-breaks and float
+         accumulation order non-deterministic across processes.
+
+RPL104 — dict-order-sensitive reductions: ``sum()`` over ``.values()`` /
+         ``.items()`` in ``core/`` files, and ``min()``/``max()`` with a
+         ``key=`` over dict views anywhere.  Python dicts preserve
+         *insertion* order, which is whatever history produced the dict —
+         wrapping in ``sorted()`` pins the accumulation/tie-break order to
+         the keys instead.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..astutil import dotted_name, first_arg, is_name_call
+from ..diagnostics import Diagnostic
+from ..engine import Project, SourceFile
+
+# random.<fn> that touch the module-level generator.  Constructors of
+# independent generators are fine.
+_GLOBAL_RANDOM_FNS = {
+    "random", "randint", "randrange", "choice", "choices", "shuffle",
+    "sample", "uniform", "triangular", "betavariate", "expovariate",
+    "gammavariate", "gauss", "lognormvariate", "normalvariate",
+    "vonmisesvariate", "paretovariate", "weibullvariate", "getrandbits",
+    "randbytes", "seed", "setstate",
+}
+# numpy.random.<name> that do NOT touch global state.
+_NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "RandomState",
+                 "PCG64", "Philox", "MT19937", "SFC64", "BitGenerator"}
+
+_WALL_CLOCK = {
+    "time.time", "time.time_ns", "time.monotonic", "time.monotonic_ns",
+    "time.perf_counter", "time.perf_counter_ns", "time.process_time",
+    "time.localtime", "time.gmtime",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+_DICT_VIEW_ATTRS = {"values", "items", "keys"}
+
+
+def _is_set_expr(node: Optional[ast.expr]) -> bool:
+    if node is None:
+        return False
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    return is_name_call(node, ("set", "frozenset"))
+
+
+def _is_dict_view(node: Optional[ast.expr]) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr in _DICT_VIEW_ATTRS
+        and not node.args
+        and not node.keywords
+    )
+
+
+def _reduction_arg(node: ast.expr) -> ast.expr:
+    """Look through a bare generator-expression argument to its source
+    iterable: ``sum(v for v in d.values())`` reduces over ``d.values()``."""
+    if isinstance(node, ast.GeneratorExp) and node.generators:
+        return node.generators[0].iter
+    return node
+
+
+class UnseededRngRule:
+    code = "RPL101"
+    name = "unseeded-global-rng"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = dotted_name(node.func, sf.aliases)
+            if name is None:
+                continue
+            if name.startswith("random.") and name.count(".") == 1:
+                fn = name.split(".", 1)[1]
+                if fn in _GLOBAL_RANDOM_FNS:
+                    yield Diagnostic(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"call to process-global RNG 'random.{fn}'; "
+                        f"use a seeded random.Random(seed) instance",
+                    )
+            elif ".random." in name and name.split(".", 1)[0] in ("numpy",):
+                fn = name.rsplit(".", 1)[1]
+                if fn not in _NP_RANDOM_OK:
+                    yield Diagnostic(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"call to numpy global RNG 'np.random.{fn}'; "
+                        f"use np.random.default_rng(seed)",
+                    )
+
+
+class WallClockRule:
+    code = "RPL102"
+    name = "wall-clock-in-core"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not sf.in_core():
+                continue
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func, sf.aliases)
+                if name in _WALL_CLOCK:
+                    yield Diagnostic(
+                        self.code, sf.rel, node.lineno, node.col_offset,
+                        f"wall-clock read '{name}' inside core/; simulated "
+                        f"time must come from the event queue",
+                    )
+
+
+class SetIterationRule:
+    code = "RPL103"
+    name = "unsorted-set-iteration"
+
+    _REDUCERS = ("sum", "min", "max", "list", "tuple", "sorted")
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.For):
+                it = node.iter
+                if is_name_call(it, ("enumerate",)):
+                    it = first_arg(it)  # type: ignore[arg-type]
+                if _is_set_expr(it):
+                    yield self._diag(sf, node.iter)
+            elif isinstance(node, (ast.ListComp, ast.SetComp, ast.DictComp,
+                                   ast.GeneratorExp)):
+                for gen in node.generators:
+                    if _is_set_expr(gen.iter):
+                        yield self._diag(sf, gen.iter)
+            elif isinstance(node, ast.Call) and is_name_call(
+                node, ("sum", "min", "max", "list", "tuple")
+            ):
+                arg = first_arg(node)
+                if arg is not None and _is_set_expr(_reduction_arg(arg)):
+                    yield self._diag(sf, arg)
+
+    def _diag(self, sf: SourceFile, node: ast.expr) -> Diagnostic:
+        return Diagnostic(
+            self.code, sf.rel, node.lineno, node.col_offset,
+            "iteration over a set has hash-dependent order; wrap the set "
+            "in sorted(...) before iterating",
+        )
+
+
+class DictReductionRule:
+    code = "RPL104"
+    name = "dict-order-sensitive-reduction"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        in_core = sf.in_core()
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if in_core and is_name_call(node, ("sum",)):
+                arg = first_arg(node)
+                if arg is not None and _is_dict_view(_reduction_arg(arg)):
+                    yield Diagnostic(
+                        self.code, sf.rel, arg.lineno, arg.col_offset,
+                        "sum() over a dict view accumulates in insertion "
+                        "order; wrap in sorted(...) to pin the order",
+                    )
+            if is_name_call(node, ("min", "max")) and any(
+                kw.arg == "key" for kw in node.keywords
+            ):
+                arg = first_arg(node)
+                if arg is None:
+                    continue
+                src = _reduction_arg(arg)
+                wrapped = is_name_call(src, ("sorted",))
+                has_view = any(_is_dict_view(sub) for sub in ast.walk(src))
+                if has_view and not wrapped:
+                    yield Diagnostic(
+                        self.code, sf.rel, arg.lineno, arg.col_offset,
+                        "min/max with key= over a dict view breaks ties by "
+                        "insertion order; wrap in sorted(...) to pin the "
+                        "tie-break",
+                    )

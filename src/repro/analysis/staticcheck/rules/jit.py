@@ -1,0 +1,333 @@
+"""jit hygiene rules (RPL4xx).
+
+RPL401 — a jitted function closes over state that is rebound after
+         definition.  ``jax.jit`` captures closed-over values at trace
+         time; rebinding the name later silently keeps the traced value.
+         Read-only closures (imported modules, once-bound config) are fine.
+
+RPL402 — Python ``if``/``while`` on traced values inside a jitted
+         function.  Python control flow runs at trace time; branching on a
+         tracer raises ``ConcretizationTypeError`` at best and bakes in one
+         branch at worst.  Values derived only from ``.shape``/``.ndim``/
+         ``.dtype``/``len()`` and parameters declared static via
+         ``static_argnums``/``static_argnames`` are concrete and exempt.
+
+RPL403 — x64 precision flipped globally: ``config.update("jax_enable_x64")``
+         or a call to ``enable_x64`` outside a ``with`` context.  The
+         decision kernels' contract is a *scoped* x64 region
+         (``with enable_x64():``) so the float32 data plane is untouched.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from ..astutil import (
+    assigned_names,
+    dotted_name,
+    function_defs,
+    literal_str,
+    walk_shallow,
+)
+from ..diagnostics import Diagnostic
+from ..engine import Project, SourceFile
+
+_SHAPE_ATTRS = {"shape", "ndim", "dtype", "size", "itemsize"}
+_SHAPE_CALLS = {"len", "isinstance", "int", "bool", "float", "str", "type",
+                "hasattr", "getattr"}
+
+
+def _jit_static_names(call: ast.Call, func_def: ast.AST) -> Set[str]:
+    """Parameter names declared static in a jit(...) call."""
+    params = [a.arg for a in func_def.args.args]  # type: ignore[attr-defined]
+    static: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ) else [kw.value]
+            for v in vals:
+                s = literal_str(v)
+                if s:
+                    static.add(s)
+        elif kw.arg == "static_argnums":
+            vals = kw.value.elts if isinstance(
+                kw.value, (ast.Tuple, ast.List)
+            ) else [kw.value]
+            for v in vals:
+                if isinstance(v, ast.Constant) and isinstance(v.value, int):
+                    if 0 <= v.value < len(params):
+                        static.add(params[v.value])
+    return static
+
+
+def _is_jit_expr(node: ast.expr, aliases: Dict[str, str]) -> Optional[ast.Call]:
+    """Return the configuring Call when ``node`` is ``jax.jit(...)`` or
+    ``partial(jax.jit, ...)`` (the call carrying static args), else None."""
+    if not isinstance(node, ast.Call):
+        return None
+    name = dotted_name(node.func, aliases)
+    if name in ("jax.jit", "jit", "jax.api.jit"):
+        return node
+    if name in ("functools.partial", "partial") and node.args:
+        inner = dotted_name(node.args[0], aliases)
+        if inner in ("jax.jit", "jit"):
+            return node
+    return None
+
+
+def _jitted_functions(
+    sf: SourceFile,
+) -> Iterator[Tuple[ast.AST, ast.Call]]:
+    """Yield (function def, jit call) for every function jitted in this file
+    — via decorator or via a ``jax.jit(f, ...)`` call on a local def."""
+    defs_by_name: Dict[str, List[ast.AST]] = {}
+    for qual, node in function_defs(sf.tree):
+        defs_by_name.setdefault(qual.rsplit(".", 1)[-1], []).append(node)
+
+    seen: Set[int] = set()
+    for qual, node in function_defs(sf.tree):
+        for dec in node.decorator_list:  # type: ignore[attr-defined]
+            call = _is_jit_expr(dec, sf.aliases)
+            if call is None and dotted_name(dec, sf.aliases) in (
+                "jax.jit", "jit"
+            ):
+                call = ast.Call(func=dec, args=[], keywords=[])
+            if call is not None and id(node) not in seen:
+                seen.add(id(node))
+                yield node, call
+
+    for n in ast.walk(sf.tree):
+        if not isinstance(n, ast.Call):
+            continue
+        name = dotted_name(n.func, sf.aliases)
+        if name not in ("jax.jit", "jit"):
+            continue
+        if not n.args or not isinstance(n.args[0], ast.Name):
+            continue
+        for fdef in defs_by_name.get(n.args[0].id, []):
+            if id(fdef) not in seen:
+                seen.add(id(fdef))
+                yield fdef, n
+
+
+def _enclosing_scopes(
+    tree: ast.Module, target: ast.AST
+) -> List[ast.AST]:
+    """Module plus every function/class scope containing ``target``."""
+    path: List[ast.AST] = []
+
+    def visit(node: ast.AST, chain: List[ast.AST]) -> bool:
+        if node is target:
+            path.extend(chain)
+            return True
+        for child in ast.iter_child_nodes(node):
+            nxt = chain + [child] if isinstance(
+                child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) else chain
+            if visit(child, nxt):
+                return True
+        return False
+
+    visit(tree, [tree])
+    return [s for s in path if s is not target] or [tree]
+
+
+def _bindings_outside(
+    scopes: Sequence[ast.AST], target: ast.AST, name: str
+) -> int:
+    """Count Store bindings of ``name`` in the given scopes, excluding
+    anything inside ``target`` itself."""
+    count = 0
+    for scope in scopes:
+        for node in walk_shallow(scope):
+            if node is target:
+                continue
+            if isinstance(node, ast.Name) and isinstance(
+                node.ctx, ast.Store
+            ) and node.id == name:
+                count += 1
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for a in node.names:
+                    if (a.asname or a.name.split(".")[0]) == name:
+                        count += 1
+            elif isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ) and node.name == name:
+                count += 1
+            elif isinstance(node, (ast.Global, ast.Nonlocal)):
+                if name in node.names:
+                    count += 2  # declared for rebinding elsewhere
+    return count
+
+
+class JitClosureRule:
+    code = "RPL401"
+    name = "jit-mutable-closure"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            for fdef, _call in _jitted_functions(sf):
+                yield from self._check_fn(sf, fdef)
+
+    def _check_fn(self, sf: SourceFile, fdef: ast.AST) -> Iterator[Diagnostic]:
+        params = {a.arg for a in fdef.args.args}  # type: ignore[attr-defined]
+        bound: Set[str] = set(params)
+        for node in ast.walk(fdef):
+            if isinstance(node, ast.Name) and isinstance(node.ctx, ast.Store):
+                bound.add(node.id)
+            elif isinstance(node, (ast.Import, ast.ImportFrom)):
+                for a in node.names:
+                    bound.add(a.asname or a.name.split(".")[0])
+            elif isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                bound.add(node.name)
+                for a in node.args.args:  # type: ignore[attr-defined]
+                    bound.add(a.arg)
+        free = {
+            n.id
+            for n in ast.walk(fdef)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)
+            and n.id not in bound
+        }
+        if not free:
+            return
+        scopes = _enclosing_scopes(sf.tree, fdef)
+        for name in sorted(free):
+            if _bindings_outside(scopes, fdef, name) > 1:
+                yield Diagnostic(
+                    self.code, sf.rel,
+                    fdef.lineno, fdef.col_offset,  # type: ignore[attr-defined]
+                    f"jitted function '{fdef.name}' closes over "  # type: ignore[attr-defined]
+                    f"'{name}', which is rebound elsewhere; jit captures "
+                    f"the traced-time value — pass it as an argument",
+                )
+
+
+class TracedBranchRule:
+    code = "RPL402"
+    name = "traced-python-branch"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            for fdef, call in _jitted_functions(sf):
+                static = _jit_static_names(call, fdef)
+                yield from self._check_fn(sf, fdef, static)
+
+    def _refs_traced(self, node: ast.expr, traced: Set[str]) -> bool:
+        """True when ``node`` references a traced name outside a shape/len
+        projection."""
+
+        def scan(n: ast.AST) -> bool:
+            if isinstance(n, ast.Attribute) and n.attr in _SHAPE_ATTRS:
+                return False
+            if isinstance(n, ast.Call):
+                fn = n.func
+                if isinstance(fn, ast.Name) and fn.id in _SHAPE_CALLS:
+                    return False
+                return any(scan(c) for c in ast.iter_child_nodes(n))
+            if isinstance(n, ast.Name):
+                return isinstance(n.ctx, ast.Load) and n.id in traced
+            return any(scan(c) for c in ast.iter_child_nodes(n))
+
+        return scan(node)
+
+    def _check_fn(
+        self, sf: SourceFile, fdef: ast.AST, static: Set[str]
+    ) -> Iterator[Diagnostic]:
+        traced: Set[str] = {
+            a.arg
+            for a in fdef.args.args  # type: ignore[attr-defined]
+            if a.arg not in static and a.arg not in ("self", "cls")
+        }
+
+        def visit(stmts: Sequence[ast.stmt]) -> Iterator[Diagnostic]:
+            for stmt in stmts:
+                if isinstance(stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+                    value = getattr(stmt, "value", None)
+                    targets = (
+                        stmt.targets
+                        if isinstance(stmt, ast.Assign)
+                        else [stmt.target]
+                    )
+                    if value is not None:
+                        tainted = self._refs_traced(value, traced)
+                        if isinstance(stmt, ast.AugAssign):
+                            tainted = tainted or any(
+                                n in traced
+                                for n in assigned_names(stmt.target)
+                            )
+                        for t in targets:
+                            for name in assigned_names(t):
+                                if tainted:
+                                    traced.add(name)
+                                else:
+                                    traced.discard(name)
+                elif isinstance(stmt, (ast.If, ast.While)):
+                    if self._refs_traced(stmt.test, traced):
+                        kind = "if" if isinstance(stmt, ast.If) else "while"
+                        yield Diagnostic(
+                            self.code, sf.rel,
+                            stmt.lineno, stmt.col_offset,
+                            f"Python '{kind}' on a traced value inside "
+                            f"jitted '{fdef.name}'; use lax.cond/"  # type: ignore[attr-defined]
+                            f"lax.while_loop or jnp.where",
+                        )
+                    yield from visit(stmt.body)
+                    yield from visit(stmt.orelse)
+                elif isinstance(stmt, (ast.For, ast.With)):
+                    yield from visit(stmt.body)
+                elif isinstance(
+                    stmt, (ast.FunctionDef, ast.AsyncFunctionDef)
+                ):
+                    # Nested defs handed to lax control flow receive traced
+                    # operands; treat their params as traced.
+                    inner_traced = traced | {
+                        a.arg for a in stmt.args.args
+                    }
+                    saved = set(traced)
+                    traced.clear()
+                    traced.update(inner_traced)
+                    yield from visit(stmt.body)
+                    traced.clear()
+                    traced.update(saved)
+
+        yield from visit(fdef.body)  # type: ignore[attr-defined]
+
+
+class X64ScopeRule:
+    code = "RPL403"
+    name = "unscoped-x64"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            with_item_calls: Set[int] = set()
+            for node in ast.walk(sf.tree):
+                if isinstance(node, ast.With):
+                    for item in node.items:
+                        with_item_calls.add(id(item.context_expr))
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_name(node.func, sf.aliases)
+                if name is None:
+                    continue
+                if name.endswith("config.update") and node.args:
+                    key = literal_str(node.args[0])
+                    if key == "jax_enable_x64":
+                        yield Diagnostic(
+                            self.code, sf.rel, node.lineno, node.col_offset,
+                            "global x64 flip via config.update("
+                            "'jax_enable_x64'); use the scoped "
+                            "jax.experimental.enable_x64 context",
+                        )
+                elif name.split(".")[-1] == "enable_x64":
+                    if id(node) not in with_item_calls:
+                        yield Diagnostic(
+                            self.code, sf.rel, node.lineno, node.col_offset,
+                            "enable_x64 outside a 'with' context; x64 must "
+                            "be scoped so the float32 data plane is "
+                            "untouched",
+                        )

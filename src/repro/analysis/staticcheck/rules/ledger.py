@@ -1,0 +1,67 @@
+"""Ledger encapsulation rule (RPL2xx).
+
+RPL201 — any attribute access to a ``ClusterState`` private ledger field
+outside ``core/cluster.py``.  The ledgers (capacity/usage planes, price and
+bandwidth matrices, free-GPU vectors, rank/index tables) have exactly one
+sanctioned mutation path — the reserve/release API — and memoized upkeep
+(``available_matrix``) that a direct poke silently bypasses.  Reads must go
+through the public accessors so the representation can keep evolving.
+
+Scoping: only non-``self``/``cls`` receivers are checked, so an unrelated
+class using a generic private name (e.g. a ``_cap`` counter of its own) is
+not confused with ClusterState's field of the same name.  Every offending
+site in practice reads ``cluster._free``-style attributes off a ClusterState
+instance, which is precisely the non-self-receiver shape.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..diagnostics import Diagnostic
+from ..engine import Project
+
+# The private ledger surface of ClusterState (core/cluster.py).  Keep in
+# sync with the dataclass; the staticcheck self-test cross-checks this set
+# against the real class attributes.
+PRIVATE_LEDGER_FIELDS = frozenset({
+    "_names", "_idx", "_name_rank",
+    "_cap", "_cap_total", "_cap_t", "_cap_t_base",
+    "_price", "_price_base", "_spot_mult",
+    "_hetero", "_gpu_types", "_tidx", "_pools", "_region_cells",
+    "_used_t", "_flops_t", "_cell_exists",
+    "_free", "_free_total",
+    "_bw_mat", "_link_idx", "_bw_total", "_bw_base", "_bw_dict_base",
+    "_res_mat", "_res_extra", "_res_total",
+    "_avail_base", "_avail_view", "_avail_touch",
+})
+
+OWNER_FILE_SUFFIX = "core/cluster.py"
+
+
+class LedgerEncapsulationRule:
+    code = "RPL201"
+    name = "cluster-ledger-encapsulation"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if sf.rel.endswith(OWNER_FILE_SUFFIX):
+                continue
+            for node in ast.walk(sf.tree):
+                if not isinstance(node, ast.Attribute):
+                    continue
+                if node.attr not in PRIVATE_LEDGER_FIELDS:
+                    continue
+                recv = node.value
+                if isinstance(recv, ast.Name) and recv.id in ("self", "cls"):
+                    continue
+                verb = "write to" if isinstance(
+                    node.ctx, (ast.Store, ast.Del)
+                ) else "read of"
+                yield Diagnostic(
+                    self.code, sf.rel, node.lineno, node.col_offset,
+                    f"direct {verb} ClusterState private ledger "
+                    f"'{node.attr}' outside core/cluster.py; use the "
+                    f"public accessors",
+                )

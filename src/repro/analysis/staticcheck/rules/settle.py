@@ -1,0 +1,81 @@
+"""Settle-before-release rule (RPL5xx).
+
+RPL501 — in ``core/scheduler.py``, every code path that releases a running
+segment's resources (``release_gpus*``/``release_bandwidth``/
+``_release_placement``) must also reach ``SegmentLedger.settle`` — the
+single sanctioned write path for ``costs`` (PR 3's settle-on-event
+contract) — or immediately re-reserve (the voluntary-migration probe
+pattern, which releases to price an alternative and re-reserves the
+original when it declines to move).
+
+Mechanics: within each function of the scheduler, for every release call
+site we require a *later* call (source order; an over-approximation of all
+paths through the function) whose callee reaches ``settle`` or a
+``reserve``-family function through the intra-file call graph.  Functions
+whose own name contains ``release`` are the release primitives/wrappers
+themselves and are exempt — their callers carry the obligation.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from ..callgraph import CallGraph, ordered_calls
+from ..astutil import function_defs
+from ..diagnostics import Diagnostic
+from ..engine import Project
+
+TARGET_SUFFIX = "scheduler.py"
+
+RELEASE_NAMES = {
+    "release_gpus", "release_gpus_typed", "release_bandwidth",
+    "_release_placement",
+}
+SETTLE_NAMES = {"settle"}
+RESERVE_NAMES = {
+    "reserve_gpus", "reserve_gpus_typed", "reserve_bandwidth",
+    "_reserve_placement",
+}
+
+
+class SettleBeforeReleaseRule:
+    code = "RPL501"
+    name = "settle-before-release"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not (
+                sf.rel.endswith(TARGET_SUFFIX) and "core" in sf.parts
+            ):
+                continue
+            graph = CallGraph(sf.tree)
+            for qual, fdef in function_defs(sf.tree):
+                name = qual.rsplit(".", 1)[-1]
+                if "release" in name:
+                    continue  # the release primitives themselves
+                yield from self._check_fn(sf, graph, name, fdef)
+
+    def _check_fn(
+        self, sf, graph: CallGraph, fn_name: str, fdef: ast.AST
+    ) -> Iterator[Diagnostic]:
+        calls = ordered_calls(fdef)
+        for i, (_pos, name, node) in enumerate(calls):
+            if name not in RELEASE_NAMES:
+                continue
+            settled = False
+            for _pos2, later, _node2 in calls[i + 1:]:
+                if later in RELEASE_NAMES:
+                    continue
+                if graph.call_reaches(
+                    later, SETTLE_NAMES
+                ) or graph.call_reaches(later, RESERVE_NAMES):
+                    settled = True
+                    break
+            if not settled:
+                yield Diagnostic(
+                    self.code, sf.rel, node.lineno, node.col_offset,
+                    f"'{name}' in '{fn_name}' is not followed by a path "
+                    f"reaching SegmentLedger.settle (or a re-reserve); "
+                    f"releasing an unsettled segment drops accrued cost",
+                )

@@ -1,0 +1,723 @@
+"""Twin-parity rule (RPL3xx): structural AST diff of the numpy/jax decision
+kernels in ``core/kernels_decide.py``.
+
+The engine's bit-exactness contract says the two backends run *the same
+array program*.  This rule checks that statically: both twins are lowered to
+a canonical symbolic form — module roots ``np``/``jnp`` unify to ``X``,
+method calls (``e.any()``) unify with function calls (``X.any(e)``),
+``x.at[i].set(v)`` / ``x[i] = v`` / ``x = X.where(m, v, x)`` all lower to one
+``maskset`` node, ``.copy()`` is identity, trailing digits on names are
+stripped (``g0`` ≡ ``g``), and single-assignment temporaries are inlined —
+and then the loop-carried state of the numpy ``while`` loop is compared
+variable-by-variable (init expression, per-step update, loop condition,
+outputs) against the ``lax.while_loop`` state tuple.
+
+Codes:
+
+RPL301 — the twins parse into the expected shape but diverge (different
+         loop-carried variables, different init/update/condition for some
+         variable, different outputs).
+RPL302 — a twin is missing or no longer matches the structural conventions
+         the differ understands (so parity can't be proven); treat this as
+         "restore the convention or extend the differ", never ignore it.
+
+Structural conventions (enforced as RPL302):
+* numpy twin = ``_prim_expand_numpy`` (init region) tail-calling
+  ``_prim_steps_numpy`` (one ``while`` loop + return), passing its locals
+  positionally under the same names;
+* jax twin = ``_prim`` nested in ``_load_jax``: init region, ``cond``/
+  ``body`` defs, one ``lax.while_loop`` whose state tuple carries the loop
+  variables, unpack + return.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from ..astutil import function_defs
+from ..diagnostics import Diagnostic
+from ..engine import Project, SourceFile
+
+TARGET_BASENAME = "kernels_decide.py"
+NUMPY_EXPAND = "_prim_expand_numpy"
+NUMPY_STEPS = "_prim_steps_numpy"
+JAX_FN = "_prim"
+
+# Module roots unified to the symbol X.
+_MODULE_ALIASES = {"np": "X", "jnp": "X", "numpy": "X"}
+# Methods rewritten to X.<name>(receiver, ...) so `e.any()` == `X.any(e)`.
+_METHOD_FNS = {
+    "any", "all", "max", "min", "argmax", "argmin", "sum", "astype",
+    "reshape", "isfinite",
+}
+
+Sig = Tuple  # canonical signatures are nested tuples
+
+
+class TwinStructureError(Exception):
+    def __init__(self, msg: str, lineno: int) -> None:
+        super().__init__(msg)
+        self.lineno = lineno
+
+
+def _strip(name: str) -> str:
+    stripped = name.rstrip("0123456789")
+    return stripped if stripped else name
+
+
+def _var(name: str) -> Sig:
+    return ("var", _strip(name))
+
+
+@dataclasses.dataclass
+class TwinProgram:
+    params: Tuple[str, ...]
+    loop_vars: Tuple[str, ...]          # canonical names (jax: state order)
+    init_sigs: Dict[str, Sig]
+    init_lines: Dict[str, int]
+    cond_sig: Sig
+    cond_line: int
+    step_sigs: Dict[str, Sig]
+    step_lines: Dict[str, int]
+    outputs: Tuple[str, ...]
+    fn_line: int
+
+
+class _Canon:
+    """Expression canonicalizer over a symbolic environment.
+
+    ``env`` maps *stripped* names to their canonical values; names absent
+    from the env are free symbols.  ``state_map`` resolves ``state[i]``
+    subscripts inside the jax ``cond`` to the i-th loop variable.
+    """
+
+    def __init__(
+        self,
+        env: Dict[str, Sig],
+        state_map: Optional[Tuple[str, Sequence[str]]] = None,
+    ) -> None:
+        self.env = env
+        self.state_map = state_map
+
+    def canon(self, node: ast.expr) -> Sig:
+        c = self.canon
+        if isinstance(node, ast.Constant):
+            return ("const", repr(node.value))
+        if isinstance(node, ast.Name):
+            if node.id in _MODULE_ALIASES:
+                return ("mod", "X")
+            key = _strip(node.id)
+            return self.env.get(key, ("var", key))
+        if isinstance(node, ast.Attribute):
+            return ("attr", c(node.value), node.attr)
+        if isinstance(node, ast.Subscript):
+            if (
+                self.state_map is not None
+                and isinstance(node.value, ast.Name)
+                and node.value.id == self.state_map[0]
+                and isinstance(node.slice, ast.Constant)
+                and isinstance(node.slice.value, int)
+            ):
+                return ("var", self.state_map[1][node.slice.value])
+            return ("sub", c(node.value), c(node.slice))
+        if isinstance(node, ast.Slice):
+            return (
+                "slice",
+                c(node.lower) if node.lower else ("none",),
+                c(node.upper) if node.upper else ("none",),
+                c(node.step) if node.step else ("none",),
+            )
+        if isinstance(node, ast.Tuple):
+            return ("tuple",) + tuple(c(e) for e in node.elts)
+        if isinstance(node, ast.List):
+            return ("list",) + tuple(c(e) for e in node.elts)
+        if isinstance(node, ast.UnaryOp):
+            if isinstance(node.op, ast.USub) and isinstance(
+                node.operand, ast.Constant
+            ) and isinstance(node.operand.value, (int, float)):
+                return ("const", repr(-node.operand.value))
+            return ("unary", type(node.op).__name__, c(node.operand))
+        if isinstance(node, ast.BinOp):
+            return ("bin", type(node.op).__name__, c(node.left), c(node.right))
+        if isinstance(node, ast.BoolOp):
+            return ("bool", type(node.op).__name__) + tuple(
+                c(v) for v in node.values
+            )
+        if isinstance(node, ast.Compare):
+            return (
+                "cmp",
+                c(node.left),
+                tuple(type(op).__name__ for op in node.ops),
+                tuple(c(v) for v in node.comparators),
+            )
+        if isinstance(node, ast.Call):
+            return self._canon_call(node)
+        if isinstance(node, ast.IfExp):
+            return ("ifexp", c(node.test), c(node.body), c(node.orelse))
+        raise TwinStructureError(
+            f"unsupported expression {type(node).__name__}",
+            getattr(node, "lineno", 0),
+        )
+
+    def _canon_call(self, node: ast.Call) -> Sig:
+        c = self.canon
+        func = node.func
+        # x.at[idx].set(v)  ->  maskset(idx, v, x)
+        if (
+            isinstance(func, ast.Attribute)
+            and func.attr == "set"
+            and isinstance(func.value, ast.Subscript)
+            and isinstance(func.value.value, ast.Attribute)
+            and func.value.value.attr == "at"
+            and len(node.args) == 1
+        ):
+            base = func.value.value.value
+            return (
+                "maskset",
+                c(func.value.slice),
+                c(node.args[0]),
+                c(base),
+            )
+        if isinstance(func, ast.Attribute):
+            recv = func.value
+            is_module = isinstance(recv, ast.Name) and recv.id in _MODULE_ALIASES
+            if not is_module:
+                if func.attr == "copy" and not node.args and not node.keywords:
+                    return c(recv)
+                if func.attr in _METHOD_FNS:
+                    return (
+                        "call",
+                        ("attr", ("mod", "X"), func.attr),
+                        (c(recv),) + tuple(c(a) for a in node.args),
+                        self._kwargs(node),
+                    )
+        return (
+            "call",
+            c(func),
+            tuple(c(a) for a in node.args),
+            self._kwargs(node),
+        )
+
+    def _kwargs(self, node: ast.Call) -> Sig:
+        items = sorted(
+            (kw.arg or "**", self.canon(kw.value)) for kw in node.keywords
+        )
+        return tuple(items)
+
+
+def _is_where_call(node: ast.expr) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and node.func.attr == "where"
+        and isinstance(node.func.value, ast.Name)
+        and node.func.value.id in _MODULE_ALIASES
+        and len(node.args) == 3
+    )
+
+
+class _Region:
+    """Sequential symbolic interpreter for one straight-line region."""
+
+    def __init__(self, env: Dict[str, Sig]) -> None:
+        self.env = env
+        self.lines: Dict[str, int] = {}
+        self.returned: Optional[ast.Return] = None
+
+    def run(self, stmts: Sequence[ast.stmt], canon: _Canon) -> None:
+        for stmt in stmts:
+            if self.returned is not None:
+                raise TwinStructureError("code after return", stmt.lineno)
+            self._exec(stmt, canon)
+
+    def _exec(self, stmt: ast.stmt, canon: _Canon) -> None:
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            return  # docstring
+        if isinstance(stmt, ast.With):
+            self.run(stmt.body, canon)
+            return
+        if isinstance(stmt, ast.If):
+            if not stmt.orelse and all(
+                isinstance(s, (ast.Break, ast.Continue, ast.Pass))
+                for s in stmt.body
+            ):
+                return  # early-exit optimization, semantics-preserving
+            raise TwinStructureError("unsupported branch in twin", stmt.lineno)
+        if isinstance(stmt, ast.Return):
+            self.returned = stmt
+            return
+        if isinstance(stmt, ast.AugAssign):
+            if not isinstance(stmt.target, ast.Name):
+                raise TwinStructureError(
+                    "unsupported augmented target", stmt.lineno
+                )
+            key = _strip(stmt.target.id)
+            cur = self.env.get(key, ("var", key))
+            self.env[key] = (
+                "bin", type(stmt.op).__name__, cur, canon.canon(stmt.value)
+            )
+            self.lines[key] = stmt.lineno
+            return
+        if isinstance(stmt, (ast.Assign, ast.AnnAssign)):
+            if isinstance(stmt, ast.AnnAssign):
+                targets = [stmt.target]
+                value = stmt.value
+                if value is None:
+                    return
+            else:
+                targets = stmt.targets
+                value = stmt.value
+            if len(targets) != 1:
+                raise TwinStructureError("chained assignment", stmt.lineno)
+            target = targets[0]
+            if isinstance(target, ast.Name):
+                key = _strip(target.id)
+                if _is_where_call(value):
+                    third = canon.canon(value.args[2])  # type: ignore[union-attr]
+                    if third == self.env.get(key):
+                        # x = X.where(m, v, x)  ->  maskset(m, v, x)
+                        self.env[key] = (
+                            "maskset",
+                            canon.canon(value.args[0]),  # type: ignore[union-attr]
+                            canon.canon(value.args[1]),  # type: ignore[union-attr]
+                            third,
+                        )
+                        self.lines[key] = stmt.lineno
+                        return
+                self.env[key] = canon.canon(value)
+                self.lines[key] = stmt.lineno
+                return
+            if isinstance(target, ast.Subscript) and isinstance(
+                target.value, ast.Name
+            ):
+                key = _strip(target.value.id)
+                cur = self.env.get(key, ("var", key))
+                self.env[key] = (
+                    "maskset",
+                    canon.canon(target.slice),
+                    canon.canon(value),
+                    cur,
+                )
+                self.lines[key] = stmt.lineno
+                return
+            raise TwinStructureError(
+                "unsupported assignment target", stmt.lineno
+            )
+        raise TwinStructureError(
+            f"unsupported statement {type(stmt).__name__}", stmt.lineno
+        )
+
+
+def _find_def(sf: SourceFile, name: str) -> Optional[ast.FunctionDef]:
+    for qual, node in function_defs(sf.tree):
+        if qual.rsplit(".", 1)[-1] == name and isinstance(node, ast.FunctionDef):
+            return node
+    return None
+
+
+def _return_names(ret: ast.Return) -> Tuple[str, ...]:
+    if ret.value is None:
+        raise TwinStructureError("bare return in twin", ret.lineno)
+    if isinstance(ret.value, ast.Tuple):
+        elts = ret.value.elts
+    else:
+        elts = [ret.value]
+    names = []
+    for e in elts:
+        if not isinstance(e, ast.Name):
+            raise TwinStructureError(
+                "twin must return plain names", ret.lineno
+            )
+        names.append(_strip(e.id))
+    return tuple(names)
+
+
+# --------------------------------------------------------------- numpy twin
+def extract_numpy(sf: SourceFile) -> TwinProgram:
+    expand = _find_def(sf, NUMPY_EXPAND)
+    steps = _find_def(sf, NUMPY_STEPS)
+    if expand is None:
+        raise TwinStructureError(f"numpy twin '{NUMPY_EXPAND}' not found", 1)
+    if steps is None:
+        raise TwinStructureError(f"numpy twin '{NUMPY_STEPS}' not found", 1)
+
+    init_env: Dict[str, Sig] = {}
+    canon = _Canon(init_env)
+    region = _Region(init_env)
+    region.run(expand.body, canon)
+    if region.returned is None:
+        raise TwinStructureError(
+            f"{NUMPY_EXPAND} must end in 'return {NUMPY_STEPS}(...)'",
+            expand.lineno,
+        )
+    glue = region.returned.value
+    if not (
+        isinstance(glue, ast.Call)
+        and isinstance(glue.func, ast.Name)
+        and glue.func.id == NUMPY_STEPS
+    ):
+        raise TwinStructureError(
+            f"{NUMPY_EXPAND} must tail-call {NUMPY_STEPS}",
+            region.returned.lineno,
+        )
+    step_params = [a.arg for a in steps.args.args]
+    arg_names = []
+    for a in glue.args:
+        if not isinstance(a, ast.Name):
+            raise TwinStructureError(
+                "glue call must pass plain names", glue.lineno
+            )
+        arg_names.append(a.id)
+    if arg_names != step_params:
+        raise TwinStructureError(
+            "glue call must pass init locals positionally under the same "
+            "names as the step function's parameters",
+            glue.lineno,
+        )
+
+    # Split the steps body around its single while loop.
+    pre: List[ast.stmt] = []
+    while_node: Optional[ast.While] = None
+    post: List[ast.stmt] = []
+    for stmt in steps.body:
+        if isinstance(stmt, ast.While):
+            if while_node is not None:
+                raise TwinStructureError("multiple loops in twin", stmt.lineno)
+            while_node = stmt
+        elif while_node is None:
+            pre.append(stmt)
+        else:
+            post.append(stmt)
+    if while_node is None:
+        raise TwinStructureError(
+            f"{NUMPY_STEPS} must contain a while loop", steps.lineno
+        )
+
+    # Loop-carried = names rebound in the loop body that were already bound
+    # (as a parameter or pre-loop local) when the loop was entered.
+    bound_before = set(step_params)
+    for stmt in pre:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name):
+                    bound_before.add(t.id)
+    rebound: Set[str] = set()
+    for stmt in while_node.body:
+        if isinstance(stmt, ast.Assign):
+            for t in stmt.targets:
+                if isinstance(t, ast.Name) and t.id in bound_before:
+                    rebound.add(t.id)
+                elif isinstance(t, ast.Subscript) and isinstance(
+                    t.value, ast.Name
+                ) and t.value.id in bound_before:
+                    rebound.add(t.value.id)
+        elif isinstance(stmt, ast.AugAssign) and isinstance(
+            stmt.target, ast.Name
+        ) and stmt.target.id in bound_before:
+            rebound.add(stmt.target.id)
+    loop_vars = tuple(sorted(_strip(n) for n in rebound))
+
+    # Step-entry environment: loop-carried names are free symbols; every
+    # other parameter resolves to its init expression (same name, per the
+    # glue convention); pre-loop locals evaluate on top.
+    step_env: Dict[str, Sig] = {}
+    init_sigs: Dict[str, Sig] = {}
+    for p in step_params:
+        key = _strip(p)
+        if key in loop_vars:
+            step_env[key] = ("var", key)
+            if key not in init_env:
+                raise TwinStructureError(
+                    f"loop variable '{key}' has no init in {NUMPY_EXPAND}",
+                    steps.lineno,
+                )
+            init_sigs[key] = init_env[key]
+        else:
+            step_env[key] = init_env.get(key, ("var", key))
+    step_canon = _Canon(step_env)
+    pre_region = _Region(step_env)
+    pre_region.run(pre, step_canon)
+
+    cond_sig = step_canon.canon(while_node.test)
+    body_region = _Region(step_env)
+    body_region.run(while_node.body, step_canon)
+    step_sigs = {v: step_env[v] for v in loop_vars}
+
+    post_region = _Region(step_env)
+    post_region.run(post, step_canon)
+    if post_region.returned is None:
+        raise TwinStructureError(
+            f"{NUMPY_STEPS} must return after the loop", steps.lineno
+        )
+    outputs = _return_names(post_region.returned)
+
+    return TwinProgram(
+        params=tuple(_strip(a.arg) for a in expand.args.args),
+        loop_vars=loop_vars,
+        init_sigs=init_sigs,
+        init_lines={v: region.lines.get(v, expand.lineno) for v in loop_vars},
+        cond_sig=cond_sig,
+        cond_line=while_node.lineno,
+        step_sigs=step_sigs,
+        step_lines={
+            v: body_region.lines.get(v, while_node.lineno) for v in loop_vars
+        },
+        outputs=outputs,
+        fn_line=expand.lineno,
+    )
+
+
+# ----------------------------------------------------------------- jax twin
+def extract_jax(sf: SourceFile) -> TwinProgram:
+    prim = _find_def(sf, JAX_FN)
+    if prim is None:
+        raise TwinStructureError(f"jax twin '{JAX_FN}' not found", 1)
+
+    init_env: Dict[str, Sig] = {}
+    canon = _Canon(init_env)
+    raw_env: Dict[str, ast.expr] = {}
+    cond_def: Optional[ast.FunctionDef] = None
+    body_def: Optional[ast.FunctionDef] = None
+    while_assign: Optional[ast.Assign] = None
+    ret: Optional[ast.Return] = None
+
+    def is_while_loop_call(node: ast.expr) -> bool:
+        return (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Attribute)
+            and node.func.attr == "while_loop"
+        ) or (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "while_loop"
+        )
+
+    region = _Region(init_env)
+    for stmt in prim.body:
+        if isinstance(stmt, ast.FunctionDef):
+            if cond_def is None:
+                cond_def = stmt
+            elif body_def is None:
+                body_def = stmt
+            else:
+                raise TwinStructureError(
+                    "more than two nested defs in jax twin", stmt.lineno
+                )
+            continue
+        if isinstance(stmt, ast.Assign) and is_while_loop_call(stmt.value):
+            while_assign = stmt
+            continue
+        if isinstance(stmt, ast.Return):
+            ret = stmt
+            continue
+        if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1 and (
+            isinstance(stmt.targets[0], ast.Name)
+        ):
+            raw_env[_strip(stmt.targets[0].id)] = stmt.value
+        region._exec(stmt, canon)
+
+    if cond_def is None or body_def is None:
+        raise TwinStructureError(
+            "jax twin must define cond and body", prim.lineno
+        )
+    if while_assign is None or ret is None:
+        raise TwinStructureError(
+            "jax twin must unpack a lax.while_loop and return", prim.lineno
+        )
+
+    while_call = while_assign.value
+    assert isinstance(while_call, ast.Call)
+    if len(while_call.args) != 3:
+        raise TwinStructureError(
+            "while_loop must take (cond, body, state0)", while_call.lineno
+        )
+    state0_expr = while_call.args[2]
+    if isinstance(state0_expr, ast.Name):
+        state0_expr = raw_env.get(_strip(state0_expr.id), state0_expr)
+    if not isinstance(state0_expr, ast.Tuple):
+        raise TwinStructureError(
+            "while_loop state must be a tuple literal", while_call.lineno
+        )
+
+    # Loop-carried order from the body's state unpack.
+    if not body_def.body or not isinstance(body_def.body[0], ast.Assign):
+        raise TwinStructureError(
+            "body must start by unpacking the state", body_def.lineno
+        )
+    unpack = body_def.body[0]
+    target = unpack.targets[0]
+    if not isinstance(target, ast.Tuple):
+        raise TwinStructureError(
+            "body must tuple-unpack the state", unpack.lineno
+        )
+    loop_order: List[str] = []
+    for e in target.elts:
+        if not isinstance(e, ast.Name):
+            raise TwinStructureError(
+                "state unpack must bind plain names", unpack.lineno
+            )
+        loop_order.append(_strip(e.id))
+    if len(state0_expr.elts) != len(loop_order):
+        raise TwinStructureError(
+            "state tuple and body unpack disagree on length",
+            while_call.lineno,
+        )
+
+    init_sigs: Dict[str, Sig] = {}
+    init_lines: Dict[str, int] = {}
+    for name, elt in zip(loop_order, state0_expr.elts):
+        init_sigs[name] = canon.canon(elt)
+        init_lines[name] = elt.lineno
+
+    # cond: single return over state[i] subscripts.
+    if len(cond_def.args.args) != 1:
+        raise TwinStructureError("cond must take one argument", cond_def.lineno)
+    cond_param = cond_def.args.args[0].arg
+    cond_body = [
+        s for s in cond_def.body
+        if not (isinstance(s, ast.Expr) and isinstance(s.value, ast.Constant))
+    ]
+    if len(cond_body) != 1 or not isinstance(cond_body[0], ast.Return):
+        raise TwinStructureError(
+            "cond must be a single return", cond_def.lineno
+        )
+    cond_ret = cond_body[0]
+    assert cond_ret.value is not None
+    cond_canon = _Canon(dict(init_env), state_map=(cond_param, loop_order))
+    cond_sig = cond_canon.canon(cond_ret.value)
+
+    # body: env = init env + loop vars as free symbols.
+    body_env: Dict[str, Sig] = dict(init_env)
+    for v in loop_order:
+        body_env[v] = ("var", v)
+    body_canon = _Canon(body_env)
+    body_region = _Region(body_env)
+    body_region.run(body_def.body[1:], body_canon)
+    if body_region.returned is None:
+        raise TwinStructureError(
+            "body must return the updated state", body_def.lineno
+        )
+    returned = _return_names(body_region.returned)
+    if list(returned) != loop_order:
+        raise TwinStructureError(
+            "body must return the state variables in unpack order",
+            body_region.returned.lineno,
+        )
+    step_sigs = {v: body_env[v] for v in loop_order}
+
+    # Outer unpack: non-underscore names must sit at their state position.
+    out_target = while_assign.targets[0]
+    if not isinstance(out_target, ast.Tuple):
+        raise TwinStructureError(
+            "while_loop result must be tuple-unpacked", while_assign.lineno
+        )
+    if len(out_target.elts) != len(loop_order):
+        raise TwinStructureError(
+            "while_loop unpack length must match the state tuple",
+            while_assign.lineno,
+        )
+    for i, e in enumerate(out_target.elts):
+        if isinstance(e, ast.Name) and e.id != "_" and (
+            _strip(e.id) != loop_order[i]
+        ):
+            raise TwinStructureError(
+                f"while_loop unpack renames state variable "
+                f"'{loop_order[i]}'",
+                while_assign.lineno,
+            )
+    outputs = _return_names(ret)
+
+    return TwinProgram(
+        params=tuple(_strip(a.arg) for a in prim.args.args),
+        loop_vars=tuple(sorted(loop_order)),
+        init_sigs=init_sigs,
+        init_lines=init_lines,
+        cond_sig=cond_sig,
+        cond_line=cond_def.lineno,
+        step_sigs=step_sigs,
+        step_lines={
+            v: body_region.lines.get(v, body_def.lineno) for v in loop_order
+        },
+        outputs=outputs,
+        fn_line=prim.lineno,
+    )
+
+
+# ------------------------------------------------------------------ the rule
+class TwinParityRule:
+    code = "RPL301"
+    name = "twin-parity"
+    structure_code = "RPL302"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not sf.rel.endswith(TARGET_BASENAME):
+                continue
+            yield from self.check_file(sf)
+
+    def check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        try:
+            np_prog = extract_numpy(sf)
+        except TwinStructureError as exc:
+            yield Diagnostic(
+                self.structure_code, sf.rel, exc.lineno, 0,
+                f"numpy twin structure not recognized: {exc}",
+            )
+            return
+        try:
+            jx_prog = extract_jax(sf)
+        except TwinStructureError as exc:
+            yield Diagnostic(
+                self.structure_code, sf.rel, exc.lineno, 0,
+                f"jax twin structure not recognized: {exc}",
+            )
+            return
+        yield from self.compare(sf, np_prog, jx_prog)
+
+    def compare(
+        self, sf: SourceFile, np_prog: TwinProgram, jx_prog: TwinProgram
+    ) -> Iterator[Diagnostic]:
+        def diag(line: int, msg: str) -> Diagnostic:
+            return Diagnostic(self.code, sf.rel, line, 0, msg)
+
+        if np_prog.params != jx_prog.params:
+            yield diag(
+                np_prog.fn_line,
+                f"twins disagree on parameters: numpy {np_prog.params} vs "
+                f"jax {jx_prog.params}",
+            )
+            return
+        if set(np_prog.loop_vars) != set(jx_prog.loop_vars):
+            only_np = sorted(set(np_prog.loop_vars) - set(jx_prog.loop_vars))
+            only_jx = sorted(set(jx_prog.loop_vars) - set(np_prog.loop_vars))
+            yield diag(
+                np_prog.fn_line,
+                f"twins disagree on loop-carried state: only-numpy "
+                f"{only_np}, only-jax {only_jx}",
+            )
+            return
+        if np_prog.cond_sig != jx_prog.cond_sig:
+            yield diag(
+                np_prog.cond_line,
+                "twins disagree on the loop condition",
+            )
+        for v in sorted(np_prog.loop_vars):
+            if np_prog.init_sigs[v] != jx_prog.init_sigs[v]:
+                yield diag(
+                    np_prog.init_lines[v],
+                    f"twins disagree on the init of loop variable '{v}'",
+                )
+            if np_prog.step_sigs[v] != jx_prog.step_sigs[v]:
+                yield diag(
+                    np_prog.step_lines[v],
+                    f"twins disagree on the per-step update of loop "
+                    f"variable '{v}'",
+                )
+        if np_prog.outputs != jx_prog.outputs:
+            yield diag(
+                np_prog.fn_line,
+                f"twins disagree on outputs: numpy {np_prog.outputs} vs "
+                f"jax {jx_prog.outputs}",
+            )

@@ -12,7 +12,7 @@ from .baselines import CRLDFPolicy
 from .legacy import legacy_find_placement, legacy_order_by_priority
 from .pathfinder import find_placement
 from .priority import order_by_priority
-from .scheduler import BACEPipePolicy, SchedulingPolicy, fcfs_order
+from .scheduler import BACEPipePolicy, SchedulingPolicy
 
 
 class WithoutPriority(BACEPipePolicy):

@@ -55,8 +55,8 @@ def _cost_min_allocate_typed(
             if avail > 0:
                 cells.append((r, avail))
                 rates.append(cluster.pool_rate(r, gtype))
-                rranks.append(int(cluster._name_rank[cluster._idx[r]]))
-                tranks.append(cluster._tidx[gtype])
+                rranks.append(cluster.region_rank(r))
+                tranks.append(cluster.gpu_type_rank(gtype))
     order = cheapest_fill_order(
         np.asarray(rates), np.asarray(rranks), np.asarray(tranks)
     )
@@ -84,7 +84,7 @@ def cost_min_allocate(
     for r in path:
         if free[r] < 1:
             raise ValueError(f"region {r} has no free GPU for its stage")
-    if sum(free.values()) < g:
+    if sum(sorted(free.values())) < g:
         raise ValueError("path capacity below target g")
 
     if cluster.is_heterogeneous:
@@ -98,9 +98,7 @@ def cost_min_allocate(
     # (rate, region-name) lexsort the typed pour uses (type rank degenerate);
     # identical order to the scalar ``sorted(path, key=(price, name))``.
     prices = np.asarray([cluster.price(r) for r in path])
-    rranks = np.asarray(
-        [int(cluster._name_rank[cluster._idx[r]]) for r in path]
-    )
+    rranks = np.asarray([cluster.region_rank(r) for r in path])
     for pi in cheapest_fill_order(
         prices, rranks, np.zeros(len(path), dtype=np.int64)
     ):
@@ -124,13 +122,13 @@ def uniform_allocate(
     if g < len(path):
         raise ValueError("need at least one GPU per path region")
     free = {r: cluster.free_gpus[r] for r in path}
-    if any(free[r] < 1 for r in path) or sum(free.values()) < g:
+    if any(free[r] < 1 for r in path) or sum(sorted(free.values())) < g:
         raise ValueError("path cannot host g GPUs")
     base, extra = divmod(g, len(path))
     alloc = {r: min(free[r], base + (1 if i < extra else 0))
              for i, r in enumerate(path)}
     alloc = {r: max(1, n) for r, n in alloc.items()}
-    spill = g - sum(alloc.values())
+    spill = g - sum(sorted(alloc.values()))
     for r in path:  # resolve rounding/capacity spill deterministically
         if spill <= 0:
             break
@@ -145,5 +143,9 @@ def uniform_allocate(
 def allocation_cost_rate(
     cluster: ClusterState, alloc: Mapping[str, int]
 ) -> float:
-    """Σ_r n_r · P_r (the Eq. 4 price integrand, in $/kWh·GPU units)."""
-    return sum(cluster.price(r) * n for r, n in alloc.items())
+    """Σ_r n_r · P_r (the Eq. 4 price integrand, in $/kWh·GPU units).
+
+    Float accumulation in the allocation's own (path) order — pinned to the
+    reference implementation; re-sorting would move last-ulp rounding on a
+    quantity the engine compares against thresholds."""
+    return sum(cluster.price(r) * n for r, n in alloc.items())  # reprolint: disable=RPL104

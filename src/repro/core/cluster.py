@@ -418,7 +418,11 @@ class ClusterState:
                 continue
             self._bw_mat[iu, iv] = b
             self._link_idx[(u, v)] = (iu, iv)
-        self._bw_total = float(sum(self.bandwidth.values()))
+        # Decision input (feeds congestion_alpha): the accumulation order is
+        # pinned to the reference implementation's dict order — re-sorting
+        # would move the last-ulp rounding and break golden-trace
+        # byte-stability.
+        self._bw_total = float(sum(self.bandwidth.values()))  # reprolint: disable=RPL104
         # Installed-capacity baseline for time-varying multipliers: dynamic
         # scenarios rescale _bw_mat against this, never compounding.
         self._bw_base = self._bw_mat.copy()
@@ -665,7 +669,7 @@ class ClusterState:
                 resolved.append((i, t, int(n)))
         for i, t, n in resolved:
             self._used_t[i, t] += n
-        for i in {i for i, _, _ in resolved}:
+        for i in sorted({i for i, _, _ in resolved}):
             self._refresh_free(i)
 
     def release_gpus_typed(
@@ -689,7 +693,7 @@ class ClusterState:
                 resolved.append((i, t, int(n)))
         for i, t, n in resolved:
             self._used_t[i, t] -= n
-        for i in {i for i, _, _ in resolved}:
+        for i in sorted({i for i, _, _ in resolved}):
             self._refresh_free(i)
 
     def spot_pools(self) -> List[Tuple[str, str]]:
@@ -952,6 +956,53 @@ class ClusterState:
 
     def region_index(self) -> Dict[str, int]:
         return self._idx
+
+    # ------------------------------------------- read-only ledger views
+    # The decision kernels and test/bench setup consume the dense ledgers
+    # directly; these accessors hand out read-only views of the live arrays
+    # (the ledgers are only ever mutated in place, so a view never goes
+    # stale) without opening the mutation backdoor that made direct
+    # ``_free``/``_price`` pokes bypass the memoized upkeep.
+    @staticmethod
+    def _frozen(arr: np.ndarray) -> np.ndarray:
+        view = arr.view()
+        view.flags.writeable = False
+        return view
+
+    def free_vector(self) -> np.ndarray:
+        """Per-region free GPU counts, region order (read-only view)."""
+        return self._frozen(self._free)
+
+    def price_vector(self) -> np.ndarray:
+        """Current per-region $/kWh prices, region order (read-only view)."""
+        return self._frozen(self._price)
+
+    def name_rank_vector(self) -> np.ndarray:
+        """Lexicographic rank of each region's name, region order
+        (read-only view) — the kernels' name tie-break key."""
+        return self._frozen(self._name_rank)
+
+    def region_rank(self, region: str) -> int:
+        """Lexicographic rank of one region's name among all regions."""
+        return int(self._name_rank[self._idx[region]])
+
+    def gpu_type_rank(self, gpu_type: str) -> int:
+        """Column index of a GPU type in the typed ledgers — the
+        deterministic type tie-break key (sorted type names)."""
+        return self._tidx[gpu_type]
+
+    def typed_capacity_matrix(self) -> np.ndarray:
+        """(region, type) capacity plane (read-only view)."""
+        return self._frozen(self._cap_t)
+
+    def typed_used_matrix(self) -> np.ndarray:
+        """(region, type) in-use plane (read-only view)."""
+        return self._frozen(self._used_t)
+
+    def total_link_capacity(self) -> float:
+        """Σ of all directed link capacities (the congestion_alpha
+        denominator)."""
+        return self._bw_total
 
     def scaled(
         self,

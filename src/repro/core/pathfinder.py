@@ -102,14 +102,14 @@ def find_placement(
     if free_total < profile.min_gpus:
         return None
 
-    free = cluster._free
-    names = cluster._names
-    name_rank = cluster._name_rank
+    free = cluster.free_vector()
+    names = cluster.region_names()
+    name_rank = cluster.name_rank_vector()
 
     hetero = cluster.is_heterogeneous
 
     # ---------------------------------------------- Phase 1: single region
-    single = phase1_pick(free, cluster._price, name_rank, k)
+    single = phase1_pick(free, cluster.price_vector(), name_rank, k)
     if single >= 0:
         best = names[single]
         if not hetero:

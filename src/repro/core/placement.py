@@ -45,7 +45,7 @@ class Placement:
 
     @property
     def total_gpus(self) -> int:
-        return sum(self.alloc.values())
+        return sum(sorted(self.alloc.values()))
 
     @property
     def n_regions(self) -> int:
@@ -100,13 +100,14 @@ def build_placement(
         if alloc[r] < 1:
             raise ValueError(f"pipeline continuity violated: {r} has no GPU")
 
-    eff_flops = eff_memory = None
+    eff_flops: Optional[float] = None
+    eff_memory: Optional[float] = None
     typed: Dict[str, Mapping[str, int]] = {}
     if typed_alloc is not None or cluster.is_heterogeneous:
         if typed_alloc is not None:
             typed = {r: dict(typed_alloc[r]) for r in path}
             for r in path:
-                if sum(typed[r].values()) != alloc[r]:
+                if sum(sorted(typed[r].values())) != alloc[r]:
                     raise ValueError(
                         f"typed allocation for {r} does not sum to alloc"
                     )

@@ -262,11 +262,11 @@ class SimulationResult:
 
     @property
     def total_cost(self) -> float:
-        return sum(self.costs.values())
+        return sum(sorted(self.costs.values()))
 
     @property
     def total_migrations(self) -> int:
-        return sum(self.migrations.values())
+        return sum(sorted(self.migrations.values()))
 
     @property
     def forced_migrations(self) -> Dict[int, int]:
@@ -281,11 +281,11 @@ class SimulationResult:
 
     @property
     def total_voluntary_migrations(self) -> int:
-        return sum(self.voluntary_migrations.values())
+        return sum(sorted(self.voluntary_migrations.values()))
 
     @property
     def total_stall_seconds(self) -> float:
-        return sum(self.stall_seconds.values())
+        return sum(sorted(self.stall_seconds.values()))
 
     def summary(self) -> str:
         extra = (

@@ -22,7 +22,7 @@ projections, the piecewise cost ledger — inherits the selected backend.
 from __future__ import annotations
 
 import abc
-from typing import Dict, Mapping
+from typing import Dict
 
 from .cluster import ClusterState
 from .job import JobProfile
@@ -144,7 +144,10 @@ def placement_power_rate(
                     cluster.price(r) * pool.price_mult, n, pool.gpu_kw
                 )
         return total
-    return sum(
+    # Float accumulation in the placement's own (path) order — pinned to
+    # the reference implementation, same as ``allocation_cost_rate``; this
+    # rate feeds the stay-vs-move threshold and the settled ledger bytes.
+    return sum(  # reprolint: disable=RPL104
         profile.power_cost_rate(cluster.price(r), n)
         for r, n in placement.alloc.items()
     )

@@ -14,10 +14,9 @@ from __future__ import annotations
 from typing import Any, Callable, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 
 from repro.distributed.compat import constrain_auto_axes
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 

@@ -13,7 +13,6 @@ import functools
 from typing import Optional, Tuple
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_bhtd

@@ -25,7 +25,6 @@ from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.distributed.compat import use_mesh
 
@@ -35,7 +34,6 @@ from repro.launch import steps as S
 from repro.launch.mesh import make_debug_mesh, make_production_mesh
 from repro.analysis import loop_aware_cost
 from repro.models.model import build_model
-from repro.optim import adamw_init
 
 
 # ----------------------------------------------------------- HLO collectives

@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch import steps as S
 from repro.models.model import ModelCtx, build_model
 
 

@@ -12,13 +12,10 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import time
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import get_config
 from repro.data import SyntheticLM, make_batch_iterator

@@ -9,7 +9,6 @@ for the Pallas flash kernel) and an optional fused-kernel path selected via
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax

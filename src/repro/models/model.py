@@ -32,7 +32,6 @@ from .layers import (
     Params,
     apply_rope,
     attention_apply,
-    chunked_xent,
     dense_block_apply,
     embed,
     init_attention,

@@ -11,7 +11,7 @@ expert GEMMs -> all_to_all back -> weighted combine.  With ``ep_axis=None``
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -20,7 +20,7 @@ region (contiguous), WAN edge = pod-axis ppermute.
 
 from __future__ import annotations
 
-from typing import Any, Callable, Optional, Sequence, Tuple, Union
+from typing import Any, Callable, Tuple, Union
 
 import jax
 import jax.numpy as jnp

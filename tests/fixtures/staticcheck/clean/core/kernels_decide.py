@@ -1,0 +1,49 @@
+"""Twin-parity fixture: a minimal numpy/jax twin pair that agrees (clean).
+
+Follows the structural conventions the differ enforces (RPL302): the numpy
+side is ``_prim_expand_numpy`` tail-calling ``_prim_steps_numpy``; the jax
+side is ``_prim`` nested in ``_load_jax`` with cond/body defs around one
+``lax.while_loop``.
+"""
+
+import numpy as np
+
+
+def _prim_expand_numpy(x, k):
+    acc = np.minimum(x, k)
+    active = acc < k
+    return _prim_steps_numpy(x, k, acc, active)
+
+
+def _prim_steps_numpy(x, k, acc, active):
+    while active.any():
+        nxt = acc + x
+        acc = np.where(active, nxt, acc)
+        active = active & (acc < k)
+    return acc
+
+
+def _load_jax():
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def _prim(x, k):
+        acc0 = jnp.minimum(x, k)
+        active0 = acc0 < k
+        state0 = (acc0, active0)
+
+        def cond(state):
+            return jnp.any(state[1])
+
+        def body(state):
+            acc, active = state
+            nxt = acc + x
+            acc = jnp.where(active, nxt, acc)
+            active = active & (acc < k)
+            return (acc, active)
+
+        acc, active = lax.while_loop(cond, body, state0)
+        return acc
+
+    return jax.jit(_prim)

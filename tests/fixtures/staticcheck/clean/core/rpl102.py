@@ -1,0 +1,9 @@
+"""RPL102 fixture: simulated time passed in explicitly (clean)."""
+
+
+def stamp(sim_time: float) -> float:
+    return sim_time
+
+
+def elapsed(start: float, now: float) -> float:
+    return now - start

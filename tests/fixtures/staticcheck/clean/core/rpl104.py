@@ -1,0 +1,9 @@
+"""RPL104 fixture: dict reductions with a pinned order (clean)."""
+
+
+def total_cost(costs):
+    return sum(sorted(costs.values()))
+
+
+def total_items(costs):
+    return sum(v for _, v in sorted(costs.items()))

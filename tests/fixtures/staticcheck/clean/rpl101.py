@@ -1,0 +1,15 @@
+"""RPL101 fixture: seeded generator objects (clean)."""
+
+import random
+
+import numpy as np
+
+
+def roll(seed: int) -> float:
+    rng = random.Random(seed)
+    return rng.random()
+
+
+def draw(seed: int):
+    g = np.random.default_rng(seed)
+    return g.normal(size=3)

@@ -1,0 +1,21 @@
+"""RPL103 fixture: set iteration pinned with sorted() (clean)."""
+
+
+def accumulate(xs):
+    out = 0.0
+    for x in sorted({1.0, 2.0, 3.0}):
+        out += x
+    return out
+
+
+def reduce_set(xs):
+    return sum(sorted(set(xs)))
+
+
+def comprehend(xs):
+    return [x + 1 for x in sorted(set(xs))]
+
+
+def membership_only(xs, probe):
+    # Set *membership* is order-free and fine; only iteration is flagged.
+    return probe in set(xs)

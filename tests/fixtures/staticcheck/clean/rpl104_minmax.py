@@ -1,0 +1,11 @@
+"""RPL104 fixture: min/max tie-breaks pinned with sorted() (clean)."""
+
+
+def cheapest(prices):
+    return min(sorted(prices.items()), key=lambda kv: kv[1])
+
+
+def total(prices):
+    # The sum() arm is core-only: outside core/ a plain sum over a dict
+    # view is not flagged.
+    return sum(prices.values())

@@ -1,0 +1,19 @@
+"""RPL201 fixture: public accessors and unrelated private names (clean)."""
+
+
+class Budget:
+    def __init__(self, cap: float) -> None:
+        # A private name that happens to collide with a ledger field is
+        # fine on a self receiver — the rule only checks foreign receivers.
+        self._cap = cap
+
+    def remaining(self, spent: float) -> float:
+        return self._cap - spent
+
+
+def peek_free(cluster):
+    return cluster.free_vector().sum()
+
+
+def total_bw(cluster):
+    return cluster.total_link_capacity()

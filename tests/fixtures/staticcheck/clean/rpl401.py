@@ -1,0 +1,17 @@
+"""RPL401 fixture: read-only closures are fine (clean)."""
+
+import jax
+import jax.numpy as jnp
+
+SCALE = 2.0  # bound exactly once — a constant closure
+
+
+@jax.jit
+def apply_scale(x):
+    return jnp.asarray(x) * SCALE
+
+
+@jax.jit
+def add_param(x, scale):
+    # The mutable value is passed as an argument instead of closed over.
+    return x * scale

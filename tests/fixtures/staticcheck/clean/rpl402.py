@@ -1,0 +1,16 @@
+"""RPL402 fixture: static args and shape projections (clean)."""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+@partial(jax.jit, static_argnames=("mode",))
+def dispatch(x, mode):
+    if mode == "fast":  # static argument: concrete at trace time
+        return x
+    m = len(x)
+    if m > 2:  # len() projection is concrete
+        return x + 1
+    return jnp.where(x > 0, x, -x)  # traced branch expressed as where

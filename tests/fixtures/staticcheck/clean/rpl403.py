@@ -1,0 +1,8 @@
+"""RPL403 fixture: scoped x64 region (clean)."""
+
+from jax.experimental import enable_x64
+
+
+def decide(kernel, *args):
+    with enable_x64():
+        return kernel(*args)

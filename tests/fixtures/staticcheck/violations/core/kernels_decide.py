@@ -1,0 +1,49 @@
+"""Twin-parity fixture: the jax twin drifted from the numpy twin (violating).
+
+Identical to the clean pair except the jax body computes ``acc - x`` where
+the numpy body computes ``acc + x``.  The differ reports the divergence at
+the *numpy* side's update lines: ``acc`` diverges directly, and ``active``
+diverges because its update embeds ``acc``'s.
+"""
+
+import numpy as np
+
+
+def _prim_expand_numpy(x, k):
+    acc = np.minimum(x, k)
+    active = acc < k
+    return _prim_steps_numpy(x, k, acc, active)
+
+
+def _prim_steps_numpy(x, k, acc, active):
+    while active.any():
+        nxt = acc + x
+        acc = np.where(active, nxt, acc)  # expect: RPL301
+        active = active & (acc < k)  # expect: RPL301
+    return acc
+
+
+def _load_jax():
+    import jax
+    import jax.numpy as jnp
+    from jax import lax
+
+    def _prim(x, k):
+        acc0 = jnp.minimum(x, k)
+        active0 = acc0 < k
+        state0 = (acc0, active0)
+
+        def cond(state):
+            return jnp.any(state[1])
+
+        def body(state):
+            acc, active = state
+            nxt = acc - x  # the drift: numpy adds, jax subtracts
+            acc = jnp.where(active, nxt, acc)
+            active = active & (acc < k)
+            return (acc, active)
+
+        acc, active = lax.while_loop(cond, body, state0)
+        return acc
+
+    return jax.jit(_prim)

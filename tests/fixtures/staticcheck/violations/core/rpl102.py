@@ -1,0 +1,16 @@
+"""RPL102 fixture: wall-clock reads in a core/ file (violating)."""
+
+import time
+from datetime import datetime
+
+
+def stamp() -> float:
+    return time.time()  # expect: RPL102
+
+
+def tick() -> float:
+    return time.monotonic()  # expect: RPL102
+
+
+def today():
+    return datetime.now()  # expect: RPL102

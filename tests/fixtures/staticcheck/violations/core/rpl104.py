@@ -1,0 +1,9 @@
+"""RPL104 fixture: dict-order-sensitive reductions in core/ (violating)."""
+
+
+def total_cost(costs):
+    return sum(costs.values())  # expect: RPL104
+
+
+def total_gen(costs):
+    return sum(v for v in costs.values())  # expect: RPL104

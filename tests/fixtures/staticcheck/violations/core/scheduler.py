@@ -1,0 +1,40 @@
+"""RPL501 fixture: a release path that never settles (violating).
+
+The file must be named ``scheduler.py`` under a ``core`` directory for the
+rule to engage — it mirrors the shape of the engine's real scheduler.
+"""
+
+
+class SegmentLedger:
+    def __init__(self) -> None:
+        self.costs = {}
+
+    def settle(self, now: float) -> None:
+        self.costs["t"] = now
+
+
+def release_gpus(cluster, alloc) -> None:
+    pass
+
+
+def release_bandwidth(cluster, edges) -> None:
+    pass
+
+
+def reserve_gpus(cluster, alloc) -> None:
+    pass
+
+
+def preempt_without_settling(ledger, cluster, alloc, now) -> None:
+    release_gpus(cluster, alloc)  # expect: RPL501
+    # no settle / re-reserve afterwards: accrued cost is dropped
+
+
+def drop_link_shares(cluster, edges) -> None:
+    release_bandwidth(cluster, edges)  # expect: RPL501
+
+
+def preempt_and_settle(ledger, cluster, alloc, now) -> None:
+    # The compliant shape, for contrast: release followed by settle.
+    release_gpus(cluster, alloc)
+    ledger.settle(now)

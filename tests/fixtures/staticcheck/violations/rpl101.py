@@ -1,0 +1,21 @@
+"""RPL101 fixture: process-global RNG calls (violating)."""
+
+import random
+
+import numpy as np
+
+
+def roll() -> float:
+    return random.random()  # expect: RPL101
+
+
+def pick(items):
+    return random.choice(items)  # expect: RPL101
+
+
+def draw():
+    return np.random.rand(3)  # expect: RPL101
+
+
+def reseed() -> None:
+    np.random.seed(0)  # expect: RPL101

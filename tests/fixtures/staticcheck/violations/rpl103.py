@@ -1,0 +1,25 @@
+"""RPL103 fixture: iteration over raw sets (violating)."""
+
+
+def accumulate(xs):
+    out = 0.0
+    for x in {1.0, 2.0, 3.0}:  # expect: RPL103
+        out += x
+    return out
+
+
+def enumerate_set(xs):
+    for i, x in enumerate(set(xs)):  # expect: RPL103
+        print(i, x)
+
+
+def reduce_set(xs):
+    return sum(set(xs))  # expect: RPL103
+
+
+def comprehend(xs):
+    return [x + 1 for x in set(xs)]  # expect: RPL103
+
+
+def comprehension_of_comp(xs):
+    return list({x for x in xs})  # expect: RPL103

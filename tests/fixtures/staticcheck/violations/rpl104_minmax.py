@@ -1,0 +1,13 @@
+"""RPL104 fixture: min/max tie-breaks over dict views (violating).
+
+Not under core/, demonstrating that the min/max-with-key arm applies
+everywhere (the sum arm is core-only).
+"""
+
+
+def cheapest(prices):
+    return min(prices.items(), key=lambda kv: kv[1])  # expect: RPL104
+
+
+def busiest(load):
+    return max(load.keys(), key=lambda r: load[r])  # expect: RPL104

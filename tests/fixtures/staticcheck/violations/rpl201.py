@@ -1,0 +1,13 @@
+"""RPL201 fixture: poking ClusterState private ledgers (violating)."""
+
+
+def peek_free(cluster):
+    return cluster._free.sum()  # expect: RPL201
+
+
+def peek_typed(cluster):
+    return cluster._cap_t[0, 0]  # expect: RPL201
+
+
+def poke(cluster, amount) -> None:
+    cluster._free_total = amount  # expect: RPL201

@@ -1,0 +1,11 @@
+"""RPL401 fixture: jitted function closing over rebound state (violating)."""
+
+import jax
+
+scale = 2.0
+scale = 3.0  # rebinding after definition is what makes the closure mutable
+
+
+@jax.jit
+def apply_scale(x):  # expect: RPL401
+    return x * scale

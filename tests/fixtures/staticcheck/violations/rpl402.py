@@ -1,0 +1,18 @@
+"""RPL402 fixture: Python control flow on traced values (violating)."""
+
+import jax
+
+
+@jax.jit
+def clamp(x, n):
+    if x > 0:  # expect: RPL402
+        return -x
+    while n > 1:  # expect: RPL402
+        n = n - 1
+    m = x.shape[0]
+    if m > 2:  # shape-derived: concrete at trace time, not flagged
+        return x
+    y = x + 1
+    if y.sum() > 0:  # expect: RPL402
+        return y
+    return x

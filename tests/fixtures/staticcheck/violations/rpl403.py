@@ -1,0 +1,12 @@
+"""RPL403 fixture: global x64 flips (violating)."""
+
+from jax import config
+from jax.experimental import enable_x64
+
+
+def flip_globally() -> None:
+    config.update("jax_enable_x64", True)  # expect: RPL403
+
+
+def leak_context():
+    return enable_x64()  # expect: RPL403

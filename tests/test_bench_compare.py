@@ -1,0 +1,132 @@
+"""Regression tests for scripts/bench_compare.py input hardening.
+
+A truncated or malformed BENCH_*.json must produce a clean one-line
+SystemExit naming the offending file — never a traceback — and valid
+files must keep comparing exactly as before.
+"""
+
+import json
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parents[1]
+SCRIPT = REPO / "scripts" / "bench_compare.py"
+
+sys.path.insert(0, str(SCRIPT.parent))
+import bench_compare  # noqa: E402
+
+
+def _cell(jobs=10, regions=4, engine="vectorized", backend="numpy", us=50.0):
+    return {
+        "jobs": jobs, "regions": regions, "engine": engine,
+        "backend": backend, "us_per_call": us,
+    }
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(
+        payload if isinstance(payload, str) else json.dumps(payload),
+        encoding="utf-8",
+    )
+    return p
+
+
+def test_missing_file_exits_with_message(tmp_path):
+    with pytest.raises(SystemExit, match="no such file"):
+        bench_compare.load_cells(tmp_path / "absent.json")
+
+
+def test_truncated_json_exits_with_message(tmp_path):
+    full = json.dumps({"cells": [_cell()]})
+    p = _write(tmp_path, "trunc.json", full[: len(full) // 2])
+    with pytest.raises(SystemExit, match="malformed JSON") as exc:
+        bench_compare.load_cells(p)
+    assert "truncated" in str(exc.value)
+
+
+def test_wrong_toplevel_type_exits(tmp_path):
+    p = _write(tmp_path, "list.json", [1, 2, 3])
+    with pytest.raises(SystemExit, match="expected a JSON object"):
+        bench_compare.load_cells(p)
+
+
+def test_non_dict_cells_exit(tmp_path):
+    p = _write(tmp_path, "cells.json", {"cells": ["not-a-dict"]})
+    with pytest.raises(SystemExit, match="list of objects"):
+        bench_compare.load_cells(p)
+
+
+def test_empty_cells_exit(tmp_path):
+    p = _write(tmp_path, "empty.json", {"cells": []})
+    with pytest.raises(SystemExit, match="no cells"):
+        bench_compare.load_cells(p)
+
+
+def test_missing_field_exits(tmp_path):
+    c = _cell()
+    del c["us_per_call"]
+    p = _write(tmp_path, "nofield.json", {"cells": [c]})
+    with pytest.raises(SystemExit, match="missing required field 'us_per_call'"):
+        bench_compare.load_cells(p)
+
+
+def test_uncastable_field_exits(tmp_path):
+    c = _cell()
+    c["us_per_call"] = "not-a-number"
+    p = _write(tmp_path, "badfield.json", {"cells": [c]})
+    with pytest.raises(SystemExit, match="not a float"):
+        bench_compare.load_cells(p)
+
+
+def test_named_cells_require_names(tmp_path):
+    p = _write(tmp_path, "unnamed.json", {"cells": [_cell()]})
+    with pytest.raises(SystemExit, match="without a name"):
+        bench_compare.load_named_cells(p)
+
+
+def test_named_cells_validate_metric_types(tmp_path):
+    p = _write(
+        tmp_path, "badmetric.json",
+        {"cells": [{"name": "s1", "jct_s": "oops"}]},
+    )
+    with pytest.raises(SystemExit, match="not a float"):
+        bench_compare.load_named_cells(p)
+
+
+def test_cli_reports_cleanly_without_traceback(tmp_path):
+    bad = _write(tmp_path, "bad.json", '{"cells": [{"jobs":')
+    good = _write(tmp_path, "good.json", {"cells": [_cell()]})
+    proc = subprocess.run(
+        [sys.executable, str(SCRIPT), str(bad), str(good)],
+        capture_output=True, text=True,
+    )
+    assert proc.returncode == 1
+    assert "malformed JSON" in proc.stderr
+    assert "Traceback" not in proc.stderr
+
+
+def test_valid_files_still_compare(tmp_path):
+    old = _write(tmp_path, "old.json", {"cells": [_cell(us=50.0)]})
+    new_ok = _write(tmp_path, "new_ok.json", {"cells": [_cell(us=55.0)]})
+    new_slow = _write(tmp_path, "new_slow.json", {"cells": [_cell(us=80.0)]})
+    ok = subprocess.run(
+        [sys.executable, str(SCRIPT), str(old), str(new_ok)],
+        capture_output=True, text=True,
+    )
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    slow = subprocess.run(
+        [sys.executable, str(SCRIPT), str(old), str(new_slow)],
+        capture_output=True, text=True,
+    )
+    assert slow.returncode == 1
+    assert "REGRESSION" in slow.stdout
+
+
+def test_checked_in_artifacts_still_load():
+    for name in sorted(REPO.glob("BENCH_*.json")):
+        cells = bench_compare._load_payload(name)
+        assert cells, name

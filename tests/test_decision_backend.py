@@ -20,7 +20,6 @@ installed, same convention as the other property suites.
 from __future__ import annotations
 
 import random
-import warnings
 
 import numpy as np
 import pytest
@@ -97,7 +96,7 @@ def random_cluster(rng: random.Random, *, hetero: bool = False) -> ClusterState:
     cluster = ClusterState.build(regions, gbps, symmetric=True)
     # Pre-existing load: reserve a few GPUs so free != capacity.
     for r in cluster.region_names():
-        free = int(cluster._free[cluster._idx[r]])
+        free = int(cluster.free_gpus[r])
         if free > 1 and rng.random() < 0.4:
             cluster.reserve_gpus({r: rng.randint(1, free - 1)})
     return cluster
@@ -139,11 +138,11 @@ def _prim_inputs(cluster: ClusterState, profile: JobProfile):
     if cluster.is_heterogeneous:
         flops_vec = cluster.min_available_flops_vector(profile.gpu_flops)
     else:
-        flops_vec = np.full(len(cluster._names), profile.gpu_flops)
+        flops_vec = np.full(len(cluster.region_names()), profile.gpu_flops)
     return (
         cluster.available_matrix(),
-        cluster._free,
-        cluster._name_rank,
+        cluster.free_vector(),
+        cluster.name_rank_vector(),
         flops_vec,
         profile.decay_table(decay_table_len(k)),
         profile.fwd_flops_per_microbatch,

@@ -442,7 +442,7 @@ def test_full_outage_multiplier_is_division_safe():
     )
     assert (cluster.available_matrix() == 0.0).all()
     # alpha's denominator (the installed total) is now 0: defined as 0.0
-    assert cluster._bw_total == 0.0
+    assert cluster.total_link_capacity() == 0.0
     assert cluster.congestion_alpha() == 0.0
     # the spanning job needs both regions; with the WAN dark there is no
     # admissible path and the Pathfinder must return None, not crash

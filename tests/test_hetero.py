@@ -33,11 +33,7 @@ from repro.core import (
     simulate,
 )
 from repro.core.cluster import DEFAULT_GPU_TYPE
-from repro.core.job import (
-    DEFAULT_GPU_FLOPS,
-    DEFAULT_GPU_KW,
-    DEFAULT_GPU_MEMORY,
-)
+from repro.core.job import DEFAULT_GPU_KW
 from repro.core.timing import (
     average_price,
     iteration_time,
@@ -85,7 +81,7 @@ def _profile(iters: int = 20) -> JobProfile:
 def test_single_type_layout_is_one_default_column():
     cluster = _plain_cluster()
     assert not cluster.is_heterogeneous
-    assert cluster._cap_t.shape == (3, 1)
+    assert cluster.typed_capacity_matrix().shape == (3, 1)
     for r in cluster.region_names():
         assert cluster.gpu_types(r) == [DEFAULT_GPU_TYPE]
         assert cluster.capacity_typed(r) == {
@@ -165,8 +161,8 @@ def test_snapshot_round_trips_typed_state():
     cluster.reserve_gpus_typed({"a": {"spot": 3, "h100": 1}, "b": {"a100": 2}})
     cluster.set_spot_multipliers({("a", "spot"): 0.5})
     snap = cluster.snapshot()
-    assert (snap._cap_t == cluster._cap_t).all()
-    assert (snap._used_t == cluster._used_t).all()
+    assert (snap.typed_capacity_matrix() == cluster.typed_capacity_matrix()).all()
+    assert (snap.typed_used_matrix() == cluster.typed_used_matrix()).all()
     assert snap.total_gpus() == cluster.total_gpus()
     assert snap.total_free_gpus() == cluster.total_free_gpus()
     for r in cluster.region_names():

@@ -1,7 +1,5 @@
 """Control-plane behaviour tests: Eqs. (1)-(13), Alg. 1/2, simulator."""
 
-import math
-
 import pytest
 
 from repro.core import (

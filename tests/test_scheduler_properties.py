@@ -16,7 +16,6 @@ from repro.core import (
     JobSpec,
     ModelSpec,
     Region,
-    build_placement,
     cost_min_allocate,
     find_placement,
     simulate,

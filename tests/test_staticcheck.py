@@ -1,0 +1,309 @@
+"""Tests for the reprolint static-analysis suite (repro.analysis.staticcheck).
+
+Three layers:
+
+* fixture tests — every rule has a violation/clean fixture pair under
+  ``tests/fixtures/staticcheck``; ``# expect: RPL###`` markers in the
+  violation files pin the diagnostics *line-exactly*;
+* contract tests — the twin differ is exercised against the real
+  ``core/kernels_decide.py`` (a one-token mutation must trip RPL301, a
+  broken convention must trip RPL302), and ``PRIVATE_LEDGER_FIELDS`` is
+  cross-checked against the real ``ClusterState``;
+* runner tests — suppression comments, baseline ratchet semantics, CLI
+  exit codes, and the self-check that the shipped tree is clean under the
+  checked-in baseline.
+"""
+
+import json
+import os
+import re
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.staticcheck import (
+    Project,
+    all_rules,
+    main,
+    rule_catalog,
+    run_rules,
+)
+from repro.analysis.staticcheck import baseline as baseline_mod
+from repro.analysis.staticcheck.engine import SourceFile
+from repro.analysis.staticcheck.rules.ledger import PRIVATE_LEDGER_FIELDS
+from repro.analysis.staticcheck.rules.twins import extract_jax, extract_numpy
+from repro.core import ClusterState, Region
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "fixtures" / "staticcheck"
+KERNELS = REPO / "src" / "repro" / "core" / "kernels_decide.py"
+BASELINE = REPO / "reprolint_baseline.json"
+
+EXPECT_RE = re.compile(r"#\s*expect:\s*(RPL[\d, ]+[\d])")
+
+VIOLATION_FILES = sorted(
+    (FIXTURES / "violations").rglob("*.py"), key=lambda p: p.as_posix()
+)
+CLEAN_FILES = sorted(
+    (FIXTURES / "clean").rglob("*.py"), key=lambda p: p.as_posix()
+)
+
+
+def lint(*paths: Path):
+    project = Project.collect(list(paths), root=REPO, include_fixtures=True)
+    return run_rules(project, all_rules())
+
+
+def expected_markers(path: Path):
+    out = []
+    for lineno, line in enumerate(
+        path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        m = EXPECT_RE.search(line)
+        if m:
+            for code in m.group(1).replace(",", " ").split():
+                out.append((lineno, code))
+    return sorted(out)
+
+
+# --------------------------------------------------------------- fixtures
+@pytest.mark.parametrize(
+    "path",
+    VIOLATION_FILES,
+    ids=[p.relative_to(FIXTURES).as_posix() for p in VIOLATION_FILES],
+)
+def test_violation_fixture_flags_exactly_the_marked_lines(path):
+    expected = expected_markers(path)
+    assert expected, f"{path} has no '# expect:' markers"
+    actual = sorted((d.line, d.code) for d in lint(path))
+    assert actual == expected
+
+
+@pytest.mark.parametrize(
+    "path",
+    CLEAN_FILES,
+    ids=[p.relative_to(FIXTURES).as_posix() for p in CLEAN_FILES],
+)
+def test_clean_fixture_produces_no_diagnostics(path):
+    diags = lint(path)
+    assert diags == [], "\n".join(d.render() for d in diags)
+
+
+def test_every_runnable_rule_has_a_violation_fixture():
+    covered = {code for p in VIOLATION_FILES for _, code in expected_markers(p)}
+    runnable = {r.code for r in all_rules()}
+    assert runnable <= covered
+
+
+# ------------------------------------------------- twin differ vs the real twins
+def _load_sf(path: Path) -> SourceFile:
+    return SourceFile.load(path, REPO)
+
+
+def test_real_twins_extract_and_agree():
+    sf = _load_sf(KERNELS)
+    np_prog = extract_numpy(sf)
+    jx_prog = extract_jax(sf)
+    # Non-vacuous: the real frontier kernel carries substantial loop state.
+    assert len(np_prog.loop_vars) >= 5
+    assert set(np_prog.loop_vars) == set(jx_prog.loop_vars)
+    assert lint(KERNELS) == []
+
+
+def test_mutated_twin_trips_rpl301_and_fails_the_cli(tmp_path, monkeypatch, capsys):
+    text = KERNELS.read_text(encoding="utf-8")
+    assert ".argmax(axis=1)" in text
+    core = tmp_path / "core"
+    core.mkdir()
+    mutated = core / "kernels_decide.py"
+    # One-token drift in the numpy twin only (first occurrence is numpy's).
+    mutated.write_text(
+        text.replace(".argmax(axis=1)", ".argmin(axis=1)", 1),
+        encoding="utf-8",
+    )
+    diags = lint(mutated)
+    assert diags and all(d.code == "RPL301" for d in diags)
+    assert any("per-step update" in d.message for d in diags)
+
+    monkeypatch.chdir(tmp_path)  # no default baseline in tmp cwd
+    assert main([str(mutated)]) == 1
+    assert "RPL301" in capsys.readouterr().out
+
+
+def test_broken_twin_convention_trips_rpl302(tmp_path):
+    text = KERNELS.read_text(encoding="utf-8")
+    core = tmp_path / "core"
+    core.mkdir()
+    broken = core / "kernels_decide.py"
+    # Renaming the jax twin breaks the structural convention: parity can no
+    # longer be proven, which must be loud (RPL302), not silently clean.
+    broken.write_text(
+        text.replace("def _prim(", "def _prim_renamed(", 1), encoding="utf-8"
+    )
+    diags = lint(broken)
+    assert [d.code for d in diags] == ["RPL302"]
+    assert "not found" in diags[0].message
+
+
+def test_fixture_twin_divergence_names_both_infected_variables():
+    diags = lint(FIXTURES / "violations" / "core" / "kernels_decide.py")
+    msgs = " ".join(d.message for d in diags)
+    assert "'acc'" in msgs and "'active'" in msgs
+
+
+# -------------------------------------------------- ledger field cross-check
+def test_private_ledger_fields_match_the_real_clusterstate():
+    regions = [Region("a", 4, 0.1), Region("b", 4, 0.2)]
+    cluster = ClusterState(
+        regions={r.name: r for r in regions},
+        bandwidth={("a", "b"): 50.0e9},
+    )
+    # Every guarded name exists on the real class (field or memo method) —
+    # a rename there must force an update here.
+    for field in PRIVATE_LEDGER_FIELDS:
+        assert hasattr(cluster, field), f"stale guarded field {field!r}"
+    # ... and every private instance attribute is guarded (completeness).
+    private_attrs = {k for k in vars(cluster) if k.startswith("_")}
+    assert private_attrs <= PRIVATE_LEDGER_FIELDS, (
+        private_attrs - PRIVATE_LEDGER_FIELDS
+    )
+
+
+# ------------------------------------------------------------- suppression
+def test_suppression_comment_silences_exactly_its_code(tmp_path):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "def t(xs):\n"
+        "    return sum(set(xs))  # reprolint: disable=RPL103\n",
+        encoding="utf-8",
+    )
+    assert lint(f) == []
+
+    f.write_text(
+        "def t(xs):\n"
+        "    return sum(set(xs))  # reprolint: disable=RPL999\n",
+        encoding="utf-8",
+    )
+    assert [d.code for d in lint(f)] == ["RPL103"]
+
+    # the wildcard, and suppression on a *different* line not applying
+    f.write_text(
+        "def t(xs):\n"
+        "    # reprolint: disable=*\n"
+        "    return sum(set(xs))\n",
+        encoding="utf-8",
+    )
+    assert [d.code for d in lint(f)] == ["RPL103"]
+
+
+# ---------------------------------------------------------------- baseline
+def test_baseline_ratchet_semantics(tmp_path):
+    diags = lint(FIXTURES / "violations" / "rpl101.py")
+    assert diags
+    bl = tmp_path / "baseline.json"
+    baseline_mod.save(bl, diags)
+
+    # grandfathered: everything baselined, nothing new, nothing stale
+    res = baseline_mod.apply(diags, baseline_mod.load(bl))
+    assert res.new == [] and len(res.baselined) == len(diags) and res.stale == []
+
+    # a finding beyond the baseline is new
+    extra = lint(FIXTURES / "violations" / "rpl103.py")
+    res = baseline_mod.apply(diags + extra, baseline_mod.load(bl))
+    assert sorted(d.code for d in res.new) == sorted(d.code for d in extra)
+
+    # a fixed finding leaves a stale entry behind
+    res = baseline_mod.apply(diags[1:], baseline_mod.load(bl))
+    assert len(res.stale) == 1
+
+    # line numbers are not part of the key: entries match on (code, path,
+    # message) so unrelated edits don't churn the file
+    data = json.loads(bl.read_text(encoding="utf-8"))
+    assert data["version"] == 1
+    assert all("line" not in e for e in data["entries"])
+
+
+def test_cli_baseline_flow(tmp_path, monkeypatch, capsys):
+    viol = tmp_path / "mod.py"
+    viol.write_text("TOTAL = sum(set([1, 2]))\n", encoding="utf-8")
+    monkeypatch.chdir(tmp_path)
+
+    assert main([str(viol)]) == 1  # no baseline: findings fail
+
+    bl = tmp_path / "bl.json"
+    assert main([str(viol), "--write-baseline", "--baseline", str(bl)]) == 0
+    assert main([str(viol), "--baseline", str(bl)]) == 0  # grandfathered
+
+    viol.write_text("TOTAL = sum(sorted(set([1, 2])))\n", encoding="utf-8")
+    capsys.readouterr()
+    # fixed finding: stale entry is celebrated, strict mode ratchets
+    assert main([str(viol), "--baseline", str(bl)]) == 0
+    assert "stale" in capsys.readouterr().out
+    assert main([str(viol), "--baseline", str(bl), "--strict-baseline"]) == 1
+
+
+# --------------------------------------------------------------- CLI misc
+def test_cli_exit_codes(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    clean = tmp_path / "ok.py"
+    clean.write_text("X = 1\n", encoding="utf-8")
+    assert main([str(clean)]) == 0
+
+    assert main([str(tmp_path / "missing.py")]) == 2
+
+    bad = tmp_path / "bad.py"
+    bad.write_text("def broken(:\n", encoding="utf-8")
+    assert main([str(bad)]) == 2
+
+
+def test_cli_select_filters_rules(tmp_path, monkeypatch):
+    f = tmp_path / "mod.py"
+    f.write_text(
+        "import random\n"
+        "R = random.random()\n"
+        "T = sum(set([1, 2]))\n",
+        encoding="utf-8",
+    )
+    monkeypatch.chdir(tmp_path)
+    assert main([str(f), "--select", "RPL101"]) == 1
+    assert main([str(f), "--select", "RPL501"]) == 0
+
+
+def test_list_rules_covers_all_codes(capsys):
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in (
+        "RPL101", "RPL102", "RPL103", "RPL104", "RPL201",
+        "RPL301", "RPL302", "RPL401", "RPL402", "RPL403", "RPL501",
+    ):
+        assert code in out
+    assert set(re.findall(r"RPL\d+", out)) == set(rule_catalog())
+
+
+# ------------------------------------------------------------- self-check
+def test_shipped_tree_is_clean_under_the_checked_in_baseline():
+    project = Project.collect(
+        [REPO / "src", REPO / "benchmarks", REPO / "scripts", REPO / "tests"],
+        root=REPO,
+    )
+    diags = run_rules(project, all_rules())
+    res = baseline_mod.apply(diags, baseline_mod.load(BASELINE))
+    assert res.new == [], "\n".join(d.render() for d in res.new)
+    assert res.stale == [], res.stale
+
+
+def test_acceptance_command_exits_zero():
+    proc = subprocess.run(
+        [
+            sys.executable, "-m", "repro.analysis.staticcheck",
+            "src", "benchmarks", "scripts",
+        ],
+        cwd=REPO,
+        env={**os.environ, "PYTHONPATH": "src"},
+        capture_output=True,
+        text=True,
+    )
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "clean" in proc.stdout
