@@ -16,8 +16,15 @@ scenario default) lands strictly cheaper than the stay-put schedule —
 both measured by the same breakpoint-accurate ledger.  These run in CI via
 ``--smoke``.
 
+``--trace-out PATH`` additionally runs the observability acceptance cell —
+mixed-stress × BACE-Pipe with voluntary migration on, a ``SimTraceRecorder``
+attached — asserts the traced run bit-identical to an untraced twin, and
+writes the JSONL trace to PATH (``python -m repro.obs report PATH --check``
+renders it; ``--perfetto`` converts it for ``ui.perfetto.dev``).
+
 Usage:
     PYTHONPATH=src python -m benchmarks.dynamic_scenarios [--smoke] [--seed N]
+        [--trace-out PATH]
 
 ``--smoke`` trims to 6-job scenarios for CI (~seconds).
 """
@@ -26,9 +33,12 @@ from __future__ import annotations
 
 import argparse
 import time
+from pathlib import Path
 from typing import List
 
 from repro.core import BACEPipePolicy, SCENARIOS, SimulationResult, simulate
+from repro.core.scenarios import get_scenario
+from repro.obs import SimTraceRecorder, write_jsonl
 
 from .common import BENCH_GPU_FLOPS, POLICY_FACTORIES
 
@@ -55,6 +65,47 @@ def assert_cost_invariants(res: SimulationResult, cell: str) -> None:
             raise AssertionError(
                 f"voluntary > total migrations for job {job_id} in {cell}"
             )
+
+
+#: The traced cell ``--trace-out`` emits: mixed-stress at this seed with
+#: voluntary migration always-on produces preempt→start migration pairs,
+#: so the exported Perfetto trace carries flow arrows (seed 0 migrates
+#: nothing there — the stay-put schedule is already cheapest).
+TRACE_SCENARIO = "mixed-stress"
+TRACE_SEED = 1
+TRACE_MIGRATION_THRESHOLD = 0.0
+
+
+def emit_trace(out: Path) -> str:
+    """Run the traced acceptance cell, assert tracing parity, write JSONL."""
+    rec = SimTraceRecorder()
+    sc = get_scenario(TRACE_SCENARIO)
+    kwargs = dict(
+        seed=TRACE_SEED,
+        voluntary_migration_threshold=TRACE_MIGRATION_THRESHOLD,
+    )
+    traced = sc.run(BACEPipePolicy(), recorder=rec, **kwargs)
+    plain = sc.run(BACEPipePolicy(), **kwargs)
+    if traced.to_jsonable() != plain.to_jsonable():
+        raise AssertionError(
+            f"tracing moved the {TRACE_SCENARIO} result (seed={TRACE_SEED}):"
+            " the recorder mutated engine state or consumed RNG"
+        )
+    write_jsonl(
+        out,
+        rec,
+        meta={
+            "scenario": TRACE_SCENARIO,
+            "policy": "bace-pipe",
+            "seed": TRACE_SEED,
+            "voluntary_migration_threshold": TRACE_MIGRATION_THRESHOLD,
+        },
+    )
+    return (
+        f"# trace: {TRACE_SCENARIO}/bace-pipe seed={TRACE_SEED} -> {out} "
+        f"({len(rec.records)} records, "
+        f"{traced.total_voluntary_migrations} voluntary migrations)"
+    )
 
 
 def run(*, smoke: bool = False, seed: int = 0) -> List[str]:
@@ -142,10 +193,19 @@ def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--smoke", action="store_true", help="CI-sized quick run")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--trace-out",
+        type=Path,
+        default=None,
+        metavar="PATH",
+        help="also run the traced acceptance cell and write its JSONL here",
+    )
     args = ap.parse_args()
     print("name,us_per_call,derived")
     for row in run(smoke=args.smoke, seed=args.seed):
         print(row)
+    if args.trace_out is not None:
+        print(emit_trace(args.trace_out))
 
 
 if __name__ == "__main__":

@@ -31,6 +31,12 @@ end and asserts the process-wide schedule-plan memo's hit-rate floor
 regression guard for the bounded-LRU thrash that re-planned every topology
 each decision round at fleet scale.
 
+A trailing *trace-overhead probe* runs one cell twice — bare vs with a
+``SimTraceRecorder`` attached — asserts the makespans identical (tracing
+is observational), and gates the traced/untraced wall ratio at
+``TRACE_OVERHEAD_CEILING``: the regression guard for recorder hooks
+creeping into the hot decision path.
+
 Emits the usual CSV rows plus ``BENCH_scheduler.json`` at the repo root;
 ``scripts/bench_compare.py`` diffs two such files and gates on regression.
 
@@ -57,6 +63,7 @@ from repro.core import (
 )
 from repro.core.job import JobProfile
 from repro.core.workloads import paper_jobs
+from repro.obs import SimTraceRecorder
 
 from .common import BENCH_GPU_FLOPS
 
@@ -77,6 +84,16 @@ BIG_CELL = (10_000, 256)
 PLAN_CACHE_PROBE_QUICK = (256, 32)
 PLAN_CACHE_PROBE_FULL = (1024, 64)
 PLAN_CACHE_HIT_FLOOR = 0.75
+
+#: Trace-overhead probe: the cell timed bare vs with a ``SimTraceRecorder``
+#: attached, min-of-``TRACE_OVERHEAD_TRIALS`` walls each.  The traced wall
+#: must stay within ``TRACE_OVERHEAD_CEILING``x of the untraced one — the
+#: observed ratio at the default ``gauge_stride`` is ~1.2x, so a breach
+#: means a recorder hook leaked real work onto the untraced path or a gauge
+#: stopped being decimated.
+TRACE_OVERHEAD_CELL = (256, 32)
+TRACE_OVERHEAD_CEILING = 1.3
+TRACE_OVERHEAD_TRIALS = 5
 
 #: Largest (jobs, regions) the legacy seed engine is still timed at.  Above
 #: this the cell is recorded under ``skipped`` in the JSON.
@@ -254,6 +271,72 @@ def _plan_cache_cell(n_jobs: int, n_regions: int) -> Dict[str, object]:
     }
 
 
+def _trace_overhead_cell(n_jobs: int, n_regions: int) -> Dict[str, object]:
+    """Traced-vs-untraced probe gating the recorder's overhead ceiling.
+
+    Min-of-N walls on both sides, with trials interleaved (bare, traced,
+    bare, traced, …) so slow drift in the host hits both alike.  GC runs
+    before each timed region and is disabled inside it: the traced run
+    allocates ~100k record objects, and by this point in the sweep the
+    process heap holds every earlier cell's live set, so cyclic-GC passes
+    triggered mid-run would bill whole-heap scan time to the recorder.
+    Makespans are asserted identical — the recorder must observe the run,
+    never steer it."""
+    import gc
+
+    def one_wall(traced: bool) -> Tuple[float, float]:
+        cluster = synth_cluster(n_regions)
+        profiles = synth_profiles(n_jobs, seed=0)
+        sim = Simulator(
+            cluster,
+            profiles,
+            BACEPipePolicy(),
+            engine="vectorized",
+            decision_backend="numpy",
+            recorder=SimTraceRecorder() if traced else None,
+        )
+        gc.collect()
+        gc.disable()
+        try:
+            t0 = time.perf_counter()
+            res = sim.run()
+            wall = time.perf_counter() - t0
+        finally:
+            gc.enable()
+        return wall, res.makespan
+
+    bare_wall = traced_wall = float("inf")
+    bare_makespan = traced_makespan = 0.0
+    for _ in range(TRACE_OVERHEAD_TRIALS):
+        wall, bare_makespan = one_wall(traced=False)
+        bare_wall = min(bare_wall, wall)
+        wall, traced_makespan = one_wall(traced=True)
+        traced_wall = min(traced_wall, wall)
+    if traced_makespan != bare_makespan:
+        raise AssertionError(
+            f"tracing moved the makespan at jobs={n_jobs} "
+            f"regions={n_regions}: {traced_makespan} != {bare_makespan} "
+            "(the recorder mutated engine state or consumed RNG)"
+        )
+    ratio = traced_wall / bare_wall
+    if ratio > TRACE_OVERHEAD_CEILING:
+        raise AssertionError(
+            f"trace overhead {ratio:.2f}x above the "
+            f"{TRACE_OVERHEAD_CEILING}x ceiling at jobs={n_jobs} "
+            f"regions={n_regions} (bare {bare_wall:.3f}s, traced "
+            f"{traced_wall:.3f}s; a recorder hook is doing hot-path work)"
+        )
+    return {
+        "jobs": n_jobs,
+        "regions": n_regions,
+        "trials": TRACE_OVERHEAD_TRIALS,
+        "bare_wall_s": bare_wall,
+        "traced_wall_s": traced_wall,
+        "ratio": ratio,
+        "ceiling": TRACE_OVERHEAD_CEILING,
+    }
+
+
 def _cell_variants(n_jobs: int, n_regions: int, have_jax: bool):
     """(engine, backend) variants timed for a cell, reference path first."""
     variants = [("vectorized", "numpy")]
@@ -329,6 +412,16 @@ def run(*, quick: bool = False, n_seeds: int = 1) -> List[str]:
         f"topologies={cache_cell['distinct_topologies']};"
         f"floor={PLAN_CACHE_HIT_FLOOR}"
     )
+    # Trace-overhead probe: recorder attached vs not, ceiling asserted
+    # inside.
+    trace_cell = _trace_overhead_cell(*TRACE_OVERHEAD_CELL)
+    rows.append(
+        f"scheduler_scaling/j{TRACE_OVERHEAD_CELL[0]}"
+        f"xr{TRACE_OVERHEAD_CELL[1]}/trace-overhead,"
+        f"{1e6 * trace_cell['traced_wall_s'] / TRACE_OVERHEAD_CELL[0]:.1f},"
+        f"ratio={trace_cell['ratio']:.2f};"
+        f"ceiling={TRACE_OVERHEAD_CEILING}"
+    )
 
     if quick:
         # Quick mode is a smoke run: don't clobber the full-sweep baseline
@@ -350,6 +443,9 @@ def run(*, quick: bool = False, n_seeds: int = 1) -> List[str]:
         # Not a timing cell: the microplan plan-memo probe (hit-rate floor
         # asserted in-process, recorded here for the paper trail).
         "plan_cache": cache_cell,
+        # Likewise: the recorder overhead probe (ceiling asserted
+        # in-process).
+        "trace_overhead": trace_cell,
     }
 
     def _find(jobs: int, regions: int, engine: str, backend: str):

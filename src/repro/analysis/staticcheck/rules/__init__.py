@@ -12,6 +12,7 @@ from .determinism import (
 )
 from .jit import JitClosureRule, TracedBranchRule, X64ScopeRule
 from .ledger import LedgerEncapsulationRule
+from .obs import ObsImportRule
 from .settle import SettleBeforeReleaseRule
 from .twins import TwinParityRule
 
@@ -28,6 +29,7 @@ def all_rules() -> List[object]:
         TracedBranchRule(),
         X64ScopeRule(),
         SettleBeforeReleaseRule(),
+        ObsImportRule(),
     ]
 
 

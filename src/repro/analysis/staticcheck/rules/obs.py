@@ -1,0 +1,68 @@
+"""Observability import-boundary rule (RPL6xx).
+
+RPL601 — a ``core/`` decision-path module importing ``repro.obs`` (any
+submodule, absolute or relative) outside the sanctioned seam.  The engine's
+tracing hooks are duck calls against the :class:`~repro.obs.protocol.
+TraceRecorder` protocol, guarded by ``recorder is not None`` — core never
+needs the recorder implementation, the metrics store, or the exporters, and
+importing them would invert the dependency direction the observability
+design rests on (obs observes core; core must stay runnable and
+bit-identical with obs deleted).
+
+The one exception is the protocol seam itself: ``repro.obs.protocol`` may
+be imported for *typing* (in practice under ``if TYPE_CHECKING:``), so
+signatures can name the protocol without a runtime edge.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional
+
+from ..diagnostics import Diagnostic
+from ..engine import Project
+
+#: The sole core-importable obs module (the typing protocol seam).
+ALLOWED_MODULE = "repro.obs.protocol"
+
+
+def _obs_module(node: ast.AST) -> Optional[str]:
+    """Normalized dotted module name when ``node`` imports from the obs
+    package, else None.  Relative forms (``from ..obs.metrics import X``)
+    normalize to their absolute ``repro.obs...`` spelling."""
+    if isinstance(node, ast.Import):
+        for alias in node.names:
+            if alias.name == "repro.obs" or alias.name.startswith("repro.obs."):
+                return alias.name
+        return None
+    if isinstance(node, ast.ImportFrom):
+        mod = node.module or ""
+        if node.level == 0:
+            if mod == "repro.obs" or mod.startswith("repro.obs."):
+                return mod
+            return None
+        # Relative import out of core/: ``..obs`` (or deeper) reaches the
+        # sibling obs package; normalize for the message/allowlist check.
+        if mod == "obs" or mod.startswith("obs."):
+            return "repro." + mod
+    return None
+
+
+class ObsImportRule:
+    code = "RPL601"
+    name = "obs-import-boundary"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not sf.in_core():
+                continue
+            for node in ast.walk(sf.tree):
+                mod = _obs_module(node)
+                if mod is None or mod == ALLOWED_MODULE:
+                    continue
+                yield Diagnostic(
+                    self.code, sf.rel, node.lineno, node.col_offset,
+                    f"core decision-path module imports '{mod}'; core may "
+                    f"only see the '{ALLOWED_MODULE}' typing seam — tracing "
+                    f"is duck-typed through the TraceRecorder protocol",
+                )

@@ -32,7 +32,7 @@ this event loop) produce byte-identical costs and golden traces.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+from typing import Dict, Iterable, Union
 
 from .cluster import ClusterState
 from .job import JobProfile
@@ -129,6 +129,22 @@ class SegmentLedger:
         if not self.repriced and t == self.projected_finish:
             return self.projected_cost
         return self.accrued + (t - self.last_settle) * self.rate
+
+    def telemetry(self) -> Dict[str, Union[float, bool]]:
+        """Observational snapshot for the ``repro.obs`` settle record: the
+        ledger's scalar state after :meth:`settle` ran.  Read-only — never
+        feeds back into accounting."""
+        return {
+            "start": self.start,
+            "restore_s": self.restore_s,
+            "iteration_s": self.iteration_seconds,
+            "projected_finish": self.projected_finish,
+            "projected_cost": self.projected_cost,
+            "rate_per_s": self.rate,
+            "accrued": self.accrued,
+            "last_settle": self.last_settle,
+            "repriced": self.repriced,
+        }
 
     def completed_iterations(self, t: float) -> int:
         """Whole checkpointed iterations trained by time ``t``: elapsed

@@ -16,12 +16,16 @@ Single-type clusters keep the seed's exact region-granular code path.
 
 from __future__ import annotations
 
-from typing import Dict, List, Mapping
+from typing import TYPE_CHECKING, Dict, List, Mapping, Optional
 
 import numpy as np
 
 from .cluster import ClusterState
 from .kernels_decide import cheapest_fill_order
+
+if TYPE_CHECKING:
+    # Typing-only obs seam (reprolint RPL601) — never imported at runtime.
+    from repro.obs.protocol import TraceRecorder
 
 
 def _cost_min_allocate_typed(
@@ -73,9 +77,17 @@ def _cost_min_allocate_typed(
 
 
 def cost_min_allocate(
-    cluster: ClusterState, path: List[str], g: int
+    cluster: ClusterState,
+    path: List[str],
+    g: int,
+    *,
+    recorder: Optional["TraceRecorder"] = None,
 ) -> Dict[str, int]:
-    """Alg. 2.  Raises if the path cannot host ``g`` GPUs."""
+    """Alg. 2.  Raises if the path cannot host ``g`` GPUs.
+
+    ``recorder`` (only passed by callers that see ``traceable`` below)
+    receives an ``on_alloc`` record of the successful pour — observational
+    only, never affects the grant."""
     if len(set(path)) != len(path):
         raise ValueError("path revisits a region")
     if g < len(path):
@@ -88,7 +100,10 @@ def cost_min_allocate(
         raise ValueError("path capacity below target g")
 
     if cluster.is_heterogeneous:
-        return _cost_min_allocate_typed(cluster, path, g)
+        alloc = _cost_min_allocate_typed(cluster, path, g)
+        if recorder is not None:
+            recorder.on_alloc(path, g, alloc)
+        return alloc
 
     # Step 1: pipeline continuity — one GPU per traversed region.
     alloc = {r: 1 for r in path}
@@ -110,11 +125,17 @@ def cost_min_allocate(
         remaining -= add
     if remaining != 0:  # unreachable given the capacity pre-check
         raise ValueError("allocator failed to place all GPUs")
+    if recorder is not None:
+        recorder.on_alloc(path, g, alloc)
     return alloc
 
 
 def uniform_allocate(
-    cluster: ClusterState, path: List[str], g: int
+    cluster: ClusterState,
+    path: List[str],
+    g: int,
+    *,
+    recorder: Optional["TraceRecorder"] = None,
 ) -> Dict[str, int]:
     """Ablation "w/o Cost-Min" (paper §IV-E): spread GPUs evenly over the
     path, ignoring prices; overflow beyond a region's free capacity spills to
@@ -137,7 +158,16 @@ def uniform_allocate(
         spill -= add
     if spill > 0:
         raise ValueError("uniform allocator spill failure")
+    if recorder is not None:
+        recorder.on_alloc(path, g, alloc)
     return alloc
+
+
+# Marks an allocator as accepting the keyword-only ``recorder=`` — the
+# Pathfinder only forwards its recorder to allocators that opt in, so the
+# positional 3-arg ``AllocatorFn`` contract holds for custom allocators.
+cost_min_allocate.traceable = True  # type: ignore[attr-defined]
+uniform_allocate.traceable = True  # type: ignore[attr-defined]
 
 
 def allocation_cost_rate(

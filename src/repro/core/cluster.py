@@ -973,6 +973,11 @@ class ClusterState:
         """Per-region free GPU counts, region order (read-only view)."""
         return self._frozen(self._free)
 
+    def capacity_vector(self) -> np.ndarray:
+        """Per-region total GPU capacity, region order (read-only view).
+        Live values: spot churn moves them (see ``apply_env_update``)."""
+        return self._frozen(self._cap)
+
     def price_vector(self) -> np.ndarray:
         """Current per-region $/kWh prices, region order (read-only view)."""
         return self._frozen(self._price)

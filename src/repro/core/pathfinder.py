@@ -29,9 +29,13 @@ engine-parity and decision-backend suites enforce that.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import TYPE_CHECKING, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:
+    # Typing-only obs seam (reprolint RPL601) — never imported at runtime.
+    from repro.obs.protocol import TraceRecorder
 
 from .allocator import cost_min_allocate
 from .cluster import ClusterState
@@ -85,13 +89,22 @@ def find_placement(
     k_star: Optional[int] = None,
     allocator: AllocatorFn = cost_min_allocate,
     backend: str = DEFAULT_DECISION_BACKEND,
+    recorder: Optional["TraceRecorder"] = None,
 ) -> Optional[Placement]:
     """Alg. 1 end to end.  Returns None when even the best path cannot reach
     the job's memory floor (``min_gpus``) — the job must wait.
 
     ``backend`` selects the kernel implementation for the batched Phase 2
     frontier (``"numpy"`` or ``"jax"``); decisions are bit-identical either
-    way (see module docstring)."""
+    way (see module docstring).
+
+    ``recorder`` (the ``repro.obs`` protocol seam) receives one
+    ``on_candidate`` record per admission decision: the O(1) whole-cluster
+    reject, the Phase 1 pick, and every Phase 2 seed finalization with the
+    constraint that bound it — ``"gpu"`` for Eq. 5 capacity/floor failures,
+    ``"bandwidth"`` for Eq. 6 comm-over-comp rejections.  Purely
+    observational; decisions are identical with or without it."""
+    job_id = profile.spec.job_id
     k = k_star if k_star is not None else profile.optimal_gpus(cluster.total_gpus())
     k = max(k, profile.min_gpus)
 
@@ -100,6 +113,10 @@ def find_placement(
     # every seed to conclude the same).
     free_total = cluster.total_free_gpus()
     if free_total < profile.min_gpus:
+        if recorder is not None:
+            recorder.on_candidate(
+                job_id, "reject", (), free_total, "rejected", "gpu"
+            )
         return None
 
     free = cluster.free_vector()
@@ -113,18 +130,44 @@ def find_placement(
     if single >= 0:
         best = names[single]
         if not hetero:
-            return build_placement(
+            placement = build_placement(
                 profile, cluster, [best], {best: k}, require_comm_fits_comp=True
             )
+            if recorder is not None:
+                recorder.on_candidate(
+                    job_id,
+                    "phase1",
+                    (best,),
+                    k,
+                    "chosen",
+                    None,
+                    average_price(placement, cluster),
+                )
+            return placement
         # Heterogeneous: the cheapest region's granted types may sit below
         # the job's memory floor (build_placement validates against the
         # grant); fall through to Phase 2 rather than failing the job.
         try:
-            return build_placement(
+            placement = build_placement(
                 profile, cluster, [best], {best: k}, require_comm_fits_comp=True
             )
         except ValueError:
-            pass
+            if recorder is not None:
+                recorder.on_candidate(
+                    job_id, "phase1", (best,), k, "floor-failed", "gpu"
+                )
+        else:
+            if recorder is not None:
+                recorder.on_candidate(
+                    job_id,
+                    "phase1",
+                    (best,),
+                    k,
+                    "chosen",
+                    None,
+                    average_price(placement, cluster),
+                )
+            return placement
 
     # ------------------------------------------ Phase 2: batched expansion
     act = profile.spec.model.activation_bytes
@@ -191,20 +234,54 @@ def find_placement(
         g = int(g_arr[si])
         path_len = int(len_arr[si])
         if g < profile.min_gpus or g < path_len or path_len == 0:
+            if recorder is not None and path_len > 0:
+                seed_path = tuple(
+                    names[int(seed_regions[int(paths[si, j])])]
+                    for j in range(path_len)
+                )
+                recorder.on_candidate(
+                    job_id, "phase2", seed_path, g, "skipped-floor", "gpu"
+                )
             continue
         if best_cand is not None and g < best_cand.gpus:
+            if recorder is not None:
+                seed_path = tuple(
+                    names[int(seed_regions[int(paths[si, j])])]
+                    for j in range(path_len)
+                )
+                recorder.on_candidate(
+                    job_id, "phase2", seed_path, g, "dominated", None
+                )
             continue
         path = [names[int(seed_regions[int(paths[si, j])])]
                 for j in range(path_len)]
         try:
-            alloc = allocator(cluster, path, g)
+            if recorder is not None and getattr(
+                allocator, "traceable", False
+            ):
+                alloc = allocator(cluster, path, g, recorder=recorder)
+            else:
+                alloc = allocator(cluster, path, g)
         except ValueError:
+            if recorder is not None:
+                recorder.on_candidate(
+                    job_id, "phase2", tuple(path), g, "alloc-failed", "gpu"
+                )
             continue
         try:
             placement = build_placement(
                 profile, cluster, path, alloc, require_comm_fits_comp=True
             )
         except ValueError:
+            if recorder is not None:
+                recorder.on_candidate(
+                    job_id,
+                    "phase2",
+                    tuple(path),
+                    g,
+                    "comm-infeasible",
+                    "bandwidth",
+                )
             continue
         cand = PathCandidate(
             path=tuple(path),
@@ -212,6 +289,16 @@ def find_placement(
             avg_price=average_price(placement, cluster),
             alloc=alloc,
         )
+        if recorder is not None:
+            recorder.on_candidate(
+                job_id,
+                "phase2",
+                cand.path,
+                cand.gpus,
+                "candidate",
+                None,
+                cand.avg_price,
+            )
         if (
             best_cand is None
             or cand.gpus > best_cand.gpus
@@ -221,6 +308,16 @@ def find_placement(
 
     if best_cand is None:
         return None
+    if recorder is not None:
+        recorder.on_candidate(
+            job_id,
+            "phase2",
+            best_cand.path,
+            best_cand.gpus,
+            "chosen",
+            None,
+            best_cand.avg_price,
+        )
     return build_placement(
         profile,
         cluster,

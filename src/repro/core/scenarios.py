@@ -119,6 +119,7 @@ class Scenario:
         job_kwargs: Optional[dict] = None,
         voluntary_migration_threshold: object = _UNSET,
         decision_backend: str = "numpy",
+        recorder: Optional[object] = None,
     ) -> SimulationResult:
         cluster, profiles, trace = self.build(
             seed=seed,
@@ -140,6 +141,7 @@ class Scenario:
             restart_penalty_s=self.restart_penalty_s,
             voluntary_migration_threshold=threshold,
             decision_backend=decision_backend,
+            recorder=recorder,
         )
 
 

@@ -60,9 +60,15 @@ from __future__ import annotations
 import abc
 import dataclasses
 import heapq
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import TYPE_CHECKING, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+if TYPE_CHECKING:
+    # The one sanctioned obs import in core/ (reprolint RPL601): the typing
+    # protocol seam.  Never imported at runtime — tracing hooks are duck
+    # calls guarded by ``recorder is not None``.
+    from repro.obs.protocol import TraceRecorder
 
 from .accounting import SegmentLedger
 from .allocator import cost_min_allocate
@@ -126,6 +132,12 @@ class SchedulingPolicy(abc.ABC):
     strict_fcfs: bool = False
     ordering_kind: Optional[str] = None
     decision_backend: str = DEFAULT_DECISION_BACKEND
+    #: Optional out-of-band decision tracer (``repro.obs`` protocol seam).
+    #: Stamped by the ``Simulator`` from its ``recorder=`` argument, exactly
+    #: like ``decision_backend``; policies built on the Pathfinder pass it
+    #: through to ``find_placement`` so per-candidate admission outcomes are
+    #: recorded.  ``None`` (default) keeps every traced branch dead.
+    trace_recorder: Optional["TraceRecorder"] = None
 
     @abc.abstractmethod
     def order(
@@ -178,6 +190,7 @@ class BACEPipePolicy(SchedulingPolicy):
             cluster,
             allocator=cost_min_allocate,
             backend=self.decision_backend,
+            recorder=self.trace_recorder,
         )
 
     def legacy_order(self, pending, cluster, now):
@@ -249,6 +262,13 @@ class SimulationResult:
     events: List[Tuple[float, str, int]] = dataclasses.field(
         default_factory=list
     )
+    #: Fleet size (total GPUs) at simulation start; denominator of the
+    #: ``gpu_utilization`` summary line.  ``None`` for hand-built results.
+    cluster_gpus: Optional[int] = None
+
+    #: Serialization schema version for ``to_jsonable`` — bumped to 2 when
+    #: ``schema_version``/``cluster_gpus`` keys were added.
+    SCHEMA_VERSION = 2
 
     @property
     def completed_records(self) -> List[JobRecord]:
@@ -287,6 +307,33 @@ class SimulationResult:
     def total_stall_seconds(self) -> float:
         return sum(sorted(self.stall_seconds.values()))
 
+    @property
+    def average_hol_wait(self) -> float:
+        """Mean queue (head-of-line) wait W_j to *first* start, per job."""
+        first_start: Dict[int, float] = {}
+        submit: Dict[int, float] = {}
+        for r in self.records:
+            if r.job_id not in first_start or r.start < first_start[r.job_id]:
+                first_start[r.job_id] = r.start
+                submit[r.job_id] = r.submit
+        if not first_start:
+            return 0.0
+        waits = [first_start[j] - submit[j] for j in sorted(first_start)]
+        return sum(waits) / len(waits)
+
+    @property
+    def gpu_utilization(self) -> Optional[float]:
+        """GPU-seconds held by job segments over the fleet's capacity
+        (``cluster_gpus`` × makespan); ``None`` when the fleet size is
+        unknown or nothing ran."""
+        if not self.cluster_gpus or self.makespan <= 0.0:
+            return None
+        used = sum(
+            r.execution * r.placement.total_gpus
+            for r in sorted(self.records, key=lambda r: (r.job_id, r.start))
+        )
+        return used / (self.cluster_gpus * self.makespan)
+
     def summary(self) -> str:
         extra = (
             f", migrations={self.total_migrations}"
@@ -294,6 +341,10 @@ class SimulationResult:
             if self.migrations
             else ""
         )
+        extra += f", hol_wait={self.average_hol_wait / 3600.0:.3f} h"
+        util = self.gpu_utilization
+        if util is not None:
+            extra += f", util={util:.1%}"
         return (
             f"{self.policy}: avg_jct={self.average_jct / 3600.0:.3f} h, "
             f"total_cost=${self.total_cost:.2f}, "
@@ -307,8 +358,11 @@ class SimulationResult:
         that never migrate voluntarily (every static scenario, every
         price-free trace) keep their historical serialization byte-for-byte;
         per-segment ``JobRecord.cost`` is intentionally not serialized (the
-        per-job ``costs`` dict it partitions is)."""
+        per-job ``costs`` dict it partitions is).  ``schema_version`` stamps
+        the serialization contract (2 = added ``schema_version`` +
+        ``cluster_gpus``); ``cluster_gpus`` appears when known."""
         out = {
+            "schema_version": self.SCHEMA_VERSION,
             "policy": self.policy,
             "makespan": self.makespan,
             "costs": {str(j): c for j, c in sorted(self.costs.items())},
@@ -326,6 +380,8 @@ class SimulationResult:
                 str(j): n
                 for j, n in sorted(self.voluntary_migrations.items())
             }
+        if self.cluster_gpus is not None:
+            out["cluster_gpus"] = self.cluster_gpus
         return out
 
     @staticmethod
@@ -559,9 +615,15 @@ class Simulator:
         restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
         voluntary_migration_threshold: Optional[float] = None,
         decision_backend: str = DEFAULT_DECISION_BACKEND,
+        recorder: Optional["TraceRecorder"] = None,
     ) -> None:
         if engine not in ENGINES:
             raise ValueError(f"unknown engine {engine!r} (have: {ENGINES})")
+        if recorder is not None and engine == "legacy":
+            raise ValueError(
+                'decision tracing requires engine="vectorized"; the legacy '
+                "seed engine predates the recorder seam"
+            )
         if trace is not None and len(trace) > 0 and engine == "legacy":
             raise ValueError(
                 "dynamic scenarios (bandwidth/price traces) require "
@@ -599,10 +661,21 @@ class Simulator:
         # the selected kernels.
         self.decision_backend = resolve_backend(decision_backend)
         policy.decision_backend = self.decision_backend
+        # Out-of-band decision tracing: stamped onto the policy (like the
+        # backend) so Pathfinder-based ``place()`` calls emit per-candidate
+        # records.  ``None`` keeps every traced branch dead — the recorder
+        # never mutates engine state, so results are bit-identical either way
+        # (pinned by tests/test_obs.py).
+        self.recorder = recorder
+        policy.trace_recorder = recorder
+        #: Fleet size at construction, reported in ``SimulationResult`` for
+        #: the utilization summary line (spot churn can move the live total).
+        self._cluster_gpus0 = self.cluster.total_gpus()
 
     def run(self) -> SimulationResult:
         cluster = self.cluster
         policy = self.policy
+        rec = self.recorder
         legacy = self.engine == "legacy"
         kind = None if legacy else policy.ordering_kind
         ledger = (
@@ -684,6 +757,8 @@ class Simulator:
                 )
             run.record.cost = seg_cost
             costs[job_id] = costs.get(job_id, 0.0) + seg_cost
+            if rec is not None:
+                rec.on_settle(t, job_id, seg_cost, run.acct.telemetry())
 
         def preempt(job_id: int, t: float, *, voluntary: bool = False) -> None:
             run = running.pop(job_id)
@@ -709,6 +784,13 @@ class Simulator:
             if ledger is not None:
                 ledger.add(self.profiles[job_id])
             log.append((t, "migrate" if voluntary else "preempt", job_id))
+            # NB: ``rec`` is this closure's JobRecord local — reach the
+            # recorder through ``self``.
+            if self.recorder is not None:
+                self.recorder.on_sim_event(
+                    t, "migrate" if voluntary else "preempt", job_id
+                )
+                self.recorder.on_preempt(t, job_id, voluntary)
 
         now = 0.0
         while events:
@@ -730,6 +812,8 @@ class Simulator:
                         ledger.add(self.profiles[job_id])
                     arrivals_left -= 1
                     log.append((t_ev, "arrival", job_id))
+                    if rec is not None:
+                        rec.on_sim_event(t_ev, "arrival", job_id)
                 elif ev_kind == _COMPLETION:
                     job_id, ev_gen = payload
                     run = running.get(job_id)
@@ -740,6 +824,8 @@ class Simulator:
                     cluster.release_bandwidth(run.placement.reserved_bw)
                     settle(job_id, run, run.record.finish)
                     log.append((t_ev, "complete", job_id))
+                    if rec is not None:
+                        rec.on_sim_event(t_ev, "complete", job_id)
                 else:  # _ENV_CHANGE
                     upd = self.trace.updates[payload]
                     bw_moved, prices_moved, spot_moved = (
@@ -758,6 +844,8 @@ class Simulator:
                                 t_ev, cluster, upd.prices
                             )
                     log.append((t_ev, "env", payload))
+                    if rec is not None:
+                        rec.on_sim_event(t_ev, "env", payload)
 
             # Preemptive migration: resolve Eq. 6 violations a bandwidth drop
             # introduced.  Victim rule (deterministic): walk over-subscribed
@@ -860,9 +948,22 @@ class Simulator:
                     )
                     _release_placement(cluster, run.placement)
                     cluster.release_bandwidth(run.placement.reserved_bw)
+                    if rec is not None:
+                        rec.on_place_begin(now, job_id, probe=True)
                     alt = place(prof, cluster)
+                    usable = (
+                        alt is not None and alt.total_gpus >= prof.min_gpus
+                    )
+                    if rec is not None:
+                        rec.on_place_end(
+                            now,
+                            job_id,
+                            alt if usable else None,
+                            self.decision_backend,
+                            probe=True,
+                        )
                     move_cost = None
-                    if alt is not None and alt.total_gpus >= prof.min_gpus:
+                    if usable:
                         e_alt = (
                             rem * iteration_time(prof, alt)
                             + self.restart_penalty_s
@@ -872,21 +973,45 @@ class Simulator:
                         )
                     _reserve_placement(cluster, run.placement)
                     cluster.reserve_bandwidth(run.placement.reserved_bw)
-                    if (
+                    moving = (
                         move_cost is not None
                         and stay_cost > (1.0 + threshold) * move_cost
-                    ):
+                    )
+                    if rec is not None:
+                        rec.on_migration_probe(
+                            now, job_id, stay_cost, move_cost, moving
+                        )
+                    if moving:
                         preempt(job_id, now, voluntary=True)
 
             if not pending and not running and arrivals_left == 0:
+                if rec is not None:
+                    rec.on_timestamp(now, cluster, 0, running)
                 break  # only trailing env events remain; nothing can change
 
             # Scheduling pass (work-conserving).
             progressed = True
             while progressed and pending:
                 progressed = False
-                for prof in order(pending, now):
+                queue = order(pending, now)
+                if rec is not None:
+                    queue = list(queue)
+                    rec.on_queue_order(now, queue, cluster)
+                for prof in queue:
+                    if rec is not None:
+                        rec.on_place_begin(now, prof.spec.job_id)
                     placement = place(prof, cluster)
+                    if rec is not None:
+                        ok = (
+                            placement is not None
+                            and placement.total_gpus >= prof.min_gpus
+                        )
+                        rec.on_place_end(
+                            now,
+                            prof.spec.job_id,
+                            placement if ok else None,
+                            self.decision_backend,
+                        )
                     if placement is None or placement.total_gpus < prof.min_gpus:
                         if policy.strict_fcfs:
                             break  # HoL: the stuck head job blocks the queue
@@ -937,6 +1062,17 @@ class Simulator:
                     )
                     seq += 1
                     log.append((now, "start", job_id))
+                    if rec is not None:
+                        rec.on_sim_event(now, "start", job_id)
+                        rec.on_start(
+                            now,
+                            job_id,
+                            placement,
+                            running[job_id].acct.rate,
+                            t_it,
+                            finish,
+                            restore,
+                        )
                     progressed = True
                     break  # re-rank: alpha/normalization changed
 
@@ -947,6 +1083,12 @@ class Simulator:
                     f"(policy={policy.name})"
                 )
 
+            # Telemetry gauges sample once per drained timestamp, after the
+            # scheduling pass (so queue depth / occupancy reflect this
+            # instant's final state).
+            if rec is not None:
+                rec.on_timestamp(now, cluster, len(pending), running)
+
         return SimulationResult(
             policy=policy.name,
             records=sorted(records, key=lambda r: (r.job_id, r.start)),
@@ -956,6 +1098,7 @@ class Simulator:
             stall_seconds=stall,
             voluntary_migrations=vol_migrations,
             events=log,
+            cluster_gpus=self._cluster_gpus0,
         )
 
 
@@ -969,6 +1112,7 @@ def simulate(
     restart_penalty_s: float = DEFAULT_RESTART_PENALTY_S,
     voluntary_migration_threshold: Optional[float] = None,
     decision_backend: str = DEFAULT_DECISION_BACKEND,
+    recorder: Optional["TraceRecorder"] = None,
 ) -> SimulationResult:
     return Simulator(
         cluster,
@@ -979,4 +1123,5 @@ def simulate(
         restart_penalty_s=restart_penalty_s,
         voluntary_migration_threshold=voluntary_migration_threshold,
         decision_backend=decision_backend,
+        recorder=recorder,
     ).run()

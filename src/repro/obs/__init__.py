@@ -1,0 +1,37 @@
+"""Observability for the geo-scheduler: decision tracing, telemetry, export.
+
+Public surface:
+
+* :class:`~repro.obs.recorder.SimTraceRecorder` — pass as
+  ``simulate(..., recorder=...)`` (or ``Scenario.run(recorder=...)``) to
+  collect decision records and time-series telemetry out-of-band.
+* :class:`~repro.obs.metrics.MetricsLog` / :class:`~repro.obs.metrics.FleetHealth`
+  — the gauge/histogram store and the ft-monitor bridge.
+* :mod:`~repro.obs.export` — ``write_perfetto`` (Chrome trace-event JSON,
+  loads at https://ui.perfetto.dev), ``write_jsonl``/``load_jsonl``.
+* :mod:`~repro.obs.report` — ``render_report``/``check_trace``; also the
+  ``python -m repro.obs report`` CLI.
+
+Core decision-path modules never import this package (reprolint RPL601);
+they see only the :class:`~repro.obs.protocol.TraceRecorder` protocol.
+"""
+
+from .export import LoadedTrace, load_jsonl, to_perfetto, write_jsonl, write_perfetto
+from .metrics import FleetHealth, MetricsLog
+from .protocol import TraceRecorder
+from .recorder import SimTraceRecorder
+from .report import check_trace, render_report
+
+__all__ = [
+    "FleetHealth",
+    "LoadedTrace",
+    "MetricsLog",
+    "SimTraceRecorder",
+    "TraceRecorder",
+    "check_trace",
+    "load_jsonl",
+    "render_report",
+    "to_perfetto",
+    "write_jsonl",
+    "write_perfetto",
+]

@@ -1,0 +1,60 @@
+"""``python -m repro.obs`` — trace inspection CLI.
+
+Subcommands:
+
+* ``report TRACE.jsonl``           — print the terminal summary.
+* ``report TRACE.jsonl --check``   — additionally validate the structural
+  invariants; exit 1 when any fail (the CI smoke gate).
+* ``report TRACE.jsonl --perfetto OUT.json`` — also write the Chrome
+  trace-event export for https://ui.perfetto.dev.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+from .export import load_jsonl, write_perfetto
+from .report import check_trace, render_report
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.obs", description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    rep = sub.add_parser("report", help="summarize a JSONL trace")
+    rep.add_argument("trace", help="path to a trace written by write_jsonl")
+    rep.add_argument(
+        "--check",
+        action="store_true",
+        help="validate structural invariants; exit 1 on any failure",
+    )
+    rep.add_argument(
+        "--perfetto",
+        metavar="OUT",
+        help="also write the Chrome trace-event JSON export to OUT",
+    )
+    args = ap.parse_args(argv)
+
+    try:
+        trace = load_jsonl(args.trace)
+    except (OSError, ValueError) as exc:
+        print(f"error: cannot load {args.trace}: {exc}", file=sys.stderr)
+        return 2
+    print(render_report(trace))
+    if args.perfetto:
+        out = write_perfetto(args.perfetto, trace)
+        print(f"wrote perfetto trace: {out}")
+    if args.check:
+        problems = check_trace(trace)
+        if problems:
+            print(f"check: {len(problems)} problem(s)", file=sys.stderr)
+            for p in problems:
+                print(f"  - {p}", file=sys.stderr)
+            return 1
+        print("check: trace OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

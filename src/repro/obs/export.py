@@ -1,0 +1,276 @@
+"""Trace exporters: Chrome trace-event JSON (Perfetto) and JSONL.
+
+``to_perfetto`` lowers a recorded trace to the Chrome trace-event format
+(the JSON array flavor Perfetto's legacy importer loads directly):
+
+* pid 1 "regions"  — one thread track per region.  Job run segments render
+  as complete slices (``ph="X"``) on the track of their first path region;
+  region GPU-occupancy gauges render as counter tracks (``ph="C"``).
+* pid 2 "links"    — one counter track per inter-region link carrying
+  utilization and residual-Gbps series.
+* pid 3 "scheduler" — queue depth / spend-rate counters plus instant
+  events (``ph="i"``) for env breakpoints and preemptions.
+* migrations       — flow arrows (``ph="s"``/``ph="f"``) from the end of a
+  preempted segment's slice to the start of the job's next segment, so a
+  job hopping regions draws a visible arc across tracks.
+
+Timestamps are simulated seconds scaled to trace microseconds; wall-clock
+never enters the export (it only appears inside histogram *values*).
+
+``write_jsonl``/``load_jsonl`` round-trip the raw trace: one JSON object
+per line (``meta``, ``record``, ``series``, ``hist``, ``counter``,
+``hol``), enough to rebuild the terminal report and the Perfetto export
+bit-for-bit from disk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+from .metrics import MetricsLog
+
+_PID_REGIONS = 1
+_PID_LINKS = 2
+_PID_SCHED = 3
+
+#: trace microseconds per simulated second.
+_US = 1e6
+
+
+@dataclasses.dataclass
+class LoadedTrace:
+    """A trace reloaded from JSONL: duck-compatible with the recorder for
+    every consumer in ``obs`` (``records`` + ``metrics`` + ``hol_wait``)."""
+
+    records: List[Dict[str, object]]
+    metrics: MetricsLog
+    hol_wait: Dict[int, float]
+    meta: Dict[str, object]
+
+
+def _region_tid(order: Dict[str, int], region: str) -> int:
+    if region not in order:
+        order[region] = len(order) + 1
+    return order[region]
+
+
+def to_perfetto(trace) -> Dict[str, object]:
+    """Lower a trace (recorder or ``LoadedTrace``) to trace-event JSON."""
+    events: List[Dict[str, object]] = []
+    region_tid: Dict[str, int] = {}
+
+    def meta_event(pid: int, name: str, tid: int = 0, what: str = "process_name"):
+        events.append(
+            {
+                "ph": "M",
+                "pid": pid,
+                "tid": tid,
+                "name": what,
+                "args": {"name": name},
+            }
+        )
+
+    meta_event(_PID_REGIONS, "regions")
+    meta_event(_PID_LINKS, "links")
+    meta_event(_PID_SCHED, "scheduler")
+
+    # ---------------------------------------------------- job segment slices
+    # Pair each "start" record with the first terminal event (complete /
+    # preempt / migrate) for that job strictly after it.
+    starts = [r for r in trace.records if r["kind"] == "start"]
+    terminals: Dict[int, List[Tuple[float, str]]] = {}
+    for r in trace.records:
+        if r["kind"] == "event" and r["event"] in (
+            "complete",
+            "preempt",
+            "migrate",
+        ):
+            terminals.setdefault(int(r["id"]), []).append(
+                (float(r["t"]), str(r["event"]))
+            )
+    for ts_list in terminals.values():
+        ts_list.sort()
+
+    #: (job, end_t, end_region, end_tid) of preempted segments awaiting the
+    #: job's next start — each pair becomes one flow arrow.
+    open_flows: Dict[int, Tuple[float, int]] = {}
+    flow_id = 0
+    for rec in starts:
+        job = int(rec["job"])
+        t0 = float(rec["t"])
+        path = list(rec["path"])
+        tid = _region_tid(region_tid, path[0])
+        cand = [
+            (t, ev) for t, ev in terminals.get(job, []) if t > t0
+        ]
+        end_t, end_ev = cand[0] if cand else (t0, "unterminated")
+        events.append(
+            {
+                "ph": "X",
+                "pid": _PID_REGIONS,
+                "tid": tid,
+                "ts": t0 * _US,
+                "dur": max(0.0, end_t - t0) * _US,
+                "name": f"job {job}",
+                "cat": "segment",
+                "args": {
+                    "path": path,
+                    "alloc": rec["alloc"],
+                    "gpus": rec["gpus"],
+                    "rate_per_s": rec["rate_per_s"],
+                    "end": end_ev,
+                },
+            }
+        )
+        # Close an outstanding migration flow into this segment's start.
+        if job in open_flows:
+            fid_t, fid = open_flows.pop(job)
+            events.append(
+                {
+                    "ph": "f",
+                    "bp": "e",
+                    "pid": _PID_REGIONS,
+                    "tid": tid,
+                    "ts": max(t0, fid_t) * _US,
+                    "id": fid,
+                    "name": "migration",
+                    "cat": "migration",
+                }
+            )
+        if end_ev in ("preempt", "migrate"):
+            flow_id += 1
+            events.append(
+                {
+                    "ph": "s",
+                    "pid": _PID_REGIONS,
+                    "tid": tid,
+                    "ts": end_t * _US,
+                    "id": flow_id,
+                    "name": "migration",
+                    "cat": "migration",
+                }
+            )
+            open_flows[job] = (end_t, flow_id)
+
+    for region, tid in sorted(region_tid.items(), key=lambda kv: kv[1]):
+        meta_event(_PID_REGIONS, region, tid=tid, what="thread_name")
+
+    # -------------------------------------------------------- counter tracks
+    def counters(prefix: str, pid: int, rename=lambda s: s) -> None:
+        for name, pts in sorted(trace.metrics.series.items()):
+            if not name.startswith(prefix):
+                continue
+            track = rename(name)
+            for t, v in pts:
+                events.append(
+                    {
+                        "ph": "C",
+                        "pid": pid,
+                        "ts": t * _US,
+                        "name": track,
+                        "args": {"value": v},
+                    }
+                )
+
+    counters("gpu_occupancy/", _PID_REGIONS)
+    counters("link_util/", _PID_LINKS)
+    counters("link_residual_gbps/", _PID_LINKS)
+    counters("pending_depth", _PID_SCHED)
+    counters("spend_rate_per_s", _PID_SCHED)
+    counters("dead_regions", _PID_SCHED)
+    counters("plan_cache_hit_rate", _PID_SCHED)
+
+    # ------------------------------------------------------- instant markers
+    for r in trace.records:
+        if r["kind"] == "event" and r["event"] in ("env", "preempt", "migrate"):
+            events.append(
+                {
+                    "ph": "i",
+                    "pid": _PID_SCHED,
+                    "tid": 0,
+                    "ts": float(r["t"]) * _US,
+                    "name": str(r["event"]),
+                    "s": "g",
+                    "cat": "event",
+                    "args": {"id": r["id"]},
+                }
+            )
+
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def write_perfetto(path, trace) -> Path:
+    path = Path(path)
+    path.write_text(json.dumps(to_perfetto(trace)) + "\n", encoding="utf-8")
+    return path
+
+
+# ------------------------------------------------------------------- JSONL
+def write_jsonl(path, trace, *, meta: Optional[Dict[str, object]] = None) -> Path:
+    """One JSON object per line; replays through ``load_jsonl``."""
+    path = Path(path)
+    with path.open("w", encoding="utf-8") as fh:
+        header = {"type": "meta", "schema": 1}
+        header.update(meta or getattr(trace, "meta", None) or {})
+        fh.write(json.dumps(header) + "\n")
+        for rec in trace.records:
+            fh.write(json.dumps({"type": "record", **rec}) + "\n")
+        for name, pts in sorted(trace.metrics.series.items()):
+            fh.write(
+                json.dumps(
+                    {"type": "series", "name": name, "points": [[t, v] for t, v in pts]}
+                )
+                + "\n"
+            )
+        for name, obs in sorted(trace.metrics.histograms.items()):
+            fh.write(
+                json.dumps({"type": "hist", "name": name, "values": list(obs)})
+                + "\n"
+            )
+        for name, n in sorted(trace.metrics.counters.items()):
+            fh.write(
+                json.dumps({"type": "counter", "name": name, "value": n}) + "\n"
+            )
+        hol = getattr(trace, "hol_wait", None) or {}
+        for job, secs in sorted(hol.items()):
+            fh.write(
+                json.dumps({"type": "hol", "job": int(job), "wait_s": secs})
+                + "\n"
+            )
+    return path
+
+
+def load_jsonl(path) -> LoadedTrace:
+    records: List[Dict[str, object]] = []
+    metrics = MetricsLog()
+    hol: Dict[int, float] = {}
+    meta: Dict[str, object] = {}
+    with Path(path).open("r", encoding="utf-8") as fh:
+        for line in fh:
+            line = line.strip()
+            if not line:
+                continue
+            obj = json.loads(line)
+            typ = obj.pop("type", None)
+            if typ == "meta":
+                meta = obj
+            elif typ == "record":
+                records.append(obj)
+            elif typ == "series":
+                metrics.series[obj["name"]] = [
+                    (float(t), float(v)) for t, v in obj["points"]
+                ]
+            elif typ == "hist":
+                metrics.histograms[obj["name"]] = [
+                    float(v) for v in obj["values"]
+                ]
+            elif typ == "counter":
+                metrics.counters[obj["name"]] = int(obj["value"])
+            elif typ == "hol":
+                hol[int(obj["job"])] = float(obj["wait_s"])
+            else:
+                raise ValueError(f"unknown JSONL line type {typ!r} in {path}")
+    return LoadedTrace(records=records, metrics=metrics, hol_wait=hol, meta=meta)

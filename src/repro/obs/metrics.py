@@ -1,0 +1,130 @@
+"""Time-series telemetry: gauges, histograms, counters, and fleet health.
+
+``MetricsLog`` is the storage half of the obs subsystem: named time series
+sampled at simulated-event timestamps (link utilization, GPU occupancy,
+spend rate, queue depth, plan-cache hit rate), wall-clock histograms for
+per-decision latency, and monotonic counters.  It is engine-agnostic — the
+``SimTraceRecorder`` feeds it from the protocol hooks, and the exporters /
+report consume it read-only.
+
+``FleetHealth`` wires the fault-tolerance monitors (``repro.ft.monitor``:
+``HeartbeatMonitor`` + ``StragglerDetector``) into this surface: regions
+hosting running jobs heartbeat at every sampled timestamp (sim time), and
+each placement decision's wall latency feeds the straggler EMA — a
+control-plane decision much slower than its recent history is flagged and
+counted, exactly the detect-path those monitors exist for.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.ft.monitor import HeartbeatMonitor, StragglerDetector
+
+
+@dataclasses.dataclass
+class MetricsLog:
+    """Named time series + histograms + counters.
+
+    ``series[name]`` is a list of ``(t, value)`` samples in sampling order
+    (the simulator visits timestamps monotonically, so each series is
+    time-sorted by construction); ``histograms[name]`` is a list of raw
+    observations; ``counters[name]`` a running total.
+    """
+
+    series: Dict[str, List[Tuple[float, float]]] = dataclasses.field(
+        default_factory=dict
+    )
+    histograms: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict
+    )
+    counters: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    def sample(self, name: str, t: float, value: float) -> None:
+        self.series.setdefault(name, []).append((float(t), float(value)))
+
+    def observe(self, name: str, value: float) -> None:
+        self.histograms.setdefault(name, []).append(float(value))
+
+    def incr(self, name: str, n: int = 1) -> None:
+        self.counters[name] = self.counters.get(name, 0) + n
+
+    def latest(self, name: str) -> Optional[float]:
+        pts = self.series.get(name)
+        return pts[-1][1] if pts else None
+
+    def percentile(self, name: str, q: float) -> Optional[float]:
+        """Nearest-rank percentile of a histogram (q in [0, 100])."""
+        obs = self.histograms.get(name)
+        if not obs:
+            return None
+        ordered = sorted(obs)
+        rank = max(0, min(len(ordered) - 1, int(round(q / 100.0 * (len(ordered) - 1)))))
+        return ordered[rank]
+
+    def to_jsonable(self) -> Dict[str, object]:
+        return {
+            "series": {
+                name: [[t, v] for t, v in pts]
+                for name, pts in sorted(self.series.items())
+            },
+            "histograms": {
+                name: list(obs)
+                for name, obs in sorted(self.histograms.items())
+            },
+            "counters": dict(sorted(self.counters.items())),
+        }
+
+    @classmethod
+    def from_jsonable(cls, data: Dict[str, object]) -> "MetricsLog":
+        log = cls()
+        for name, pts in data.get("series", {}).items():  # type: ignore[union-attr]
+            log.series[name] = [(float(t), float(v)) for t, v in pts]
+        for name, obs in data.get("histograms", {}).items():  # type: ignore[union-attr]
+            log.histograms[name] = [float(v) for v in obs]
+        for name, n in data.get("counters", {}).items():  # type: ignore[union-attr]
+            log.counters[name] = int(n)
+        return log
+
+
+class FleetHealth:
+    """Heartbeat + straggler signals bridged onto a ``MetricsLog``.
+
+    ``heartbeat_timeout_s`` is *simulated* seconds: a region that hosted
+    running work and then goes quiet for longer than the timeout while the
+    simulation is still advancing shows up in the ``dead_regions`` gauge.
+    ``observe_decision`` feeds per-decision *wall* latencies (seconds) to
+    the EMA straggler detector; flagged decisions increment the
+    ``straggler_decisions`` counter and are listed in ``detector.events``.
+    """
+
+    def __init__(
+        self,
+        metrics: MetricsLog,
+        *,
+        heartbeat_timeout_s: float = 6 * 3600.0,
+        straggler_factor: float = 2.5,
+    ) -> None:
+        self.metrics = metrics
+        self.monitor = HeartbeatMonitor(timeout_s=heartbeat_timeout_s)
+        self.detector = StragglerDetector(
+            factor=straggler_factor, on_straggler=self._on_straggler
+        )
+        self._step = 0
+
+    def _on_straggler(self, step: int, dt: float, ema: float) -> None:
+        self.metrics.incr("straggler_decisions")
+
+    def beat_regions(self, t: float, regions: Iterable[str]) -> None:
+        for r in regions:
+            self.monitor.beat(r, now=t)
+
+    def sample(self, t: float) -> None:
+        self.metrics.sample(
+            "dead_regions", t, float(len(self.monitor.dead_workers(now=t)))
+        )
+
+    def observe_decision(self, wall_s: float) -> bool:
+        self._step += 1
+        return self.detector.observe(self._step, wall_s)

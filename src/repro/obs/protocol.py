@@ -1,0 +1,115 @@
+"""The TraceRecorder protocol seam between ``core/`` and ``repro.obs``.
+
+This module is the *only* piece of ``repro.obs`` that core decision-path
+modules may import (reprolint RPL601 enforces it), and it imports nothing
+from the rest of ``obs`` or from ``core`` — it is a pure typing surface.
+Core modules accept an ``Optional[TraceRecorder]`` and guard every hook with
+``if recorder is not None``; with the default ``None`` the traced branches
+never execute and the engine's decisions, float accumulation order, and
+event logs are untouched (the tracing on/off bit-identity test pins this
+for every registered scenario on both decision backends).
+
+Sim-time vs wall-time: every ``t`` below is *simulated* seconds from the
+event queue.  Wall-clock may only be read inside ``obs/`` implementations
+(e.g. ``SimTraceRecorder`` timing a ``place()`` span between
+``on_place_begin``/``on_place_end``) — core itself never touches a clock
+(reprolint RPL102).
+"""
+
+from __future__ import annotations
+
+from typing import Mapping, Optional, Protocol, Sequence, Tuple, runtime_checkable
+
+
+@runtime_checkable
+class TraceRecorder(Protocol):
+    """Structured decision + telemetry hooks the engine calls out-of-band.
+
+    Implementations must be strictly observational: no mutation of the
+    cluster, profiles, or any engine state, and no RNG consumption.
+    """
+
+    # ------------------------------------------------------------ sim events
+    def on_sim_event(self, t: float, kind: str, ident: int) -> None:
+        """Mirror of every ``SimulationResult.events`` log append."""
+
+    def on_timestamp(
+        self,
+        t: float,
+        cluster: object,
+        pending: int,
+        running: Mapping[int, object],
+    ) -> None:
+        """End of one event-timestamp iteration: sample time-series gauges."""
+
+    # ------------------------------------------------------- queue decisions
+    def on_queue_order(
+        self, t: float, ordered: Sequence[object], cluster: object
+    ) -> None:
+        """Policy-ordered pending queue (list of ``JobProfile``) at ``t``."""
+
+    # --------------------------------------------------- placement decisions
+    def on_place_begin(self, t: float, job_id: int, *, probe: bool = False) -> None:
+        """A ``place()`` decision span opens (wall clock read obs-side)."""
+
+    def on_place_end(
+        self,
+        t: float,
+        job_id: int,
+        placement: Optional[object],
+        backend: str,
+        *,
+        probe: bool = False,
+    ) -> None:
+        """The span closes; ``placement is None`` means the job stays queued."""
+
+    def on_candidate(
+        self,
+        job_id: int,
+        stage: str,
+        path: Tuple[str, ...],
+        gpus: int,
+        outcome: str,
+        binding: Optional[str],
+        avg_price: Optional[float] = None,
+    ) -> None:
+        """One Pathfinder candidate: ``stage`` in {"reject", "phase1",
+        "phase2"}, ``outcome`` the admission result, ``binding`` the
+        constraint that decided it ("gpu" = Eq. 5, "bandwidth" = Eq. 6, or
+        None when admitted)."""
+
+    def on_alloc(
+        self, path: Sequence[str], gpus: int, alloc: Mapping[str, int]
+    ) -> None:
+        """A successful Cost-Min (Alg. 2) pour along ``path``."""
+
+    # ----------------------------------------------------- lifecycle records
+    def on_start(
+        self,
+        t: float,
+        job_id: int,
+        placement: object,
+        rate: float,
+        iteration_seconds: float,
+        finish: float,
+        restore_s: float,
+    ) -> None:
+        """A segment starts: chosen placement with its billed $/s ``rate``."""
+
+    def on_settle(
+        self, t: float, job_id: int, cost: float, ledger: Mapping[str, object]
+    ) -> None:
+        """A segment's ledger settles (completion or preemption)."""
+
+    def on_preempt(self, t: float, job_id: int, voluntary: bool) -> None:
+        """A running segment is evicted (forced) or checkpoints (voluntary)."""
+
+    def on_migration_probe(
+        self,
+        t: float,
+        job_id: int,
+        stay_cost: float,
+        move_cost: Optional[float],
+        moved: bool,
+    ) -> None:
+        """A price-aware stay-vs-move probe and its verdict."""

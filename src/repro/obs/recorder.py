@@ -1,0 +1,370 @@
+"""``SimTraceRecorder`` — the reference ``TraceRecorder`` implementation.
+
+Collects structured *decision records* (ordered-queue snapshots with Eq. 12
+priority scores, per-candidate Pathfinder admission outcomes with their
+binding constraint, chosen placements with the typed grant and billed rate,
+migration stay-vs-move probes) plus a ``MetricsLog`` of time-series gauges
+sampled at event timestamps.  Everything here is observational: the
+recorder never mutates engine state and never consumes RNG, which is what
+the tracing on/off bit-identity test relies on.
+
+Wall clock lives *only* here (and in ``FleetHealth``): core calls
+``on_place_begin``/``on_place_end`` and the recorder reads
+``time.perf_counter`` on its side of the seam, so reprolint's RPL102
+(no wall clock in ``core/``) stays clean by construction.
+
+Record-volume bounds: a saturated cluster re-probes every queued job at
+every event, so the recorder suppresses *repeat* failure records (and their
+candidate sub-records) for a job already marked head-of-line blocked — the
+first failure per queue episode is kept, later identical ones only update
+the HoL wait attribution.  Decision wall-clock histograms are never
+suppressed.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.cluster import GBPS
+from repro.core.microplan import plan_cache_info
+from repro.core.priority import priority_scores
+
+from .metrics import FleetHealth, MetricsLog
+
+
+class SimTraceRecorder:
+    """Reference recorder: decision records + ``MetricsLog`` + fleet health.
+
+    ``queue_top`` caps how many entries of each ordered-queue snapshot are
+    stored (the snapshot records the full queue depth either way).
+    ``gauge_stride`` decimates the *expensive* gauges (per-region occupancy,
+    per-link utilization/residual, spend rate, plan cache, fleet health) and
+    queue-snapshot scoring to every Nth drained timestamp — the cheap
+    scheduler gauges (queue depth, running jobs) still sample at every one.
+    The default keeps traced runs within the benchmark's overhead ceiling
+    (``TRACE_OVERHEAD_CEILING`` in ``benchmarks/scheduler_scaling.py``);
+    set 1 for full resolution.
+    """
+
+    def __init__(
+        self,
+        *,
+        queue_top: int = 16,
+        gauge_stride: int = 16,
+        heartbeat_timeout_s: float = 6 * 3600.0,
+        straggler_factor: float = 2.5,
+    ) -> None:
+        if gauge_stride < 1:
+            raise ValueError("gauge_stride must be >= 1")
+        self.queue_top = queue_top
+        self.gauge_stride = gauge_stride
+        self.records: List[Dict[str, object]] = []
+        self.metrics = MetricsLog()
+        self.health = FleetHealth(
+            self.metrics,
+            heartbeat_timeout_s=heartbeat_timeout_s,
+            straggler_factor=straggler_factor,
+        )
+        #: Per-job head-of-line wait attribution: simulated seconds spent
+        #: queued *after* a failed placement attempt (i.e. blocked on
+        #: resources, not merely not-yet-visited).
+        self.hol_wait: Dict[int, float] = {}
+        self._blocked: Dict[int, float] = {}
+        self._now = 0.0
+        self._queue_t: Optional[float] = None
+        self._span_t0 = 0.0
+        self._span_suppress = False
+        self._gauge_tick = 0
+        self._queue_tick = 0
+        # Hot-path memos: pre-bound series lists and counter names keep
+        # f-string construction and dict setdefault churn off the
+        # per-timestamp / per-candidate paths (the overhead-ceiling
+        # benchmark is sensitive to both).
+        series = self.metrics.series
+        self._pending_series = series.setdefault("pending_depth", [])
+        self._running_series = series.setdefault("running_jobs", [])
+        self._occ_series: Dict[str, List[Tuple[float, float]]] = {}
+        self._link_series: Dict[
+            Tuple[str, str],
+            Tuple[List[Tuple[float, float]], List[Tuple[float, float]]],
+        ] = {}
+        self._event_counters: Dict[str, str] = {}
+        self._cand_counters: Dict[str, str] = {}
+        self._bind_counters: Dict[str, str] = {}
+        self._wall_hists: Dict[str, str] = {}
+
+    # ------------------------------------------------------------ sim events
+    def on_sim_event(self, t: float, kind: str, ident: int) -> None:
+        self._now = t
+        self.records.append({"t": t, "kind": "event", "event": kind, "id": ident})
+        name = self._event_counters.get(kind)
+        if name is None:
+            name = self._event_counters[kind] = f"events/{kind}"
+        self.metrics.incr(name)
+
+    def on_timestamp(
+        self,
+        t: float,
+        cluster: object,
+        pending: int,
+        running: Mapping[int, object],
+    ) -> None:
+        self._now = t
+        m = self.metrics
+        self._pending_series.append((t, float(pending)))
+        self._running_series.append((t, float(len(running))))
+
+        # Everything below iterates running placements or the cluster
+        # ledgers; decimate to every ``gauge_stride``-th timestamp.
+        tick = self._gauge_tick
+        self._gauge_tick = tick + 1
+        if tick % self.gauge_stride:
+            return
+
+        # $/s spend rate: per running segment ledger, cluster-wide total.
+        total_rate = 0.0
+        active_regions: set = set()
+        link_reserved: Dict[Tuple[str, str], float] = {}
+        for job_id in sorted(running):
+            run = running[job_id]
+            total_rate += run.acct.rate
+            active_regions.update(run.placement.path)
+            for link, share in run.placement.reserved_bw.items():
+                link_reserved[link] = link_reserved.get(link, 0.0) + share
+        m.sample("spend_rate_per_s", t, total_rate)
+
+        # Per-region GPU occupancy (1 − free/capacity), live spot capacity.
+        names = cluster.region_names()
+        free = cluster.free_vector()
+        caps = cluster.capacity_vector()
+        occ_series = self._occ_series
+        for i, name in enumerate(names):
+            pts = occ_series.get(name)
+            if pts is None:
+                pts = occ_series[name] = m.series.setdefault(
+                    f"gpu_occupancy/{name}", []
+                )
+            cap = int(caps[i])
+            occ = 1.0 - (float(free[i]) / cap) if cap > 0 else 0.0
+            pts.append((t, occ))
+
+        # Per-link utilization/residual — only links carrying reservations
+        # are sampled (absent ⇒ utilization 0, residual = capacity).
+        link_series = self._link_series
+        for link in sorted(link_reserved):
+            pair = link_series.get(link)
+            if pair is None:
+                u, v = link
+                pair = link_series[link] = (
+                    m.series.setdefault(f"link_util/{u}->{v}", []),
+                    m.series.setdefault(f"link_residual_gbps/{u}->{v}", []),
+                )
+            u, v = link
+            cap = cluster.link_bandwidth(u, v)
+            util = link_reserved[link] / cap if cap > 0 else 1.0
+            pair[0].append((t, util))
+            pair[1].append((t, cluster.available_bandwidth(u, v) / GBPS))
+
+        # Plan-cache hit rate of the microplan memo (process-wide).
+        info = plan_cache_info()
+        if info.hits or info.misses:
+            m.sample("plan_cache_hit_rate", t, info.hit_rate)
+
+        # Fleet health: occupied regions heartbeat at sim time.
+        if active_regions:
+            self.health.beat_regions(t, sorted(active_regions))
+        self.health.sample(t)
+
+    # ------------------------------------------------------- queue decisions
+    def on_queue_order(
+        self, t: float, ordered: Sequence[object], cluster: object
+    ) -> None:
+        self._now = t
+        if t == self._queue_t:
+            return  # one snapshot per timestamp: re-ranks within a pass churn
+        self._queue_t = t
+        # Scoring the full queue is O(depth); decimate like the gauges.
+        tick = self._queue_tick
+        self._queue_tick = tick + 1
+        if tick % self.gauge_stride:
+            return
+        scores = priority_scores(ordered, cluster)
+        self.records.append(
+            {
+                "t": t,
+                "kind": "queue",
+                "depth": len(ordered),
+                "head": [
+                    {"job": p.spec.job_id, "score": scores[p.spec.job_id]}
+                    for p in ordered[: self.queue_top]
+                ],
+            }
+        )
+
+    # --------------------------------------------------- placement decisions
+    def on_place_begin(self, t: float, job_id: int, *, probe: bool = False) -> None:
+        self._now = t
+        self._span_suppress = (not probe) and job_id in self._blocked
+        self._span_t0 = time.perf_counter()
+
+    def on_place_end(
+        self,
+        t: float,
+        job_id: int,
+        placement: Optional[object],
+        backend: str,
+        *,
+        probe: bool = False,
+    ) -> None:
+        wall_s = time.perf_counter() - self._span_t0
+        hist = self._wall_hists.get(backend)
+        if hist is None:
+            hist = self._wall_hists[backend] = f"decide_wall_us/{backend}"
+        self.metrics.observe(hist, wall_s * 1e6)
+        self.health.observe_decision(wall_s)
+        ok = placement is not None
+        if not ok and not probe:
+            self._blocked.setdefault(job_id, t)
+        if self._span_suppress and not ok:
+            self._span_suppress = False
+            return
+        self._span_suppress = False
+        rec: Dict[str, object] = {
+            "t": t,
+            "kind": "place",
+            "job": job_id,
+            "ok": ok,
+            "backend": backend,
+            "wall_us": wall_s * 1e6,
+        }
+        if probe:
+            rec["probe"] = True
+        self.records.append(rec)
+
+    def on_candidate(
+        self,
+        job_id: int,
+        stage: str,
+        path: Tuple[str, ...],
+        gpus: int,
+        outcome: str,
+        binding: Optional[str],
+        avg_price: Optional[float] = None,
+    ) -> None:
+        if self._span_suppress:
+            return
+        rec: Dict[str, object] = {
+            "t": self._now,
+            "kind": "candidate",
+            "job": job_id,
+            "stage": stage,
+            "path": list(path),
+            "gpus": gpus,
+            "outcome": outcome,
+            "binding": binding,
+        }
+        if avg_price is not None:
+            rec["avg_price"] = avg_price
+        self.records.append(rec)
+        name = self._cand_counters.get(outcome)
+        if name is None:
+            name = self._cand_counters[outcome] = f"candidates/{outcome}"
+        self.metrics.incr(name)
+        if binding is not None:
+            name = self._bind_counters.get(binding)
+            if name is None:
+                name = self._bind_counters[binding] = f"binding/{binding}"
+            self.metrics.incr(name)
+
+    def on_alloc(
+        self, path: Sequence[str], gpus: int, alloc: Mapping[str, int]
+    ) -> None:
+        if self._span_suppress:
+            return
+        self.records.append(
+            {
+                "t": self._now,
+                "kind": "alloc",
+                "path": list(path),
+                "gpus": gpus,
+                "alloc": {r: int(n) for r, n in sorted(alloc.items())},
+            }
+        )
+
+    # ----------------------------------------------------- lifecycle records
+    def on_start(
+        self,
+        t: float,
+        job_id: int,
+        placement: object,
+        rate: float,
+        iteration_seconds: float,
+        finish: float,
+        restore_s: float,
+    ) -> None:
+        self._now = t
+        blocked_at = self._blocked.pop(job_id, None)
+        if blocked_at is not None:
+            self.hol_wait[job_id] = self.hol_wait.get(job_id, 0.0) + (
+                t - blocked_at
+            )
+        rec: Dict[str, object] = {
+            "t": t,
+            "kind": "start",
+            "job": job_id,
+            "path": list(placement.path),
+            "alloc": {r: int(n) for r, n in sorted(placement.alloc.items())},
+            "gpus": placement.total_gpus,
+            "rate_per_s": rate,
+            "iteration_s": iteration_seconds,
+            "finish": finish,
+            "restore_s": restore_s,
+        }
+        if placement.typed_alloc:
+            rec["typed_alloc"] = {
+                r: {g: int(n) for g, n in sorted(types.items())}
+                for r, types in sorted(placement.typed_alloc.items())
+            }
+        self.records.append(rec)
+
+    def on_settle(
+        self, t: float, job_id: int, cost: float, ledger: Mapping[str, object]
+    ) -> None:
+        self._now = t
+        self.records.append(
+            {
+                "t": t,
+                "kind": "settle",
+                "job": job_id,
+                "cost": cost,
+                "ledger": dict(ledger),
+            }
+        )
+
+    def on_preempt(self, t: float, job_id: int, voluntary: bool) -> None:
+        self._now = t
+        self.records.append(
+            {"t": t, "kind": "preempt", "job": job_id, "voluntary": voluntary}
+        )
+
+    def on_migration_probe(
+        self,
+        t: float,
+        job_id: int,
+        stay_cost: float,
+        move_cost: Optional[float],
+        moved: bool,
+    ) -> None:
+        self._now = t
+        self.records.append(
+            {
+                "t": t,
+                "kind": "probe",
+                "job": job_id,
+                "stay_cost": stay_cost,
+                "move_cost": move_cost,
+                "moved": moved,
+            }
+        )
+        self.metrics.incr("probes/moved" if moved else "probes/stayed")

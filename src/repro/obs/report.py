@@ -1,0 +1,200 @@
+"""Terminal summary report + structural trace validation (``--check``).
+
+``render_report`` digests a trace (live recorder or ``load_jsonl`` result)
+into a short human-readable account of what the scheduler did and why:
+event counts, admission outcomes split by their binding constraint (Eq. 5
+GPU vs Eq. 6 bandwidth), head-of-line wait attribution, migration probes,
+plan-cache hit rate, per-backend decision wall-clock percentiles, and fleet
+health.  ``check_trace`` validates the structural invariants a well-formed
+trace must satisfy — CI runs it as a smoke gate over the benchmark trace
+artifact.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from .export import to_perfetto
+
+
+def _fmt_h(seconds: float) -> str:
+    return f"{seconds / 3600.0:.3f} h"
+
+
+def render_report(trace) -> str:
+    records = trace.records
+    metrics = trace.metrics
+    by_kind: Dict[str, int] = {}
+    for r in records:
+        by_kind[str(r["kind"])] = by_kind.get(str(r["kind"]), 0) + 1
+
+    lines: List[str] = []
+    lines.append("== obs trace report ==")
+    meta = getattr(trace, "meta", None) or {}
+    ctx = ", ".join(
+        f"{k}={meta[k]}" for k in sorted(meta) if k not in ("schema",)
+    )
+    if ctx:
+        lines.append(f"context: {ctx}")
+    span = [float(r["t"]) for r in records if "t" in r]
+    if span:
+        lines.append(
+            f"sim span: {_fmt_h(min(span))} .. {_fmt_h(max(span))}, "
+            f"{len(records)} records"
+        )
+    lines.append(
+        "records: "
+        + ", ".join(f"{k}={n}" for k, n in sorted(by_kind.items()))
+    )
+
+    # Sim events.
+    ev = {
+        k.split("/", 1)[1]: n
+        for k, n in metrics.counters.items()
+        if k.startswith("events/")
+    }
+    if ev:
+        lines.append(
+            "events: " + ", ".join(f"{k}={n}" for k, n in sorted(ev.items()))
+        )
+
+    # Admission outcomes and binding constraints.
+    outcomes = {
+        k.split("/", 1)[1]: n
+        for k, n in metrics.counters.items()
+        if k.startswith("candidates/")
+    }
+    if outcomes:
+        lines.append(
+            "admission: "
+            + ", ".join(f"{k}={n}" for k, n in sorted(outcomes.items()))
+        )
+    binding = {
+        k.split("/", 1)[1]: n
+        for k, n in metrics.counters.items()
+        if k.startswith("binding/")
+    }
+    if binding:
+        lines.append(
+            "binding constraint: "
+            + ", ".join(
+                f"{k}(Eq.{'5' if k == 'gpu' else '6'})={n}"
+                for k, n in sorted(binding.items())
+            )
+        )
+
+    # Head-of-line wait attribution.
+    hol = getattr(trace, "hol_wait", None) or {}
+    if hol:
+        total = sum(hol[j] for j in sorted(hol))
+        worst = max(sorted(hol), key=lambda j: (hol[j], j))
+        lines.append(
+            f"HoL wait: {len(hol)} jobs blocked, total {_fmt_h(total)}, "
+            f"worst job {worst} at {_fmt_h(hol[worst])}"
+        )
+
+    # Migration probes.
+    moved = metrics.counters.get("probes/moved", 0)
+    stayed = metrics.counters.get("probes/stayed", 0)
+    if moved or stayed:
+        lines.append(f"migration probes: {moved} moved, {stayed} stayed")
+
+    # Gauges: final queue depth / spend rate / plan cache.
+    for name, label in (
+        ("pending_depth", "final queue depth"),
+        ("spend_rate_per_s", "final spend rate ($/s)"),
+        ("plan_cache_hit_rate", "plan-cache hit rate"),
+    ):
+        v = metrics.latest(name)
+        if v is not None:
+            lines.append(f"{label}: {v:.6g}")
+
+    # Decision wall-clock histograms per backend.
+    for name in sorted(metrics.histograms):
+        if not name.startswith("decide_wall_us/"):
+            continue
+        backend = name.split("/", 1)[1]
+        obs = metrics.histograms[name]
+        mean = sum(obs) / len(obs)
+        lines.append(
+            f"decide wall ({backend}): n={len(obs)}, mean={mean:.1f} us, "
+            f"p50={metrics.percentile(name, 50):.1f} us, "
+            f"p99={metrics.percentile(name, 99):.1f} us"
+        )
+
+    # Fleet health.
+    stragglers = metrics.counters.get("straggler_decisions", 0)
+    dead = metrics.latest("dead_regions")
+    if stragglers or dead is not None:
+        lines.append(
+            f"fleet health: straggler_decisions={stragglers}, "
+            f"dead_regions={0 if dead is None else int(dead)}"
+        )
+    return "\n".join(lines)
+
+
+def check_trace(trace) -> List[str]:
+    """Structural invariants; returns a list of problems (empty = healthy)."""
+    problems: List[str] = []
+    records = trace.records
+    if not records:
+        problems.append("trace has no records")
+        return problems
+
+    last_t = None
+    for i, r in enumerate(records):
+        t = r.get("t")
+        if t is None:
+            problems.append(f"record {i} has no timestamp: {r}")
+            continue
+        if float(t) < 0.0:
+            problems.append(f"record {i} has negative sim time {t}")
+        if last_t is not None and float(t) < last_t - 1e-9:
+            problems.append(
+                f"record {i} goes backwards in sim time: {t} < {last_t}"
+            )
+        last_t = float(t)
+
+    # Every start must eventually terminate (complete / preempt / migrate).
+    started = [int(r["job"]) for r in records if r["kind"] == "start"]
+    terminal: Dict[int, int] = {}
+    for r in records:
+        if r["kind"] == "event" and r["event"] in (
+            "complete",
+            "preempt",
+            "migrate",
+        ):
+            j = int(r["id"])
+            terminal[j] = terminal.get(j, 0) + 1
+    for j in sorted(set(started)):
+        n_started = started.count(j)
+        if terminal.get(j, 0) < n_started:
+            problems.append(
+                f"job {j}: {n_started} segment starts but only "
+                f"{terminal.get(j, 0)} terminal events"
+            )
+
+    # Series must be time-sorted.
+    for name, pts in sorted(trace.metrics.series.items()):
+        ts = [t for t, _ in pts]
+        if ts != sorted(ts):
+            problems.append(f"series {name!r} is not time-sorted")
+
+    # The Perfetto lowering must succeed and every event must carry the
+    # mandatory trace-event keys.
+    try:
+        pf = to_perfetto(trace)
+    except Exception as exc:  # pragma: no cover - defensive
+        problems.append(f"perfetto export failed: {exc!r}")
+        return problems
+    for ev in pf["traceEvents"]:
+        if "ph" not in ev or "pid" not in ev:
+            problems.append(f"trace event missing ph/pid: {ev}")
+            break
+        if ev["ph"] in ("X", "C", "i", "s", "f") and "ts" not in ev:
+            problems.append(f"trace event missing ts: {ev}")
+            break
+        if ev["ph"] == "X" and "dur" not in ev:
+            problems.append(f"complete slice missing dur: {ev}")
+            break
+    return problems

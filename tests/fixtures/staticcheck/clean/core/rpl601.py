@@ -1,0 +1,12 @@
+"""RPL601 fixture: the sanctioned obs typing seam in a core/ file (clean)."""
+
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:
+    from repro.obs.protocol import TraceRecorder
+
+
+def place(profile, cluster, *, recorder: Optional["TraceRecorder"] = None):
+    if recorder is not None:
+        recorder.on_candidate(0, "phase1", (), 0, "chosen", None)
+    return None

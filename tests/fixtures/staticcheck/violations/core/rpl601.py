@@ -1,0 +1,13 @@
+"""RPL601 fixture: obs imports from a core/ decision-path file (violating)."""
+
+import repro.obs  # expect: RPL601
+import repro.obs.metrics as obs_metrics  # expect: RPL601
+from repro.obs import SimTraceRecorder  # expect: RPL601
+from repro.obs.recorder import SimTraceRecorder as Rec  # expect: RPL601
+from ..obs.metrics import MetricsLog  # expect: RPL601
+
+
+def trace_everything(cluster):
+    rec = SimTraceRecorder()
+    rec.metrics = MetricsLog()
+    return repro.obs, obs_metrics, Rec, rec

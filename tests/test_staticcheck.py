@@ -277,6 +277,7 @@ def test_list_rules_covers_all_codes(capsys):
     for code in (
         "RPL101", "RPL102", "RPL103", "RPL104", "RPL201",
         "RPL301", "RPL302", "RPL401", "RPL402", "RPL403", "RPL501",
+        "RPL601",
     ):
         assert code in out
     assert set(re.findall(r"RPL\d+", out)) == set(rule_catalog())
