@@ -1,0 +1,143 @@
+"""Content-hash result cache for reprolint.
+
+Every rule in the suite is *file-local*: the diagnostics it emits for a
+file depend only on that file's text (the twin differ diffs twins inside
+one module; the typestate rule's call-graph summaries are intra-file).
+That makes per-file caching sound: a file's post-suppression diagnostics
+are keyed by the sha256 of its bytes, and the whole cache is invalidated
+by a *rule-set fingerprint* — the sha256 of every ``staticcheck`` source
+file plus the active rule selection — so editing any rule, the engine, or
+the registries re-lints the world.
+
+The cache lives in ``.reprolint_cache.json`` (gitignored) and turns the
+second CI lint invocation into a hash-and-compare pass; CI asserts the
+warm run stays inside a wall-clock budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from pathlib import Path
+from typing import Dict, Iterable, List, Sequence, Tuple
+
+from .diagnostics import Diagnostic
+from .engine import Project, run_rules
+
+CACHE_VERSION = 1
+DEFAULT_CACHE = ".reprolint_cache.json"
+
+_PACKAGE_DIR = Path(__file__).resolve().parent
+
+
+def ruleset_fingerprint(extra_tokens: Iterable[str] = ()) -> str:
+    """sha256 over every staticcheck source file plus selection tokens."""
+    h = hashlib.sha256()
+    for src in sorted(_PACKAGE_DIR.rglob("*.py")):
+        h.update(src.relative_to(_PACKAGE_DIR).as_posix().encode())
+        h.update(b"\0")
+        h.update(src.read_bytes())
+        h.update(b"\0")
+    for token in sorted(extra_tokens):
+        h.update(token.encode())
+        h.update(b"\0")
+    return h.hexdigest()
+
+
+def file_sha(text: str) -> str:
+    return hashlib.sha256(text.encode("utf-8")).hexdigest()
+
+
+@dataclasses.dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+
+def _load(path: Path, fingerprint: str) -> Dict[str, dict]:
+    try:
+        data = json.loads(path.read_text(encoding="utf-8"))
+    except (OSError, ValueError):
+        return {}
+    if (
+        not isinstance(data, dict)
+        or data.get("version") != CACHE_VERSION
+        or data.get("fingerprint") != fingerprint
+    ):
+        return {}
+    files = data.get("files")
+    return files if isinstance(files, dict) else {}
+
+
+def _decode(rel: str, rows: Sequence[Sequence[object]]) -> List[Diagnostic]:
+    out: List[Diagnostic] = []
+    for row in rows:
+        code, path, line, col, message = row
+        out.append(
+            Diagnostic(str(code), str(path), int(line), int(col), str(message))
+        )
+    return out
+
+
+def run_rules_cached(
+    project: Project,
+    rules: Sequence[object],
+    cache_path: Path,
+    *,
+    extra_tokens: Iterable[str] = (),
+) -> Tuple[List[Diagnostic], CacheStats]:
+    """``run_rules`` with the per-file content cache around it.
+
+    Files whose (sha, fingerprint) pair is cached contribute their stored
+    diagnostics; the rest are re-linted as a sub-project and the cache is
+    rewritten, pruned to the files seen this run.
+    """
+    fingerprint = ruleset_fingerprint(extra_tokens)
+    cached = _load(cache_path, fingerprint)
+    stats = CacheStats()
+
+    shas = {sf.rel: file_sha(sf.text) for sf in project.files}
+    diags: List[Diagnostic] = []
+    missed = []
+    for sf in project.files:
+        entry = cached.get(sf.rel)
+        if entry and entry.get("sha") == shas[sf.rel]:
+            stats.hits += 1
+            diags.extend(_decode(sf.rel, entry.get("diags", [])))
+        else:
+            stats.misses += 1
+            missed.append(sf)
+
+    fresh: Dict[str, List[Diagnostic]] = {sf.rel: [] for sf in missed}
+    if missed:
+        sub = Project(root=project.root, files=missed)
+        for d in run_rules(sub, rules):
+            fresh.setdefault(d.path, []).append(d)
+            diags.append(d)
+
+    files_out: Dict[str, dict] = {}
+    for sf in project.files:
+        if sf.rel in fresh:
+            rows = [
+                [d.code, d.path, d.line, d.col, d.message]
+                for d in fresh[sf.rel]
+            ]
+            files_out[sf.rel] = {"sha": shas[sf.rel], "diags": rows}
+        else:
+            files_out[sf.rel] = cached[sf.rel]
+
+    payload = {
+        "version": CACHE_VERSION,
+        "fingerprint": fingerprint,
+        "files": files_out,
+    }
+    try:
+        cache_path.write_text(
+            json.dumps(payload, sort_keys=True) + "\n", encoding="utf-8"
+        )
+    except OSError:
+        pass  # read-only checkouts still lint, just uncached
+
+    diags.sort(key=Diagnostic.sort_key)
+    return diags, stats

@@ -17,9 +17,11 @@ from pathlib import Path
 from typing import List, Optional
 
 from . import baseline as baseline_mod
+from . import cache as cache_mod
 from .diagnostics import Diagnostic
 from .engine import Project, SourceFileError, run_rules
-from .rules import all_rules, rule_catalog
+from .rules import all_rules, rule_catalog, rule_codes
+from .sarif import write_sarif
 
 DEFAULT_PATHS = ("src", "benchmarks", "scripts", "tests")
 DEFAULT_BASELINE = "reprolint_baseline.json"
@@ -55,6 +57,18 @@ def build_parser() -> argparse.ArgumentParser:
         "--include-fixtures", action="store_true",
         help="also scan tests/fixtures/staticcheck (intentional violations)",
     )
+    p.add_argument(
+        "--sarif", type=Path, default=None, metavar="OUT",
+        help="also write findings as a SARIF 2.1.0 log to OUT",
+    )
+    p.add_argument(
+        "--cache", type=Path, default=None, metavar="PATH",
+        help=f"per-file result cache (default: ./{cache_mod.DEFAULT_CACHE})",
+    )
+    p.add_argument(
+        "--no-cache", action="store_true",
+        help="disable the result cache for this run",
+    )
     return p
 
 
@@ -81,15 +95,21 @@ def main(argv: Optional[List[str]] = None) -> int:
         return 2
 
     rules = all_rules()
+    selected: List[str] = []
     if args.select:
         wanted = {c.strip() for c in args.select.split(",") if c.strip()}
         rules = [
-            r for r in rules
-            if r.code in wanted  # type: ignore[attr-defined]
-            or getattr(r, "structure_code", None) in wanted
+            r for r in rules if wanted.intersection(rule_codes(r))
         ]
+        selected = sorted(wanted)
 
-    diags = run_rules(project, rules)
+    if args.no_cache:
+        diags = run_rules(project, rules)
+    else:
+        cache_path = args.cache or Path(cache_mod.DEFAULT_CACHE)
+        diags, _stats = cache_mod.run_rules_cached(
+            project, rules, cache_path, extra_tokens=selected
+        )
 
     baseline_path = args.baseline
     if baseline_path is None:
@@ -108,6 +128,9 @@ def main(argv: Optional[List[str]] = None) -> int:
         result = baseline_mod.BaselineResult(
             new=diags, baselined=[], stale=[]
         )
+
+    if args.sarif is not None:
+        write_sarif(args.sarif, result.new, result.baselined, rule_catalog())
 
     for d in result.new:
         print(d.render())

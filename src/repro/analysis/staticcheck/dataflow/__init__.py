@@ -1,0 +1,25 @@
+"""Per-function dataflow for reprolint (stdlib ``ast`` only).
+
+``cfg`` builds statement-granularity control-flow graphs with explicit
+exception edges (try/except/finally, ``with`` unwinding, loop break/else,
+early returns); ``framework`` runs forward join-lattice fixpoints over them
+with widening on loop heads; ``summaries`` lifts the intra-file call graph
+into parameter-indexed resource-effect summaries; ``units`` is the
+units-of-measure algebra + annotation registry for the core signatures.
+
+The two rule families built on top live in ``rules/typestate.py`` (RPL7xx)
+and ``rules/units.py`` (RPL8xx); see DESIGN.md "Static contracts".
+"""
+
+from .cfg import CFG, Block, Edge, build_cfg, default_may_raise
+from .framework import ForwardAnalysis, run_forward
+
+__all__ = [
+    "CFG",
+    "Block",
+    "Edge",
+    "ForwardAnalysis",
+    "build_cfg",
+    "default_may_raise",
+    "run_forward",
+]

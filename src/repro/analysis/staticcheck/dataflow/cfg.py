@@ -1,0 +1,412 @@
+"""Statement-granularity control-flow graphs for one function body.
+
+Every statement (or compound-statement *header*: an ``if``/``while`` test,
+a ``for`` iterable, a ``with`` context expression) becomes one block, so a
+transfer function sees exactly one statement at a time and diagnostics can
+name exact lines.  Three synthetic nodes frame the graph: ``entry``,
+``exit`` (normal returns and fall-through) and ``raise_exit`` (exceptions
+escaping the function).
+
+Exception flow is explicit: a statement that may raise (per the caller's
+``may_raise`` predicate — rules narrow it, e.g. the typestate rule treats
+ledger primitives as atomic) gets an ``EXC`` edge to wherever an exception
+raised *there* would land: the innermost enclosing handler dispatch, else
+through every enclosing ``finally`` (each finally body is instantiated once
+per continuation kind — normal / exceptional / each abrupt jump — the
+classic finally-duplication encoding), else ``raise_exit``.  ``with`` is
+modeled as try/finally whose finally is a synthetic ``with-exit`` block, so
+unwinding through ``__exit__`` appears on exceptional paths too.
+
+Abrupt jumps (``break``/``continue``/``return``/``raise``) unwind the
+enclosing frame stack, instantiating crossed finally bodies on the way out.
+Loop ``else`` clauses hang off the loop-head's false edge, which ``break``
+bypasses — the real semantics, exercised by the CFG edge-case tests.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Callable, Dict, FrozenSet, List, Optional, Sequence, Set
+
+NORMAL = "normal"
+EXC = "exc"
+
+#: Block roles: what the transfer function should evaluate for this block.
+ROLE_STMT = "stmt"            # a full simple statement
+ROLE_TEST = "test"            # an if/while test expression
+ROLE_ITER = "iter"            # a for-loop iterable + target binding
+ROLE_WITH_ENTER = "with-enter"  # with-items evaluation + optional-vars bind
+ROLE_WITH_EXIT = "with-exit"    # synthetic __exit__ unwinding point
+ROLE_DISPATCH = "dispatch"    # except-handler dispatch point
+ROLE_ENTRY = "entry"
+ROLE_EXIT = "exit"
+ROLE_RAISE_EXIT = "raise-exit"
+
+
+@dataclasses.dataclass
+class Block:
+    id: int
+    role: str
+    stmt: Optional[ast.AST] = None  # owning stmt (or header-owning compound)
+
+    @property
+    def line(self) -> int:
+        return getattr(self.stmt, "lineno", 0) if self.stmt is not None else 0
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return f"Block({self.id}, {self.role!r}, line={self.line})"
+
+
+@dataclasses.dataclass(frozen=True)
+class Edge:
+    src: int
+    dst: int
+    kind: str = NORMAL
+    note: str = ""  # "call" | "raise" | "assert" | "reraise" for EXC edges
+
+
+class CFG:
+    def __init__(self) -> None:
+        self.blocks: List[Block] = []
+        self.succ: Dict[int, List[Edge]] = {}
+        self.pred: Dict[int, List[Edge]] = {}
+        self.entry = -1
+        self.exit = -1
+        self.raise_exit = -1
+        self.loop_heads: Set[int] = set()
+
+    def block(self, bid: int) -> Block:
+        return self.blocks[bid]
+
+    def new_block(self, role: str, stmt: Optional[ast.AST] = None) -> int:
+        b = Block(id=len(self.blocks), role=role, stmt=stmt)
+        self.blocks.append(b)
+        self.succ[b.id] = []
+        self.pred[b.id] = []
+        return b.id
+
+    def add_edge(self, src: int, dst: int, kind: str = NORMAL, note: str = "") -> None:
+        e = Edge(src=src, dst=dst, kind=kind, note=note)
+        if e not in self.succ[src]:
+            self.succ[src].append(e)
+            self.pred[dst].append(e)
+
+
+def _calls_shallow(node: ast.AST) -> List[ast.Call]:
+    """Call nodes under ``node`` (inclusive), skipping nested function /
+    class / lambda scopes, in (line, col) source order."""
+    out: List[ast.Call] = []
+    stack: List[ast.AST] = [node]
+    while stack:
+        cur = stack.pop()
+        if cur is not node and isinstance(
+            cur, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef, ast.Lambda)
+        ):
+            continue
+        if isinstance(cur, ast.Call):
+            out.append(cur)
+        stack.extend(ast.iter_child_nodes(cur))
+    out.sort(key=lambda c: (c.lineno, c.col_offset))
+    return out
+
+
+def callee_bare_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def default_may_raise(
+    node: ast.AST, atomic_callees: FrozenSet[str] = frozenset()
+) -> bool:
+    """May evaluating ``node`` (a statement or header expression) raise?
+
+    True for ``raise``/``assert`` and for any call whose bare callee name is
+    not in ``atomic_callees`` (unresolvable callees count as raising).
+    Attribute reads, subscripts and arithmetic are assumed non-raising — the
+    rules care about *call* boundaries, not MemoryError-grade paranoia.
+    """
+    if isinstance(node, (ast.Raise, ast.Assert)):
+        return True
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+        return False
+    for call in _calls_shallow(node):
+        name = callee_bare_name(call)
+        if name is None or name not in atomic_callees:
+            return True
+    return False
+
+
+# --------------------------------------------------------------- builder
+class _LoopFrame:
+    kind = "loop"
+
+    def __init__(self, continue_target: int) -> None:
+        self.continue_target = continue_target
+        self.breaks: List[int] = []
+
+
+class _FinallyFrame:
+    kind = "finally"
+
+    def __init__(self, body: Optional[Sequence[ast.stmt]], owner: ast.AST) -> None:
+        self.body = body          # None => synthetic `with` exit
+        self.owner = owner
+        self.exc_entry: Optional[int] = None  # shared exceptional copy
+
+
+class _HandlerFrame:
+    kind = "handler"
+
+    def __init__(self, dispatch: int) -> None:
+        self.dispatch = dispatch
+
+
+class _Builder:
+    def __init__(self, fdef: ast.AST, may_raise: Callable[[ast.AST], bool]) -> None:
+        self.cfg = CFG()
+        self.fdef = fdef
+        self.may_raise = may_raise
+        self.frames: List[object] = []
+
+    def build(self) -> CFG:
+        cfg = self.cfg
+        cfg.entry = cfg.new_block(ROLE_ENTRY)
+        cfg.exit = cfg.new_block(ROLE_EXIT)
+        cfg.raise_exit = cfg.new_block(ROLE_RAISE_EXIT)
+        frontier = self._stmts(self.fdef.body, [cfg.entry])
+        self._connect(frontier, cfg.exit)
+        return cfg
+
+    # -- plumbing -------------------------------------------------------
+    def _connect(self, frontier: Sequence[int], dst: int) -> None:
+        for src in frontier:
+            self.cfg.add_edge(src, dst)
+
+    def _exc_continuation(self, upto: Optional[int] = None) -> int:
+        """Where an exception raised under the current frame stack lands.
+        ``upto`` restricts the walk to ``frames[:upto]`` (used while building
+        a finally frame's own exceptional copy)."""
+        limit = len(self.frames) if upto is None else upto
+        for i in range(limit - 1, -1, -1):
+            frame = self.frames[i]
+            if frame.kind == "handler":
+                return frame.dispatch
+            if frame.kind == "finally":
+                return self._finally_exc_entry(frame, i)
+        return self.cfg.raise_exit
+
+    def _exc_edge(self, src: int, note: str) -> None:
+        self.cfg.add_edge(src, self._exc_continuation(), EXC, note)
+
+    def _finally_copy(self, frame: _FinallyFrame, frontier: List[int]) -> List[int]:
+        """Instantiate one copy of the finally body, built as if the frame
+        stack stopped just below ``frame`` (so nested aborts resolve
+        outward, past this finally).  When the frame was already popped
+        (the normal-continuation copy) the current stack *is* "below"."""
+        saved = self.frames
+        if frame in saved:
+            self.frames = saved[: saved.index(frame)]
+        try:
+            if frame.body is None:
+                exit_block = self.cfg.new_block(ROLE_WITH_EXIT, frame.owner)
+                self._connect(frontier, exit_block)
+                out = [exit_block]
+            else:
+                out = self._stmts(frame.body, frontier)
+        finally:
+            self.frames = saved
+        return out
+
+    def _finally_exc_entry(self, frame: _FinallyFrame, idx: int) -> int:
+        """Shared exceptional copy of a finally body: built once per frame,
+        its tail re-raises outward past the frame."""
+        if frame.exc_entry is None:
+            head = self.cfg.new_block(ROLE_DISPATCH, frame.owner)
+            frame.exc_entry = head  # set first: finally bodies may raise
+            out = self._finally_copy(frame, [head])
+            tail = self._exc_continuation(upto=idx)
+            for src in out:
+                self.cfg.add_edge(src, tail, EXC, "reraise")
+        return frame.exc_entry
+
+    def _unwind_to_loop(self, frontier: List[int]) -> Optional[_LoopFrame]:
+        """Cross finally frames down to the innermost loop, instantiating
+        their bodies; mutates ``frontier`` in place.  None at top level."""
+        for i in range(len(self.frames) - 1, -1, -1):
+            frame = self.frames[i]
+            if frame.kind == "loop":
+                return frame
+            if frame.kind == "finally":
+                frontier[:] = self._finally_copy(frame, list(frontier))
+        return None
+
+    def _unwind_all(self, frontier: List[int]) -> List[int]:
+        """Cross every enclosing finally (for ``return``)."""
+        for i in range(len(self.frames) - 1, -1, -1):
+            frame = self.frames[i]
+            if frame.kind == "finally":
+                frontier = self._finally_copy(frame, frontier)
+        return frontier
+
+    # -- statements -----------------------------------------------------
+    def _stmts(self, body: Sequence[ast.stmt], frontier: List[int]) -> List[int]:
+        for stmt in body:
+            if not frontier:
+                break  # unreachable code after return/raise/break
+            frontier = self._stmt(stmt, frontier)
+        return frontier
+
+    def _stmt(self, stmt: ast.stmt, frontier: List[int]) -> List[int]:
+        cfg = self.cfg
+        if isinstance(stmt, ast.If):
+            head = cfg.new_block(ROLE_TEST, stmt)
+            self._connect(frontier, head)
+            if self.may_raise(stmt.test):
+                self._exc_edge(head, "call")
+            body_out = self._stmts(stmt.body, [head])
+            else_out = self._stmts(stmt.orelse, [head]) if stmt.orelse else [head]
+            return body_out + else_out
+
+        if isinstance(stmt, (ast.While, ast.For, ast.AsyncFor)):
+            return self._loop(stmt, frontier)
+
+        if isinstance(stmt, (ast.Try, *_TRY_STAR)):
+            return self._try(stmt, frontier)
+
+        if isinstance(stmt, (ast.With, ast.AsyncWith)):
+            return self._with(stmt, frontier)
+
+        if isinstance(stmt, ast.Return):
+            block = cfg.new_block(ROLE_STMT, stmt)
+            self._connect(frontier, block)
+            if self.may_raise(stmt):
+                self._exc_edge(block, "call")
+            out = self._unwind_all([block])
+            self._connect(out, cfg.exit)
+            return []
+
+        if isinstance(stmt, ast.Raise):
+            block = cfg.new_block(ROLE_STMT, stmt)
+            self._connect(frontier, block)
+            cfg.add_edge(block, self._exc_continuation(), EXC, "raise")
+            return []
+
+        if isinstance(stmt, ast.Break):
+            block = cfg.new_block(ROLE_STMT, stmt)
+            self._connect(frontier, block)
+            out = [block]
+            frame = self._unwind_to_loop(out)
+            if frame is not None:
+                frame.breaks.extend(out)
+            return []
+
+        if isinstance(stmt, ast.Continue):
+            block = cfg.new_block(ROLE_STMT, stmt)
+            self._connect(frontier, block)
+            out = [block]
+            frame = self._unwind_to_loop(out)
+            if frame is not None:
+                self._connect(out, frame.continue_target)
+            return []
+
+        # Simple statement (nested defs/classes included: binding only).
+        block = cfg.new_block(ROLE_STMT, stmt)
+        self._connect(frontier, block)
+        if self.may_raise(stmt):
+            self._exc_edge(block, "assert" if isinstance(stmt, ast.Assert) else "call")
+        return [block]
+
+    def _loop(self, stmt: ast.stmt, frontier: List[int]) -> List[int]:
+        cfg = self.cfg
+        role = ROLE_TEST if isinstance(stmt, ast.While) else ROLE_ITER
+        head = cfg.new_block(role, stmt)
+        cfg.loop_heads.add(head)
+        self._connect(frontier, head)
+        header_expr = stmt.test if isinstance(stmt, ast.While) else stmt.iter
+        if self.may_raise(header_expr):
+            self._exc_edge(head, "call")
+        frame = _LoopFrame(continue_target=head)
+        self.frames.append(frame)
+        try:
+            body_out = self._stmts(stmt.body, [head])
+        finally:
+            self.frames.pop()
+        self._connect(body_out, head)  # back edge
+        # Normal loop exit (condition false / iterator exhausted) runs the
+        # else clause; break bypasses it.  ``while True`` has no false exit.
+        infinite = (
+            isinstance(stmt, ast.While)
+            and isinstance(stmt.test, ast.Constant)
+            and bool(stmt.test.value)
+        )
+        if infinite:
+            no_break: List[int] = []
+        elif stmt.orelse:
+            no_break = self._stmts(stmt.orelse, [head])
+        else:
+            no_break = [head]
+        return no_break + frame.breaks
+
+    def _try(self, stmt: ast.AST, frontier: List[int]) -> List[int]:
+        cfg = self.cfg
+        fin_frame: Optional[_FinallyFrame] = None
+        if stmt.finalbody:
+            fin_frame = _FinallyFrame(stmt.finalbody, stmt)
+            self.frames.append(fin_frame)
+        try:
+            if stmt.handlers:
+                dispatch = cfg.new_block(ROLE_DISPATCH, stmt)
+                self.frames.append(_HandlerFrame(dispatch))
+                try:
+                    body_out = self._stmts(stmt.body, frontier)
+                finally:
+                    self.frames.pop()
+                else_out = (
+                    self._stmts(stmt.orelse, body_out) if stmt.orelse else body_out
+                )
+                handler_outs: List[int] = []
+                for handler in stmt.handlers:
+                    handler_outs += self._stmts(handler.body, [dispatch])
+                if not any(h.type is None for h in stmt.handlers):
+                    # No bare except: an unmatched exception escapes.
+                    cfg.add_edge(dispatch, self._exc_continuation(), EXC, "reraise")
+                normal_out = else_out + handler_outs
+            else:
+                normal_out = self._stmts(stmt.body, frontier)
+        finally:
+            if fin_frame is not None:
+                self.frames.pop()
+        if fin_frame is not None:
+            normal_out = self._finally_copy(fin_frame, normal_out)
+        return normal_out
+
+    def _with(self, stmt: ast.AST, frontier: List[int]) -> List[int]:
+        cfg = self.cfg
+        head = cfg.new_block(ROLE_WITH_ENTER, stmt)
+        self._connect(frontier, head)
+        if any(self.may_raise(item.context_expr) for item in stmt.items):
+            # __enter__ failing skips __exit__: raise past the frame.
+            self._exc_edge(head, "call")
+        frame = _FinallyFrame(None, stmt)
+        self.frames.append(frame)
+        try:
+            body_out = self._stmts(stmt.body, [head])
+        finally:
+            self.frames.pop()
+        return self._finally_copy(frame, body_out)
+
+
+_TRY_STAR = (ast.TryStar,) if hasattr(ast, "TryStar") else ()
+
+
+def build_cfg(
+    fdef: ast.AST, may_raise: Optional[Callable[[ast.AST], bool]] = None
+) -> CFG:
+    """Build the CFG of one ``ast.FunctionDef``/``AsyncFunctionDef`` body.
+    Nested defs are opaque single statements (they get their own CFGs)."""
+    return _Builder(fdef, may_raise or default_may_raise).build()

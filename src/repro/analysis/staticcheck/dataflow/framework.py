@@ -1,0 +1,121 @@
+"""Forward abstract interpretation over a :class:`~.cfg.CFG`.
+
+Worklist fixpoint with join over predecessor edges.  Normal edges carry the
+post-state of :meth:`ForwardAnalysis.transfer`; exception edges carry
+:meth:`transfer_exc` (default: the same post-state — a statement observed
+mid-flight is approximated by its completed effects, which keeps the
+exception lattice small; rules that care override it, e.g. the typestate
+rule stamps the raising line there).
+
+Termination: after ``widen_after`` visits to a loop head the join is
+replaced by :meth:`widen`, whose contract is to make strictly ascending
+chains finite (the units analysis drops still-changing bindings to ⊤; the
+typestate analysis collapses its path disjunction).  A hard relaxation cap
+turns a non-terminating lattice bug into a loud error instead of a hang.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Callable, Dict, Optional
+
+from .cfg import CFG, EXC, Block
+
+Report = Callable[..., None]
+
+
+class ForwardAnalysis:
+    """Override points for one forward dataflow problem.
+
+    States must be immutable and support ``==``; ``transfer`` takes a block
+    and its in-state and returns the out-state.  ``report`` is only passed
+    during the post-fixpoint reporting pass, so transfer functions emit
+    diagnostics exactly once, from converged states.
+    """
+
+    def initial(self) -> Any:
+        raise NotImplementedError
+
+    def transfer(self, block: Block, state: Any, report: Optional[Report] = None) -> Any:
+        raise NotImplementedError
+
+    def transfer_exc(
+        self, block: Block, state: Any, note: str, report: Optional[Report] = None
+    ) -> Any:
+        return self.transfer(block, state)
+
+    def join(self, a: Any, b: Any) -> Any:
+        raise NotImplementedError
+
+    def widen(self, old: Any, new: Any) -> Any:
+        return self.join(old, new)
+
+
+def run_forward(
+    cfg: CFG,
+    analysis: ForwardAnalysis,
+    *,
+    widen_after: int = 8,
+    max_relaxations: int = 200_000,
+) -> Dict[int, Any]:
+    """Fixpoint ``block id -> in-state`` for every reachable block."""
+    in_states: Dict[int, Any] = {cfg.entry: analysis.initial()}
+    visits: Dict[int, int] = {}
+    worklist = deque([cfg.entry])
+    relaxations = 0
+    while worklist:
+        bid = worklist.popleft()
+        state = in_states[bid]
+        block = cfg.block(bid)
+        normal_out = exc_out = None
+        for edge in cfg.succ[bid]:
+            if edge.kind == EXC:
+                if exc_out is None:
+                    exc_out = analysis.transfer_exc(block, state, edge.note)
+                out = exc_out
+            else:
+                if normal_out is None:
+                    normal_out = analysis.transfer(block, state)
+                out = normal_out
+            old = in_states.get(edge.dst)
+            if old is None:
+                merged = out
+            else:
+                merged = analysis.join(old, out)
+                if (
+                    edge.dst in cfg.loop_heads
+                    and visits.get(edge.dst, 0) >= widen_after
+                ):
+                    merged = analysis.widen(old, merged)
+            if old is None or merged != old:
+                relaxations += 1
+                if relaxations > max_relaxations:
+                    raise RuntimeError(
+                        "dataflow fixpoint did not converge "
+                        f"(block line {block.line}); widening is broken"
+                    )
+                in_states[edge.dst] = merged
+                visits[edge.dst] = visits.get(edge.dst, 0) + 1
+                if edge.dst not in worklist:
+                    worklist.append(edge.dst)
+    return in_states
+
+
+def reporting_pass(
+    cfg: CFG,
+    analysis: ForwardAnalysis,
+    in_states: Dict[int, Any],
+    report: Report,
+) -> None:
+    """Re-run transfer over every reachable block with converged in-states,
+    this time with the ``report`` callback armed."""
+    for block in cfg.blocks:
+        state = in_states.get(block.id)
+        if state is None:
+            continue
+        has_normal = any(e.kind != EXC for e in cfg.succ[block.id])
+        exc_notes = [e.note for e in cfg.succ[block.id] if e.kind == EXC]
+        if has_normal or not exc_notes:
+            analysis.transfer(block, state, report=report)
+        for note in exc_notes:
+            analysis.transfer_exc(block, state, note, report=report)

@@ -1,0 +1,161 @@
+"""Parameter-indexed resource-effect summaries over the intra-file call graph.
+
+The typestate rule needs to know, for a call like
+``_release_placement(cluster, placement)``, that the *second argument*'s
+GPU reservation is released — the primitive ``cluster.release_gpus_typed``
+is buried one call deep.  A :class:`FunctionSummary` records, per local
+function, which parameter indexes have reserve/release effects of which
+resource kind, plus whether the function (transitively) reaches
+``SegmentLedger.settle``.  Effects propagate through local call chains to a
+fixpoint, reusing :class:`~..callgraph.CallGraph`'s name-based
+over-approximation: a call resolves to every local def of that bare name.
+
+Method calls (``x.f(a)``) offset argument positions by one when the matched
+def's first parameter is ``self``/``cls``.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, List, Optional, Set, Tuple
+
+from ..callgraph import CallGraph
+from .cfg import _calls_shallow, callee_bare_name
+
+GPU = "gpus"
+BANDWIDTH = "bandwidth"
+LEDGER = "ledger"
+
+RESERVE_PRIMS = {
+    "reserve_gpus": GPU,
+    "reserve_gpus_typed": GPU,
+    "reserve_bandwidth": BANDWIDTH,
+}
+RELEASE_PRIMS = {
+    "release_gpus": GPU,
+    "release_gpus_typed": GPU,
+    "release_bandwidth": BANDWIDTH,
+}
+SETTLE_NAMES = {"settle"}
+
+Effect = Tuple[str, int]  # (kind, parameter index)
+
+
+@dataclasses.dataclass
+class FunctionSummary:
+    name: str
+    params: List[str]
+    reserves: Set[Effect] = dataclasses.field(default_factory=set)
+    releases: Set[Effect] = dataclasses.field(default_factory=set)
+    settles: bool = False
+
+    @property
+    def has_resource_effects(self) -> bool:
+        return bool(self.reserves or self.releases)
+
+
+def expr_root(node: Optional[ast.AST]) -> Optional[str]:
+    """Base ``Name`` of an attribute/subscript chain: ``run.placement.bw``
+    and ``alloc[r]`` both root at the left-most name."""
+    while isinstance(node, (ast.Attribute, ast.Subscript, ast.Starred)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def primitive_resource_arg(call: ast.Call) -> Optional[ast.AST]:
+    """The argument carrying the resource identity of a reserve/release
+    primitive call.  Method style (``cluster.release_gpus(alloc)``) puts it
+    first; fixture-style free functions (``release_gpus(cluster, alloc)``)
+    lead with the cluster — skip leading ``cluster``/``self`` roots."""
+    for arg in call.args:
+        if expr_root(arg) not in ("cluster", "self"):
+            return arg
+    return call.args[0] if call.args else None
+
+
+def _def_params(fdef: ast.AST) -> List[str]:
+    a = fdef.args
+    return [p.arg for p in (*a.posonlyargs, *a.args)]
+
+
+def _arg_index_for_param(call: ast.Call, params: List[str], pidx: int) -> Optional[ast.AST]:
+    """Call-site argument feeding def parameter ``pidx`` (positional or
+    keyword), accounting for the bound-method offset on attribute calls."""
+    if pidx < len(params):
+        for kw in call.keywords:
+            if kw.arg == params[pidx]:
+                return kw.value
+    offset = 0
+    if (
+        isinstance(call.func, ast.Attribute)
+        and params
+        and params[0] in ("self", "cls")
+    ):
+        offset = 1
+    site = pidx - offset
+    if 0 <= site < len(call.args):
+        return call.args[site]
+    return None
+
+
+def build_summaries(graph: CallGraph) -> Dict[str, FunctionSummary]:
+    """Fixpoint of per-function effect summaries over the file's defs.
+    Same-name defs merge (the call graph cannot tell them apart anyway)."""
+    summaries: Dict[str, FunctionSummary] = {}
+    for name, nodes in graph.defs.items():
+        params = _def_params(nodes[0])
+        summaries[name] = FunctionSummary(
+            name=name,
+            params=params,
+            settles=graph.reaches(name, SETTLE_NAMES) or name in SETTLE_NAMES,
+        )
+
+    def param_index(summary: FunctionSummary, root: Optional[str]) -> Optional[int]:
+        if root is None:
+            return None
+        try:
+            return summary.params.index(root)
+        except ValueError:
+            return None
+
+    changed = True
+    while changed:
+        changed = False
+        for name, nodes in graph.defs.items():
+            summary = summaries[name]
+            for node in nodes:
+                for call in _calls_shallow(node):
+                    bare = callee_bare_name(call)
+                    if bare is None:
+                        continue
+                    if bare in RESERVE_PRIMS or bare in RELEASE_PRIMS:
+                        kind = (RESERVE_PRIMS | RELEASE_PRIMS)[bare]
+                        target = (
+                            summary.reserves
+                            if bare in RESERVE_PRIMS
+                            else summary.releases
+                        )
+                        pidx = param_index(
+                            summary, expr_root(primitive_resource_arg(call))
+                        )
+                        if pidx is not None and (kind, pidx) not in target:
+                            target.add((kind, pidx))
+                            changed = True
+                        continue
+                    callee = summaries.get(bare)
+                    if callee is None or not callee.has_resource_effects:
+                        continue
+                    for effects, target in (
+                        (callee.reserves, summary.reserves),
+                        (callee.releases, summary.releases),
+                    ):
+                        for kind, cpidx in effects:
+                            arg = _arg_index_for_param(call, callee.params, cpidx)
+                            pidx = param_index(summary, expr_root(arg))
+                            if pidx is not None and (kind, pidx) not in target:
+                                target.add((kind, pidx))
+                                changed = True
+    return summaries

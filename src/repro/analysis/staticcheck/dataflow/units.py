@@ -1,0 +1,306 @@
+"""Units-of-measure algebra + annotation registry for the core signatures.
+
+A unit is a map ``base dimension -> integer exponent`` over the dimensions
+the cost model actually mixes: seconds, dollars, GPUs, bytes, FLOPs and
+kilowatts (hours fold into seconds — only ratios matter, and the ``/3600``
+in ``power_cost_rate`` is a dimensionless literal).  Two non-unit lattice
+points complete the picture:
+
+* ``TOP`` — unknown/any (joins of unlike units, containers, foreign calls);
+  every check involving TOP is vacuous, so the analysis under-approximates
+  rather than guessing.
+* ``POLY`` — numeric literals, which are unit-polymorphic: ``t + 1e-12``
+  and ``0.95 * rate`` are fine, and a join with a concrete unit adopts it.
+
+The annotation registry seeds inference at the ``core/`` API boundary:
+function return units by bare callee name, attribute units by attribute
+name, parameter/local fallbacks by exact name and by suffix convention
+(``*_s``/``*_seconds`` are seconds, ``*_cost`` dollars, ...), and keyword-
+argument slots for constructor checks (``SegmentLedger(rate=...)``).
+Registry entries are asserted against the real signatures by the tests, so
+a unit change in ``core/`` must update the registry loudly.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Mapping, Optional, Tuple
+
+Dims = Tuple[Tuple[str, int], ...]  # sorted (dimension, exponent), exp != 0
+
+
+class Unit:
+    """A concrete unit (possibly dimensionless) or a lattice point."""
+
+    __slots__ = ("dims", "tag")
+
+    def __init__(self, dims: Mapping[str, int] = (), tag: str = "unit") -> None:
+        self.tag = tag  # "unit" | "top" | "poly"
+        self.dims: Dims = tuple(
+            sorted((d, e) for d, e in dict(dims).items() if e != 0)
+        )
+
+    def __eq__(self, other: object) -> bool:
+        return (
+            isinstance(other, Unit)
+            and self.tag == other.tag
+            and self.dims == other.dims
+        )
+
+    def __hash__(self) -> int:
+        return hash((self.tag, self.dims))
+
+    @property
+    def is_top(self) -> bool:
+        return self.tag == "top"
+
+    @property
+    def is_poly(self) -> bool:
+        return self.tag == "poly"
+
+    @property
+    def is_concrete(self) -> bool:
+        return self.tag == "unit"
+
+    def __repr__(self) -> str:
+        return f"Unit({self.render()})"
+
+    def render(self) -> str:
+        if self.is_top:
+            return "?"
+        if self.is_poly:
+            return "literal"
+        if not self.dims:
+            return "dimensionless"
+        pretty = _PRETTY.get(self.dims)
+        if pretty:
+            return pretty
+        num = [
+            f"{d}^{e}" if e != 1 else d for d, e in self.dims if e > 0
+        ]
+        den = [
+            f"{d}^{-e}" if e != -1 else d for d, e in self.dims if e < 0
+        ]
+        if not num:
+            return "1/" + "·".join(den)
+        if den:
+            return "·".join(num) + "/" + "·".join(den)
+        return "·".join(num)
+
+
+TOP = Unit(tag="top")
+POLY = Unit(tag="poly")
+DIMLESS = Unit()
+
+S = Unit({"s": 1})
+USD = Unit({"usd": 1})
+RATE = Unit({"usd": 1, "s": -1})            # $/s
+GPU = Unit({"gpu": 1})
+BYTES = Unit({"byte": 1})
+BPS = Unit({"byte": 1, "s": -1})            # bytes/s
+FLOPS = Unit({"flop": 1, "s": -1})
+KW = Unit({"kw": 1})
+PRICE_KWH = Unit({"usd": 1, "kw": -1, "s": -1})  # $/kWh, hours as seconds
+
+_PRETTY: Dict[Dims, str] = {
+    S.dims: "s",
+    USD.dims: "$",
+    RATE.dims: "$/s",
+    GPU.dims: "GPU",
+    BYTES.dims: "bytes",
+    BPS.dims: "bytes/s",
+    FLOPS.dims: "FLOPS",
+    KW.dims: "kW",
+    PRICE_KWH.dims: "$/kWh",
+}
+
+
+def join(a: Unit, b: Unit) -> Unit:
+    """Lattice join: POLY is absorbed by anything; unlike units go to TOP."""
+    if a == b:
+        return a
+    if a.is_poly:
+        return b
+    if b.is_poly:
+        return a
+    return TOP
+
+
+def multiply(a: Unit, b: Unit) -> Unit:
+    if a.is_top or b.is_top:
+        return TOP
+    if a.is_poly:
+        return b
+    if b.is_poly:
+        return a
+    dims: Dict[str, int] = dict(a.dims)
+    for d, e in b.dims:
+        dims[d] = dims.get(d, 0) + e
+    return Unit(dims)
+
+
+def divide(a: Unit, b: Unit) -> Unit:
+    return multiply(a, invert(b))
+
+
+def invert(u: Unit) -> Unit:
+    if not u.is_concrete:
+        return u
+    return Unit({d: -e for d, e in u.dims})
+
+
+def addable(a: Unit, b: Unit) -> bool:
+    """May ``a + b`` (or ``a - b``, or ``a < b``) be formed?  Only a
+    *provable* mismatch — two unlike concrete units — is rejected."""
+    if not (a.is_concrete and b.is_concrete):
+        return True
+    return a == b
+
+
+# ----------------------------------------------------------------- registry
+#: Return units by bare callee name (core/ function and method signatures).
+FUNC_UNITS: Dict[str, Unit] = {
+    # timing.py
+    "iteration_time": S,
+    "analytic_iteration_time": S,
+    "execution_time": S,
+    "bottleneck_delta": S,
+    "placement_power_rate": RATE,
+    "electricity_cost": USD,
+    "average_price": TOP,  # deliberately unit-polymorphic (see its docstring)
+    # job.py boundary
+    "power_cost_rate": RATE,
+    "t_comp": S,
+    "t_comp_hw": S,
+    "single_gpu_execution": S,
+    "bandwidth_requirement": BPS,
+    "bandwidth_requirement_hw": BPS,
+    "demand_at_cap": BPS,
+    "min_gpus_for_memory": GPU,
+    "pipeline_depth": DIMLESS,
+    # cluster.py boundary
+    "price": PRICE_KWH,
+    "available_bandwidth": BPS,
+    "total_gpus": GPU,
+    "total_free_gpus": GPU,
+    "congestion_alpha": DIMLESS,
+    # accounting.py
+    "settle": USD,
+    "completed_iterations": DIMLESS,
+    "remaining_after_checkpoint": DIMLESS,
+}
+
+#: Attribute units by attribute name (dataclass fields + properties).
+ATTR_UNITS: Dict[str, Unit] = {
+    # times
+    "submit_time": S,
+    "submit": S,
+    "start": S,
+    "finish": S,
+    "last_settle": S,
+    "projected_finish": S,
+    "iteration_seconds": S,
+    "restore_s": S,
+    "restart_penalty_s": S,
+    "makespan": S,
+    "wait": S,
+    "execution": S,
+    "jct": S,
+    "average_jct": S,
+    "average_hol_wait": S,
+    "comm_times": S,          # container-of-seconds: elements carry the unit
+    "iteration_time": S,
+    # money
+    "cost": USD,
+    "projected_cost": USD,
+    "accrued": USD,
+    "total_cost": USD,
+    "rate": RATE,
+    # counts / hardware
+    "total_gpus": GPU,
+    "cluster_gpus": GPU,
+    "min_gpus": GPU,
+    "gpu_kw": KW,
+    "activation_bytes": BYTES,
+    "reserved_bw": BPS,
+    "gpu_flops": FLOPS,
+    "eff_flops": FLOPS,
+    "microbatches": DIMLESS,
+    "iterations": DIMLESS,
+    "n_regions": DIMLESS,
+    "price_mult": DIMLESS,
+    "voluntary_migration_threshold": DIMLESS,
+}
+
+#: Fallback units for bare names (parameters and well-known locals) when
+#: local inference has nothing better than TOP.
+NAME_UNITS: Dict[str, Unit] = {
+    "t": S,
+    "now": S,
+    "t_ev": S,
+    "dt": S,
+    "threshold": DIMLESS,
+    "alpha": DIMLESS,
+    "remaining": DIMLESS,
+    "INTRA_REGION_BANDWIDTH": BPS,
+    "DEFAULT_RESTART_PENALTY_S": S,
+    "GBPS": BPS,
+}
+
+#: Suffix conventions, checked after NAME_UNITS (first match wins).
+SUFFIX_UNITS: Tuple[Tuple[str, Unit], ...] = (
+    ("_seconds", S),
+    ("_s", S),
+    ("_cost", USD),
+    ("_rate", RATE),
+    ("_bw", BPS),
+    ("_gpus", GPU),
+    ("_flops", FLOPS),
+    ("_bytes", BYTES),
+    ("_kw", KW),
+)
+
+#: Keyword-argument slots checked at every call (constructor wiring — the
+#: classic transposition bug: a seconds value poured into a $ slot).
+KW_UNITS: Dict[str, Unit] = {
+    "start": S,
+    "finish": S,
+    "submit": S,
+    "execution_seconds": S,
+    "restore_s": S,
+    "iteration_seconds": S,
+    "restart_penalty_s": S,
+    "projected_finish": S,
+    "last_settle": S,
+    "makespan": S,
+    "projected_cost": USD,
+    "accrued": USD,
+    "cost": USD,
+    "rate": RATE,
+    "voluntary_migration_threshold": DIMLESS,
+}
+
+
+def lookup_name(name: str) -> Unit:
+    u = NAME_UNITS.get(name)
+    if u is not None:
+        return u
+    for suffix, unit in SUFFIX_UNITS:
+        if name.endswith(suffix) and name != suffix:
+            return unit
+    return TOP
+
+
+def lookup_attr(name: str) -> Unit:
+    u = ATTR_UNITS.get(name)
+    if u is not None:
+        return u
+    for suffix, unit in SUFFIX_UNITS:
+        if name.endswith(suffix) and name != suffix:
+            return unit
+    return TOP
+
+
+def lookup_func(name: Optional[str]) -> Unit:
+    if name is None:
+        return TOP
+    return FUNC_UNITS.get(name, TOP)

@@ -15,6 +15,8 @@ from .ledger import LedgerEncapsulationRule
 from .obs import ObsImportRule
 from .settle import SettleBeforeReleaseRule
 from .twins import TwinParityRule
+from .typestate import ResourceTypestateRule
+from .units import UnitsRule
 
 
 def all_rules() -> List[object]:
@@ -30,11 +32,29 @@ def all_rules() -> List[object]:
         X64ScopeRule(),
         SettleBeforeReleaseRule(),
         ObsImportRule(),
+        ResourceTypestateRule(),
+        UnitsRule(),
     ]
+
+
+def rule_codes(rule: object) -> tuple:
+    """Every code a rule can emit (``codes`` tuple, else the primary
+    ``code`` plus any legacy ``structure_code``)."""
+    codes = getattr(rule, "codes", None)
+    if codes:
+        return tuple(codes)
+    out = [rule.code]  # type: ignore[attr-defined]
+    structure = getattr(rule, "structure_code", None)
+    if structure:
+        out.append(structure)
+    return tuple(out)
 
 
 def rule_catalog() -> Dict[str, str]:
     """code -> rule name, including secondary codes."""
-    catalog = {r.code: r.name for r in all_rules()}  # type: ignore[attr-defined]
+    catalog: Dict[str, str] = {}
+    for r in all_rules():
+        for code in rule_codes(r):
+            catalog[code] = r.name  # type: ignore[attr-defined]
     catalog["RPL302"] = "twin-structure"
     return dict(sorted(catalog.items()))

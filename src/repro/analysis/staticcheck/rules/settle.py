@@ -8,12 +8,16 @@ contract) — or immediately re-reserve (the voluntary-migration probe
 pattern, which releases to price an alternative and re-reserves the
 original when it declines to move).
 
-Mechanics: within each function of the scheduler, for every release call
-site we require a *later* call (source order; an over-approximation of all
-paths through the function) whose callee reaches ``settle`` or a
-``reserve``-family function through the intra-file call graph.  Functions
-whose own name contains ``release`` are the release primitives/wrappers
-themselves and are exempt — their callers carry the obligation.
+Mechanics: within each function of the scheduler, every release call site
+requires *some* call in the same function (order-agnostic — the settle-on-
+preempt path deliberately settles the ledger before touching the cluster,
+so source order proves nothing) whose callee reaches ``settle`` or a
+``reserve``-family function through the intra-file call graph.  Path-
+sensitive ordering — "every path from the release actually reaches a
+settle" — is RPL703's job (``rules/typestate.py``); RPL501 remains the
+cheap structural backstop.  Functions whose own name contains ``release``
+are the release primitives/wrappers themselves and are exempt — their
+callers carry the obligation.
 """
 
 from __future__ import annotations
@@ -60,22 +64,22 @@ class SettleBeforeReleaseRule:
         self, sf, graph: CallGraph, fn_name: str, fdef: ast.AST
     ) -> Iterator[Diagnostic]:
         calls = ordered_calls(fdef)
-        for i, (_pos, name, node) in enumerate(calls):
+        for _pos, name, node in calls:
             if name not in RELEASE_NAMES:
                 continue
             settled = False
-            for _pos2, later, _node2 in calls[i + 1:]:
-                if later in RELEASE_NAMES:
+            for _pos2, other, _node2 in calls:
+                if other in RELEASE_NAMES:
                     continue
                 if graph.call_reaches(
-                    later, SETTLE_NAMES
-                ) or graph.call_reaches(later, RESERVE_NAMES):
+                    other, SETTLE_NAMES
+                ) or graph.call_reaches(other, RESERVE_NAMES):
                     settled = True
                     break
             if not settled:
                 yield Diagnostic(
                     self.code, sf.rel, node.lineno, node.col_offset,
-                    f"'{name}' in '{fn_name}' is not followed by a path "
+                    f"'{name}' in '{fn_name}' has no companion call "
                     f"reaching SegmentLedger.settle (or a re-reserve); "
                     f"releasing an unsettled segment drops accrued cost",
                 )

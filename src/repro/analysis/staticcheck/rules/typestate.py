@@ -1,0 +1,604 @@
+"""Resource typestate over the cluster ledger APIs (RPL7xx).
+
+Path-sensitive upgrade of RPL501: per function in ``core/``, an abstract
+interpretation over the statement CFG tracks, per *root value* (the base
+name of the attribute chain handed to a primitive — ``run`` in
+``cluster.release_bandwidth(run.placement.reserved_bw)``), which resource
+kinds are currently **released-pending** (released here, neither settled
+nor re-reserved yet), **fresh** (reserved here and not yet escaped to a
+caller-visible structure), and **ever-released**, plus a per-path "a settle
+happened" flag.  Primitive knowledge flows through
+:mod:`..dataflow.summaries`, so wrappers like ``_release_placement`` carry
+their effects to call sites.
+
+    RPL701 — a leak: an exception edge escapes the function while a root is
+             released-but-unsettled or reserved-but-unreleased, or a path
+             settles after releasing only *some* of the resource kinds this
+             file reserves (e.g. GPUs released, bandwidth not).
+    RPL702 — double release: a kind released again with no intervening
+             re-reserve on some path.
+    RPL703 — release-without-settle: a path reaches function exit (or
+             rebinds the root) with released-pending state and no settle;
+             also an opened ``SegmentLedger`` dropped without settle.
+
+States are disjunctions of paths (capped, then merged conservatively), so
+"release then settle on every branch" proves clean while "settle only on
+the happy branch" names the unhandled edge.  Calls to the primitives, to
+local functions with known summaries, and to settle-reaching callees are
+atomic (no exception edge); everything else may raise.  Passing a tracked
+root to an unknown callee *escapes* its fresh reservations — ownership
+moved — but cannot discharge released-pending state: only settle or
+re-reserve rebalances the ledger.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, Iterator, List, Optional, Set, Tuple
+
+from ..callgraph import CallGraph
+from ..diagnostics import Diagnostic
+from ..engine import Project, SourceFile
+from ..astutil import function_defs
+from ..dataflow.cfg import (
+    ROLE_ITER,
+    ROLE_STMT,
+    ROLE_TEST,
+    ROLE_WITH_ENTER,
+    Block,
+    _calls_shallow,
+    build_cfg,
+    callee_bare_name,
+    default_may_raise,
+)
+from ..dataflow.framework import ForwardAnalysis, reporting_pass, run_forward
+from ..dataflow.summaries import (
+    LEDGER,
+    RELEASE_PRIMS,
+    RESERVE_PRIMS,
+    SETTLE_NAMES,
+    FunctionSummary,
+    _arg_index_for_param,
+    build_summaries,
+    expr_root,
+    primitive_resource_arg,
+)
+
+PATH_CAP = 64
+
+EXEMPT_NAME_FRAGMENTS = ("release", "reserve")
+EXEMPT_NAMES = {"settle", "open", "reprice", "telemetry"}
+
+_EMPTY: FrozenSet[str] = frozenset()
+
+
+@dataclasses.dataclass(frozen=True)
+class RootState:
+    pending: FrozenSet[str] = _EMPTY   # released, not yet settled/re-reserved
+    ever: FrozenSet[str] = _EMPTY      # kinds ever released through this root
+    fresh: FrozenSet[str] = _EMPTY     # reserved/opened here, not yet escaped
+    release_line: int = 0
+    reserve_line: int = 0
+
+    def is_empty(self) -> bool:
+        return not (self.pending or self.ever or self.fresh)
+
+
+@dataclasses.dataclass(frozen=True)
+class Path:
+    roots: Tuple[Tuple[str, RootState], ...] = ()
+    settled: bool = False
+    exc_line: int = 0
+
+    def get(self, root: str) -> RootState:
+        for name, st in self.roots:
+            if name == root:
+                return st
+        return RootState()
+
+    def set(self, root: str, st: RootState) -> "Path":
+        rest = tuple((n, s) for n, s in self.roots if n != root)
+        if not st.is_empty():
+            rest = tuple(sorted(rest + ((root, st),)))
+        return dataclasses.replace(self, roots=rest)
+
+    def fragile_roots(self) -> List[Tuple[str, RootState]]:
+        out = []
+        for name, st in self.roots:
+            if (st.pending and not self.settled) or st.fresh:
+                out.append((name, st))
+        return out
+
+
+State = FrozenSet[Path]
+
+
+def _merge_paths(paths: State) -> Path:
+    """Conservative single-path collapse (cap overflow / widening)."""
+    roots: Dict[str, RootState] = {}
+    settled = True
+    exc_line = 0
+    for p in paths:
+        settled = settled and p.settled
+        exc_line = exc_line or p.exc_line
+        for name, st in p.roots:
+            cur = roots.get(name, RootState())
+            roots[name] = RootState(
+                pending=cur.pending | st.pending,
+                ever=cur.ever | st.ever,
+                fresh=cur.fresh | st.fresh,
+                release_line=min(
+                    x for x in (cur.release_line, st.release_line, 1 << 30) if x
+                )
+                if (cur.release_line or st.release_line)
+                else 0,
+                reserve_line=min(
+                    x for x in (cur.reserve_line, st.reserve_line, 1 << 30) if x
+                )
+                if (cur.reserve_line or st.reserve_line)
+                else 0,
+            )
+    return Path(
+        roots=tuple(sorted(roots.items())), settled=settled, exc_line=exc_line
+    )
+
+
+class _Event:
+    __slots__ = ("op", "kind", "root", "line")
+
+    def __init__(self, op: str, kind: str = "", root: str = "", line: int = 0):
+        self.op = op      # reserve | release | settle | open | escape
+        self.kind = kind
+        self.root = root
+        self.line = line
+
+
+class TypestateAnalysis(ForwardAnalysis):
+    def __init__(
+        self,
+        sf: SourceFile,
+        fn_name: str,
+        graph: CallGraph,
+        summaries: Dict[str, FunctionSummary],
+        acquired: FrozenSet[str],
+        sink: Set[Tuple[str, int, str]],
+    ) -> None:
+        self.sf = sf
+        self.fn_name = fn_name
+        self.graph = graph
+        self.summaries = summaries
+        self.acquired = acquired
+        self.sink = sink
+
+    # -- lattice --------------------------------------------------------
+    def initial(self) -> State:
+        return frozenset({Path()})
+
+    def join(self, a: State, b: State) -> State:
+        merged = a | b
+        if len(merged) > PATH_CAP:
+            return frozenset({_merge_paths(merged)})
+        return merged
+
+    def widen(self, old: State, new: State) -> State:
+        merged = old | new
+        if len(merged) > 1 and merged != old:
+            return frozenset({_merge_paths(merged)})
+        return merged
+
+    # -- reporting ------------------------------------------------------
+    def _report(self, report, code: str, line: int, message: str) -> None:
+        if report is not None:
+            key = (code, line, message)
+            if key not in self.sink:
+                self.sink.add(key)
+                report(code, line, message)
+
+    # -- event extraction ----------------------------------------------
+    def _events_for_calls(self, node: ast.AST) -> Iterator[_Event]:
+        for call in _calls_shallow(node):
+            bare = callee_bare_name(call)
+            line = call.lineno
+            if bare in RELEASE_PRIMS or bare in RESERVE_PRIMS:
+                prims = RELEASE_PRIMS if bare in RELEASE_PRIMS else RESERVE_PRIMS
+                op = "release" if bare in RELEASE_PRIMS else "reserve"
+                root = expr_root(primitive_resource_arg(call))
+                if root is not None:
+                    yield _Event(op, prims[bare], root, line)
+                continue
+            if bare == "open" and isinstance(call.func, ast.Attribute):
+                recv = expr_root(call.func.value)
+                if recv is not None and recv.endswith("Ledger"):
+                    yield _Event("open", LEDGER, "", line)  # root set by Assign
+                    continue
+            summary = self.summaries.get(bare) if bare else None
+            if summary is not None and (
+                summary.has_resource_effects or summary.settles
+            ):
+                for effects, op in (
+                    (summary.releases, "release"),
+                    (summary.reserves, "reserve"),
+                ):
+                    for kind, pidx in sorted(effects):
+                        arg = _arg_index_for_param(call, summary.params, pidx)
+                        root = expr_root(arg)
+                        if root is not None:
+                            yield _Event(op, kind, root, line)
+                if summary.settles:
+                    yield self._settle_event(call, line)
+                continue
+            if bare is not None and (
+                bare in SETTLE_NAMES
+                or self.graph.call_reaches(bare, SETTLE_NAMES)
+            ):
+                yield self._settle_event(call, line)
+                continue
+            # Unknown call: tracked roots passed to it escape.
+            roots = set()
+            if isinstance(call.func, ast.Attribute):
+                r = expr_root(call.func.value)
+                if r:
+                    roots.add(r)
+            for arg in (*call.args, *[kw.value for kw in call.keywords]):
+                r = expr_root(arg)
+                if r:
+                    roots.add(r)
+            for r in sorted(roots):
+                yield _Event("escape", "", r, line)
+
+    def _settle_event(self, call: ast.Call, line: int) -> _Event:
+        recv = (
+            expr_root(call.func.value)
+            if isinstance(call.func, ast.Attribute)
+            else None
+        )
+        return _Event("settle", "", recv or "", line)
+
+    # -- transfer -------------------------------------------------------
+    def transfer(self, block: Block, state: State, report=None) -> State:
+        return self._apply(block, state, report=report, resets=True)
+
+    def transfer_exc(self, block: Block, state: State, note: str, report=None) -> State:
+        out = self._apply(block, state, report=None, resets=False)
+        line = block.line
+        stamped = set()
+        for p in out:
+            if p.fragile_roots():
+                stamped.add(
+                    dataclasses.replace(p, exc_line=p.exc_line or line)
+                )
+            else:
+                stamped.add(dataclasses.replace(p, exc_line=0))
+        return frozenset(stamped)
+
+    def _apply(self, block: Block, state: State, report, resets: bool) -> State:
+        stmt = block.stmt
+        if stmt is None:
+            if block.role == "exit":
+                self._check_exit(state, report)
+            elif block.role == "raise-exit":
+                self._check_raise_exit(state, report)
+            return state
+        if block.role == "exit":
+            return state
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            return state  # a nested def only binds a name; its body has its own CFG
+        events: List[_Event] = []
+        open_target: Optional[str] = None
+        if block.role in (ROLE_STMT, ROLE_TEST, ROLE_ITER, ROLE_WITH_ENTER):
+            if block.role == ROLE_TEST:
+                events = list(self._events_for_calls(stmt.test))
+            elif block.role == ROLE_ITER:
+                events = list(self._events_for_calls(stmt.iter))
+            elif block.role == ROLE_WITH_ENTER:
+                for item in stmt.items:
+                    events.extend(self._events_for_calls(item.context_expr))
+                    if resets and item.optional_vars is not None:
+                        for node in ast.walk(item.optional_vars):
+                            if isinstance(node, ast.Name):
+                                events.append(
+                                    _Event("reset", "", node.id, stmt.lineno)
+                                )
+            else:
+                events = list(self._events_for_calls(stmt))
+            if block.role == ROLE_STMT and isinstance(
+                stmt, (ast.Assign, ast.AnnAssign, ast.AugAssign)
+            ):
+                targets = (
+                    stmt.targets
+                    if isinstance(stmt, ast.Assign)
+                    else [stmt.target]
+                )
+                # An opened ledger binds its obligation to the target name.
+                if any(e.op == "open" for e in events):
+                    for t in targets:
+                        if isinstance(t, ast.Name):
+                            open_target = t.id
+                value = getattr(stmt, "value", None)
+                if value is not None:
+                    for t in targets:
+                        if isinstance(t, ast.Name) and isinstance(
+                            value, ast.Name
+                        ):
+                            # Pure alias: obligations visible through both.
+                            events.append(
+                                _Event("escape", "", value.id, stmt.lineno)
+                            )
+                if resets:
+                    for t in targets:
+                        if isinstance(t, ast.Name) and not isinstance(
+                            stmt, ast.AugAssign
+                        ):
+                            events.append(
+                                _Event("reset", "", t.id, stmt.lineno)
+                            )
+            if block.role == ROLE_STMT and isinstance(stmt, ast.Delete) and resets:
+                for t in stmt.targets:
+                    if isinstance(t, ast.Name):
+                        events.append(_Event("reset", "", t.id, stmt.lineno))
+            if block.role == ROLE_ITER and resets:
+                for name in _loop_target_names(stmt):
+                    events.append(_Event("reset", "", name, stmt.lineno))
+            if block.role == ROLE_STMT and isinstance(stmt, ast.Return):
+                if stmt.value is not None:
+                    r = expr_root(stmt.value)
+                    if r:
+                        events.append(_Event("escape", "", r, stmt.lineno))
+        # An Assign's target reset checks the *old* binding being
+        # overwritten; the RHS's freshly-opened ledger binds afterwards.
+        events.sort(key=lambda e: e.op == "open")
+        # On an exception edge (resets=False) the statement did not complete:
+        # an open that raised never created a ledger, so the binding's
+        # obligation must not be charged to the target on that edge.
+        if not resets:
+            events = [e for e in events if e.op != "open"]
+            open_target = None
+        out: Set[Path] = set()
+        for p in state:
+            out.add(self._apply_events(p, events, open_target, report))
+        result: State = frozenset(out)
+        if len(result) > PATH_CAP:
+            result = frozenset({_merge_paths(result)})
+        return result
+
+    def _apply_events(
+        self,
+        path: Path,
+        events: List[_Event],
+        open_target: Optional[str],
+        report,
+    ) -> Path:
+        for ev in events:
+            if ev.op == "reserve":
+                st = path.get(ev.root)
+                if ev.kind in st.pending:
+                    st = dataclasses.replace(st, pending=st.pending - {ev.kind})
+                else:
+                    st = dataclasses.replace(
+                        st, fresh=st.fresh | {ev.kind}, reserve_line=ev.line
+                    )
+                path = path.set(ev.root, st)
+            elif ev.op == "release":
+                st = path.get(ev.root)
+                if ev.kind in st.pending:
+                    self._report(
+                        report,
+                        "RPL702",
+                        ev.line,
+                        f"'{ev.root}' double-releases {ev.kind} (already "
+                        f"released at line {st.release_line} with no "
+                        f"re-reserve in between); ClusterState raises on "
+                        f"double release at runtime",
+                    )
+                elif ev.kind in st.fresh:
+                    st = dataclasses.replace(st, fresh=st.fresh - {ev.kind})
+                    path = path.set(ev.root, st)
+                else:
+                    st = dataclasses.replace(
+                        st,
+                        pending=st.pending | {ev.kind},
+                        ever=st.ever | {ev.kind},
+                        release_line=st.release_line or ev.line,
+                    )
+                    path = path.set(ev.root, st)
+            elif ev.op == "settle":
+                path = dataclasses.replace(path, settled=True)
+                if ev.root:
+                    st = path.get(ev.root)
+                    if LEDGER in st.fresh:
+                        path = path.set(
+                            ev.root,
+                            dataclasses.replace(st, fresh=st.fresh - {LEDGER}),
+                        )
+            elif ev.op == "open":
+                if open_target is not None:
+                    st = path.get(open_target)
+                    path = path.set(
+                        open_target,
+                        dataclasses.replace(
+                            st,
+                            fresh=st.fresh | {LEDGER},
+                            reserve_line=ev.line,
+                        ),
+                    )
+            elif ev.op == "escape":
+                st = path.get(ev.root)
+                if st.fresh:
+                    path = path.set(
+                        ev.root, dataclasses.replace(st, fresh=_EMPTY)
+                    )
+            elif ev.op == "reset":
+                st = path.get(ev.root)
+                if not st.is_empty():
+                    self._check_root(
+                        ev.root,
+                        st,
+                        path.settled,
+                        report,
+                        where=f"rebinding of '{ev.root}' at line {ev.line}",
+                    )
+                    path = path.set(ev.root, RootState())
+        return path
+
+    # -- end-of-path checks --------------------------------------------
+    def _check_root(
+        self, name: str, st: RootState, settled: bool, report, *, where: str
+    ) -> None:
+        if st.pending and not settled:
+            kinds = "+".join(sorted(st.pending))
+            self._report(
+                report,
+                "RPL703",
+                st.release_line,
+                f"'{name}' releases {kinds} at line {st.release_line} in "
+                f"'{self.fn_name}' but no path from there settles the "
+                f"segment ledger (or re-reserves) before {where}; the "
+                f"accrued segment cost is dropped",
+            )
+        if LEDGER in st.fresh:
+            self._report(
+                report,
+                "RPL703",
+                st.reserve_line,
+                f"segment ledger opened at line {st.reserve_line} into "
+                f"'{name}' is dropped without settle before {where}",
+            )
+        hard = st.fresh - {LEDGER}
+        if hard:
+            kinds = "+".join(sorted(hard))
+            self._report(
+                report,
+                "RPL701",
+                st.reserve_line,
+                f"'{name}' reserves {kinds} at line {st.reserve_line} in "
+                f"'{self.fn_name}' but neither releases it nor hands it "
+                f"off before {where}; the ledger never recovers the "
+                f"capacity",
+            )
+        if settled and st.ever:
+            missing = self.acquired - st.ever
+            if missing and st.ever <= self.acquired:
+                self._report(
+                    report,
+                    "RPL701",
+                    st.release_line,
+                    f"partial teardown of '{name}' in '{self.fn_name}': "
+                    f"settles after releasing only "
+                    f"{'+'.join(sorted(st.ever))} — "
+                    f"{'+'.join(sorted(missing))} reserved in this file is "
+                    f"never released on this path",
+                )
+
+    def _check_exit(self, state: State, report) -> None:
+        for p in state:
+            for name, st in p.roots:
+                self._check_root(
+                    name, st, p.settled, report, where="function exit"
+                )
+
+    def _check_raise_exit(self, state: State, report) -> None:
+        for p in state:
+            if not p.exc_line:
+                continue
+            for name, st in p.fragile_roots():
+                if st.pending and not p.settled:
+                    kinds = "+".join(sorted(st.pending))
+                    self._report(
+                        report,
+                        "RPL701",
+                        p.exc_line,
+                        f"exception path from line {p.exc_line} escapes "
+                        f"'{self.fn_name}' with '{name}' "
+                        f"released-but-unsettled ({kinds} released at line "
+                        f"{st.release_line}); the accrued segment cost is "
+                        f"dropped on this edge",
+                    )
+                if st.fresh:
+                    kinds = "+".join(sorted(st.fresh))
+                    self._report(
+                        report,
+                        "RPL701",
+                        p.exc_line,
+                        f"exception path from line {p.exc_line} leaks the "
+                        f"{kinds} acquired by '{name}' at line "
+                        f"{st.reserve_line} in '{self.fn_name}' — no "
+                        f"release, settle, or escape on this edge",
+                    )
+
+
+def _loop_target_names(stmt: ast.AST) -> List[str]:
+    out: List[str] = []
+    target = getattr(stmt, "target", None)
+    if target is None:
+        return out
+    for node in ast.walk(target):
+        if isinstance(node, ast.Name):
+            out.append(node.id)
+    return out
+
+
+def _acquired_kinds(tree: ast.Module) -> FrozenSet[str]:
+    kinds: Set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call):
+            bare = callee_bare_name(node)
+            if bare in RESERVE_PRIMS:
+                kinds.add(RESERVE_PRIMS[bare])
+    return frozenset(kinds)
+
+
+def _exempt(name: str) -> bool:
+    return name in EXEMPT_NAMES or any(
+        frag in name for frag in EXEMPT_NAME_FRAGMENTS
+    )
+
+
+class ResourceTypestateRule:
+    code = "RPL701"
+    codes = ("RPL701", "RPL702", "RPL703")
+    name = "resource-typestate"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not sf.in_core():
+                continue
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        graph = CallGraph(sf.tree)
+        summaries = build_summaries(graph)
+        acquired = _acquired_kinds(sf.tree)
+        atomic = frozenset(
+            set(RESERVE_PRIMS)
+            | set(RELEASE_PRIMS)
+            | SETTLE_NAMES
+            | {
+                n
+                for n, s in summaries.items()
+                if s.has_resource_effects or s.settles
+            }
+        )
+        diags: List[Diagnostic] = []
+        for qual, fdef in function_defs(sf.tree):
+            fn_name = qual.rsplit(".", 1)[-1]
+            if _exempt(fn_name):
+                continue
+            sink: Set[Tuple[str, int, str]] = set()
+            analysis = TypestateAnalysis(
+                sf, fn_name, graph, summaries, acquired, sink
+            )
+            cfg = build_cfg(
+                fdef, lambda node: default_may_raise(node, atomic)
+            )
+            in_states = run_forward(cfg, analysis)
+
+            def report(code: str, line: int, message: str) -> None:
+                diags.append(
+                    Diagnostic(code, sf.rel, line, 0, message)
+                )
+
+            reporting_pass(cfg, analysis, in_states, report)
+        yield from sorted(diags, key=Diagnostic.sort_key)

@@ -1,0 +1,532 @@
+"""Units-of-measure checking over the cost/timing core (RPL8xx).
+
+Forward dataflow over each function's CFG in the scoped core files
+(``accounting.py``, ``timing.py``, ``priority.py``, ``placement.py``,
+``scheduler.py``): the abstract state maps local names to
+:class:`~..dataflow.units.Unit`, seeded from the annotation registry at the
+API boundary (function returns, attribute names, parameter conventions) and
+propagated through assignments, loops and branches.  Joins of unlike units
+drop to ⊤ (unknown) so every reported mismatch is provable; numeric
+literals are unit-polymorphic.
+
+    RPL801 — unlike-unit addition/subtraction/comparison (``seconds +
+             dollars``), a keyword argument whose value's unit contradicts
+             the registered slot (``SegmentLedger(rate=<$>)``), an
+             attribute store contradicting the field's unit, or a return
+             contradicting the function's registered unit.
+    RPL802 — a rate×rate product (``$/s × $/s``): no quantity in the cost
+             model has unit $²/s², so this is always a transposed operand.
+
+Loops terminate by widening: a binding still changing after ``widen_after``
+visits of the loop head is dropped to ⊤ (e.g. ``x = x / dt`` inside a loop
+ascends through ever-higher powers of 1/s until widening kills it).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, Iterator, List, Optional, Set, Tuple
+
+from ..diagnostics import Diagnostic
+from ..engine import Project, SourceFile
+from ..astutil import function_defs
+from ..dataflow.cfg import (
+    ROLE_ITER,
+    ROLE_STMT,
+    ROLE_TEST,
+    ROLE_WITH_ENTER,
+    Block,
+    build_cfg,
+)
+from ..dataflow.framework import ForwardAnalysis, reporting_pass, run_forward
+from ..dataflow.units import (
+    DIMLESS,
+    KW_UNITS,
+    POLY,
+    RATE,
+    TOP,
+    Unit,
+    addable,
+    divide,
+    join,
+    lookup_attr,
+    lookup_func,
+    lookup_name,
+    multiply,
+)
+
+SCOPED_BASENAMES = {
+    "accounting.py",
+    "timing.py",
+    "priority.py",
+    "placement.py",
+    "scheduler.py",
+}
+
+#: Builtins transparent to units: result carries the argument's unit.
+_PRESERVING_BUILTINS = {
+    "abs", "float", "int", "round", "sorted", "tuple", "list", "sum",
+}
+_JOINING_BUILTINS = {"max", "min"}
+
+Env = Tuple[Tuple[str, Unit], ...]  # sorted, only non-TOP entries
+
+
+def _env_get(env: Dict[str, Unit], name: str) -> Unit:
+    u = env.get(name)
+    if u is None or u.is_top:
+        return lookup_name(name)
+    return u
+
+
+def _env_set(env: Dict[str, Unit], name: str, u: Unit) -> None:
+    if u.is_top:
+        env.pop(name, None)
+    else:
+        env[name] = u
+
+
+class UnitsAnalysis(ForwardAnalysis):
+    def __init__(
+        self, sf: SourceFile, fn_name: str, sink: Set[Tuple[str, int, str]]
+    ) -> None:
+        self.sf = sf
+        self.fn_name = fn_name
+        self.sink = sink
+
+    # -- lattice --------------------------------------------------------
+    def initial(self) -> Env:
+        return ()
+
+    def join(self, a: Env, b: Env) -> Env:
+        da, db = dict(a), dict(b)
+        out: Dict[str, Unit] = {}
+        for k in da.keys() & db.keys():
+            u = join(da[k], db[k])
+            if not u.is_top:
+                out[k] = u
+        return tuple(sorted(out.items()))
+
+    def widen(self, old: Env, new: Env) -> Env:
+        do, dn = dict(old), dict(new)
+        return tuple(
+            sorted((k, u) for k, u in dn.items() if do.get(k) == u)
+        )
+
+    # -- reporting ------------------------------------------------------
+    def _report(self, report, code: str, line: int, message: str) -> None:
+        if report is not None:
+            key = (code, line, message)
+            if key not in self.sink:
+                self.sink.add(key)
+                report(code, line, message)
+
+    # -- expression evaluation -----------------------------------------
+    def eval(self, node: Optional[ast.AST], env: Dict[str, Unit], report) -> Unit:
+        if node is None:
+            return TOP
+        if isinstance(node, ast.Constant):
+            v = node.value
+            if isinstance(v, bool) or not isinstance(v, (int, float, complex)):
+                return TOP
+            return POLY
+        if isinstance(node, ast.Name):
+            return _env_get(env, node.id)
+        if isinstance(node, ast.Attribute):
+            return lookup_attr(node.attr)
+        if isinstance(node, ast.BinOp):
+            return self._binop(node, env, report)
+        if isinstance(node, ast.UnaryOp):
+            u = self.eval(node.operand, env, report)
+            if isinstance(node.op, (ast.USub, ast.UAdd)):
+                return u
+            if isinstance(node.op, ast.Not):
+                return DIMLESS
+            return TOP
+        if isinstance(node, ast.BoolOp):
+            out = POLY
+            for v in node.values:
+                out = join(out, self.eval(v, env, report))
+            return out
+        if isinstance(node, ast.Compare):
+            left = self.eval(node.left, env, report)
+            for op, comp in zip(node.ops, node.comparators):
+                right = self.eval(comp, env, report)
+                if isinstance(
+                    op, (ast.Eq, ast.NotEq, ast.Lt, ast.LtE, ast.Gt, ast.GtE)
+                ) and not addable(left, right):
+                    self._report(
+                        report,
+                        "RPL801",
+                        node.lineno,
+                        f"comparing {left.render()} with {right.render()} "
+                        f"in '{self.fn_name}': unlike units never order "
+                        f"meaningfully",
+                    )
+                left = right
+            return DIMLESS
+        if isinstance(node, ast.IfExp):
+            self.eval(node.test, env, report)
+            return join(
+                self.eval(node.body, env, report),
+                self.eval(node.orelse, env, report),
+            )
+        if isinstance(node, ast.Call):
+            return self._call(node, env, report)
+        if isinstance(node, (ast.GeneratorExp, ast.ListComp, ast.SetComp)):
+            return self._comprehension(node, env, report)
+        if isinstance(node, ast.DictComp):
+            inner = dict(env)
+            for gen in node.generators:
+                self.eval(gen.iter, inner, report)
+                for n in ast.walk(gen.target):
+                    if isinstance(n, ast.Name):
+                        inner.pop(n.id, None)
+                        _env_set(inner, n.id, TOP)
+            self.eval(node.key, inner, report)
+            self.eval(node.value, inner, report)
+            return TOP
+        if isinstance(node, ast.Subscript):
+            u = self.eval(node.value, env, report)
+            self.eval(node.slice, env, report)
+            # Containers are transparent: a tuple-of-seconds indexes to
+            # seconds (comm_times[0]); unknown containers stay unknown.
+            return u if u.is_concrete else TOP
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            for elt in node.elts:
+                self.eval(elt, env, report)
+            return TOP
+        if isinstance(node, ast.Dict):
+            for part in (*node.keys, *node.values):
+                self.eval(part, env, report)
+            return TOP
+        if isinstance(node, ast.JoinedStr):
+            for v in node.values:
+                self.eval(v, env, report)
+            return TOP
+        if isinstance(node, ast.FormattedValue):
+            self.eval(node.value, env, report)
+            return TOP
+        if isinstance(node, ast.Starred):
+            return self.eval(node.value, env, report)
+        if isinstance(node, ast.NamedExpr):
+            u = self.eval(node.value, env, report)
+            if isinstance(node.target, ast.Name):
+                _env_set(env, node.target.id, u)
+            return u
+        if isinstance(node, ast.Slice):
+            for part in (node.lower, node.upper, node.step):
+                if part is not None:
+                    self.eval(part, env, report)
+            return TOP
+        if isinstance(node, ast.Lambda):
+            return TOP  # unit-opaque; its body is not this function's flow
+        return TOP
+
+    def _binop(self, node: ast.BinOp, env: Dict[str, Unit], report) -> Unit:
+        left = self.eval(node.left, env, report)
+        right = self.eval(node.right, env, report)
+        op = node.op
+        if isinstance(op, (ast.Add, ast.Sub)):
+            if not addable(left, right):
+                verb = "add" if isinstance(op, ast.Add) else "subtract"
+                self._report(
+                    report,
+                    "RPL801",
+                    node.lineno,
+                    f"cannot {verb} {right.render()} "
+                    f"{'to' if verb == 'add' else 'from'} {left.render()} "
+                    f"in '{self.fn_name}'",
+                )
+                return TOP
+            return join(left, right)
+        if isinstance(op, ast.Mult):
+            if left == RATE and right == RATE:
+                self._report(
+                    report,
+                    "RPL802",
+                    node.lineno,
+                    f"rate×rate product in '{self.fn_name}': $/s × $/s "
+                    f"has unit $²/s², which no quantity in the cost model "
+                    f"carries — one operand is transposed",
+                )
+                return TOP
+            return multiply(left, right)
+        if isinstance(op, (ast.Div, ast.FloorDiv)):
+            return divide(left, right)
+        if isinstance(op, ast.Mod):
+            if (
+                left.is_concrete
+                and right.is_concrete
+                and not addable(left, right)
+            ):
+                self._report(
+                    report,
+                    "RPL801",
+                    node.lineno,
+                    f"{left.render()} %% {right.render()} in "
+                    f"'{self.fn_name}' mixes unlike units",
+                )
+            return left if left.is_concrete else TOP
+        if isinstance(op, ast.Pow):
+            if isinstance(node.right, ast.Constant) and isinstance(
+                node.right.value, int
+            ):
+                if left.is_concrete:
+                    return Unit(
+                        {d: e * node.right.value for d, e in left.dims}
+                    )
+            if left.is_poly or left == DIMLESS:
+                return left
+            return TOP
+        return TOP
+
+    def _call(self, node: ast.Call, env: Dict[str, Unit], report) -> Unit:
+        arg_units = [self.eval(a, env, report) for a in node.args]
+        kw_units: Dict[str, Unit] = {}
+        for kw in node.keywords:
+            u = self.eval(kw.value, env, report)
+            if kw.arg is not None:
+                kw_units[kw.arg] = u
+        for kw in node.keywords:
+            if kw.arg is None:
+                continue
+            expected = KW_UNITS.get(kw.arg)
+            actual = kw_units.get(kw.arg, TOP)
+            if (
+                expected is not None
+                and expected.is_concrete
+                and actual.is_concrete
+                and actual != expected
+            ):
+                self._report(
+                    report,
+                    "RPL801",
+                    node.lineno,
+                    f"keyword '{kw.arg}' of call in '{self.fn_name}' "
+                    f"expects {expected.render()} but receives "
+                    f"{actual.render()}",
+                )
+        fn = node.func
+        if isinstance(fn, ast.Name):
+            if fn.id == "len":
+                return DIMLESS
+            if fn.id in _JOINING_BUILTINS:
+                out = POLY
+                for u in (*arg_units, *kw_units.values()):
+                    out = join(out, u)
+                return out
+            if fn.id in _PRESERVING_BUILTINS:
+                return arg_units[0] if arg_units else TOP
+            return lookup_func(fn.id)
+        if isinstance(fn, ast.Attribute):
+            self.eval(fn.value, env, report)
+            return lookup_func(fn.attr)
+        self.eval(fn, env, report)
+        return TOP
+
+    def _comprehension(self, node: ast.AST, env: Dict[str, Unit], report) -> Unit:
+        inner = dict(env)
+        for gen in node.generators:
+            it = self.eval(gen.iter, inner, report)
+            names = [
+                n.id for n in ast.walk(gen.target) if isinstance(n, ast.Name)
+            ]
+            # Iterating a unit-carrying container binds the element unit
+            # (single target only; tuple unpacking is opaque).
+            if len(names) == 1 and it.is_concrete:
+                _env_set(inner, names[0], it)
+            else:
+                for name in names:
+                    inner.pop(name, None)
+            for cond in gen.ifs:
+                self.eval(cond, inner, report)
+        return self.eval(node.elt, inner, report)
+
+    # -- statement transfer --------------------------------------------
+    def transfer(self, block: Block, state: Env, report=None) -> Env:
+        stmt = block.stmt
+        if stmt is None or block.role not in (
+            ROLE_STMT, ROLE_TEST, ROLE_ITER, ROLE_WITH_ENTER
+        ):
+            return state
+        env = dict(state)
+        if block.role == ROLE_TEST:
+            self.eval(stmt.test, env, report)
+        elif block.role == ROLE_ITER:
+            it = self.eval(stmt.iter, env, report)
+            names = [
+                n.id
+                for n in ast.walk(stmt.target)
+                if isinstance(n, ast.Name)
+            ]
+            if len(names) == 1 and it.is_concrete:
+                _env_set(env, names[0], it)
+            else:
+                for name in names:
+                    env.pop(name, None)
+        elif block.role == ROLE_WITH_ENTER:
+            for item in stmt.items:
+                self.eval(item.context_expr, env, report)
+                if item.optional_vars is not None:
+                    for n in ast.walk(item.optional_vars):
+                        if isinstance(n, ast.Name):
+                            env.pop(n.id, None)
+        else:
+            self._stmt(stmt, env, report)
+        return tuple(sorted(env.items()))
+
+    def _stmt(self, stmt: ast.AST, env: Dict[str, Unit], report) -> None:
+        if isinstance(
+            stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+        ):
+            env.pop(stmt.name, None)
+            return
+        if isinstance(stmt, ast.Assign):
+            u = self.eval(stmt.value, env, report)
+            for target in stmt.targets:
+                self._bind(target, u, stmt.value, env, report)
+            return
+        if isinstance(stmt, ast.AnnAssign):
+            if stmt.value is None:
+                return
+            u = self.eval(stmt.value, env, report)
+            self._bind(stmt.target, u, stmt.value, env, report)
+            return
+        if isinstance(stmt, ast.AugAssign):
+            current = self._load_target(stmt.target, env, report)
+            value = self.eval(stmt.value, env, report)
+            if isinstance(stmt.op, (ast.Add, ast.Sub)):
+                if not addable(current, value):
+                    self._report(
+                        report,
+                        "RPL801",
+                        stmt.lineno,
+                        f"augmented {'addition' if isinstance(stmt.op, ast.Add) else 'subtraction'} "
+                        f"of {value.render()} onto {current.render()} in "
+                        f"'{self.fn_name}'",
+                    )
+                    result = TOP
+                else:
+                    result = join(current, value)
+            elif isinstance(stmt.op, ast.Mult):
+                result = multiply(current, value)
+            elif isinstance(stmt.op, (ast.Div, ast.FloorDiv)):
+                result = divide(current, value)
+            else:
+                result = TOP
+            if isinstance(stmt.target, ast.Name):
+                _env_set(env, stmt.target.id, result)
+            return
+        if isinstance(stmt, ast.Return):
+            u = self.eval(stmt.value, env, report)
+            expected = lookup_func(self.fn_name)
+            if (
+                stmt.value is not None
+                and expected.is_concrete
+                and u.is_concrete
+                and u != expected
+            ):
+                self._report(
+                    report,
+                    "RPL801",
+                    stmt.lineno,
+                    f"'{self.fn_name}' is registered to return "
+                    f"{expected.render()} but this path returns "
+                    f"{u.render()}",
+                )
+            return
+        if isinstance(stmt, ast.Expr):
+            self.eval(stmt.value, env, report)
+            return
+        if isinstance(stmt, ast.Assert):
+            self.eval(stmt.test, env, report)
+            if stmt.msg is not None:
+                self.eval(stmt.msg, env, report)
+            return
+        if isinstance(stmt, ast.Raise):
+            if stmt.exc is not None:
+                self.eval(stmt.exc, env, report)
+            return
+        if isinstance(stmt, ast.Delete):
+            for target in stmt.targets:
+                if isinstance(target, ast.Name):
+                    env.pop(target.id, None)
+            return
+
+    def _load_target(self, target: ast.AST, env: Dict[str, Unit], report) -> Unit:
+        if isinstance(target, ast.Name):
+            return _env_get(env, target.id)
+        if isinstance(target, ast.Attribute):
+            return lookup_attr(target.attr)
+        if isinstance(target, ast.Subscript):
+            u = self.eval(target.value, env, report)
+            return u if u.is_concrete else TOP
+        return TOP
+
+    def _bind(
+        self,
+        target: ast.AST,
+        u: Unit,
+        value: ast.AST,
+        env: Dict[str, Unit],
+        report,
+    ) -> None:
+        if isinstance(target, ast.Name):
+            _env_set(env, target.id, u)
+            return
+        if isinstance(target, ast.Attribute):
+            expected = lookup_attr(target.attr)
+            if expected.is_concrete and u.is_concrete and u != expected:
+                self._report(
+                    report,
+                    "RPL801",
+                    target.lineno,
+                    f"storing {u.render()} into attribute "
+                    f"'{target.attr}' ({expected.render()}) in "
+                    f"'{self.fn_name}'",
+                )
+            return
+        if isinstance(target, (ast.Tuple, ast.List)):
+            elts = target.elts
+            if isinstance(value, (ast.Tuple, ast.List)) and len(
+                value.elts
+            ) == len(elts):
+                for t, v in zip(elts, value.elts):
+                    self._bind(t, self.eval(v, env, None), v, env, report)
+            else:
+                for t in elts:
+                    for n in ast.walk(t):
+                        if isinstance(n, ast.Name):
+                            env.pop(n.id, None)
+            return
+        # Subscript / starred stores: no binding, no check.
+
+
+class UnitsRule:
+    code = "RPL801"
+    codes = ("RPL801", "RPL802")
+    name = "units-of-measure"
+
+    def check(self, project: Project) -> Iterator[Diagnostic]:
+        for sf in project.files:
+            if not sf.in_core():
+                continue
+            if sf.parts[-1] not in SCOPED_BASENAMES:
+                continue
+            yield from self._check_file(sf)
+
+    def _check_file(self, sf: SourceFile) -> Iterator[Diagnostic]:
+        diags: List[Diagnostic] = []
+        for qual, fdef in function_defs(sf.tree):
+            fn_name = qual.rsplit(".", 1)[-1]
+            sink: Set[Tuple[str, int, str]] = set()
+            analysis = UnitsAnalysis(sf, fn_name, sink)
+            cfg = build_cfg(fdef)
+            in_states = run_forward(cfg, analysis)
+
+            def report(code: str, line: int, message: str) -> None:
+                diags.append(Diagnostic(code, sf.rel, line, 0, message))
+
+            reporting_pass(cfg, analysis, in_states, report)
+        yield from sorted(diags, key=Diagnostic.sort_key)

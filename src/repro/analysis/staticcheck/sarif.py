@@ -1,0 +1,101 @@
+"""SARIF 2.1.0 export for reprolint findings.
+
+Produces a single-run SARIF log so CI can upload findings to code-scanning
+UIs (``github/codeql-action/upload-sarif``).  Only the schema subset those
+consumers read is emitted: driver metadata, the rule catalog, and one
+``result`` per diagnostic with a physical location.  New findings are
+``error`` (they fail the run); baselined findings are included at ``note``
+level with ``baselineState: "unchanged"`` so dashboards can show the
+ratchet's remaining debt without failing the upload.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+from .diagnostics import Diagnostic
+
+SARIF_VERSION = "2.1.0"
+SARIF_SCHEMA = (
+    "https://raw.githubusercontent.com/oasis-tcs/sarif-spec/master/"
+    "Schemata/sarif-schema-2.1.0.json"
+)
+TOOL_NAME = "reprolint"
+TOOL_URI = "src/repro/analysis/staticcheck"
+
+
+def _result(diag: Diagnostic, level: str, baselined: bool) -> Dict[str, object]:
+    out: Dict[str, object] = {
+        "ruleId": diag.code,
+        "level": level,
+        "message": {"text": diag.message},
+        "locations": [
+            {
+                "physicalLocation": {
+                    "artifactLocation": {
+                        "uri": diag.path,
+                        "uriBaseId": "SRCROOT",
+                    },
+                    "region": {
+                        "startLine": diag.line,
+                        # SARIF columns are 1-based; ast's are 0-based.
+                        "startColumn": diag.col + 1,
+                    },
+                }
+            }
+        ],
+    }
+    if baselined:
+        out["baselineState"] = "unchanged"
+    return out
+
+
+def to_sarif(
+    new: List[Diagnostic],
+    baselined: List[Diagnostic],
+    catalog: Dict[str, str],
+) -> Dict[str, object]:
+    """Build the SARIF log dict for one reprolint run."""
+    rules = [
+        {
+            "id": code,
+            "name": name,
+            "shortDescription": {"text": name},
+            "defaultConfiguration": {"level": "error"},
+        }
+        for code, name in sorted(catalog.items())
+    ]
+    results = [_result(d, "error", baselined=False) for d in new]
+    results += [_result(d, "note", baselined=True) for d in baselined]
+    return {
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [
+            {
+                "tool": {
+                    "driver": {
+                        "name": TOOL_NAME,
+                        "informationUri": TOOL_URI,
+                        "rules": rules,
+                    }
+                },
+                "originalUriBaseIds": {"SRCROOT": {"uri": "file:///"}},
+                "results": results,
+            }
+        ],
+    }
+
+
+def write_sarif(
+    path: Path,
+    new: List[Diagnostic],
+    baselined: List[Diagnostic],
+    catalog: Dict[str, str],
+) -> None:
+    payload = to_sarif(new, baselined, catalog)
+    path.write_text(
+        json.dumps(payload, indent=2, sort_keys=True) + "\n",
+        encoding="utf-8",
+    )

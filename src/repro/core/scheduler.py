@@ -762,16 +762,20 @@ class Simulator:
 
         def preempt(job_id: int, t: float, *, voluntary: bool = False) -> None:
             run = running.pop(job_id)
-            _release_placement(cluster, run.placement)
-            cluster.release_bandwidth(run.placement.reserved_bw)
-            rec = run.record
             # Progress floors to whole checkpointed iterations (the leading
             # restore window of a restarted segment is not training time);
             # the cost accrued so far settles from the piecewise ledger.
+            # Settle *before* touching the cluster ledgers: the progress
+            # floor and the settle read only the segment ledger, so the
+            # order commutes bit-exactly, and an exception in either leaves
+            # the reservations intact instead of released-but-unsettled.
             remaining[job_id] = run.acct.remaining_after_checkpoint(
                 t, remaining[job_id]
             )
             settle(job_id, run, t)
+            _release_placement(cluster, run.placement)
+            cluster.release_bandwidth(run.placement.reserved_bw)
+            rec = run.record
             rec.finish = t
             rec.preempted = True
             gen[job_id] += 1
@@ -948,31 +952,36 @@ class Simulator:
                     )
                     _release_placement(cluster, run.placement)
                     cluster.release_bandwidth(run.placement.reserved_bw)
-                    if rec is not None:
-                        rec.on_place_begin(now, job_id, probe=True)
-                    alt = place(prof, cluster)
-                    usable = (
-                        alt is not None and alt.total_gpus >= prof.min_gpus
-                    )
-                    if rec is not None:
-                        rec.on_place_end(
-                            now,
-                            job_id,
-                            alt if usable else None,
-                            self.decision_backend,
-                            probe=True,
+                    try:
+                        if rec is not None:
+                            rec.on_place_begin(now, job_id, probe=True)
+                        alt = place(prof, cluster)
+                        usable = (
+                            alt is not None and alt.total_gpus >= prof.min_gpus
                         )
-                    move_cost = None
-                    if usable:
-                        e_alt = (
-                            rem * iteration_time(prof, alt)
-                            + self.restart_penalty_s
-                        )
-                        move_cost = e_alt * placement_power_rate(
-                            prof, alt, cluster
-                        )
-                    _reserve_placement(cluster, run.placement)
-                    cluster.reserve_bandwidth(run.placement.reserved_bw)
+                        if rec is not None:
+                            rec.on_place_end(
+                                now,
+                                job_id,
+                                alt if usable else None,
+                                self.decision_backend,
+                                probe=True,
+                            )
+                        move_cost = None
+                        if usable:
+                            e_alt = (
+                                rem * iteration_time(prof, alt)
+                                + self.restart_penalty_s
+                            )
+                            move_cost = e_alt * placement_power_rate(
+                                prof, alt, cluster
+                            )
+                    finally:
+                        # The probe's transient release must not leak: an
+                        # exception anywhere in the pricing path restores
+                        # the job's reservation before propagating.
+                        _reserve_placement(cluster, run.placement)
+                        cluster.reserve_bandwidth(run.placement.reserved_bw)
                     moving = (
                         move_cost is not None
                         and stay_cost > (1.0 + threshold) * move_cost

@@ -1,0 +1,31 @@
+"""RPL8xx fixture: units-of-measure compliant shapes (clean).
+
+Mirrors the violating twin with the units transposed back into place;
+literals stay unit-polymorphic (``now + 1e-12`` and ``0.95 * rate`` are
+fine), and division composes units (``$ / s`` is a rate).
+"""
+
+
+def projected_total(job, now):
+    return job.cost + job.rate * (job.finish - now)
+
+
+def open_ledger(job, now):
+    return Ledger(start=now + 1e-12, rate=0.95 * job.rate)
+
+
+def effective_rate(job):
+    return job.cost / (job.finish - job.start)
+
+
+def deadline_exceeded(job, now):
+    return job.finish > now
+
+
+def electricity_cost(job):
+    return job.rate * job.iteration_seconds
+
+
+def stamp(job, now):
+    job.finish = now
+    job.cost = job.rate * job.iteration_seconds

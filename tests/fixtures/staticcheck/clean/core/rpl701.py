@@ -1,0 +1,54 @@
+"""RPL7xx fixture: resource-typestate compliant shapes (clean).
+
+Mirrors the violating twin: every release settles on *every* path, probes
+re-reserve, reservations are released or handed off, and opened ledgers are
+settled — including along exception edges.
+"""
+
+
+class SegmentLedger:
+    @classmethod
+    def open(cls, profile):
+        return cls()
+
+    def settle(self, now: float) -> float:
+        return 0.0
+
+
+def settle_in_finally(ledger, cluster, alloc, now):
+    cluster.release_gpus(alloc)
+    try:
+        audit(cluster)  # may raise: the finally still settles that edge
+    finally:
+        ledger.settle(now)
+
+
+def probe_then_restore(cluster, alloc):
+    # The voluntary-migration probe: release to price an alternative,
+    # re-reserve when declining to move.
+    cluster.release_gpus(alloc)
+    cluster.reserve_gpus(alloc)
+
+
+def acquire_then_free(ledger, cluster, alloc, now):
+    cluster.reserve_gpus(alloc)
+    cluster.release_gpus(alloc)
+    ledger.settle(now)
+
+
+def acquire_and_hand_off(cluster, alloc, registry):
+    cluster.reserve_gpus(alloc)
+    registry.track(alloc)  # ownership moves to the registry
+
+
+def open_and_settle(profile, now):
+    acct = SegmentLedger.open(profile)
+    return acct.settle(now)
+
+
+def settle_on_both_branches(ledger, cluster, alloc, now, ok):
+    cluster.release_gpus(alloc)
+    if ok:
+        ledger.settle(now)
+    else:
+        ledger.settle(now + 1.0)

@@ -1,0 +1,31 @@
+"""RPL8xx fixture: units-of-measure violations (violating).
+
+Must be named ``accounting.py`` under ``core/`` — the units rule only
+engages on the five cost-model modules.  Units flow from the annotation
+registry: ``now`` is seconds, ``.cost`` dollars, ``.rate`` $/s,
+``rate=`` keyword slots $/s.
+"""
+
+
+def projected_total(job, now):
+    return now + job.cost  # expect: RPL801
+
+
+def open_ledger(job, now):
+    return Ledger(start=now, rate=job.cost)  # expect: RPL801
+
+
+def squared_rate(job):
+    return job.rate * job.rate  # expect: RPL802
+
+
+def deadline_exceeded(job, now):
+    return job.cost > now  # expect: RPL801
+
+
+def electricity_cost(job):
+    return job.iteration_seconds  # expect: RPL801
+
+
+def stamp(job, now):
+    job.cost = now  # expect: RPL801

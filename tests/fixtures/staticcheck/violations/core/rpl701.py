@@ -1,0 +1,43 @@
+"""RPL7xx fixture: resource-typestate violations (violating).
+
+Lives under ``core/`` (the typestate rule's scope) but is deliberately not
+named ``scheduler.py`` so RPL501 stays out of the picture — each marker
+below pins exactly one path-sensitive finding.
+"""
+
+
+class SegmentLedger:
+    @classmethod
+    def open(cls, profile):
+        return cls()
+
+    def settle(self, now: float) -> float:
+        return 0.0
+
+
+def leak_on_exception_path(ledger, cluster, alloc, now):
+    cluster.release_gpus(alloc)
+    audit(cluster)  # expect: RPL701
+    ledger.settle(now)
+
+
+def double_free(ledger, cluster, alloc, now):
+    cluster.release_gpus(alloc)
+    cluster.release_gpus(alloc)  # expect: RPL702
+    ledger.settle(now)
+
+
+def acquire_and_forget(cluster, alloc):
+    cluster.reserve_gpus(alloc)  # expect: RPL701
+    return None
+
+
+def open_and_drop(profile):
+    acct = SegmentLedger.open(profile)  # expect: RPL703
+    return None
+
+
+def settle_only_happy_branch(ledger, cluster, alloc, now, ok):
+    cluster.release_gpus(alloc)  # expect: RPL703
+    if ok:
+        ledger.settle(now)

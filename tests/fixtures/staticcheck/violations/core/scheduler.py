@@ -26,12 +26,12 @@ def reserve_gpus(cluster, alloc) -> None:
 
 
 def preempt_without_settling(ledger, cluster, alloc, now) -> None:
-    release_gpus(cluster, alloc)  # expect: RPL501
+    release_gpus(cluster, alloc)  # expect: RPL501, RPL703
     # no settle / re-reserve afterwards: accrued cost is dropped
 
 
 def drop_link_shares(cluster, edges) -> None:
-    release_bandwidth(cluster, edges)  # expect: RPL501
+    release_bandwidth(cluster, edges)  # expect: RPL501, RPL703
 
 
 def preempt_and_settle(ledger, cluster, alloc, now) -> None:

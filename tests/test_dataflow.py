@@ -1,0 +1,220 @@
+"""CFG builder edge cases (repro.analysis.staticcheck.dataflow.cfg).
+
+The dataflow rules are only as sound as the graph: these tests pin the
+exception/unwinding encodings the typestate rule leans on — finally
+duplication with an exceptional re-raising copy, ``with``-as-try/finally,
+loop ``break`` bypassing the ``else`` clause, calls discovered inside
+nested comprehensions, and bare ``raise`` inside an except handler.
+"""
+
+import ast
+import textwrap
+
+from repro.analysis.staticcheck.dataflow import build_cfg, default_may_raise
+from repro.analysis.staticcheck.dataflow.cfg import (
+    EXC,
+    NORMAL,
+    ROLE_DISPATCH,
+    ROLE_ITER,
+    ROLE_WITH_ENTER,
+    ROLE_WITH_EXIT,
+)
+from repro.analysis.staticcheck.dataflow.framework import (
+    ForwardAnalysis,
+    run_forward,
+)
+
+
+def cfg_of(src):
+    fdef = ast.parse(textwrap.dedent(src)).body[0]
+    return build_cfg(fdef)
+
+
+def at_line(cfg, line, role=None):
+    return [
+        b
+        for b in cfg.blocks
+        if b.line == line and (role is None or b.role == role)
+    ]
+
+
+def reachable(cfg, start, kinds=(NORMAL, EXC)):
+    seen, stack = {start}, [start]
+    while stack:
+        for e in cfg.succ[stack.pop()]:
+            if e.kind in kinds and e.dst not in seen:
+                seen.add(e.dst)
+                stack.append(e.dst)
+    return seen
+
+
+def test_try_finally_reraise_runs_finally_then_escapes():
+    cfg = cfg_of(
+        """
+        def f(x):
+            try:
+                step(x)
+            finally:
+                cleanup(x)
+        """
+    )
+    # finally duplication: one copy per continuation (normal + exceptional)
+    cleanups = at_line(cfg, 6)
+    assert len(cleanups) >= 2
+
+    step = at_line(cfg, 4)[0]
+    exc_dsts = [e.dst for e in cfg.succ[step.id] if e.kind == EXC]
+    assert exc_dsts, "a call must have an exception edge"
+    # the exceptional continuation runs a cleanup copy...
+    exc_cont = reachable(cfg, exc_dsts[0])
+    exc_copy = next(b.id for b in cleanups if b.id in exc_cont)
+    # ...whose tail re-raises out of the function
+    assert any(
+        e.dst == cfg.raise_exit and e.note == "reraise"
+        for e in cfg.succ[exc_copy]
+    )
+    # the normal path runs a *different* cleanup copy and reaches exit
+    normal = reachable(cfg, cfg.entry, kinds=(NORMAL,))
+    assert cfg.exit in normal
+    assert any(
+        b.id in normal and b.id != exc_copy for b in cleanups
+    )
+
+
+def test_with_unwinds_through_exit_on_exception():
+    cfg = cfg_of(
+        """
+        def f(x):
+            with ctx(x) as h:
+                work(h)
+            done(x)
+        """
+    )
+    assert at_line(cfg, 3, ROLE_WITH_ENTER)
+    exits = [b for b in cfg.blocks if b.role == ROLE_WITH_EXIT]
+    assert len(exits) >= 2  # normal + exceptional unwinding copies
+
+    work = at_line(cfg, 4)[0]
+    exc_dsts = [e.dst for e in cfg.succ[work.id] if e.kind == EXC]
+    assert exc_dsts
+    exc_cont = reachable(cfg, exc_dsts[0])
+    exc_exit = next(b.id for b in exits if b.id in exc_cont)
+    assert any(
+        e.dst == cfg.raise_exit and e.note == "reraise"
+        for e in cfg.succ[exc_exit]
+    )
+    # the normal path unwinds through a different __exit__ copy into done()
+    normal = reachable(cfg, cfg.entry, kinds=(NORMAL,))
+    done = at_line(cfg, 5)[0]
+    assert done.id in normal
+    assert any(b.id in normal and b.id != exc_exit for b in exits)
+
+
+def test_break_bypasses_loop_else():
+    cfg = cfg_of(
+        """
+        def f(xs):
+            for x in xs:
+                if x:
+                    break
+            else:
+                tail(xs)
+            after(xs)
+        """
+    )
+    head = at_line(cfg, 3, ROLE_ITER)[0]
+    assert head.id in cfg.loop_heads
+    brk = at_line(cfg, 5)[0]
+    tail = at_line(cfg, 7)[0]
+    after = at_line(cfg, 8)[0]
+    # break jumps straight past the else clause
+    assert [e.dst for e in cfg.succ[brk.id] if e.kind == NORMAL] == [after.id]
+    assert tail.id not in reachable(cfg, brk.id, kinds=(NORMAL,))
+    # the else clause hangs off the loop head's exhaustion edge
+    assert all(e.src == head.id for e in cfg.pred[tail.id])
+
+
+def test_while_true_has_no_false_exit():
+    cfg = cfg_of(
+        """
+        def f():
+            while True:
+                step()
+        """
+    )
+    assert cfg.exit not in reachable(cfg, cfg.entry, kinds=(NORMAL,))
+    # ...but an exception inside the body still escapes
+    assert cfg.raise_exit in reachable(cfg, cfg.entry)
+
+
+def test_bare_raise_in_except_escapes_and_dispatch_falls_through():
+    cfg = cfg_of(
+        """
+        def f(x):
+            try:
+                step(x)
+            except ValueError:
+                fix(x)
+                raise
+        """
+    )
+    dispatch = next(b for b in cfg.blocks if b.role == ROLE_DISPATCH)
+    # an exception not matching the handler re-raises past the dispatch
+    assert any(
+        e.dst == cfg.raise_exit and e.note == "reraise"
+        for e in cfg.succ[dispatch.id]
+    )
+    bare = at_line(cfg, 7)[0]
+    assert any(e.dst == cfg.raise_exit for e in cfg.succ[bare.id])
+    # the handler body is only reachable along exception edges
+    fix = at_line(cfg, 6)[0]
+    assert fix.id not in reachable(cfg, cfg.entry, kinds=(NORMAL,))
+    assert fix.id in reachable(cfg, cfg.entry)
+
+
+def test_nested_comprehension_is_one_block_with_visible_calls():
+    src = """
+        def f(xs):
+            ys = [g(x) for x in xs if any(h(y) for y in x)]
+            return ys
+        """
+    cfg = cfg_of(src)
+    assign = at_line(cfg, 3)
+    assert len(assign) == 1  # no CFG explosion inside comprehensions
+    stmt = assign[0].stmt
+    # calls nested inside the comprehension still drive may_raise
+    assert default_may_raise(stmt)
+    assert not default_may_raise(
+        stmt, atomic_callees=frozenset({"g", "h", "any"})
+    )
+
+
+def test_run_forward_terminates_on_ascending_loop_state():
+    # A transfer that grows the state at every loop visit must be cut off
+    # by widening, not loop forever.
+    cfg = cfg_of(
+        """
+        def f(xs):
+            while xs:
+                xs = step(xs)
+            return xs
+        """
+    )
+
+    class Grow(ForwardAnalysis):
+        def initial(self):
+            return frozenset()
+
+        def transfer(self, block, state, report=None):
+            if block.line == 4:  # the loop-body assignment
+                return frozenset(state | {len(state)})
+            return state
+
+        def join(self, a, b):
+            return a | b
+
+        def widen(self, old, new):
+            return frozenset({-1})  # collapse to a fixed sentinel
+
+    in_states = run_forward(cfg, Grow(), widen_after=4)
+    assert in_states  # converged without hitting the relaxation cap

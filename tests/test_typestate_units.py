@@ -1,0 +1,297 @@
+"""Flow-sensitive rules (RPL7xx/RPL8xx), result cache, and SARIF export.
+
+Four layers:
+
+* acceptance mutations — re-introducing either core defect this PR fixed
+  (deleting the preempt path's ``release_bandwidth``; pouring a $-valued
+  expression into the ``rate=`` ($/s) ledger slot) must fail the CLI with a
+  diagnostic that names the path / the units;
+* behavioral regressions — the two scheduler fixes themselves: the
+  voluntary-migration probe restores the reservation when the pricing path
+  raises, and ``preempt`` keeps the reservation intact when the settle
+  raises (both fail on the pre-fix orderings);
+* cache — per-file hits/misses, edit and rule-edit invalidation, and that
+  cached runs report identical diagnostics;
+* SARIF — schema shape, rule catalog, and location mapping.
+"""
+
+import json
+import shutil
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.staticcheck import Project, all_rules, main, rule_catalog
+from repro.analysis.staticcheck import cache as cache_mod
+from repro.analysis.staticcheck.engine import run_rules
+from repro.analysis.staticcheck.sarif import write_sarif
+from repro.core import (
+    BACEPipePolicy,
+    BandwidthTrace,
+    ClusterState,
+    EnvUpdate,
+    JobProfile,
+    JobSpec,
+    ModelSpec,
+    Region,
+    Simulator,
+    simulate,
+)
+from repro.core.accounting import SegmentLedger
+
+REPO = Path(__file__).resolve().parents[1]
+SCHEDULER = REPO / "src" / "repro" / "core" / "scheduler.py"
+ACCOUNTING = REPO / "src" / "repro" / "core" / "accounting.py"
+
+
+# ------------------------------------------------------ acceptance mutations
+def _lint_mutated(tmp_path, monkeypatch, source: Path, old: str, new: str):
+    """Copy ``source`` into a tmp ``core/`` with one edit and lint it."""
+    text = source.read_text(encoding="utf-8")
+    assert old in text, f"mutation anchor gone: {old!r}"
+    core = tmp_path / "core"
+    core.mkdir()
+    target = core / source.name
+    target.write_text(text.replace(old, new, 1), encoding="utf-8")
+    monkeypatch.chdir(tmp_path)  # no repo baseline, fresh cache
+    project = Project.collect([target], root=tmp_path)
+    return target, run_rules(project, all_rules())
+
+
+def test_deleting_preempt_release_fails_with_path_naming_diagnostic(
+    tmp_path, monkeypatch, capsys
+):
+    target, diags = _lint_mutated(
+        tmp_path,
+        monkeypatch,
+        SCHEDULER,
+        "cluster.release_bandwidth(run.placement.reserved_bw)",
+        "pass",
+    )
+    typestate = [d for d in diags if d.code == "RPL701"]
+    assert typestate, "\n".join(d.render() for d in diags)
+    # the diagnostic names the unreleased kind and the function
+    msgs = " ".join(d.message for d in typestate)
+    assert "bandwidth" in msgs and "'preempt'" in msgs
+    assert main([str(target)]) == 1
+    assert "RPL701" in capsys.readouterr().out
+
+
+def test_swapping_dollars_into_rate_slot_fails_with_unit_naming_diagnostic(
+    tmp_path, monkeypatch, capsys
+):
+    target, diags = _lint_mutated(
+        tmp_path,
+        monkeypatch,
+        ACCOUNTING,
+        "rate=placement_power_rate(profile, placement, cluster)",
+        "rate=electricity_cost(profile, placement, cluster)",
+    )
+    units = [d for d in diags if d.code == "RPL801"]
+    assert units, "\n".join(d.render() for d in diags)
+    assert any(
+        "expects $/s" in d.message and "receives $" in d.message
+        for d in units
+    )
+    assert main([str(target)]) == 1
+    assert "RPL801" in capsys.readouterr().out
+
+
+def test_unmutated_core_files_are_clean(tmp_path, monkeypatch):
+    core = tmp_path / "core"
+    core.mkdir()
+    for src in (SCHEDULER, ACCOUNTING):
+        shutil.copy(src, core / src.name)
+    monkeypatch.chdir(tmp_path)
+    project = Project.collect([core], root=tmp_path)
+    diags = run_rules(project, all_rules())
+    assert diags == [], "\n".join(d.render() for d in diags)
+
+
+# --------------------------------------------------- behavioral regressions
+def _one_region_job_cluster():
+    regions = [Region("a", 8, 0.10), Region("b", 8, 0.30)]
+    return ClusterState.build(regions, {("a", "b"): 50.0}, symmetric=True)
+
+
+def _small_job(job_id=0):
+    spec = JobSpec(
+        job_id,
+        ModelSpec(f"j{job_id}", 2e9, 4, 1024, batch_size=16),
+        iterations=30,
+    )
+    return JobProfile(spec, gpu_flops=300e12, gpu_memory=400e9)
+
+
+class _ProbeBoom(Exception):
+    pass
+
+
+def _spiked_simulator(threshold=0.10):
+    static = simulate(
+        _one_region_job_cluster(), [_small_job()], BACEPipePolicy()
+    )
+    rec = static.records[0]
+    t_spike = 0.4 * rec.finish
+    sim = Simulator(
+        _one_region_job_cluster(),
+        [_small_job()],
+        BACEPipePolicy(),
+        trace=BandwidthTrace([EnvUpdate(time=t_spike, prices={"a": 10.0})]),
+        restart_penalty_s=10.0,
+        voluntary_migration_threshold=threshold,
+    )
+    return sim, rec.placement.total_gpus
+
+
+def test_probe_restores_reservation_when_pricing_path_raises():
+    """The voluntary-migration probe releases the running job's resources to
+    price an alternative; if the pricing path raises, the try/finally must
+    re-reserve before propagating (fails on the pre-fix unguarded probe)."""
+    sim, gpus_held = _spiked_simulator()
+    policy = sim.policy
+    orig_place = policy.place
+    calls = {"n": 0}
+
+    def exploding_place(profile, cluster):
+        calls["n"] += 1
+        if calls["n"] >= 2:  # first call places the job; second is the probe
+            raise _ProbeBoom()
+        return orig_place(profile, cluster)
+
+    policy.place = exploding_place
+    with pytest.raises(_ProbeBoom):
+        sim.run()
+    assert calls["n"] >= 2, "the probe never ran"
+    free = sim.cluster.total_free_gpus()
+    assert free == sim.cluster.total_gpus() - gpus_held
+
+
+def test_preempt_keeps_reservation_when_settle_raises():
+    """``preempt`` settles the segment ledger *before* touching the cluster
+    ledgers; an exception in the settle must leave the reservation intact,
+    not released-but-unsettled (fails on the pre-fix release-first order)."""
+    sim, gpus_held = _spiked_simulator(threshold=0.0)
+    orig_settle = SegmentLedger.settle
+    state = {"armed": False}
+
+    def exploding_settle(self, now):
+        if state["armed"]:
+            raise _ProbeBoom()
+        return orig_settle(self, now)
+
+    # Arm only once the simulation is constructed: the first settle event in
+    # this scenario is the voluntary preempt at the price spike.
+    state["armed"] = True
+    SegmentLedger.settle = exploding_settle
+    try:
+        with pytest.raises(_ProbeBoom):
+            sim.run()
+    finally:
+        SegmentLedger.settle = orig_settle
+    free = sim.cluster.total_free_gpus()
+    assert free == sim.cluster.total_gpus() - gpus_held
+
+
+# -------------------------------------------------------------------- cache
+def _write_module(path, body):
+    path.write_text(body, encoding="utf-8")
+    return path
+
+
+def test_cache_hits_misses_and_identical_diags(tmp_path):
+    a = _write_module(tmp_path / "a.py", "import random\nR = random.random()\n")
+    b = _write_module(tmp_path / "b.py", "X = 1\n")
+    project = Project.collect([a, b], root=tmp_path)
+    cache_path = tmp_path / "cache.json"
+    rules = all_rules()
+
+    cold, stats = cache_mod.run_rules_cached(project, rules, cache_path)
+    assert (stats.hits, stats.misses) == (0, 2)
+    assert [d.code for d in cold] == ["RPL101"]
+
+    warm, stats = cache_mod.run_rules_cached(project, rules, cache_path)
+    assert (stats.hits, stats.misses) == (2, 0)
+    assert warm == cold  # cached diagnostics are bit-identical
+
+    # editing one file invalidates exactly that file
+    _write_module(tmp_path / "b.py", "import random\nY = random.random()\n")
+    project = Project.collect([a, b], root=tmp_path)
+    edited, stats = cache_mod.run_rules_cached(project, rules, cache_path)
+    assert (stats.hits, stats.misses) == (1, 1)
+    assert [d.code for d in edited] == ["RPL101", "RPL101"]
+
+
+def test_cache_invalidated_by_ruleset_fingerprint(tmp_path):
+    a = _write_module(tmp_path / "a.py", "X = 1\n")
+    project = Project.collect([a], root=tmp_path)
+    cache_path = tmp_path / "cache.json"
+    rules = all_rules()
+
+    cache_mod.run_rules_cached(project, rules, cache_path)
+    # same selection: warm
+    _, stats = cache_mod.run_rules_cached(project, rules, cache_path)
+    assert stats.hits == 1
+    # a different rule selection changes the fingerprint: cold again
+    _, stats = cache_mod.run_rules_cached(
+        project, rules, cache_path, extra_tokens=["RPL101"]
+    )
+    assert stats.misses == 1
+
+
+def test_cli_cache_speedup_and_no_cache_flag(tmp_path, monkeypatch):
+    mod = _write_module(tmp_path / "m.py", "X = 1\n")
+    monkeypatch.chdir(tmp_path)
+    assert main([str(mod)]) == 0
+    cache_file = tmp_path / cache_mod.DEFAULT_CACHE
+    assert cache_file.exists()
+    payload = json.loads(cache_file.read_text(encoding="utf-8"))
+    assert payload["version"] == cache_mod.CACHE_VERSION
+    assert len(payload["files"]) == 1
+
+    cache_file.unlink()
+    assert main([str(mod), "--no-cache"]) == 0
+    assert not cache_file.exists()
+
+
+# -------------------------------------------------------------------- SARIF
+def test_sarif_export_shape_and_locations(tmp_path, monkeypatch):
+    mod = _write_module(
+        tmp_path / "m.py", "import random\nR = random.random()\n"
+    )
+    monkeypatch.chdir(tmp_path)
+    out = tmp_path / "findings.sarif"
+    assert main([str(mod), "--sarif", str(out)]) == 1
+
+    log = json.loads(out.read_text(encoding="utf-8"))
+    assert log["version"] == "2.1.0"
+    assert "sarif-schema-2.1.0" in log["$schema"]
+    (run,) = log["runs"]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "reprolint"
+    assert {r["id"] for r in driver["rules"]} == set(rule_catalog())
+
+    (result,) = run["results"]
+    assert result["ruleId"] == "RPL101"
+    assert result["level"] == "error"
+    loc = result["locations"][0]["physicalLocation"]
+    assert loc["artifactLocation"]["uri"].endswith("m.py")
+    assert loc["region"]["startLine"] == 2
+    assert loc["region"]["startColumn"] >= 1
+
+
+def test_sarif_marks_baselined_findings_as_notes(tmp_path):
+    diag_new = run_rules(
+        Project.collect(
+            [_write_module(tmp_path / "n.py", "T = sum(set([1]))\n")],
+            root=tmp_path,
+        ),
+        all_rules(),
+    )
+    assert diag_new
+    out = tmp_path / "log.sarif"
+    write_sarif(out, [], diag_new, rule_catalog())
+    log = json.loads(out.read_text(encoding="utf-8"))
+    (result,) = log["runs"][0]["results"]
+    assert result["level"] == "note"
+    assert result["baselineState"] == "unchanged"
